@@ -1,0 +1,334 @@
+"""AOT compile path: lower every shard program to HLO text + write the
+artifact manifest and weight files.
+
+Run once at build time (`make artifacts`); python never appears on the
+rust request path. Interchange format is HLO *text* (NOT a serialized
+HloModuleProto): jax >= 0.5 emits protos with 64-bit instruction ids that
+the xla crate's xla_extension 0.5.1 rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs under --out (default ../artifacts):
+    manifest.json                 program + model + weight index
+    programs/<name>.hlo.txt      one per distinct program *shape*
+    weights/<model>/<name>.bin   raw little-endian f32 tensors
+
+Programs are deduplicated by shape: weights are program *inputs*, so one
+`tiny_gqa.in_proj.tpa2` serves every layer and both TPA ranks.
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .configs import MODELS, ModelConfig, attn_block_size
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+F32, I32 = "f32", "i32"
+
+
+def arg(name, shape, dtype=F32):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def _dt(a):
+    return jnp.int32 if a["dtype"] == I32 else jnp.float32
+
+
+class ArtifactBuilder:
+    def __init__(self, out_dir: str):
+        self.out = out_dir
+        self.programs = {}
+        self.models = {}
+        os.makedirs(os.path.join(out_dir, "programs"), exist_ok=True)
+
+    def add_program(self, name, fn, inputs, outputs):
+        """Lower `fn` at the shapes in `inputs` and register it."""
+        if name in self.programs:
+            return name
+        lowered = jax.jit(fn).lower(*[spec(a["shape"], _dt(a)) for a in inputs])
+        text = to_hlo_text(lowered)
+        rel = f"programs/{name}.hlo.txt"
+        with open(os.path.join(self.out, rel), "w") as f:
+            f.write(text)
+        self.programs[name] = {"hlo": rel, "inputs": inputs,
+                               "outputs": outputs}
+        return name
+
+    def save_weight(self, model: str, name: str, array: np.ndarray):
+        d = os.path.join(self.out, "weights", model)
+        os.makedirs(d, exist_ok=True)
+        rel = f"weights/{model}/{name}.bin"
+        array.astype("<f4").tofile(os.path.join(self.out, rel))
+        return {"file": rel, "shape": list(array.shape)}
+
+    def write_manifest(self):
+        manifest = {"version": 1, "programs": self.programs,
+                    "models": self.models}
+        with open(os.path.join(self.out, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1, sort_keys=True)
+
+
+# --------------------------------------------------------------------------
+# weight generation (seeded per model; rust slices these per layout)
+# --------------------------------------------------------------------------
+
+def gen_weights(b: ArtifactBuilder, cfg: ModelConfig):
+    rng = np.random.default_rng(abs(hash(cfg.name)) % (2 ** 31))
+    h, hsz = cfg.hidden, cfg.head_size
+
+    def norm(*shape, fan_in):
+        return (rng.standard_normal(shape) / np.sqrt(fan_in)).astype(np.float32)
+
+    w = {"wemb": b.save_weight(cfg.name, "wemb",
+                               rng.standard_normal((cfg.vocab, h))
+                               .astype(np.float32) * 0.02),
+         "wnf": b.save_weight(cfg.name, "wnf", np.ones(h, np.float32)),
+         "wlog": b.save_weight(cfg.name, "wlog", norm(h, cfg.vocab, fan_in=h)),
+         "layers": []}
+    for li in range(cfg.layers):
+        lw = {
+            "wn1": b.save_weight(cfg.name, f"l{li}.wn1", np.ones(h, np.float32)),
+            "wq": b.save_weight(cfg.name, f"l{li}.wq",
+                                norm(h, cfg.q_heads * hsz, fan_in=h)),
+            "wk": b.save_weight(cfg.name, f"l{li}.wk",
+                                norm(h, cfg.kv_heads * hsz, fan_in=h)),
+            "wv": b.save_weight(cfg.name, f"l{li}.wv",
+                                norm(h, cfg.kv_heads * hsz, fan_in=h)),
+            "wo": b.save_weight(cfg.name, f"l{li}.wo", norm(h, h, fan_in=h)),
+            "wn2": b.save_weight(cfg.name, f"l{li}.wn2", np.ones(h, np.float32)),
+        }
+        if cfg.is_moe:
+            e, fe, fs = cfg.experts, cfg.expert_ffn, cfg.shared_ffn
+            lw.update({
+                "wr": b.save_weight(cfg.name, f"l{li}.wr", norm(h, e, fan_in=h)),
+                "we1": b.save_weight(cfg.name, f"l{li}.we1", norm(e, h, fe, fan_in=h)),
+                "weg": b.save_weight(cfg.name, f"l{li}.weg", norm(e, h, fe, fan_in=h)),
+                "we2": b.save_weight(cfg.name, f"l{li}.we2", norm(e, fe, h, fan_in=fe)),
+                "ws1": b.save_weight(cfg.name, f"l{li}.ws1", norm(h, fs, fan_in=h)),
+                "wsg": b.save_weight(cfg.name, f"l{li}.wsg", norm(h, fs, fan_in=h)),
+                "ws2": b.save_weight(cfg.name, f"l{li}.ws2", norm(fs, h, fan_in=fs)),
+            })
+        else:
+            f = cfg.ffn
+            lw.update({
+                "w1": b.save_weight(cfg.name, f"l{li}.w1", norm(h, f, fan_in=h)),
+                "wg": b.save_weight(cfg.name, f"l{li}.wg", norm(h, f, fan_in=h)),
+                "w2": b.save_weight(cfg.name, f"l{li}.w2", norm(f, h, fan_in=f)),
+            })
+        w["layers"].append(lw)
+    return w
+
+
+# --------------------------------------------------------------------------
+# program registration per model
+# --------------------------------------------------------------------------
+
+def build_model(b: ArtifactBuilder, cfg: ModelConfig):
+    h, hsz, qh, kh, bsz = (cfg.hidden, cfg.head_size, cfg.q_heads,
+                           cfg.kv_heads, cfg.batch)
+    idx = {}  # role -> program name
+
+    tpas = sorted({lo.tpa for lo in cfg.layouts})
+    kvps = sorted({lo.kvp for lo in cfg.layouts})
+    ns = sorted({lo.n for lo in cfg.layouts})
+    tpfs = sorted({lo.tpf for lo in cfg.layouts})
+
+    # --- attention phase -------------------------------------------------
+    for t in tpas:
+        qhl, khl = qh // t, kh // t
+        name = f"{cfg.name}.in_proj.tpa{t}"
+        fn = functools.partial(M.in_proj, qh_local=qhl, kh_local=khl, hsz=hsz)
+        b.add_program(
+            name, fn,
+            inputs=[arg("x", (bsz, h)), arg("pos", (bsz,), I32),
+                    arg("wn1", (h,)), arg("wq", (h, qhl * hsz)),
+                    arg("wk", (h, khl * hsz)), arg("wv", (h, khl * hsz))],
+            outputs=[arg("q", (bsz, qhl, hsz)), arg("k", (bsz, khl, hsz)),
+                     arg("v", (bsz, khl, hsz))])
+        idx[f"in_proj_tpa{t}"] = name
+
+    for lo in cfg.layouts:
+        qhl, khl = qh // lo.tpa, kh // lo.tpa
+        scap = cfg.seq_cap // lo.kvp
+        bs = attn_block_size(scap)
+        # Full-batch program plus a batch-1 variant: HOP-B (paper S2.1.3)
+        # pipelines attention + All-to-All per request, so the engine
+        # needs per-request attention/combine executables.
+        for bvar in sorted({bsz, 1}):
+            suffix = "" if bvar == bsz else ".b1"
+            name = f"{cfg.name}.attn.tpa{lo.tpa}.scap{scap}{suffix}"
+            fn = functools.partial(M.attn_shard, kh_local=khl, block_s=bs)
+            b.add_program(
+                name, fn,
+                inputs=[arg("q", (bvar, qhl, hsz)),
+                        arg("k_cache", (bvar, khl, scap, hsz)),
+                        arg("v_cache", (bvar, khl, scap, hsz)),
+                        arg("lens", (bvar,), I32)],
+                outputs=[arg("o", (bvar, qhl, hsz)), arg("lse", (bvar, qhl))])
+            role_suffix = "" if bvar == bsz else "_b1"
+            idx[f"attn_kvp{lo.kvp}_tpa{lo.tpa}{role_suffix}"] = name
+
+        qs = qh // lo.n  # query heads per rank after the All-to-All
+        if lo.kvp > 1:
+            for bvar in sorted({bsz, 1}):
+                suffix = "" if bvar == bsz else ".b1"
+                cname = f"{cfg.name}.combine.r{lo.kvp}.qs{qs}{suffix}"
+                b.add_program(
+                    cname, M.combine,
+                    inputs=[arg("o_parts", (lo.kvp, bvar, qs, hsz)),
+                            arg("lse_parts", (lo.kvp, bvar, qs))],
+                    outputs=[arg("o", (bvar, qs * hsz))])
+                role_suffix = "" if bvar == bsz else "_b1"
+                idx[f"combine_kvp{lo.kvp}_n{lo.n}{role_suffix}"] = cname
+
+    for n in ns:
+        hs = h // n
+        name = f"{cfg.name}.out_proj.n{n}"
+        b.add_program(
+            name, M.out_proj,
+            inputs=[arg("o_slice", (bsz, hs)), arg("wo_slice", (hs, h))],
+            outputs=[arg("partial", (bsz, h))])
+        idx[f"out_proj_n{n}"] = name
+
+    # --- FFN phase --------------------------------------------------------
+    if cfg.is_moe:
+        name = f"{cfg.name}.router"
+        b.add_program(
+            name, functools.partial(M.moe_router, top_k=cfg.top_k),
+            inputs=[arg("h1", (bsz, h)), arg("wn2", (h,)),
+                    arg("wr", (h, cfg.experts))],
+            outputs=[arg("gates", (bsz, cfg.experts)), arg("hn", (bsz, h))])
+        idx["router"] = name
+        for f_ in tpfs:
+            fp = cfg.expert_ffn // f_
+            name = f"{cfg.name}.expert.tpf{f_}"
+            b.add_program(
+                name, M.moe_expert,
+                inputs=[arg("hn", (bsz, h)), arg("w1", (h, fp)),
+                        arg("wg", (h, fp)), arg("w2", (fp, h))],
+                outputs=[arg("partial", (bsz, h))])
+            idx[f"expert_tpf{f_}"] = name
+        for n in ns:  # shared expert runs TP over all N ranks
+            fp = cfg.shared_ffn // n
+            name = f"{cfg.name}.shared.n{n}"
+            b.add_program(
+                name, M.moe_expert,
+                inputs=[arg("hn", (bsz, h)), arg("w1", (h, fp)),
+                        arg("wg", (h, fp)), arg("w2", (fp, h))],
+                outputs=[arg("partial", (bsz, h))])
+            idx[f"shared_n{n}"] = name
+    else:
+        for f_ in tpfs:
+            fp = cfg.ffn // f_
+            name = f"{cfg.name}.ffn.tpf{f_}"
+            b.add_program(
+                name, M.ffn_dense,
+                inputs=[arg("h1", (bsz, h)), arg("wn2", (h,)),
+                        arg("w1", (h, fp)), arg("wg", (h, fp)),
+                        arg("w2", (fp, h))],
+                outputs=[arg("partial", (bsz, h))])
+            idx[f"ffn_tpf{f_}"] = name
+
+    # --- embedding / logits ------------------------------------------------
+    name = f"{cfg.name}.embed"
+    b.add_program(name, M.embed,
+                  inputs=[arg("tokens", (bsz,), I32),
+                          arg("wemb", (cfg.vocab, h))],
+                  outputs=[arg("x", (bsz, h))])
+    idx["embed"] = name
+
+    name = f"{cfg.name}.logits"
+    b.add_program(name, M.logits,
+                  inputs=[arg("x", (bsz, h)), arg("wnf", (h,)),
+                          arg("wlog", (h, cfg.vocab))],
+                  outputs=[arg("logits", (bsz, cfg.vocab)),
+                           arg("next", (bsz,), I32)])
+    idx["logits"] = name
+
+    # --- unsharded reference layer (exactness oracle) ----------------------
+    scap = cfg.seq_cap
+    common = [arg("x", (bsz, h)),
+              arg("k_cache", (bsz, kh, scap, hsz)),
+              arg("v_cache", (bsz, kh, scap, hsz)),
+              arg("lens", (bsz,), I32), arg("pos", (bsz,), I32),
+              arg("wn1", (h,)), arg("wq", (h, qh * hsz)),
+              arg("wk", (h, kh * hsz)), arg("wv", (h, kh * hsz)),
+              arg("wo", (h, h)), arg("wn2", (h,))]
+    outs = [arg("y", (bsz, h)), arg("k_new", (bsz, kh, hsz)),
+            arg("v_new", (bsz, kh, hsz))]
+    if cfg.is_moe:
+        e, fe, fs = cfg.experts, cfg.expert_ffn, cfg.shared_ffn
+        name = f"{cfg.name}.ref_layer"
+        fn = functools.partial(M.ref_layer_moe, q_heads=qh, kv_heads=kh,
+                               hsz=hsz, top_k=cfg.top_k)
+        b.add_program(name, fn,
+                      inputs=common + [arg("wr", (h, e)),
+                                       arg("we1", (e, h, fe)),
+                                       arg("weg", (e, h, fe)),
+                                       arg("we2", (e, fe, h)),
+                                       arg("ws1", (h, fs)),
+                                       arg("wsg", (h, fs)),
+                                       arg("ws2", (fs, h))],
+                      outputs=outs)
+    else:
+        f = cfg.ffn
+        name = f"{cfg.name}.ref_layer"
+        fn = functools.partial(M.ref_layer_dense, q_heads=qh, kv_heads=kh,
+                               hsz=hsz)
+        b.add_program(name, fn,
+                      inputs=common + [arg("w1", (h, f)), arg("wg", (h, f)),
+                                       arg("w2", (f, h))],
+                      outputs=outs)
+    idx["ref_layer"] = name
+
+    b.models[cfg.name] = {
+        "config": {
+            "hidden": h, "q_heads": qh, "kv_heads": kh, "head_size": hsz,
+            "layers": cfg.layers, "vocab": cfg.vocab, "seq_cap": cfg.seq_cap,
+            "batch": bsz, "kv_block": cfg.kv_block, "ffn": cfg.ffn,
+            "experts": cfg.experts, "top_k": cfg.top_k,
+            "expert_ffn": cfg.expert_ffn, "shared_ffn": cfg.shared_ffn,
+        },
+        "layouts": [{"kvp": lo.kvp, "tpa": lo.tpa, "tpf": lo.tpf,
+                     "ep": lo.ep, "key": lo.key()} for lo in cfg.layouts],
+        "program_index": idx,
+        "weights": gen_weights(b, cfg),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", nargs="*", default=sorted(MODELS))
+    args = ap.parse_args()
+
+    b = ArtifactBuilder(args.out)
+    for mname in args.models:
+        print(f"[aot] building {mname} ...", flush=True)
+        build_model(b, MODELS[mname])
+    b.write_manifest()
+    print(f"[aot] wrote {len(b.programs)} programs for "
+          f"{len(b.models)} models to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

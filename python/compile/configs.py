@@ -1,0 +1,127 @@
+"""Model + layout configurations shared by aot.py and the test suite.
+
+These are the *functional-engine* models: small enough to execute for real
+on the PJRT CPU client, but structurally faithful to the paper's two
+evaluation networks:
+
+  - tiny_gqa  ~ Llama-405B   (GQA attention, dense SwiGLU FFN)
+  - tiny_mla  ~ DeepSeek-R1 attention (MQA: a single shared KV head, the
+                decode-time shape of MLA after latent absorption)
+  - tiny_moe  ~ DeepSeek-R1 FFN (routed experts + one shared expert,
+                top-k gating, TPF x EP execution grid)
+
+The full-size Llama-405B / DeepSeek-R1 configurations live on the rust
+side (rust/src/config/model.rs) and are only used by the analytic GB200
+simulator; they are never executed.
+"""
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+
+@dataclass(frozen=True)
+class Layout:
+    """A Helix execution layout: N = kvp * tpa = tpf * ep GPUs.
+
+    kvp : KV-parallel width during attention (sequence-dim sharding)
+    tpa : tensor-parallel width during attention (<= number of KV heads)
+    tpf : tensor-parallel width during FFN
+    ep  : expert-parallel width during FFN (1 for dense models)
+    """
+
+    kvp: int
+    tpa: int
+    tpf: int
+    ep: int = 1
+
+    @property
+    def n(self) -> int:
+        return self.kvp * self.tpa
+
+    def key(self) -> str:
+        return f"kvp{self.kvp}_tpa{self.tpa}_tpf{self.tpf}_ep{self.ep}"
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    hidden: int          # H
+    q_heads: int         # Qh
+    kv_heads: int        # Kh
+    head_size: int       # Hsz ; hidden == q_heads * head_size
+    layers: int
+    vocab: int
+    seq_cap: int         # total KV capacity (sum over KVP shards)
+    batch: int           # compiled batch width (padded at runtime)
+    kv_block: int = 16   # round-robin KV-append granularity (paper S2.3)
+    # Dense FFN
+    ffn: int = 0         # F (0 => MoE model)
+    # MoE FFN
+    experts: int = 0     # E routed experts
+    top_k: int = 0
+    expert_ffn: int = 0  # F_e per routed expert
+    shared_ffn: int = 0  # F_s of the always-on shared expert (0 = none)
+    layouts: List[Layout] = field(default_factory=list)
+
+    @property
+    def is_moe(self) -> bool:
+        return self.experts > 0
+
+    def __post_init__(self):
+        assert self.hidden == self.q_heads * self.head_size
+        for lo in self.layouts:
+            assert lo.tpa <= self.kv_heads, f"{self.name}: TPA>K duplicates KV"
+            assert self.q_heads % lo.n == 0
+            assert lo.tpa * lo.kvp == lo.tpf * lo.ep
+            assert self.kv_heads % lo.tpa == 0
+            assert self.seq_cap % lo.kvp == 0
+            if self.is_moe:
+                assert self.experts % lo.ep == 0
+            else:
+                assert lo.ep == 1 and self.ffn % lo.tpf == 0
+
+
+TINY_GQA = ModelConfig(
+    name="tiny_gqa",
+    hidden=256, q_heads=8, kv_heads=4, head_size=32,
+    layers=4, vocab=512, seq_cap=256, batch=4, ffn=1024,
+    layouts=[
+        Layout(kvp=2, tpa=2, tpf=4),   # Helix: 2D attention sharding
+        Layout(kvp=4, tpa=1, tpf=4),   # pure KVP attention (Medha-like widths)
+        Layout(kvp=1, tpa=4, tpf=4),   # TP=K baseline (no duplication)
+        Layout(kvp=1, tpa=1, tpf=1),   # single-GPU reference layout
+    ],
+)
+
+TINY_MLA = ModelConfig(
+    name="tiny_mla",
+    hidden=512, q_heads=8, kv_heads=1, head_size=64,
+    layers=2, vocab=512, seq_cap=256, batch=4, ffn=1024,
+    layouts=[
+        Layout(kvp=4, tpa=1, tpf=4),   # Helix for MLA: attention must be pure KVP
+        Layout(kvp=2, tpa=1, tpf=2),
+        Layout(kvp=1, tpa=1, tpf=1),
+    ],
+)
+
+TINY_MOE = ModelConfig(
+    name="tiny_moe",
+    hidden=128, q_heads=4, kv_heads=2, head_size=32,
+    layers=2, vocab=256, seq_cap=128, batch=4,
+    experts=4, top_k=2, expert_ffn=256, shared_ffn=256,
+    layouts=[
+        Layout(kvp=2, tpa=2, tpf=2, ep=2),  # Helix MoE: TPF x EP FFN grid
+        Layout(kvp=2, tpa=2, tpf=4, ep=1),  # same attention, pure-TP FFN
+        Layout(kvp=1, tpa=1, tpf=1, ep=1),
+    ],
+)
+
+MODELS = {m.name: m for m in (TINY_GQA, TINY_MLA, TINY_MOE)}
+
+
+def attn_block_size(shard_cap: int) -> int:
+    """KV block size (grid step along S) for the flash-decode kernel."""
+    bs = 64
+    while shard_cap % bs != 0:
+        bs //= 2
+    return max(bs, 1)

@@ -1,0 +1,59 @@
+"""L1 Pallas kernel: KVP combine (flash-decoding rescale-and-sum).
+
+This is the landing computation of Helix's single All-to-All (paper
+S2.1.1): given the R = KVP shard-local partial outputs and their LSE
+scalars for one slice of query heads, reconstruct the exact
+softmax-normalized attention output:
+
+    m     = max_r lse_r
+    alpha = exp(lse_r - m)
+    o     = sum_r alpha_r * o_r / sum_r alpha_r
+
+Empty shards arrive with lse == NEG_INF and o == 0, so they receive zero
+weight; if *all* shards are empty (a padded batch slot) the output is 0.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .flash_decode import NEG_INF
+
+
+def _kernel(o_ref, lse_ref, out_ref):
+    o = o_ref[...]        # [R, Qs, Hsz]
+    lse = lse_ref[...]    # [R, Qs]
+    m = jnp.max(lse, axis=0)                       # [Qs]
+    alpha = jnp.exp(lse - m[None, :])              # [R, Qs]; all-empty => 1s
+    alpha = jnp.where(lse <= NEG_INF / 2, 0.0, alpha)
+    num = jnp.sum(alpha[:, :, None] * o, axis=0)   # [Qs, Hsz]
+    den = jnp.sum(alpha, axis=0)                   # [Qs]
+    out_ref[...] = num / jnp.maximum(den, 1e-30)[:, None]
+
+
+@jax.jit
+def kvp_combine(o_parts, lse_parts):
+    """Exact attention from KVP partials.
+
+    Args:
+      o_parts:   [R, B, Qs, Hsz] shard-local normalized partial outputs.
+      lse_parts: [R, B, Qs] shard-local log-sum-exp values.
+
+    Returns:
+      o: [B, Qs, Hsz] exact softmax attention output for this query slice.
+    """
+    r, b, qs, hsz = o_parts.shape
+    assert lse_parts.shape == (r, b, qs)
+    return pl.pallas_call(
+        _kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((r, None, qs, hsz), lambda b_: (0, b_, 0, 0)),
+            pl.BlockSpec((r, None, qs), lambda b_: (0, b_, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, qs, hsz), lambda b_: (b_, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, qs, hsz), o_parts.dtype),
+        interpret=True,
+    )(o_parts, lse_parts)

@@ -1,0 +1,160 @@
+"""L1 Pallas kernel: blocked flash-decode attention over one KV shard.
+
+This is the compute hot-spot of Helix's attention phase (paper S2.1.1):
+each KVP rank runs FlashAttention over *its slice of the KV sequence* in
+isolation and emits a partial output plus a log-sum-exp (LSE) scalar per
+query head; the cross-rank All-to-All + rescale/sum (see combine.py) then
+reconstructs the exact softmax attention.
+
+Hardware adaptation (GPU paper -> TPU Pallas, see DESIGN.md):
+  * FlashAttention-3's threadblock split over the KV sequence becomes the
+    last (sequential) grid dimension with a BlockSpec that streams one
+    (BS, Hsz) K/V tile from HBM into VMEM per step.
+  * Shared-memory accumulators become revisited output blocks: the online
+    softmax state (running max m, running sum l, unnormalized accumulator
+    acc) lives in output refs whose index map is constant along the S
+    grid dimension, so the same VMEM block persists across steps.
+  * Tensor-core QK^T / PV GEMMs become MXU-shaped jnp matmuls over
+    (G, Hsz) x (Hsz, BS) tiles.
+
+The kernel is GQA-native: queries arrive grouped as [B, Kh, G, Hsz] where
+G = Qh / Kh query heads share one KV head. Kh == 1 gives MQA, which is
+also the decode-time shape of MLA after latent absorption.
+
+Masking: `lens[b]` gives the number of valid KV entries in this shard for
+batch row b. Rows with lens == 0 (an empty shard early in the round-robin
+fill, or a padded batch slot) produce o == 0 and lse == NEG_INF so the
+combine step assigns them zero weight.
+
+Lowered with interpret=True: the CPU PJRT client cannot execute Mosaic
+custom-calls; real-TPU performance is estimated analytically (DESIGN.md
+SPerf-L1).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Finite stand-in for -inf: keeps the online-softmax recurrence NaN-free
+# when a block (or a whole shard) is fully masked.
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, lse_ref, m_ref, l_ref,
+            *, bs: int, nblocks: int, scale: float):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        o_ref[...] = jnp.zeros_like(o_ref)
+        lse_ref[...] = jnp.full_like(lse_ref, NEG_INF)
+
+    q = q_ref[...]            # [G, Hsz]
+    k = k_ref[...]            # [BS, Hsz]
+    v = v_ref[...]            # [BS, Hsz]
+
+    s = jnp.dot(q, k.T) * scale                     # [G, BS] on the MXU
+    pos = si * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    valid = pos < len_ref[0]                        # [1, BS]
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_old = m_ref[...]                              # [G]
+    l_old = l_ref[...]
+    m_new = jnp.maximum(m_old, jnp.max(s, axis=1))
+    # exp(NEG_INF - m_new) underflows to 0 for masked lanes; the explicit
+    # where() guards the all-masked case where s - m_new == 0.
+    p = jnp.where(valid, jnp.exp(s - m_new[:, None]), 0.0)  # [G, BS]
+    alpha = jnp.exp(m_old - m_new)                  # [G]
+    l_new = l_old * alpha + jnp.sum(p, axis=1)
+    acc = (o_ref[...].astype(jnp.float32) * alpha[:, None]
+           + jnp.dot(p.astype(v.dtype), v).astype(jnp.float32))
+
+    o_ref[...] = acc.astype(o_ref.dtype)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(si == nblocks - 1)
+    def _finalize():
+        l = l_ref[...]
+        safe = jnp.maximum(l, 1e-30)
+        o_ref[...] = (o_ref[...].astype(jnp.float32)
+                      / safe[:, None]).astype(o_ref.dtype)
+        lse_ref[...] = jnp.where(l > 0, m_ref[...] + jnp.log(safe),
+                                 NEG_INF)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s",))
+def flash_decode(q, k_cache, v_cache, lens, block_s: int = 64):
+    """Partial attention over one KV shard.
+
+    Args:
+      q:        [B, Kh, G, Hsz] query heads grouped by KV head.
+      k_cache:  [B, Kh, S, Hsz] key shard (preallocated capacity S).
+      v_cache:  [B, Kh, S, Hsz] value shard.
+      lens:     [B] int32, valid entries per batch row (0 => empty shard).
+      block_s:  KV tile length streamed per grid step; S % block_s == 0.
+
+    Returns:
+      o:   [B, Kh, G, Hsz] shard-local softmax-normalized output.
+      lse: [B, Kh, G] log-sum-exp of the shard-local scores.
+    """
+    b, kh, g, hsz = q.shape
+    s = k_cache.shape[2]
+    assert k_cache.shape == (b, kh, s, hsz), k_cache.shape
+    assert v_cache.shape == (b, kh, s, hsz)
+    assert lens.shape == (b,) and lens.dtype == jnp.int32
+    assert s % block_s == 0, (s, block_s)
+    nblocks = s // block_s
+    scale = 1.0 / (hsz ** 0.5)
+
+    kernel = functools.partial(_kernel, bs=block_s, nblocks=nblocks,
+                               scale=scale)
+    o, lse, _m, _l = pl.pallas_call(
+        kernel,
+        grid=(b, kh, nblocks),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b_, h_, s_: (b_,)),                 # lens
+            pl.BlockSpec((None, None, g, hsz), lambda b_, h_, s_: (b_, h_, 0, 0)),
+            pl.BlockSpec((None, None, block_s, hsz), lambda b_, h_, s_: (b_, h_, s_, 0)),
+            pl.BlockSpec((None, None, block_s, hsz), lambda b_, h_, s_: (b_, h_, s_, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, None, g, hsz), lambda b_, h_, s_: (b_, h_, 0, 0)),
+            pl.BlockSpec((None, None, g), lambda b_, h_, s_: (b_, h_, 0)),
+            pl.BlockSpec((None, None, g), lambda b_, h_, s_: (b_, h_, 0)),
+            pl.BlockSpec((None, None, g), lambda b_, h_, s_: (b_, h_, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, kh, g, hsz), q.dtype),
+            jax.ShapeDtypeStruct((b, kh, g), jnp.float32),
+            jax.ShapeDtypeStruct((b, kh, g), jnp.float32),
+            jax.ShapeDtypeStruct((b, kh, g), jnp.float32),
+        ],
+        interpret=True,
+    )(lens, q, k_cache, v_cache)
+    return o, lse
+
+
+def vmem_bytes(block_s: int, g: int, hsz: int, dtype_bytes: int = 2) -> int:
+    """Estimated VMEM working set of one grid step (DESIGN.md SPerf-L1).
+
+    Two streamed K/V tiles (double-buffered) + the persistent q block and
+    online-softmax state. Used by the structural perf analysis; interpret
+    mode gives no real TPU timing.
+    """
+    kv_tiles = 2 * 2 * block_s * hsz * dtype_bytes      # K+V, double-buffered
+    q_block = g * hsz * dtype_bytes
+    state = (g * hsz + 3 * g) * 4                        # acc + m/l/lse in f32
+    scores = g * block_s * 4
+    return kv_tiles + q_block + state + scores
+
+
+def mxu_flops_fraction(block_s: int, g: int, hsz: int) -> float:
+    """Fraction of inner-loop FLOPs that land in MXU-shaped dots."""
+    dot_flops = 2 * g * block_s * hsz * 2                # QK^T and PV
+    vector_flops = g * block_s * 5 + g * 4               # exp/mask/softmax state
+    return dot_flops / (dot_flops + vector_flops)

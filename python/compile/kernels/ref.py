@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for the L1 kernels.
+
+These are the correctness ground truth: no Pallas, no blocking, just the
+mathematical definition. pytest (python/tests/) asserts the kernels match
+these to tight tolerances across hypothesis-generated shapes, lengths and
+mask patterns.
+"""
+
+import jax.numpy as jnp
+
+from .flash_decode import NEG_INF
+
+
+def flash_decode_ref(q, k_cache, v_cache, lens):
+    """Shard-local partial attention, defined directly.
+
+    Shapes as in flash_decode(): q [B,Kh,G,Hsz], caches [B,Kh,S,Hsz],
+    lens [B] int32. Returns (o [B,Kh,G,Hsz], lse [B,Kh,G]).
+    """
+    b, kh, g, hsz = q.shape
+    s = k_cache.shape[2]
+    scale = 1.0 / (hsz ** 0.5)
+    scores = jnp.einsum("bkgh,bksh->bkgs", q, k_cache) * scale
+    valid = (jnp.arange(s)[None, :] < lens[:, None])[:, None, None, :]
+    scores = jnp.where(valid, scores, NEG_INF)
+    m = jnp.max(scores, axis=-1)                       # [B,Kh,G]
+    p = jnp.where(valid, jnp.exp(scores - m[..., None]), 0.0)
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bkgs,bksh->bkgh", p, v_cache) / jnp.maximum(l, 1e-30)[..., None]
+    lse = jnp.where(l > 0, m + jnp.log(jnp.maximum(l, 1e-30)), NEG_INF)
+    return o, lse
+
+
+def kvp_combine_ref(o_parts, lse_parts):
+    """Exact combine of shard partials: [R,B,Qs,Hsz],[R,B,Qs] -> [B,Qs,Hsz]."""
+    m = jnp.max(lse_parts, axis=0)                     # [B,Qs]
+    alpha = jnp.exp(lse_parts - m[None])
+    alpha = jnp.where(lse_parts <= NEG_INF / 2, 0.0, alpha)
+    num = jnp.sum(alpha[..., None] * o_parts, axis=0)
+    den = jnp.maximum(jnp.sum(alpha, axis=0), 1e-30)
+    return num / den[..., None]
+
+
+def full_attention_ref(q, k, v, lens):
+    """Unsharded masked attention: the end-to-end exactness oracle.
+
+    q [B,Kh,G,Hsz], k/v [B,Kh,S,Hsz], lens [B]. Equals what the KVP
+    shards + combine must reconstruct (up to fp reordering).
+    """
+    o, _ = flash_decode_ref(q, k, v, lens)
+    return o

@@ -1,0 +1,234 @@
+"""L2: JAX graph builders for every per-rank shard program and the
+unsharded reference layer.
+
+All functions are *pure* and take weights as arguments — the AOT step
+(aot.py) lowers each to an HLO-text program whose inputs are
+(activations..., caches..., scalars..., weights...). The rust engine
+(rust/src/engine/) slices full weight tensors per layout and feeds them
+at execution time; weights never live inside the HLO.
+
+Per-layer structure (pre-norm transformer, paper Fig. 4 omits norms):
+
+    h1 = x  + OutProj(Attention(RMSNorm(x)))
+    y  = h1 + FFN(RMSNorm(h1))          # dense SwiGLU or MoE
+
+Helix decomposition of that layer across N = KVP x TPA ranks:
+
+    in_proj    (per TPA rank, run redundantly by every KVP rank in the
+                TPA group): RMSNorm + QKV projection + RoPE. Each rank
+                produces the *full* query heads of its TPA slice and the
+                K/V heads of its TPA slice (paper S2.1.1 — no pre-attention
+                All-Gather).
+    attn_shard (per rank): L1 flash-decode over the local KV shard.
+    combine    (per rank, post All-to-All): exact softmax from partials.
+    out_proj   (per rank, TP=N): [B, H/N] x [H/N, H] partial projection.
+    ffn        (per TPF rank) / router + expert (TPF x EP for MoE).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.flash_decode import flash_decode
+from .kernels.combine import kvp_combine
+
+EPS = 1e-5
+
+
+# --------------------------------------------------------------------------
+# building blocks
+# --------------------------------------------------------------------------
+
+def rmsnorm(x, w):
+    """RMSNorm over the last dim. x [B,H], w [H]."""
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + EPS) * w
+
+
+def rope(x, pos):
+    """Rotary position embedding. x [B, nh, Hsz], pos [B] int32."""
+    b, nh, hsz = x.shape
+    half = hsz // 2
+    freqs = 10000.0 ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = pos.astype(jnp.float32)[:, None] * freqs[None, :]      # [B, half]
+    cos = jnp.cos(ang)[:, None, :]                                # [B,1,half]
+    sin = jnp.sin(ang)[:, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x1 * sin + x2 * cos], axis=-1)
+
+
+def swiglu(x, w1, wg, w2):
+    """SwiGLU FFN partial: x [B,H], w1/wg [H,Fp], w2 [Fp,H] -> [B,H]."""
+    return (jax.nn.silu(x @ wg) * (x @ w1)) @ w2
+
+
+# --------------------------------------------------------------------------
+# attention-phase shard programs
+# --------------------------------------------------------------------------
+
+def in_proj(x, pos, wn1, wq, wk, wv, *, qh_local, kh_local, hsz):
+    """RMSNorm + QKV projection + RoPE for one TPA rank.
+
+    x [B,H], pos [B] i32; wq [H, qh_local*hsz], wk/wv [H, kh_local*hsz].
+    Returns q [B,qh_local,hsz], k [B,kh_local,hsz], v [B,kh_local,hsz].
+    """
+    b = x.shape[0]
+    xn = rmsnorm(x, wn1)
+    q = (xn @ wq).reshape(b, qh_local, hsz)
+    k = (xn @ wk).reshape(b, kh_local, hsz)
+    v = (xn @ wv).reshape(b, kh_local, hsz)
+    return rope(q, pos), rope(k, pos), v
+
+
+def attn_shard(q, k_cache, v_cache, lens, *, kh_local, block_s):
+    """L1 flash-decode over the rank-local KV shard.
+
+    q [B, qh_local, hsz] -> grouped [B, kh_local, G, hsz]; caches
+    [B, kh_local, S_shard, hsz]; lens [B] i32 (post-append valid length,
+    0 for empty shards / padded rows). Returns (o [B,qh_local,hsz],
+    lse [B,qh_local]).
+    """
+    b, qh_local, hsz = q.shape
+    g = qh_local // kh_local
+    qg = q.reshape(b, kh_local, g, hsz)
+    o, lse = flash_decode(qg, k_cache, v_cache, lens, block_s=block_s)
+    return o.reshape(b, qh_local, hsz), lse.reshape(b, qh_local)
+
+
+def combine(o_parts, lse_parts):
+    """All-to-All landing: exact softmax for this rank's query slice.
+
+    o_parts [R,B,Qs,hsz], lse_parts [R,B,Qs] -> [B, Qs*hsz] (flattened so
+    the out-projection consumes it directly).
+    """
+    r, b, qs, hsz = o_parts.shape
+    o = kvp_combine(o_parts, lse_parts)
+    return o.reshape(b, qs * hsz)
+
+
+def out_proj(o_slice, wo_slice):
+    """TP=N post-attention projection partial: [B,H/N] x [H/N,H] -> [B,H]."""
+    return o_slice @ wo_slice
+
+
+# --------------------------------------------------------------------------
+# FFN-phase shard programs
+# --------------------------------------------------------------------------
+
+def ffn_dense(h1, wn2, w1, wg, w2):
+    """Dense SwiGLU partial for one TPF rank (includes the pre-norm,
+    computed redundantly on every rank as in standard Megatron TP)."""
+    return swiglu(rmsnorm(h1, wn2), w1, wg, w2)
+
+
+def _topk_gates(logits, k):
+    """Dense top-k softmax gates via iterated argmax.
+
+    `jax.lax.top_k` lowers to an HLO `topk(..., largest=true)` custom
+    attribute that the xla_extension 0.5.1 text parser rejects; k rounds
+    of argmax+mask lower to plain reduce/select ops and parse cleanly.
+    """
+    e = logits.shape[-1]
+    masked = logits
+    sel = jnp.zeros_like(logits, dtype=bool)
+    for _ in range(k):
+        idx = jnp.argmax(masked, axis=-1)                     # [B]
+        onehot = jnp.arange(e)[None, :] == idx[:, None]       # [B, E]
+        sel = sel | onehot
+        masked = jnp.where(onehot, -jnp.inf, masked)
+    w = jnp.where(sel, logits, -jnp.inf)
+    return jax.nn.softmax(w, axis=-1)                          # zeros off-topk
+
+
+def moe_router(h1, wn2, wr, *, top_k):
+    """Top-k gating. Returns dense gates [B,E] (zeros off the top-k; the
+    static shape keeps every expert program compilable) and the normed
+    activations consumed by the expert shards."""
+    hn = rmsnorm(h1, wn2)
+    logits_ = hn @ wr                                  # [B, E]
+    gates = _topk_gates(logits_, top_k)
+    return gates, hn
+
+
+def moe_expert(hn, w1, wg, w2):
+    """One routed (or shared) expert's SwiGLU partial under TPF sharding.
+    Runs on the full batch; the coordinator scales by the gate column and
+    reduces across experts (dense-MoE execution keeps shapes static)."""
+    return swiglu(hn, w1, wg, w2)
+
+
+# --------------------------------------------------------------------------
+# embedding / logits
+# --------------------------------------------------------------------------
+
+def embed(tokens, wemb):
+    """tokens [B] i32 -> activations [B,H]."""
+    return jnp.take(wemb, tokens, axis=0)
+
+
+def logits(x, wnf, wlog):
+    """Final norm + LM head. Returns (logits [B,V], greedy next [B] i32)."""
+    lg = rmsnorm(x, wnf) @ wlog
+    return lg, jnp.argmax(lg, axis=-1).astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# unsharded reference layer (the exactness oracle)
+# --------------------------------------------------------------------------
+
+def _ref_attention(x, k_cache, v_cache, lens, pos, wn1, wq, wk, wv, wo,
+                   *, q_heads, kv_heads, hsz):
+    """Full (unsharded) attention half-layer. Appends the new token's K/V
+    at position lens[b] per row, then attends over lens[b]+1 entries.
+    Returns (attn_out [B,H], k_new, v_new [B,Kh,hsz])."""
+    b = x.shape[0]
+    q, k_new, v_new = in_proj(x, pos, wn1, wq, wk, wv,
+                              qh_local=q_heads, kh_local=kv_heads, hsz=hsz)
+
+    def upd(cache, new, l):
+        # cache [Kh,S,hsz], new [Kh,hsz]
+        return jax.lax.dynamic_update_slice(cache, new[:, None, :], (0, l, 0))
+
+    k_cache = jax.vmap(upd)(k_cache, k_new, lens)
+    v_cache = jax.vmap(upd)(v_cache, v_new, lens)
+
+    g = q_heads // kv_heads
+    qg = q.reshape(b, kv_heads, g, hsz)
+    from .kernels.ref import full_attention_ref
+    o = full_attention_ref(qg, k_cache, v_cache, lens + 1)
+    o = o.reshape(b, q_heads * hsz)
+    return o @ wo, k_new, v_new
+
+
+def ref_layer_dense(x, k_cache, v_cache, lens, pos,
+                    wn1, wq, wk, wv, wo, wn2, w1, wg, w2,
+                    *, q_heads, kv_heads, hsz):
+    """One full dense layer: y = h1 + FFN(norm(h1)), h1 = x + Attn(norm(x)).
+    Returns (y, k_new, v_new) so the coordinator can mirror the append."""
+    a, k_new, v_new = _ref_attention(x, k_cache, v_cache, lens, pos,
+                                     wn1, wq, wk, wv, wo,
+                                     q_heads=q_heads, kv_heads=kv_heads,
+                                     hsz=hsz)
+    h1 = x + a
+    y = h1 + ffn_dense(h1, wn2, w1, wg, w2)
+    return y, k_new, v_new
+
+
+def ref_layer_moe(x, k_cache, v_cache, lens, pos,
+                  wn1, wq, wk, wv, wo, wn2, wr,
+                  we1, weg, we2, ws1, wsg, ws2,
+                  *, q_heads, kv_heads, hsz, top_k):
+    """One full MoE layer: routed top-k experts + one shared expert.
+    we1/weg [E,H,Fe], we2 [E,Fe,H]; ws* are the shared expert."""
+    a, k_new, v_new = _ref_attention(x, k_cache, v_cache, lens, pos,
+                                     wn1, wq, wk, wv, wo,
+                                     q_heads=q_heads, kv_heads=kv_heads,
+                                     hsz=hsz)
+    h1 = x + a
+    gates, hn = moe_router(h1, wn2, wr, top_k=top_k)
+    expert_out = jax.vmap(lambda w1_, wg_, w2_: moe_expert(hn, w1_, wg_, w2_)
+                          )(we1, weg, we2)              # [E,B,H]
+    routed = jnp.einsum("be,ebh->bh", gates, expert_out)
+    shared = moe_expert(hn, ws1, wsg, ws2)
+    y = h1 + routed + shared
+    return y, k_new, v_new

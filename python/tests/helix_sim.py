@@ -1,0 +1,202 @@
+"""Pure-python/jax mirror of the rust Helix engine's decode step.
+
+This is the *semantic specification* the rust coordinator implements:
+identical rank grid, weight slicing, round-robin KV append, All-to-All +
+combine, and FFN re-provisioning — but expressed with the same model.py
+graph builders the HLO programs were lowered from. The pytest suite
+asserts this sharded execution matches the unsharded reference layer,
+which is exactly the invariant the rust engine is verified against.
+
+Rank grid conventions (mirrored by rust/src/engine/):
+  attention: rank n in [0,N), tpa_j = n // kvp, kvp_k = n % kvp
+  FFN MoE:   tpf_i = n // ep,  ep_g  = n % ep
+  post All-to-All query-head slice of rank n:
+      global head offset = tpa_j * (Qh/tpa) + kvp_k * (Qh/N), width Qh/N
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import model as M
+from compile.configs import ModelConfig, Layout, attn_block_size
+
+
+class ShardState:
+    """Per-rank KV shard for one layer: [B, Kh_local, S_shard, Hsz]."""
+
+    def __init__(self, b, kh_local, s_shard, hsz):
+        self.k = np.zeros((b, kh_local, s_shard, hsz), np.float32)
+        self.v = np.zeros((b, kh_local, s_shard, hsz), np.float32)
+        self.lens = np.zeros(b, np.int32)
+
+
+def slice_weights(lw, cfg: ModelConfig, lo: Layout):
+    """Slice one layer's full weights into per-rank shards (the same
+    slicing rust/src/engine/shard.rs performs)."""
+    h, hsz, qh, kh = cfg.hidden, cfg.head_size, cfg.q_heads, cfg.kv_heads
+    n = lo.n
+    qhl, khl = qh // lo.tpa, kh // lo.tpa
+    qs = qh // n
+    out = {"in_proj": [], "out_proj": [], "ffn": [], "expert": [],
+           "shared": []}
+    for j in range(lo.tpa):
+        out["in_proj"].append((
+            lw["wq"][:, j * qhl * hsz:(j + 1) * qhl * hsz],
+            lw["wk"][:, j * khl * hsz:(j + 1) * khl * hsz],
+            lw["wv"][:, j * khl * hsz:(j + 1) * khl * hsz]))
+    for nn in range(n):
+        j, k = nn // lo.kvp, nn % lo.kvp
+        off = (j * qhl + k * qs) * hsz
+        out["out_proj"].append(lw["wo"][off:off + qs * hsz, :])
+    if cfg.is_moe:
+        for i in range(lo.tpf):
+            fp = cfg.expert_ffn // lo.tpf
+            out["expert"].append((
+                lw["we1"][:, :, i * fp:(i + 1) * fp],
+                lw["weg"][:, :, i * fp:(i + 1) * fp],
+                lw["we2"][:, i * fp:(i + 1) * fp, :]))
+        for nn in range(n):
+            fp = cfg.shared_ffn // n
+            out["shared"].append((
+                lw["ws1"][:, nn * fp:(nn + 1) * fp],
+                lw["wsg"][:, nn * fp:(nn + 1) * fp],
+                lw["ws2"][nn * fp:(nn + 1) * fp, :]))
+    else:
+        for i in range(lo.tpf):
+            fp = cfg.ffn // lo.tpf
+            out["ffn"].append((
+                lw["w1"][:, i * fp:(i + 1) * fp],
+                lw["wg"][:, i * fp:(i + 1) * fp],
+                lw["w2"][i * fp:(i + 1) * fp, :]))
+    return out
+
+
+def helix_layer_step(cfg: ModelConfig, lo: Layout, lw, shards, x, logical_lens,
+                     active=None):
+    """One Helix-sharded layer decode step.
+
+    shards: list of ShardState, index n = tpa_j * kvp + kvp_k.
+    logical_lens: [B] total tokens already in the (logical) cache.
+    active: [B] bool; inactive (padded) rows never append.
+    Returns y [B,H]; mutates shards in place.
+    """
+    h, hsz, qh, kh = cfg.hidden, cfg.head_size, cfg.q_heads, cfg.kv_heads
+    b = x.shape[0]
+    n, kvp, tpa = lo.n, lo.kvp, lo.tpa
+    qhl, khl = qh // tpa, kh // tpa
+    qs = qh // n
+    if active is None:
+        active = np.ones(b, bool)
+    sw = slice_weights(lw, cfg, lo)
+    pos = logical_lens.astype(np.int32)
+
+    # --- attention phase: redundant QKV per KVP rank (paper S2.1.1) -----
+    qkv = []
+    for j in range(tpa):
+        wq, wk, wv = sw["in_proj"][j]
+        q, k_new, v_new = M.in_proj(jnp.asarray(x), jnp.asarray(pos),
+                                    jnp.asarray(lw["wn1"]), jnp.asarray(wq),
+                                    jnp.asarray(wk), jnp.asarray(wv),
+                                    qh_local=qhl, kh_local=khl, hsz=hsz)
+        qkv.append((np.asarray(q), np.asarray(k_new), np.asarray(v_new)))
+
+    # --- round-robin staggered KV append (paper S2.3) -------------------
+    for bi in range(b):
+        if not active[bi]:
+            continue
+        rr = (int(logical_lens[bi]) // cfg.kv_block) % kvp
+        for j in range(tpa):
+            st = shards[j * kvp + rr]
+            _, k_new, v_new = qkv[j]
+            st.k[bi, :, st.lens[bi], :] = k_new[bi]
+            st.v[bi, :, st.lens[bi], :] = v_new[bi]
+            st.lens[bi] += 1
+
+    # --- local flash-decode + All-to-All + combine ----------------------
+    partials = []
+    for nn in range(n):
+        j = nn // kvp
+        st = shards[nn]
+        bs = attn_block_size(st.k.shape[2])
+        o, lse = M.attn_shard(jnp.asarray(qkv[j][0]), jnp.asarray(st.k),
+                              jnp.asarray(st.v), jnp.asarray(st.lens),
+                              kh_local=khl, block_s=bs)
+        partials.append((np.asarray(o), np.asarray(lse)))
+
+    o_slices = []
+    for nn in range(n):
+        j, k = nn // kvp, nn % kvp
+        ops = np.stack([partials[j * kvp + r][0][:, k * qs:(k + 1) * qs, :]
+                        for r in range(kvp)])
+        lps = np.stack([partials[j * kvp + r][1][:, k * qs:(k + 1) * qs]
+                        for r in range(kvp)])
+        o_slices.append(np.asarray(M.combine(jnp.asarray(ops),
+                                             jnp.asarray(lps))))
+
+    # --- TP=N out-projection + All-Reduce -------------------------------
+    attn_out = np.zeros((b, h), np.float32)
+    for nn in range(n):
+        attn_out += np.asarray(M.out_proj(jnp.asarray(o_slices[nn]),
+                                          jnp.asarray(sw["out_proj"][nn])))
+    h1 = x + attn_out
+
+    # --- FFN phase: re-provision the same N ranks -----------------------
+    if cfg.is_moe:
+        gates, hn = M.moe_router(jnp.asarray(h1), jnp.asarray(lw["wn2"]),
+                                 jnp.asarray(lw["wr"]), top_k=cfg.top_k)
+        gates, hn = np.asarray(gates), np.asarray(hn)
+        epg = cfg.experts // lo.ep
+        y = np.zeros((b, h), np.float32)
+        for nn in range(n):
+            i, g = nn // lo.ep, nn % lo.ep
+            for e in range(g * epg, (g + 1) * epg):
+                w1, wg, w2 = sw["expert"][i]
+                part = np.asarray(M.moe_expert(jnp.asarray(hn),
+                                               jnp.asarray(w1[e]),
+                                               jnp.asarray(wg[e]),
+                                               jnp.asarray(w2[e])))
+                y += gates[:, e:e + 1] * part
+            w1, wg, w2 = sw["shared"][nn]
+            y += np.asarray(M.moe_expert(jnp.asarray(hn), jnp.asarray(w1),
+                                         jnp.asarray(wg), jnp.asarray(w2)))
+        return h1 + y
+    else:
+        ffn_out = np.zeros((b, h), np.float32)
+        for i in range(lo.tpf):
+            w1, wg, w2 = sw["ffn"][i]
+            ffn_out += np.asarray(M.ffn_dense(jnp.asarray(h1),
+                                              jnp.asarray(lw["wn2"]),
+                                              jnp.asarray(w1),
+                                              jnp.asarray(wg),
+                                              jnp.asarray(w2)))
+        return h1 + ffn_out
+
+
+def make_layer_weights(cfg: ModelConfig, seed=0):
+    rng = np.random.default_rng(seed)
+    h, hsz = cfg.hidden, cfg.head_size
+
+    def norm(*shape, fan_in):
+        return (rng.standard_normal(shape) / np.sqrt(fan_in)).astype(np.float32)
+
+    lw = {"wn1": np.ones(h, np.float32),
+          "wq": norm(h, cfg.q_heads * hsz, fan_in=h),
+          "wk": norm(h, cfg.kv_heads * hsz, fan_in=h),
+          "wv": norm(h, cfg.kv_heads * hsz, fan_in=h),
+          "wo": norm(h, h, fan_in=h),
+          "wn2": np.ones(h, np.float32)}
+    if cfg.is_moe:
+        e, fe, fs = cfg.experts, cfg.expert_ffn, cfg.shared_ffn
+        lw.update({"wr": norm(h, e, fan_in=h),
+                   "we1": norm(e, h, fe, fan_in=h),
+                   "weg": norm(e, h, fe, fan_in=h),
+                   "we2": norm(e, fe, h, fan_in=fe),
+                   "ws1": norm(h, fs, fan_in=h),
+                   "wsg": norm(h, fs, fan_in=h),
+                   "ws2": norm(fs, h, fan_in=fs)})
+    else:
+        f = cfg.ffn
+        lw.update({"w1": norm(h, f, fan_in=h),
+                   "wg": norm(h, f, fan_in=h),
+                   "w2": norm(f, h, fan_in=f)})
+    return lw

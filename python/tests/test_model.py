@@ -1,0 +1,173 @@
+"""L2 exactness: the Helix-sharded layer (helix_sim.py, the semantic spec
+of the rust engine) must match the unsharded reference layer across
+layouts, models, and enough decode steps to exercise the round-robin KV
+append cycling (paper S2.3).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile.configs import ModelConfig, Layout
+from tests.helix_sim import (ShardState, helix_layer_step, make_layer_weights)
+
+
+SMALL_GQA = ModelConfig(
+    name="t_gqa", hidden=64, q_heads=8, kv_heads=4, head_size=8,
+    layers=1, vocab=64, seq_cap=64, batch=3, ffn=128, kv_block=4,
+    layouts=[Layout(2, 2, 4), Layout(4, 1, 4), Layout(1, 4, 4),
+             Layout(2, 1, 2), Layout(1, 1, 1)])
+
+SMALL_MLA = ModelConfig(
+    name="t_mla", hidden=64, q_heads=4, kv_heads=1, head_size=16,
+    layers=1, vocab=64, seq_cap=64, batch=2, ffn=128, kv_block=4,
+    layouts=[Layout(4, 1, 4), Layout(2, 1, 2), Layout(1, 1, 1)])
+
+SMALL_MOE = ModelConfig(
+    name="t_moe", hidden=64, q_heads=4, kv_heads=2, head_size=16,
+    layers=1, vocab=64, seq_cap=64, batch=3, kv_block=4,
+    experts=4, top_k=2, expert_ffn=64, shared_ffn=64,
+    layouts=[Layout(2, 2, 2, 2), Layout(2, 2, 4, 1), Layout(1, 1, 1, 1)])
+
+
+def run_ref_step(cfg, lw, x, k_cache, v_cache, lens, pos):
+    args = [jnp.asarray(x), jnp.asarray(k_cache), jnp.asarray(v_cache),
+            jnp.asarray(lens), jnp.asarray(pos),
+            jnp.asarray(lw["wn1"]), jnp.asarray(lw["wq"]),
+            jnp.asarray(lw["wk"]), jnp.asarray(lw["wv"]),
+            jnp.asarray(lw["wo"]), jnp.asarray(lw["wn2"])]
+    if cfg.is_moe:
+        y, k_new, v_new = M.ref_layer_moe(
+            *args, jnp.asarray(lw["wr"]), jnp.asarray(lw["we1"]),
+            jnp.asarray(lw["weg"]), jnp.asarray(lw["we2"]),
+            jnp.asarray(lw["ws1"]), jnp.asarray(lw["wsg"]),
+            jnp.asarray(lw["ws2"]), q_heads=cfg.q_heads,
+            kv_heads=cfg.kv_heads, hsz=cfg.head_size, top_k=cfg.top_k)
+    else:
+        y, k_new, v_new = M.ref_layer_dense(
+            *args, jnp.asarray(lw["w1"]), jnp.asarray(lw["wg"]),
+            jnp.asarray(lw["w2"]), q_heads=cfg.q_heads,
+            kv_heads=cfg.kv_heads, hsz=cfg.head_size)
+    return np.asarray(y), np.asarray(k_new), np.asarray(v_new)
+
+
+def compare_layouts(cfg, lo, steps=18, seed=0):
+    rng = np.random.default_rng(seed)
+    lw = make_layer_weights(cfg, seed=seed + 1)
+    b, h = cfg.batch, cfg.hidden
+    kh, hsz = cfg.kv_heads, cfg.head_size
+    khl = kh // lo.tpa
+    s_shard = cfg.seq_cap // lo.kvp
+
+    shards = [ShardState(b, khl, s_shard, hsz) for _ in range(lo.n)]
+    k_full = np.zeros((b, kh, cfg.seq_cap, hsz), np.float32)
+    v_full = np.zeros_like(k_full)
+    lens = np.zeros(b, np.int32)
+
+    for t in range(steps):
+        x = rng.standard_normal((b, h)).astype(np.float32)
+        y_ref, k_new, v_new = run_ref_step(cfg, lw, x, k_full, v_full,
+                                           lens, lens)
+        y_helix = helix_layer_step(cfg, lo, lw, shards, x, lens)
+        np.testing.assert_allclose(
+            y_helix, y_ref, rtol=5e-4, atol=5e-4,
+            err_msg=f"{cfg.name} layout={lo.key()} step={t}")
+        # mirror the append into the logical full cache
+        for bi in range(b):
+            k_full[bi, :, lens[bi]] = k_new[bi]
+            v_full[bi, :, lens[bi]] = v_new[bi]
+        lens += 1
+
+
+@pytest.mark.parametrize("lo", SMALL_GQA.layouts, ids=lambda l: l.key())
+def test_gqa_sharded_matches_ref(lo):
+    compare_layouts(SMALL_GQA, lo)
+
+
+@pytest.mark.parametrize("lo", SMALL_MLA.layouts, ids=lambda l: l.key())
+def test_mla_sharded_matches_ref(lo):
+    compare_layouts(SMALL_MLA, lo)
+
+
+@pytest.mark.parametrize("lo", SMALL_MOE.layouts, ids=lambda l: l.key())
+def test_moe_sharded_matches_ref(lo):
+    compare_layouts(SMALL_MOE, lo)
+
+
+def test_round_robin_balanced_growth():
+    """After many steps the shard lengths must stay balanced within one
+    kv_block (paper S2.3 'avoiding hot spots')."""
+    cfg, lo = SMALL_GQA, SMALL_GQA.layouts[0]
+    lw = make_layer_weights(cfg)
+    rng = np.random.default_rng(0)
+    b = cfg.batch
+    shards = [ShardState(b, cfg.kv_heads // lo.tpa,
+                         cfg.seq_cap // lo.kvp, cfg.head_size)
+              for _ in range(lo.n)]
+    lens = np.zeros(b, np.int32)
+    for _ in range(32):
+        x = rng.standard_normal((b, cfg.hidden)).astype(np.float32)
+        helix_layer_step(cfg, lo, lw, shards, x, lens)
+        lens += 1
+    per_kvp = np.stack([shards[k].lens for k in range(lo.kvp)])  # tpa_j=0
+    assert per_kvp.sum(axis=0).tolist() == lens.tolist()
+    spread = per_kvp.max(axis=0) - per_kvp.min(axis=0)
+    assert np.all(spread <= cfg.kv_block)
+
+
+def test_padded_rows_do_not_append():
+    cfg, lo = SMALL_GQA, SMALL_GQA.layouts[0]
+    lw = make_layer_weights(cfg)
+    rng = np.random.default_rng(0)
+    b = cfg.batch
+    shards = [ShardState(b, cfg.kv_heads // lo.tpa,
+                         cfg.seq_cap // lo.kvp, cfg.head_size)
+              for _ in range(lo.n)]
+    lens = np.zeros(b, np.int32)
+    active = np.array([True, False, True])
+    for _ in range(5):
+        x = rng.standard_normal((b, cfg.hidden)).astype(np.float32)
+        helix_layer_step(cfg, lo, lw, shards, x, lens, active=active)
+        lens += active
+    for st_ in shards:
+        assert st_.lens[1] == 0
+
+
+def test_moe_gates_structure():
+    rng = np.random.default_rng(0)
+    h1 = jnp.asarray(rng.standard_normal((5, 16)), jnp.float32)
+    wn2 = jnp.ones(16, jnp.float32)
+    wr = jnp.asarray(rng.standard_normal((16, 8)), jnp.float32)
+    gates, hn = M.moe_router(h1, wn2, wr, top_k=3)
+    g = np.asarray(gates)
+    assert g.shape == (5, 8)
+    np.testing.assert_allclose(g.sum(-1), 1.0, rtol=1e-5)
+    assert np.all((g > 0).sum(-1) == 3)
+    assert hn.shape == (5, 16)
+
+
+def test_rope_is_norm_preserving():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((2, 3, 16)), jnp.float32)
+    pos = jnp.asarray([0, 100], jnp.int32)
+    y = M.rope(x, pos)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1),
+                               rtol=1e-5)
+    # pos=0 is the identity
+    np.testing.assert_allclose(np.asarray(y)[0], np.asarray(x)[0], rtol=1e-6)
+
+
+def test_rope_relative_shift_invariance():
+    """<rope(q,p), rope(k,p')> depends only on p - p'."""
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.standard_normal((1, 1, 32)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 1, 32)), jnp.float32)
+
+    def score(pq, pk):
+        qr = M.rope(q, jnp.asarray([pq], jnp.int32))
+        kr = M.rope(k, jnp.asarray([pk], jnp.int32))
+        return float(jnp.sum(qr * kr))
+
+    assert abs(score(10, 7) - score(33, 30)) < 1e-3

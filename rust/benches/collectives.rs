@@ -1,0 +1,71 @@
+//! L3 hot-path microbenches: the host-tensor operations on the
+//! coordinator's critical path (All-to-All reshuffle, All-Reduce
+//! accumulation, KV append, weight slicing) — the targets of the SPerf
+//! optimization pass.
+
+use helix::runtime::HostTensor;
+use helix::util::bench::bench;
+use helix::util::Rng;
+
+fn randn(rng: &mut Rng, shape: &[usize]) -> HostTensor {
+    let n: usize = shape.iter().product();
+    HostTensor::from_f32((0..n).map(|_| rng.f32_signed()).collect(), shape)
+        .unwrap()
+}
+
+fn main() {
+    let mut rng = Rng::new(1);
+
+    // Shapes from tiny_gqa under kvp2 x tpa2: partials [4, 4, 32].
+    let partials: Vec<HostTensor> =
+        (0..4).map(|_| randn(&mut rng, &[4, 4, 32])).collect();
+    bench("l3/a2a_reshuffle_slice_stack", 10, 500, || {
+        let mut stacks = Vec::with_capacity(4);
+        for k in 0..2usize {
+            let a = partials[0].slice_axis(1, k * 2, 2).unwrap();
+            let b = partials[1].slice_axis(1, k * 2, 2).unwrap();
+            stacks.push(HostTensor::stack(&[&a, &b]).unwrap());
+        }
+        std::hint::black_box(stacks);
+    });
+
+    // All-Reduce accumulation over N=4 partials of [B=4, H=256].
+    let parts: Vec<HostTensor> =
+        (0..4).map(|_| randn(&mut rng, &[4, 256])).collect();
+    bench("l3/allreduce_sum_4x(4x256)", 10, 2000, || {
+        let mut acc = HostTensor::zeros(&[4, 256]);
+        for p in &parts {
+            acc.add_assign(p).unwrap();
+        }
+        std::hint::black_box(acc);
+    });
+
+    // Bigger tensors (llama-like slice): 8 x [8, 16384].
+    let big: Vec<HostTensor> =
+        (0..8).map(|_| randn(&mut rng, &[8, 16384])).collect();
+    bench("l3/allreduce_sum_8x(8x16384)", 5, 200, || {
+        let mut acc = HostTensor::zeros(&[8, 16384]);
+        for p in &big {
+            acc.add_assign(p).unwrap();
+        }
+        std::hint::black_box(acc);
+    });
+
+    // Weight slicing (engine init path): [256, 1024] column slice.
+    let w = randn(&mut rng, &[256, 1024]);
+    bench("l3/weight_slice_cols_256x1024/4", 10, 1000, || {
+        std::hint::black_box(w.slice_axis(1, 256, 256).unwrap());
+    });
+
+    // Literal conversion round-trip proxy: clone + reshape of [4,256].
+    let x = randn(&mut rng, &[4, 256]);
+    bench("l3/tensor_clone_reshape", 10, 5000, || {
+        std::hint::black_box(x.reshape(&[1024]).unwrap());
+    });
+
+    // KV row view (HOP-B per-request path): [4, 2, 128, 32] row slice.
+    let kc = randn(&mut rng, &[4, 2, 128, 32]);
+    bench("l3/kv_row_view", 10, 2000, || {
+        std::hint::black_box(kc.slice_axis(0, 2, 1).unwrap());
+    });
+}

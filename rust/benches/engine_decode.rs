@@ -1,0 +1,71 @@
+//! Engine end-to-end microbench: real decode-step latency per model and
+//! layout over the AOT artifacts (requires `make artifacts`).
+//!
+//! This is the measured counterpart of the simulator's TTL: it times the
+//! full L3 path (broadcast -> redundant QKV -> round-robin append ->
+//! flash-decode -> All-to-All + combine -> TP out-proj -> FFN grid) on
+//! the PJRT CPU client, plus the HOP-B overlap comparison under an
+//! emulated NVLink.
+
+use helix::engine::{ClusterConfig, CommModel, HelixCluster};
+use helix::runtime::artifacts::EngineLayout;
+use helix::runtime::Manifest;
+use helix::util::bench::bench;
+
+fn step_bench(name: &str, model: &str, layout: EngineLayout, hopb: bool,
+              a2a_bw: f64) {
+    let mut cc = ClusterConfig::new(model, layout);
+    cc.hopb = hopb;
+    if a2a_bw > 0.0 {
+        // Slow down only the KVP All-to-All (the collective HOP-B
+        // pipelines), bandwidth-dominated so overlap is observable.
+        cc.a2a_comm = Some(CommModel { latency_s: 0.0,
+                                       bw_bytes_per_s: a2a_bw, scale: 1.0 });
+    }
+    let mut cluster = match HelixCluster::new(cc) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("skipping {name}: {e:#}");
+            return;
+        }
+    };
+    for s in 0..cluster.batch() {
+        cluster.open_slot(s).unwrap();
+    }
+    let tokens: Vec<i32> = (0..cluster.batch() as i32).map(|i| i + 3)
+        .collect();
+    bench(name, 3, 10, || {
+        // Steps accumulate context, so later samples attend over more
+        // KV — representative of steady-state decode.
+        let (next, _) = cluster.decode_step(&tokens).unwrap();
+        std::hint::black_box(next);
+    });
+    cluster.shutdown();
+}
+
+fn main() {
+    if Manifest::load(&Manifest::default_root()).is_err() {
+        eprintln!("artifacts missing — run `make artifacts` first; \
+                   skipping engine benches");
+        return;
+    }
+    println!("## engine decode-step latency (real PJRT execution)");
+    step_bench("engine/tiny_gqa/helix_kvp2_tpa2", "tiny_gqa",
+               EngineLayout { kvp: 2, tpa: 2, tpf: 4, ep: 1 }, false, 0.0);
+    step_bench("engine/tiny_gqa/pure_kvp4", "tiny_gqa",
+               EngineLayout { kvp: 4, tpa: 1, tpf: 4, ep: 1 }, false, 0.0);
+    step_bench("engine/tiny_gqa/tp4", "tiny_gqa",
+               EngineLayout { kvp: 1, tpa: 4, tpf: 4, ep: 1 }, false, 0.0);
+    step_bench("engine/tiny_gqa/single_rank", "tiny_gqa",
+               EngineLayout { kvp: 1, tpa: 1, tpf: 1, ep: 1 }, false, 0.0);
+    step_bench("engine/tiny_mla/pure_kvp4", "tiny_mla",
+               EngineLayout { kvp: 4, tpa: 1, tpf: 4, ep: 1 }, false, 0.0);
+    step_bench("engine/tiny_moe/tpf2_ep2", "tiny_moe",
+               EngineLayout { kvp: 2, tpa: 2, tpf: 2, ep: 2 }, false, 0.0);
+
+    println!("\n## HOP-B under an emulated slow All-to-All link");
+    step_bench("engine/tiny_gqa/a2a_hopb_off", "tiny_gqa",
+               EngineLayout { kvp: 2, tpa: 2, tpf: 4, ep: 1 }, false, 2.0e4);
+    step_bench("engine/tiny_gqa/a2a_hopb_on", "tiny_gqa",
+               EngineLayout { kvp: 2, tpa: 2, tpf: 4, ep: 1 }, true, 2.0e4);
+}

@@ -1,0 +1,81 @@
+//! Figure 1 regeneration: DRAM-read roofline (Appendix A formulas).
+//! Left: latency vs TP width; Middle: vs KV length S; Right: vs KVP
+//! width. Asserts the paper's qualitative shape (plateau at TP=K,
+//! linear growth with S, sublinear TTL scaling with KVP).
+
+use helix::config::Hardware;
+use helix::sim::memory::{fig1_kv_read_time, fig1_weight_read_time};
+use helix::util::bench::bench;
+use helix::util::table::Table;
+
+const B: usize = 8;
+const Q: usize = 128;
+const K: usize = 8;
+const HSZ: usize = 128;
+const H: usize = 16384;
+const F: usize = 65536;
+
+fn main() {
+    let hw = Hardware::gb200_nvl72();
+
+    println!("## Figure 1 (left): DRAM read latency vs TP width (S=1M)");
+    let mut t = Table::new(["TP", "kv_ms", "weight_ms", "total_ms"]);
+    let mut prev_total = f64::INFINITY;
+    let mut kv_at_k = 0.0;
+    for tp in [1usize, 2, 4, 8, 16, 32, 64] {
+        let kv = fig1_kv_read_time(&hw, B, K, HSZ, 1e6, tp, 1);
+        let w = fig1_weight_read_time(&hw, H, Q, K, HSZ, F, tp, tp);
+        if tp == K {
+            kv_at_k = kv;
+        }
+        if tp > K {
+            assert_eq!(kv, kv_at_k, "KV read must plateau beyond TP=K");
+        }
+        let total = kv + w;
+        assert!(total <= prev_total + 1e-12, "total must be monotone");
+        prev_total = total;
+        t.row([format!("{tp}"), format!("{:.4}", kv * 1e3),
+               format!("{:.4}", w * 1e3), format!("{:.4}", total * 1e3)]);
+    }
+    print!("{}", t.render());
+
+    println!("\n## Figure 1 (middle): DRAM read time vs S (TP=8)");
+    let mut t = Table::new(["S", "kv_ms", "weight_ms", "kv_fraction"]);
+    let w8 = fig1_weight_read_time(&hw, H, Q, K, HSZ, F, 8, 8);
+    let mut prev_frac = 0.0;
+    for s in [65536.0, 262144.0, 1.0e6, 2.0e6, 4.0e6, 8.0e6] {
+        let kv = fig1_kv_read_time(&hw, B, K, HSZ, s, 8, 1);
+        let frac = kv / (kv + w8);
+        assert!(frac >= prev_frac, "KV share must grow with S");
+        prev_frac = frac;
+        t.row([format!("{s:.0}"), format!("{:.4}", kv * 1e3),
+               format!("{:.4}", w8 * 1e3), format!("{frac:.3}")]);
+    }
+    print!("{}", t.render());
+    assert!(prev_frac > 0.9, "at 8M tokens the KV read dominates");
+
+    println!("\n## Figure 1 (right): DRAM read time vs KVP width (TPA=8)");
+    let mut t = Table::new(["KVP", "GPUs", "kv_ms", "weight_ms(TPF=N)"]);
+    let kv1 = fig1_kv_read_time(&hw, B, K, HSZ, 1e6, 8, 1);
+    for kvp in [1usize, 2, 4, 8] {
+        let kv = fig1_kv_read_time(&hw, B, K, HSZ, 1e6, 8, kvp);
+        assert!((kv1 / kv - kvp as f64).abs() < 1e-9,
+                "KV read scales 1/KVP");
+        let w = fig1_weight_read_time(&hw, H, Q, K, HSZ, F, 8, 8 * kvp);
+        t.row([format!("{kvp}"), format!("{}", 8 * kvp),
+               format!("{:.4}", kv * 1e3), format!("{:.4}", w * 1e3)]);
+    }
+    print!("{}", t.render());
+
+    println!();
+    bench("fig1/full_roofline_eval", 3, 50, || {
+        let mut acc = 0.0;
+        for tp in [1usize, 2, 4, 8, 16, 32, 64] {
+            acc += fig1_kv_read_time(&hw, B, K, HSZ, 1e6, tp, 1)
+                + fig1_weight_read_time(&hw, H, Q, K, HSZ, F, tp, tp);
+        }
+        std::hint::black_box(acc);
+    });
+    println!("\nfig1 shape checks PASSED (plateau at TP=K, S-linear KV, \
+              1/KVP scaling)");
+}

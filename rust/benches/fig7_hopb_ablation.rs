@@ -1,0 +1,78 @@
+//! Figure 7 regeneration: HOP-B ON vs OFF for both models at 1M context.
+//!
+//! The paper isolates HOP-B "by turning it off during attention" —
+//! communication and computation execute strictly sequentially for the
+//! *same configuration*. We therefore re-evaluate every ON-frontier
+//! configuration with overlap disabled and report the tokens/s/user
+//! degradation, exactly the Fig 7 comparison.
+//!
+//! Paper: DeepSeek-R1 loses only ~1% (its All-to-All is ~1% of decode
+//! latency; latent projections and multi-expert GEMMs dominate), while
+//! Llama-405B loses up to ~12%.
+
+use helix::config::{Hardware, ModelSpec};
+use helix::sim::decode::{evaluate, Strategy};
+use helix::sim::sweep::{self, SweepBounds};
+use helix::sim::Frontier;
+use helix::util::bench::bench_once;
+use helix::util::table::Table;
+
+fn ablate(m: &ModelSpec) -> (f64, f64) {
+    let hw = Hardware::gb200_nvl72();
+    let bounds = SweepBounds::default();
+    let mut on_pts = Vec::new();
+    bench_once(&format!("fig7/{}_sweep", m.name), || {
+        on_pts = sweep::sweep_strategy(m, &hw, Strategy::Helix { hopb: true },
+                                       &bounds);
+    });
+    let on = Frontier::from_points(on_pts);
+
+    println!("\n## Figure 7: HOP-B ablation — {} (same config, overlap off)",
+             m.name);
+    let mut t = Table::new(["layout", "batch", "user ON", "user OFF",
+                            "drop"]);
+    let mut worst: f64 = 0.0;
+    let mut sum = 0.0;
+    let mut count = 0;
+    for p in &on.points {
+        let off = evaluate(m, &hw, Strategy::Helix { hopb: false },
+                           &p.layout, p.batch, bounds.seq_len)
+            .expect("same config must remain valid");
+        let drop = 1.0 - off.interactivity / p.interactivity;
+        worst = worst.max(drop);
+        sum += drop;
+        count += 1;
+        t.row([format!("{}", p.layout), format!("{}", p.batch),
+               format!("{:.1}", p.interactivity),
+               format!("{:.1}", off.interactivity),
+               format!("{:.1}%", drop * 100.0)]);
+    }
+    print!("{}", t.render());
+    let mean = sum / count.max(1) as f64;
+    println!("tokens/s/user drop: max {:.1}% | mean {:.1}%", worst * 100.0,
+             mean * 100.0);
+    (worst, mean)
+}
+
+fn main() {
+    let (dsr1_max, dsr1_mean) = ablate(&ModelSpec::deepseek_r1());
+    let (llama_max, llama_mean) = ablate(&ModelSpec::llama_405b());
+
+    println!("\npaper: DSR1 ~1% | Llama-405B up to ~12%.  measured (max): \
+              DSR1 {:.1}% | Llama {:.1}%", dsr1_max * 100.0,
+             llama_max * 100.0);
+    // Shape: the contrast must hold — Llama suffers more than DSR1, DSR1
+    // barely notices, Llama's loss is visible.
+    // Our collective model is NVLS-latency-dominated at these tiny
+    // per-token volumes, which compresses the paper's 1%-vs-12% contrast
+    // into low single digits (see EXPERIMENTS.md); the qualitative shape
+    // — small for DSR1, visible and larger for Llama — must still hold.
+    assert!(llama_mean >= dsr1_mean,
+            "HOP-B must matter at least as much for Llama as for DSR1");
+    assert!(dsr1_max < 0.08,
+            "DSR1 degradation should be small (paper ~1%), got {dsr1_max}");
+    assert!(llama_max > 0.02,
+            "Llama degradation should be visible (paper ~12%), got \
+             {llama_max}");
+    println!("fig7 shape checks PASSED");
+}

@@ -1,0 +1,114 @@
+//! Hardware model: GB200 NVL72 constants (paper S3.1 / Appendix A).
+//!
+//! The paper's simulator "accounts for both compute and communication
+//! costs, including latency from inter-GPU NVLink transfers, DRAM
+//! bandwidth constraints, and FLOP throughput", with all results
+//! *normalized to the baseline*. We parameterize the same three resources;
+//! absolute constants matter only up to those ratios.
+
+/// Numeric precision of weights, KV cache and arithmetic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    Fp4,
+    Fp8,
+    Fp16,
+}
+
+impl Precision {
+    /// Bytes per parameter / cache element.
+    pub fn bytes(self) -> f64 {
+        match self {
+            Precision::Fp4 => 0.5,
+            Precision::Fp8 => 1.0,
+            Precision::Fp16 => 2.0,
+        }
+    }
+}
+
+/// Per-GPU + interconnect constants.
+#[derive(Debug, Clone, Copy)]
+pub struct Hardware {
+    /// HBM read bandwidth per GPU, bytes/s (paper Fig 1: 8000 GB/s).
+    pub mem_bw: f64,
+    /// HBM capacity per GPU, bytes.
+    pub hbm_capacity: f64,
+    /// NVLink unidirectional bandwidth per GPU, bytes/s.
+    pub nvlink_bw: f64,
+    /// Fixed latency per collective step, seconds.
+    pub nvlink_latency: f64,
+    /// Dense FLOP/s at FP4.
+    pub flops_fp4: f64,
+    /// Largest NVLink domain (GPUs that can join one Helix pool).
+    pub max_domain: usize,
+    /// Precision for weights + KV cache + math.
+    pub precision: Precision,
+}
+
+impl Hardware {
+    /// GB200 NVL72 at FP4 — the paper's evaluation platform.
+    pub fn gb200_nvl72() -> Hardware {
+        Hardware {
+            mem_bw: 8.0e12,          // 8000 GB/s (Appendix A)
+            hbm_capacity: 192.0e9,   // bytes per GPU
+            nvlink_bw: 0.9e12,       // 900 GB/s unidirectional
+            nvlink_latency: 1.0e-6,  // per collective step (NVLS multicast)
+            flops_fp4: 10.0e15,
+            max_domain: 72,
+            precision: Precision::Fp4,
+        }
+    }
+
+    pub fn bytes_per_param(&self) -> f64 {
+        self.precision.bytes()
+    }
+
+    /// Effective FLOP/s at the configured precision.
+    pub fn flops(&self) -> f64 {
+        match self.precision {
+            Precision::Fp4 => self.flops_fp4,
+            Precision::Fp8 => self.flops_fp4 / 2.0,
+            Precision::Fp16 => self.flops_fp4 / 4.0,
+        }
+    }
+
+    /// Time to stream `bytes` from HBM on one GPU.
+    pub fn mem_time(&self, bytes: f64) -> f64 {
+        bytes / self.mem_bw
+    }
+
+    /// Roofline execution time: max of memory streaming and math.
+    pub fn roofline(&self, bytes: f64, flops: f64) -> f64 {
+        (bytes / self.mem_bw).max(flops / self.flops())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_kv_read_sanity() {
+        // Paper Fig 1 setup: B=8, K=8, Hsz=128, S=1M, FP4, KVP=TPA=1.
+        // KV bytes/layer = B * 2 * K * Hsz * S * 0.5 = 8.192e9 bytes
+        // => ~1.02 ms per layer at 8 TB/s.
+        let hw = Hardware::gb200_nvl72();
+        let bytes = 8.0 * 2.0 * 8.0 * 128.0 * 1.0e6 * hw.bytes_per_param();
+        let t = hw.mem_time(bytes);
+        assert!((t - 1.024e-3).abs() < 2e-6, "kv read {t}");
+    }
+
+    #[test]
+    fn roofline_picks_max() {
+        let hw = Hardware::gb200_nvl72();
+        // Tiny math, big bytes -> memory bound.
+        assert_eq!(hw.roofline(8.0e12, 1.0), 1.0);
+        // Big math, tiny bytes -> compute bound.
+        assert!((hw.roofline(1.0, 10.0e15) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn precision_bytes() {
+        assert_eq!(Precision::Fp4.bytes(), 0.5);
+        assert_eq!(Precision::Fp16.bytes(), 2.0);
+    }
+}

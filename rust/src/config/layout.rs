@@ -1,0 +1,159 @@
+//! Execution layouts: how a pool of N GPUs is provisioned across the
+//! attention and FFN phases (paper S2, Fig 4).
+
+use anyhow::{bail, Result};
+
+use super::model::ModelSpec;
+
+/// A complete sharding configuration for one model replica.
+///
+/// Attention phase: `kvp x tpa` grid (sequence-dim x head-dim).
+/// FFN phase:       `tpf x ep` grid (tensor x expert).
+/// `pp` pipeline stages partition layers; each stage owns its own
+/// `kvp*tpa` pool, so the replica uses `kvp*tpa*pp` GPUs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Layout {
+    pub kvp: usize,
+    pub tpa: usize,
+    pub tpf: usize,
+    pub ep: usize,
+    pub pp: usize,
+}
+
+impl Layout {
+    /// GPUs per pipeline stage.
+    pub fn n(&self) -> usize {
+        self.kvp * self.tpa
+    }
+
+    /// Total GPUs.
+    pub fn gpus(&self) -> usize {
+        self.n() * self.pp
+    }
+
+    /// Plain tensor parallelism (the Megatron baseline): one knob.
+    pub fn tp(tp: usize) -> Layout {
+        Layout { kvp: 1, tpa: tp, tpf: tp, ep: 1, pp: 1 }
+    }
+
+    /// Helix: decoupled attention (kvp x tpa) and FFN (tpf x ep) grids.
+    pub fn helix(kvp: usize, tpa: usize, tpf: usize, ep: usize) -> Layout {
+        Layout { kvp, tpa, tpf, ep, pp: 1 }
+    }
+
+    /// KV-duplication factor during attention: GPUs holding each KV
+    /// shard redundantly. 1 = no duplication (paper Fig 2).
+    pub fn kv_duplication(&self, model: &ModelSpec) -> f64 {
+        let k = model.attention.kv_heads() as f64;
+        (self.tpa as f64 / k).max(1.0)
+    }
+
+    /// Validate against a model. `allow_duplication` distinguishes the
+    /// baseline search space (TP may exceed K) from Helix proper.
+    pub fn validate(&self, model: &ModelSpec, allow_duplication: bool)
+                    -> Result<()> {
+        let q = model.attention.q_heads();
+        let k = model.attention.kv_heads();
+        if self.kvp == 0 || self.tpa == 0 || self.tpf == 0 || self.ep == 0
+            || self.pp == 0
+        {
+            bail!("zero-width dimension in {self:?}");
+        }
+        if self.tpf * self.ep != self.n() {
+            bail!("FFN grid {}x{} != attention pool {}", self.tpf, self.ep,
+                  self.n());
+        }
+        if q % self.tpa != 0 {
+            bail!("tpa {} does not divide q_heads {q}", self.tpa);
+        }
+        if q % self.n() != 0 {
+            bail!("pool {} does not divide q_heads {q}", self.n());
+        }
+        if self.tpa > k && !allow_duplication {
+            bail!("tpa {} > kv_heads {k} duplicates KV cache", self.tpa);
+        }
+        if self.tpa > q {
+            bail!("tpa {} > q_heads {q}", self.tpa);
+        }
+        if model.layers % self.pp != 0 {
+            bail!("pp {} does not divide layers {}", self.pp, model.layers);
+        }
+        if let super::model::Ffn::Moe { experts, .. } = model.ffn {
+            if experts % self.ep != 0 {
+                bail!("ep {} does not divide experts {experts}", self.ep);
+            }
+        } else if self.ep != 1 {
+            bail!("ep > 1 on a dense model");
+        }
+        Ok(())
+    }
+}
+
+impl std::fmt::Display for Layout {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "kvp{}·tpa{}→tpf{}·ep{}", self.kvp, self.tpa, self.tpf,
+               self.ep)?;
+        if self.pp > 1 {
+            write!(f, "·pp{}", self.pp)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn helix_layout_valid() {
+        let m = ModelSpec::llama_405b();
+        let lo = Layout::helix(8, 8, 64, 1);
+        lo.validate(&m, false).unwrap();
+        assert_eq!(lo.gpus(), 64);
+        assert_eq!(lo.kv_duplication(&m), 1.0);
+    }
+
+    #[test]
+    fn tp_beyond_k_duplicates() {
+        let m = ModelSpec::llama_405b();
+        let lo = Layout::tp(32);
+        assert!(lo.validate(&m, false).is_err());
+        lo.validate(&m, true).unwrap();
+        assert_eq!(lo.kv_duplication(&m), 4.0);
+    }
+
+    #[test]
+    fn mla_any_tp_duplicates() {
+        let m = ModelSpec::deepseek_r1();
+        assert!(Layout::tp(2).validate(&m, false).is_err());
+        assert_eq!(Layout::tp(2).kv_duplication(&m), 2.0);
+        // Pure KVP is the Helix answer for MLA.
+        Layout::helix(16, 1, 4, 4).validate(&m, false).unwrap();
+    }
+
+    #[test]
+    fn ffn_grid_must_match_pool() {
+        let m = ModelSpec::llama_405b();
+        assert!(Layout { kvp: 4, tpa: 2, tpf: 4, ep: 1, pp: 1 }
+            .validate(&m, false)
+            .is_err());
+    }
+
+    #[test]
+    fn ep_requires_moe() {
+        let m = ModelSpec::llama_405b();
+        assert!(Layout::helix(4, 2, 2, 4).validate(&m, false).is_err());
+        let d = ModelSpec::deepseek_r1();
+        Layout::helix(8, 1, 2, 4).validate(&d, false).unwrap();
+    }
+
+    #[test]
+    fn pp_partitions_layers() {
+        let m = ModelSpec::llama_405b(); // 126 layers
+        let mut lo = Layout::tp(8);
+        lo.pp = 7;
+        lo.validate(&m, true).unwrap();
+        lo.pp = 4;
+        assert!(lo.validate(&m, true).is_err());
+    }
+}

@@ -1,0 +1,18 @@
+//! Configuration: hardware constants, model specifications, and
+//! execution layouts.
+//!
+//! Two families of models live here:
+//! * full-size specs ([`model::ModelSpec`]) — Llama-405B and DeepSeek-R1
+//!   as evaluated by the paper; consumed *only* by the analytic
+//!   simulator ([`crate::sim`]).
+//! * tiny engine models — described by the artifact manifest
+//!   ([`crate::runtime::artifacts::EngineModelConfig`]) and actually
+//!   executed by [`crate::engine`].
+
+pub mod hardware;
+pub mod layout;
+pub mod model;
+
+pub use hardware::Hardware;
+pub use layout::Layout;
+pub use model::{Attention, Ffn, ModelSpec};

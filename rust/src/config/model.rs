@@ -1,0 +1,257 @@
+//! Full-size model specifications for the analytic simulator.
+//!
+//! Mirrors the paper's two evaluation networks (S3.1): Llama-405B
+//! (dense, GQA) and DeepSeek-R1 (MoE, MLA), plus the hypothetical dense
+//! configuration used by Figure 1's roofline.
+
+/// Attention variant, with the parameters that drive KV-cache and
+/// weight-read costs.
+#[derive(Debug, Clone, Copy)]
+pub enum Attention {
+    /// Grouped-query attention: `kv_heads` K/V heads shared by
+    /// `q_heads` query heads.
+    Gqa { q_heads: usize, kv_heads: usize, head_size: usize },
+    /// Multi-head latent attention (DeepSeek): during decode, K and V
+    /// collapse into a single shared latent of width `kv_latent`
+    /// (= kv_lora_rank + rope dims). Effectively one KV head, so any
+    /// attention TP > 1 duplicates cache.
+    Mla {
+        q_heads: usize,
+        head_size: usize,   // nope head dim (128)
+        rope_size: usize,   // rope head dim (64)
+        kv_latent: usize,   // 512 + 64 = 576
+        q_lora: usize,      // 1536
+    },
+}
+
+impl Attention {
+    pub fn q_heads(&self) -> usize {
+        match *self {
+            Attention::Gqa { q_heads, .. } | Attention::Mla { q_heads, .. } => {
+                q_heads
+            }
+        }
+    }
+
+    /// Number of distinct KV heads: the TP width beyond which attention
+    /// sharding duplicates cache (paper Fig 1 left / Fig 2).
+    pub fn kv_heads(&self) -> usize {
+        match *self {
+            Attention::Gqa { kv_heads, .. } => kv_heads,
+            Attention::Mla { .. } => 1,
+        }
+    }
+
+    /// KV-cache *elements* appended per token per layer.
+    pub fn kv_elems_per_token(&self) -> f64 {
+        match *self {
+            Attention::Gqa { kv_heads, head_size, .. } => {
+                2.0 * kv_heads as f64 * head_size as f64
+            }
+            // Single shared latent; K and V are not materialized.
+            Attention::Mla { kv_latent, .. } => kv_latent as f64,
+        }
+    }
+
+    /// Attention weight parameters per layer (QKV + output projection).
+    pub fn weight_params(&self, hidden: usize) -> f64 {
+        let h = hidden as f64;
+        match *self {
+            Attention::Gqa { q_heads, kv_heads, head_size } => {
+                let (q, k, d) = (q_heads as f64, kv_heads as f64,
+                                 head_size as f64);
+                h * q * d          // Wq
+                    + 2.0 * h * k * d  // Wk, Wv
+                    + q * d * h        // Wo
+            }
+            Attention::Mla { q_heads, head_size, rope_size, kv_latent,
+                             q_lora } => {
+                let (q, dn, dr) = (q_heads as f64, head_size as f64,
+                                   rope_size as f64);
+                let (lkv, lq) = (kv_latent as f64, q_lora as f64);
+                // Decode-time (absorbed) MLA weights: down/up query
+                // projections, the shared KV down-projection, the
+                // per-head absorbed K/V matrices, and the output proj.
+                h * lq                       // W_DQ
+                    + lq * q * (dn + dr)     // W_UQ
+                    + h * lkv                // W_DKV (+rope)
+                    + q * dn * (lkv - dr)    // absorbed W_UK
+                    + q * (lkv - dr) * dn    // absorbed W_UV
+                    + q * dn * h             // W_O
+            }
+        }
+    }
+
+    /// FLOPs per token per layer for attention score+value math over a
+    /// context of `s` tokens (2 flops per MAC; scores + weighted sum).
+    pub fn attn_flops(&self, s: f64) -> f64 {
+        match *self {
+            Attention::Gqa { q_heads, head_size, .. } => {
+                2.0 * 2.0 * q_heads as f64 * head_size as f64 * s
+            }
+            Attention::Mla { q_heads, kv_latent, .. } => {
+                2.0 * 2.0 * q_heads as f64 * kv_latent as f64 * s
+            }
+        }
+    }
+}
+
+/// FFN variant.
+#[derive(Debug, Clone, Copy)]
+pub enum Ffn {
+    /// Dense SwiGLU: 3 matrices of H x inter.
+    Dense { inter: usize },
+    /// Mixture of experts (DeepSeek-style): `experts` routed SwiGLU
+    /// experts of width `expert_inter`, `top_k` active per token, plus
+    /// one always-on shared expert; the first `dense_layers` layers use
+    /// a dense FFN of width `dense_inter`.
+    Moe {
+        experts: usize,
+        top_k: usize,
+        expert_inter: usize,
+        shared_inter: usize,
+        dense_layers: usize,
+        dense_inter: usize,
+    },
+}
+
+/// A full-size model as the simulator sees it.
+#[derive(Debug, Clone, Copy)]
+pub struct ModelSpec {
+    pub name: &'static str,
+    pub layers: usize,
+    pub hidden: usize,
+    pub attention: Attention,
+    pub ffn: Ffn,
+    /// Fraction of the KV cache *read* per decode step. 1.0 = dense
+    /// attention; sparse mechanisms like NSA (paper S6) reduce read
+    /// bandwidth but not storage, so this scales read traffic only.
+    pub kv_read_fraction: f64,
+}
+
+impl ModelSpec {
+    /// Llama-405B: dense GQA model (Q=128, K=8, Hsz=128, F=53248).
+    pub fn llama_405b() -> ModelSpec {
+        ModelSpec {
+            name: "llama-405b",
+            layers: 126,
+            hidden: 16384,
+            attention: Attention::Gqa { q_heads: 128, kv_heads: 8,
+                                        head_size: 128 },
+            ffn: Ffn::Dense { inter: 53248 },
+            kv_read_fraction: 1.0,
+        }
+    }
+
+    /// Natively-sparse-attention variant (paper S6 future work): the
+    /// kernel reads `frac` of the KV history per step; capacity demand
+    /// is unchanged.
+    pub fn with_sparse_attention(mut self, frac: f64) -> ModelSpec {
+        assert!(frac > 0.0 && frac <= 1.0);
+        self.kv_read_fraction = frac;
+        self
+    }
+
+    /// DeepSeek-R1: 671B MoE with MLA attention.
+    pub fn deepseek_r1() -> ModelSpec {
+        ModelSpec {
+            name: "deepseek-r1",
+            layers: 61,
+            hidden: 7168,
+            attention: Attention::Mla { q_heads: 128, head_size: 128,
+                                        rope_size: 64, kv_latent: 576,
+                                        q_lora: 1536 },
+            ffn: Ffn::Moe { experts: 256, top_k: 8, expert_inter: 2048,
+                            shared_inter: 2048, dense_layers: 3,
+                            dense_inter: 18432 },
+            kv_read_fraction: 1.0,
+        }
+    }
+
+    /// The hypothetical dense model of Figure 1's roofline analysis:
+    /// B=8, Q=128, K=8, Hsz=128, F=65536.
+    pub fn fig1_dense() -> ModelSpec {
+        ModelSpec {
+            name: "fig1-dense",
+            layers: 128,
+            hidden: 16384,
+            attention: Attention::Gqa { q_heads: 128, kv_heads: 8,
+                                        head_size: 128 },
+            ffn: Ffn::Dense { inter: 65536 },
+            kv_read_fraction: 1.0,
+        }
+    }
+
+    /// Average FFN weight parameters per layer (routed experts count
+    /// fully toward capacity; see `sim::memory` for *read* traffic).
+    pub fn ffn_params_per_layer(&self) -> f64 {
+        let h = self.hidden as f64;
+        match self.ffn {
+            Ffn::Dense { inter } => 3.0 * h * inter as f64,
+            Ffn::Moe { experts, expert_inter, shared_inter, dense_layers,
+                       dense_inter, .. } => {
+                let l = self.layers as f64;
+                let moe_layers = l - dense_layers as f64;
+                let per_moe = 3.0 * h
+                    * (experts as f64 * expert_inter as f64
+                       + shared_inter as f64);
+                let per_dense = 3.0 * h * dense_inter as f64;
+                (per_moe * moe_layers + per_dense * dense_layers as f64) / l
+            }
+        }
+    }
+
+    /// Total parameters (attention + FFN across layers; embeddings
+    /// omitted — negligible for these models' decode economics).
+    pub fn total_params(&self) -> f64 {
+        self.layers as f64
+            * (self.attention.weight_params(self.hidden)
+               + self.ffn_params_per_layer())
+    }
+
+    /// KV-cache bytes per token across all layers at `bytes_per_elem`.
+    pub fn kv_bytes_per_token(&self, bytes_per_elem: f64) -> f64 {
+        self.layers as f64 * self.attention.kv_elems_per_token()
+            * bytes_per_elem
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llama_params_order_of_magnitude() {
+        let m = ModelSpec::llama_405b();
+        let p = m.total_params();
+        assert!(p > 3.4e11 && p < 4.6e11, "llama params {p:.3e}");
+    }
+
+    #[test]
+    fn deepseek_params_order_of_magnitude() {
+        let m = ModelSpec::deepseek_r1();
+        let p = m.total_params();
+        assert!(p > 5.5e11 && p < 7.5e11, "dsr1 params {p:.3e}");
+    }
+
+    #[test]
+    fn mla_collapses_to_one_kv_head() {
+        let m = ModelSpec::deepseek_r1();
+        assert_eq!(m.attention.kv_heads(), 1);
+        // 576 latent elems per token per layer — far below GQA's 2*K*Hsz.
+        assert_eq!(m.attention.kv_elems_per_token(), 576.0);
+    }
+
+    #[test]
+    fn kv_cache_at_1m_tokens() {
+        // Llama-405B @ FP4, 1M tokens: 126 * 2*8*128 * 0.5 B/elem * 1e6
+        // = ~129 GB per user — the paper's motivation for KVP.
+        let m = ModelSpec::llama_405b();
+        let gb = m.kv_bytes_per_token(0.5) * 1.0e6 / 1e9;
+        assert!(gb > 120.0 && gb < 140.0, "kv at 1M = {gb} GB");
+        // DeepSeek-R1 MLA is ~20x smaller.
+        let d = ModelSpec::deepseek_r1();
+        let dgb = d.kv_bytes_per_token(0.5) * 1.0e6 / 1e9;
+        assert!(dgb > 14.0 && dgb < 22.0, "dsr1 kv at 1M = {dgb} GB");
+    }
+}

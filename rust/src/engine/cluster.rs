@@ -1,0 +1,628 @@
+//! HelixCluster: the L3 coordinator over a pool of rank threads.
+//!
+//! Implements the paper's per-layer temporal pipeline (Fig 4) and the
+//! HOP-B request pipeline (Fig 3), plus an optional exactness mirror
+//! that replays every step through the unsharded `ref_layer` executable.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::runtime::artifacts::{EngineLayout, EngineModelConfig};
+use crate::runtime::{HostTensor, Manifest, Runtime};
+
+use super::comm_model::CommModel;
+use super::proto::{Cmd, Payload, Resp};
+use super::rank::{self, append_rank, RankInit};
+use super::shard;
+
+/// Cluster construction parameters.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub artifacts: PathBuf,
+    pub model: String,
+    pub layout: EngineLayout,
+    pub comm: CommModel,
+    /// Separate link model for the KVP All-to-All (the collective HOP-B
+    /// pipelines); defaults to `comm`. Lets the ablation slow down just
+    /// the exchange the paper's Fig 3 reasons about.
+    pub a2a_comm: Option<CommModel>,
+    /// Pipeline attention + All-to-All per request (paper S2.1.3).
+    pub hopb: bool,
+    /// Maintain the unsharded reference mirror and report max |diff|.
+    pub verify: bool,
+}
+
+impl ClusterConfig {
+    pub fn new(model: &str, layout: EngineLayout) -> ClusterConfig {
+        ClusterConfig {
+            artifacts: Manifest::default_root(),
+            model: model.to_string(),
+            layout,
+            comm: CommModel::disabled(),
+            a2a_comm: None,
+            hopb: false,
+            verify: false,
+        }
+    }
+}
+
+/// Per-step timing + verification metrics.
+#[derive(Debug, Clone, Default)]
+pub struct StepMetrics {
+    pub attn: Duration,
+    pub comm: Duration,
+    pub ffn: Duration,
+    pub total: Duration,
+    /// Max |engine - reference| over the final hidden state (verify mode).
+    pub max_ref_diff: Option<f32>,
+}
+
+struct VerifyState {
+    rt: Runtime,
+    /// Full (logical-order) KV mirror per layer: [B, Kh, Scap, Hsz].
+    k_full: Vec<HostTensor>,
+    v_full: Vec<HostTensor>,
+}
+
+/// The coordinator.
+pub struct HelixCluster {
+    pub cfg: EngineModelConfig,
+    pub layout: EngineLayout,
+    model: String,
+    comm: CommModel,
+    a2a_comm: CommModel,
+    hopb: bool,
+    txs: Vec<Sender<Cmd>>,
+    rx: Receiver<Resp>,
+    handles: Vec<JoinHandle<()>>,
+    /// Logical KV length per batch slot.
+    pub lens: Vec<usize>,
+    /// Which batch slots hold live requests.
+    pub active: Vec<bool>,
+    full_weights: Vec<BTreeMap<String, HostTensor>>,
+    verify: Option<VerifyState>,
+    /// Cumulative emulated-communication wall time.
+    pub comm_total: Duration,
+}
+
+impl HelixCluster {
+    pub fn new(cc: ClusterConfig) -> Result<HelixCluster> {
+        let manifest = Manifest::load(&cc.artifacts)?;
+        let entry = manifest.model(&cc.model)?.clone();
+        let cfg = entry.config.clone();
+        let lo = cc.layout;
+        ensure!(entry.layouts.contains(&lo),
+                "layout {} not in artifacts for {} (have: {})", lo.key(),
+                cc.model,
+                entry.layouts.iter().map(|l| l.key())
+                    .collect::<Vec<_>>().join(", "));
+
+        // Load full weights once; slice per rank.
+        let mut full_weights = Vec::with_capacity(cfg.layers);
+        for lw in &entry.layers {
+            let mut m = BTreeMap::new();
+            for (name, wref) in lw {
+                m.insert(name.clone(), manifest.load_weight(wref)?);
+            }
+            full_weights.push(m);
+        }
+        let wemb = manifest.load_weight(&entry.wemb)?;
+        let wnf = manifest.load_weight(&entry.wnf)?;
+        let wlog = manifest.load_weight(&entry.wlog)?;
+
+        let n = lo.n();
+        let (resp_tx, rx) = channel::<Resp>();
+        let mut txs = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        for id in 0..n {
+            let mut layers = Vec::with_capacity(cfg.layers);
+            for lw in &full_weights {
+                layers.push(shard::slice_layer(&cfg, &lo, id, lw)?);
+            }
+            let init = RankInit {
+                id,
+                model: cc.model.clone(),
+                cfg: cfg.clone(),
+                layout: lo,
+                manifest: manifest.clone(),
+                layers,
+                embed_weights: (id == 0)
+                    .then(|| (wemb.clone(), wnf.clone(), wlog.clone())),
+            };
+            let (tx, cmd_rx) = channel::<Cmd>();
+            let resp = resp_tx.clone();
+            handles.push(std::thread::Builder::new()
+                .name(format!("helix-rank-{id}"))
+                .spawn(move || rank::run(init, cmd_rx, resp))?);
+            txs.push(tx);
+        }
+
+        let verify = if cc.verify {
+            let rt = Runtime::new(manifest.clone())?;
+            let shape = [cfg.batch, cfg.kv_heads, cfg.seq_cap, cfg.head_size];
+            Some(VerifyState {
+                rt,
+                k_full: (0..cfg.layers).map(|_| HostTensor::zeros(&shape))
+                    .collect(),
+                v_full: (0..cfg.layers).map(|_| HostTensor::zeros(&shape))
+                    .collect(),
+            })
+        } else {
+            None
+        };
+
+        Ok(HelixCluster {
+            lens: vec![0; cfg.batch],
+            active: vec![false; cfg.batch],
+            cfg,
+            layout: lo,
+            model: cc.model,
+            comm: cc.comm,
+            a2a_comm: cc.a2a_comm.unwrap_or(cc.comm),
+            hopb: cc.hopb,
+            txs,
+            rx,
+            handles,
+            full_weights,
+            verify,
+            comm_total: Duration::ZERO,
+        })
+    }
+
+    pub fn n(&self) -> usize {
+        self.layout.n()
+    }
+
+    pub fn batch(&self) -> usize {
+        self.cfg.batch
+    }
+
+    fn send(&self, rank: usize, cmd: Cmd) -> Result<()> {
+        self.txs[rank].send(cmd).map_err(|_| {
+            anyhow!("rank {rank} is down (channel closed)")
+        })
+    }
+
+    /// Collect exactly `n` responses, indexed by rank. Errors propagate.
+    fn collect(&self, n: usize) -> Result<Vec<Payload>> {
+        let mut out: Vec<Option<Payload>> = (0..self.n()).map(|_| None)
+            .collect();
+        for _ in 0..n {
+            let resp = self.rx.recv().context("rank pool hung up")?;
+            if let Payload::Err(e) = &resp.payload {
+                bail!("rank {}: {e}", resp.rank);
+            }
+            out[resp.rank] = Some(resp.payload);
+        }
+        Ok(out.into_iter().flatten().collect())
+    }
+
+    fn emulate(&mut self, bytes: usize) {
+        let t = Instant::now();
+        self.comm.emulate(bytes);
+        self.comm_total += t.elapsed();
+    }
+
+    /// Emulate the KVP All-to-All link (possibly distinct — see
+    /// `ClusterConfig::a2a_comm`).
+    fn emulate_a2a(&mut self, bytes: usize) {
+        let t = Instant::now();
+        self.a2a_comm.emulate(bytes);
+        self.comm_total += t.elapsed();
+    }
+
+    fn pos_tensor(&self) -> HostTensor {
+        HostTensor::from_i32(self.lens.iter().map(|&l| l as i32).collect(),
+                             &[self.cfg.batch]).unwrap()
+    }
+
+    /// Admit a request into batch slot `row` (clears any previous state).
+    pub fn open_slot(&mut self, row: usize) -> Result<()> {
+        ensure!(row < self.cfg.batch, "slot {row} out of range");
+        for tx in &self.txs {
+            tx.send(Cmd::ResetRow { row })
+                .map_err(|_| anyhow!("rank down"))?;
+        }
+        self.collect(self.n())?;
+        self.lens[row] = 0;
+        self.active[row] = true;
+        if let Some(v) = &mut self.verify {
+            // Mirror reset = lens go to 0; stale cache rows are masked.
+            let _ = &mut v.k_full;
+        }
+        Ok(())
+    }
+
+    pub fn close_slot(&mut self, row: usize) {
+        self.active[row] = false;
+    }
+
+    /// Remaining KV capacity (logical tokens) for slot `row`,
+    /// conservatively accounting for round-robin imbalance (the
+    /// most-loaded KVP shard leads by at most one kv_block).
+    pub fn slot_capacity_left(&self, row: usize) -> usize {
+        let per_shard = self.cfg.seq_cap / self.layout.kvp;
+        let worst = self.lens[row] / self.layout.kvp + self.cfg.kv_block;
+        per_shard.saturating_sub(worst) * self.layout.kvp
+    }
+
+    /// One decode step over all active slots. `tokens[b]` is the input
+    /// token for slot b (ignored for inactive slots). Returns the next
+    /// token per slot plus step metrics.
+    pub fn decode_step(&mut self, tokens: &[i32])
+                       -> Result<(Vec<i32>, StepMetrics)> {
+        ensure!(tokens.len() == self.cfg.batch, "token arity");
+        let t0 = Instant::now();
+        let mut metrics = StepMetrics::default();
+
+        // Embed on rank 0.
+        let tok = HostTensor::from_i32(tokens.to_vec(), &[self.cfg.batch])?;
+        self.send(0, Cmd::Embed { tokens: tok.clone() })?;
+        let mut x = match self.collect(1)?.remove(0) {
+            Payload::Embedded(x) => x,
+            p => bail!("expected embed output, got {}", p.name()),
+        };
+
+        let x0 = self.verify.is_some().then(|| x.clone());
+
+        for layer in 0..self.cfg.layers {
+            x = self.layer_step(layer, x, &mut metrics)?;
+        }
+
+        // Logits + greedy next token on rank 0.
+        self.send(0, Cmd::Logits { x: x.clone() })?;
+        let next = match self.collect(1)?.remove(0) {
+            Payload::Logits { next, .. } => next.i32s()?.to_vec(),
+            p => bail!("expected logits, got {}", p.name()),
+        };
+
+        if let Some(x0) = x0 {
+            metrics.max_ref_diff = Some(self.run_reference(x0, &x)?);
+        }
+
+        for b in 0..self.cfg.batch {
+            if self.active[b] {
+                self.lens[b] += 1;
+            }
+        }
+        metrics.total = t0.elapsed();
+        Ok((next, metrics))
+    }
+
+    /// One Helix layer: attention phase on kvp x tpa, FFN on tpf x ep.
+    fn layer_step(&mut self, layer: usize, x: HostTensor,
+                  metrics: &mut StepMetrics) -> Result<HostTensor> {
+        let lo = self.layout;
+        let n = lo.n();
+        let (b, h) = (self.cfg.batch, self.cfg.hidden);
+
+        // --- in-projection (every rank; redundant across KVP) ----------
+        let t_attn = Instant::now();
+        let pos = self.pos_tensor();
+        self.emulate(x.size_bytes()); // token broadcast (S2.3)
+        for r in 0..n {
+            self.send(r, Cmd::InProj { layer, x: x.clone(),
+                                       pos: pos.clone() })?;
+        }
+        self.collect(n)?;
+
+        // --- round-robin staggered KV append (S2.3) --------------------
+        for r in 0..n {
+            let (_, kvp_k) = shard::attn_coords(&lo, r);
+            let rows: Vec<usize> = (0..b)
+                .filter(|&bi| self.active[bi]
+                        && append_rank(self.lens[bi], self.cfg.kv_block,
+                                       lo.kvp) == kvp_k)
+                .collect();
+            self.send(r, Cmd::Append { layer, rows })?;
+        }
+        self.collect(n)?;
+
+        // --- local flash-decode + All-to-All + combine ------------------
+        let o_slices = if self.hopb && lo.kvp > 1 && b > 1 {
+            self.attention_hopb(layer, metrics)?
+        } else {
+            self.attention_lockstep(layer, metrics)?
+        };
+        metrics.attn += t_attn.elapsed();
+
+        // --- TP=N output projection + All-Reduce ------------------------
+        let t = Instant::now();
+        for (r, o_slice) in o_slices.into_iter().enumerate() {
+            self.send(r, Cmd::OutProj { layer, o_slice })?;
+        }
+        let mut attn_out = HostTensor::zeros(&[b, h]);
+        for p in self.collect(n)? {
+            let Payload::Partial(t) = p else { bail!("expected partial") };
+            attn_out.add_assign(&t)?;
+        }
+        self.emulate(2 * b * h * 4); // All-Reduce over N
+        let mut h1 = x;
+        h1.add_assign(&attn_out)?;
+        metrics.attn += t.elapsed();
+
+        // --- FFN phase: re-provision the pool as tpf x ep ---------------
+        let t_ffn = Instant::now();
+        for r in 0..n {
+            let cmd = if self.cfg.is_moe() {
+                Cmd::FfnMoe { layer, h1: h1.clone() }
+            } else {
+                Cmd::FfnDense { layer, h1: h1.clone() }
+            };
+            self.send(r, cmd)?;
+        }
+        let mut ffn_out = HostTensor::zeros(&[b, h]);
+        for p in self.collect(n)? {
+            let Payload::Partial(t) = p else { bail!("expected partial") };
+            ffn_out.add_assign(&t)?;
+        }
+        self.emulate(2 * b * h * 4); // All-Reduce over N
+        let mut y = h1;
+        y.add_assign(&ffn_out)?;
+        metrics.ffn += t_ffn.elapsed();
+        Ok(y)
+    }
+
+    /// Reshuffle rank partials into each destination rank's combine
+    /// inputs: dest (j, k') receives, from every (j, r), query-head slice
+    /// [k'*qs, (k'+1)*qs) of the partial output and LSE.
+    fn a2a_stacks(&self, partials: &[(HostTensor, HostTensor)], qs: usize)
+                  -> Result<Vec<(HostTensor, HostTensor)>> {
+        let lo = self.layout;
+        let mut out = Vec::with_capacity(lo.n());
+        for dest in 0..lo.n() {
+            let (j, k) = shard::attn_coords(&lo, dest);
+            let mut os = Vec::with_capacity(lo.kvp);
+            let mut ls = Vec::with_capacity(lo.kvp);
+            for r in 0..lo.kvp {
+                let (o, lse) = &partials[j * lo.kvp + r];
+                os.push(o.slice_axis(1, k * qs, qs)?);
+                ls.push(lse.slice_axis(1, k * qs, qs)?);
+            }
+            let orefs: Vec<&HostTensor> = os.iter().collect();
+            let lrefs: Vec<&HostTensor> = ls.iter().collect();
+            out.push((HostTensor::stack(&orefs)?, HostTensor::stack(&lrefs)?));
+        }
+        Ok(out)
+    }
+
+    /// Lockstep attention: full-batch flash-decode, one All-to-All, one
+    /// combine (HOP-B OFF, Fig 3 top).
+    fn attention_lockstep(&mut self, layer: usize, metrics: &mut StepMetrics)
+                          -> Result<Vec<HostTensor>> {
+        let lo = self.layout;
+        let n = lo.n();
+        let (b, hsz) = (self.cfg.batch, self.cfg.head_size);
+        let qs = self.cfg.q_heads / n;
+        let qhl = self.cfg.q_heads / lo.tpa;
+
+        for r in 0..n {
+            self.send(r, Cmd::Attn { layer })?;
+        }
+        let mut partials: Vec<(HostTensor, HostTensor)> =
+            vec![(HostTensor::zeros(&[0]), HostTensor::zeros(&[0])); n];
+        for _ in 0..n {
+            let resp = self.rx.recv().context("rank pool hung up")?;
+            match resp.payload {
+                Payload::Attn { o, lse, .. } => partials[resp.rank] = (o, lse),
+                Payload::Err(e) => bail!("rank {}: {e}", resp.rank),
+                p => bail!("expected attn, got {}", p.name()),
+            }
+        }
+        if lo.kvp == 1 {
+            // No All-to-All needed: each rank already owns its N-slice.
+            return partials.into_iter()
+                .map(|(o, _)| o.reshape(&[b, qhl * hsz]))
+                .collect();
+        }
+        let t = Instant::now();
+        // Per-rank send volume: (kvp-1)/kvp of [B, qhl, hsz] + LSE.
+        let bytes = b * qhl * hsz * 4 * (lo.kvp - 1) / lo.kvp;
+        self.emulate_a2a(bytes);
+        metrics.comm += t.elapsed();
+
+        let stacks = self.a2a_stacks(&partials, qs)?;
+        for (r, (o_parts, lse_parts)) in stacks.into_iter().enumerate() {
+            self.send(r, Cmd::Combine { o_parts, lse_parts, row: None })?;
+        }
+        self.collect(n)?
+            .into_iter()
+            .map(|p| match p {
+                Payload::Combined { o_slice, .. } => Ok(o_slice),
+                p => bail!("expected combined, got {}", p.name()),
+            })
+            .collect()
+    }
+
+    /// HOP-B attention (Fig 3 bottom): request i's All-to-All overlaps
+    /// request i+1's flash-decode. The coordinator sleeps the emulated
+    /// link delay *after* dispatching the next row's compute.
+    fn attention_hopb(&mut self, layer: usize, metrics: &mut StepMetrics)
+                      -> Result<Vec<HostTensor>> {
+        let lo = self.layout;
+        let n = lo.n();
+        let (b, hsz) = (self.cfg.batch, self.cfg.head_size);
+        let qs = self.cfg.q_heads / n;
+        let qhl = self.cfg.q_heads / lo.tpa;
+        let row_bytes = qhl * hsz * 4 * (lo.kvp - 1) / lo.kvp;
+
+        // row -> per-rank partials / combined slices
+        let mut partials: Vec<Vec<Option<(HostTensor, HostTensor)>>> =
+            vec![vec![None; n]; b];
+        let mut combined: Vec<Vec<Option<HostTensor>>> = vec![vec![None; n]; b];
+        let mut attn_seen = vec![0usize; b];
+        let mut comb_seen = vec![0usize; b];
+
+        for r in 0..n {
+            self.send(r, Cmd::AttnRow { layer, row: 0 })?;
+        }
+        for row in 0..b {
+            // Wait for this row's partials (absorbing combine replies).
+            while attn_seen[row] < n {
+                let resp = self.rx.recv().context("rank pool hung up")?;
+                match resp.payload {
+                    Payload::Attn { o, lse, row: Some(rr) } => {
+                        partials[rr][resp.rank] = Some((o, lse));
+                        attn_seen[rr] += 1;
+                    }
+                    Payload::Combined { o_slice, row: Some(rr) } => {
+                        combined[rr][resp.rank] = Some(o_slice);
+                        comb_seen[rr] += 1;
+                    }
+                    Payload::Err(e) => bail!("rank {}: {e}", resp.rank),
+                    p => bail!("unexpected {}", p.name()),
+                }
+            }
+            // Kick off the next row's compute before communicating.
+            if row + 1 < b {
+                for r in 0..n {
+                    self.send(r, Cmd::AttnRow { layer, row: row + 1 })?;
+                }
+            }
+            // Emulated All-to-All for this row, overlapped with the
+            // ranks' next-row attention.
+            let t = Instant::now();
+            self.emulate_a2a(row_bytes);
+            metrics.comm += t.elapsed();
+            let rows: Vec<(HostTensor, HostTensor)> = partials[row]
+                .iter()
+                .map(|p| p.clone().unwrap())
+                .collect();
+            let stacks = self.a2a_stacks(&rows, qs)?;
+            for (r, (o_parts, lse_parts)) in stacks.into_iter().enumerate() {
+                self.send(r, Cmd::Combine { o_parts, lse_parts,
+                                            row: Some(row) })?;
+            }
+        }
+        // Drain outstanding combines.
+        while comb_seen.iter().sum::<usize>() < b * n {
+            let resp = self.rx.recv().context("rank pool hung up")?;
+            match resp.payload {
+                Payload::Combined { o_slice, row: Some(rr) } => {
+                    combined[rr][resp.rank] = Some(o_slice);
+                    comb_seen[rr] += 1;
+                }
+                Payload::Err(e) => bail!("rank {}: {e}", resp.rank),
+                p => bail!("unexpected {}", p.name()),
+            }
+        }
+        // Reassemble per-rank [B, qs*hsz] slices from the row pieces.
+        let mut out = Vec::with_capacity(n);
+        for r in 0..n {
+            let rows: Vec<HostTensor> = (0..b)
+                .map(|row| combined[row][r].clone().unwrap())
+                .collect();
+            let refs: Vec<&HostTensor> = rows.iter().collect();
+            out.push(HostTensor::concat(&refs, 0)?);
+        }
+        Ok(out)
+    }
+
+    /// Replay the step through the unsharded reference executables and
+    /// return max |engine - reference| on the final hidden state.
+    fn run_reference(&mut self, x0: HostTensor, y_engine: &HostTensor)
+                     -> Result<f32> {
+        let cfg = self.cfg.clone();
+        let model = self.model.clone();
+        let lens_t = self.pos_tensor();
+        let v = self.verify.as_mut().unwrap();
+        let entry = v.rt.manifest().model(&model)?.clone();
+        let prog = entry.role("ref_layer")?.to_string();
+
+        let mut x = x0;
+        for layer in 0..cfg.layers {
+            let lw = &self.full_weights[layer];
+            let mut inputs: Vec<&HostTensor> =
+                vec![&x, &v.k_full[layer], &v.v_full[layer], &lens_t,
+                     &lens_t];
+            let order: &[&str] = if cfg.is_moe() {
+                &["wn1", "wq", "wk", "wv", "wo", "wn2", "wr", "we1", "weg",
+                  "we2", "ws1", "wsg", "ws2"]
+            } else {
+                &["wn1", "wq", "wk", "wv", "wo", "wn2", "w1", "wg", "w2"]
+            };
+            for name in order {
+                inputs.push(lw.get(*name)
+                    .with_context(|| format!("ref weight {name}"))?);
+            }
+            let out = v.rt.execute(&prog, &inputs)?;
+            let mut it = out.into_iter();
+            let y = it.next().unwrap();
+            let k_new = it.next().unwrap();
+            let v_new = it.next().unwrap();
+            // Mirror the append in logical order (active rows only).
+            mirror_append(&mut v.k_full[layer], &k_new, &self.lens,
+                          &self.active)?;
+            mirror_append(&mut v.v_full[layer], &v_new, &self.lens,
+                          &self.active)?;
+            x = y;
+        }
+        // Compare active rows only (padded slots see stale mirror data).
+        let mut max = 0.0f32;
+        let (a, bb) = (y_engine.f32s()?, x.f32s()?);
+        for bi in 0..cfg.batch {
+            if !self.active[bi] {
+                continue;
+            }
+            for i in bi * cfg.hidden..(bi + 1) * cfg.hidden {
+                max = max.max((a[i] - bb[i]).abs());
+            }
+        }
+        Ok(max)
+    }
+
+    /// Shut the pool down cleanly.
+    pub fn shutdown(mut self) {
+        for tx in &self.txs {
+            let _ = tx.send(Cmd::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+
+    /// Inject a fault into one rank (tests).
+    pub fn inject_fault(&mut self, rank: usize, msg: &str) -> Result<String> {
+        self.send(rank, Cmd::Fail { msg: msg.to_string() })?;
+        match self.rx.recv().context("pool hung up")?.payload {
+            Payload::Err(e) => Ok(e),
+            p => bail!("expected error, got {}", p.name()),
+        }
+    }
+}
+
+/// Write `new[b, kh, hsz]` into `cache[b, kh, lens[b], hsz]`.
+fn mirror_append(cache: &mut HostTensor, new: &HostTensor, lens: &[usize],
+                 active: &[bool]) -> Result<()> {
+    let (b, kh, cap, hsz) = (cache.shape[0], cache.shape[1], cache.shape[2],
+                             cache.shape[3]);
+    let src = new.f32s()?.to_vec();
+    let dst = cache.f32s_mut()?;
+    for bi in 0..b {
+        if !active[bi] || lens[bi] >= cap {
+            continue;
+        }
+        for h in 0..kh {
+            let s = (bi * kh + h) * hsz;
+            let d = ((bi * kh + h) * cap + lens[bi]) * hsz;
+            dst[d..d + hsz].copy_from_slice(&src[s..s + hsz]);
+        }
+    }
+    Ok(())
+}
+
+impl Drop for HelixCluster {
+    fn drop(&mut self) {
+        for tx in &self.txs {
+            let _ = tx.send(Cmd::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}

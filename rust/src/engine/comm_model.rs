@@ -1,0 +1,75 @@
+//! NVLink-delay emulation for the functional engine.
+//!
+//! The engine's collectives are memcpys between rank threads; to make
+//! communication/computation overlap *observable* (the HOP-B ablation),
+//! each collective can inject a delay computed from the modeled link:
+//! `latency + bytes / bandwidth`, optionally magnified by `scale` so the
+//! effect is visible next to CPU-interpret compute times. `scale == 0`
+//! disables emulation entirely (pure-functional mode for exactness
+//! tests).
+
+use std::time::Duration;
+
+#[derive(Debug, Clone, Copy)]
+pub struct CommModel {
+    /// Per-collective fixed latency, seconds.
+    pub latency_s: f64,
+    /// Link bandwidth, bytes/second.
+    pub bw_bytes_per_s: f64,
+    /// Multiplier applied to the computed delay (0 = no emulation).
+    pub scale: f64,
+}
+
+impl CommModel {
+    /// NVLink5-like link, unscaled.
+    pub fn nvlink() -> CommModel {
+        CommModel { latency_s: 2.0e-6, bw_bytes_per_s: 0.9e12, scale: 1.0 }
+    }
+
+    /// No emulated delay (functional/exactness runs).
+    pub fn disabled() -> CommModel {
+        CommModel { latency_s: 0.0, bw_bytes_per_s: 1.0, scale: 0.0 }
+    }
+
+    /// Emulated transfer time for `bytes`.
+    pub fn delay(&self, bytes: usize) -> Duration {
+        if self.scale <= 0.0 {
+            return Duration::ZERO;
+        }
+        let t = (self.latency_s + bytes as f64 / self.bw_bytes_per_s)
+            * self.scale;
+        Duration::from_secs_f64(t)
+    }
+
+    /// Sleep for the modeled transfer time (called on the comm path).
+    pub fn emulate(&self, bytes: usize) {
+        let d = self.delay(bytes);
+        if !d.is_zero() {
+            std::thread::sleep(d);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_is_zero() {
+        assert_eq!(CommModel::disabled().delay(1 << 30), Duration::ZERO);
+    }
+
+    #[test]
+    fn delay_scales_with_bytes_and_scale() {
+        let m = CommModel { latency_s: 0.0, bw_bytes_per_s: 1e9, scale: 1.0 };
+        assert_eq!(m.delay(1_000_000), Duration::from_millis(1));
+        let m2 = CommModel { scale: 10.0, ..m };
+        assert_eq!(m2.delay(1_000_000), Duration::from_millis(10));
+    }
+
+    #[test]
+    fn latency_floor() {
+        let m = CommModel::nvlink();
+        assert!(m.delay(0) >= Duration::from_nanos(1900));
+    }
+}

@@ -1,0 +1,29 @@
+//! Functional distributed decode engine.
+//!
+//! Executes the tiny manifest models *for real* under Helix sharding:
+//! N rank threads, each owning a private PJRT CPU client, its weight
+//! shards and its KV shard, exchanging [`crate::runtime::HostTensor`]s
+//! through the coordinator. This is the paper's per-layer temporal
+//! pipeline (Fig 4) made concrete:
+//!
+//! 1. broadcast activations; every KVP rank of a TPA group runs the
+//!    *same* in-projection (redundant QKV, S2.1.1);
+//! 2. round-robin staggered KV append (S2.3);
+//! 3. per-rank L1 flash-decode over the local shard;
+//! 4. All-to-All over the query-head axis + LSE combine (exact softmax);
+//! 5. TP=N output projection + All-Reduce;
+//! 6. re-provision the same ranks as a TPF x EP grid for the FFN.
+//!
+//! Transport is in-memory channels plus an NVLink-delay emulation layer
+//! ([`comm_model`]); numerics are bit-faithful to a real deployment,
+//! which [`cluster::HelixCluster::verify_against_reference`] checks
+//! against the unsharded `ref_layer` executable every step.
+
+pub mod cluster;
+pub mod comm_model;
+pub mod proto;
+pub mod rank;
+pub mod shard;
+
+pub use cluster::{ClusterConfig, HelixCluster, StepMetrics};
+pub use comm_model::CommModel;

@@ -1,0 +1,80 @@
+//! Coordinator <-> rank message protocol.
+//!
+//! One mpsc command channel per rank, one shared response channel back
+//! to the coordinator. All payloads are [`HostTensor`]s (Send). Each
+//! response carries the rank id so the coordinator can reassemble
+//! collective inputs in rank order.
+
+use crate::runtime::HostTensor;
+
+/// Commands the coordinator issues to a rank thread.
+#[derive(Debug)]
+pub enum Cmd {
+    /// RMSNorm + QKV projection + RoPE for `layer`; rank caches q/k/v.
+    InProj { layer: usize, x: HostTensor, pos: HostTensor },
+    /// Append the rank's own freshly computed K/V for the given batch
+    /// rows to its `layer` shard (round-robin target rows only).
+    Append { layer: usize, rows: Vec<usize> },
+    /// Full-batch flash-decode over the local shard for `layer`.
+    Attn { layer: usize },
+    /// Single-request flash-decode (HOP-B chunk) for batch row `row`.
+    AttnRow { layer: usize, row: usize },
+    /// LSE combine of stacked partials (post All-to-All slice for this
+    /// rank). `row` selects the batch-1 program variant (HOP-B chunk)
+    /// and is echoed back for reassembly.
+    Combine { o_parts: HostTensor, lse_parts: HostTensor,
+              row: Option<usize> },
+    /// Clear the KV shard for one batch slot (request eviction).
+    ResetRow { row: usize },
+    /// TP=N output projection of this rank's combined slice.
+    OutProj { layer: usize, o_slice: HostTensor },
+    /// Dense SwiGLU FFN partial (TPF shard) for `layer`.
+    FfnDense { layer: usize, h1: HostTensor },
+    /// MoE FFN partial: local router + held experts + shared expert,
+    /// gate-scaled and summed on the rank.
+    FfnMoe { layer: usize, h1: HostTensor },
+    /// Token embedding (executed on rank 0).
+    Embed { tokens: HostTensor },
+    /// Final norm + LM head + greedy argmax (executed on rank 0).
+    Logits { x: HostTensor },
+    /// Fault injection for tests: the rank replies with an error.
+    Fail { msg: String },
+    Shutdown,
+}
+
+/// Rank responses. `rank` identifies the sender.
+#[derive(Debug)]
+pub struct Resp {
+    pub rank: usize,
+    pub payload: Payload,
+}
+
+#[derive(Debug)]
+pub enum Payload {
+    Ack,
+    /// Attention partials: o [b, qh_local, hsz], lse [b, qh_local].
+    Attn { o: HostTensor, lse: HostTensor, row: Option<usize> },
+    /// Combined slice [b, qs*hsz].
+    Combined { o_slice: HostTensor, row: Option<usize> },
+    /// A [B, H] partial for an All-Reduce.
+    Partial(HostTensor),
+    /// Embedding output [B, H].
+    Embedded(HostTensor),
+    /// (logits [B, V], next tokens [B]).
+    Logits { logits: HostTensor, next: HostTensor },
+    Err(String),
+}
+
+impl Payload {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Payload::Ack => "ack",
+            Payload::Attn { .. } => "attn",
+            Payload::Combined { .. } => "combined",
+            Payload::Partial(_) => "partial",
+            Payload::Embedded(_) => "embedded",
+            Payload::Logits { .. } => "logits",
+            Payload::Err(_) => "err",
+        }
+    }
+}

@@ -1,0 +1,467 @@
+//! Rank thread: one simulated GPU.
+//!
+//! Each rank owns a private PJRT CPU client (the `xla` crate's handles
+//! are thread-local by design), its weight shards, and its KV shard per
+//! layer, and executes [`Cmd`]s from the coordinator. The KV shard is
+//! preallocated at `seq_cap / kvp` capacity with per-request lengths —
+//! the shapes the AOT attention programs were compiled for.
+
+use std::sync::mpsc::{Receiver, Sender};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::runtime::artifacts::{EngineLayout, EngineModelConfig};
+use crate::runtime::{HostTensor, Manifest, Runtime};
+
+use super::proto::{Cmd, Payload, Resp};
+use super::shard::{FfnShard, LayerShard};
+
+/// One layer's KV shard: [B, Kh_local, S_shard, Hsz] + per-row lengths.
+pub struct KvShard {
+    pub k: HostTensor,
+    pub v: HostTensor,
+    pub lens: Vec<i32>,
+    cap: usize,
+}
+
+impl KvShard {
+    pub fn new(b: usize, kh_local: usize, cap: usize, hsz: usize) -> KvShard {
+        KvShard {
+            k: HostTensor::zeros(&[b, kh_local, cap, hsz]),
+            v: HostTensor::zeros(&[b, kh_local, cap, hsz]),
+            lens: vec![0; b],
+            cap,
+        }
+    }
+
+    /// Append one token's K/V (rows `[kh_local, hsz]` within a
+    /// `[B, kh_local, hsz]` tensor) for batch row `b_idx`.
+    pub fn append(&mut self, b_idx: usize, k_new: &HostTensor,
+                  v_new: &HostTensor) -> Result<()> {
+        let (kh, hsz) = (self.k.shape[1], self.k.shape[3]);
+        let pos = self.lens[b_idx] as usize;
+        if pos >= self.cap {
+            bail!("KV shard overflow: row {b_idx} at {pos}/{}", self.cap);
+        }
+        for (cache, new) in [(&mut self.k, k_new), (&mut self.v, v_new)] {
+            let src = new.f32s()?;
+            let dst = cache.f32s_mut()?;
+            for h in 0..kh {
+                let s = (b_idx * kh + h) * hsz;
+                let d = ((b_idx * kh + h) * self.cap + pos) * hsz;
+                dst[d..d + hsz].copy_from_slice(&src[s..s + hsz]);
+            }
+        }
+        self.lens[b_idx] += 1;
+        Ok(())
+    }
+
+    fn lens_tensor(&self) -> HostTensor {
+        HostTensor::from_i32(self.lens.clone(), &[self.lens.len()]).unwrap()
+    }
+
+    fn row_view(&self, b_idx: usize) -> Result<(HostTensor, HostTensor,
+                                                HostTensor)> {
+        Ok((self.k.slice_axis(0, b_idx, 1)?,
+            self.v.slice_axis(0, b_idx, 1)?,
+            HostTensor::from_i32(vec![self.lens[b_idx]], &[1])?))
+    }
+}
+
+/// Everything a rank thread needs, moved into it at spawn.
+pub struct RankInit {
+    pub id: usize,
+    /// Manifest model name (program-index key).
+    pub model: String,
+    pub cfg: EngineModelConfig,
+    pub layout: EngineLayout,
+    pub manifest: Manifest,
+    /// Per-layer weight shards.
+    pub layers: Vec<LayerShard>,
+    /// Full embedding/logits weights (rank 0 only).
+    pub embed_weights: Option<(HostTensor, HostTensor, HostTensor)>,
+}
+
+/// Device-resident weight buffers for one layer (uploaded once at init;
+/// SPerf-L3: the hot path uploads only activations).
+struct LayerDev {
+    wn1: xla::PjRtBuffer,
+    wq: xla::PjRtBuffer,
+    wk: xla::PjRtBuffer,
+    wv: xla::PjRtBuffer,
+    wo_slice: xla::PjRtBuffer,
+    wn2: xla::PjRtBuffer,
+    ffn: FfnDev,
+}
+
+enum FfnDev {
+    Dense { w1: xla::PjRtBuffer, wg: xla::PjRtBuffer, w2: xla::PjRtBuffer },
+    Moe {
+        wr: xla::PjRtBuffer,
+        experts: Vec<(usize, xla::PjRtBuffer, xla::PjRtBuffer,
+                      xla::PjRtBuffer)>,
+        shared: (xla::PjRtBuffer, xla::PjRtBuffer, xla::PjRtBuffer),
+    },
+}
+
+impl LayerDev {
+    fn from_shard(rt: &Runtime, w: &LayerShard) -> Result<LayerDev> {
+        let ffn = match &w.ffn {
+            FfnShard::Dense { w1, wg, w2 } => FfnDev::Dense {
+                w1: rt.upload(w1)?,
+                wg: rt.upload(wg)?,
+                w2: rt.upload(w2)?,
+            },
+            FfnShard::Moe { wr, experts, shared } => FfnDev::Moe {
+                wr: rt.upload(wr)?,
+                experts: experts
+                    .iter()
+                    .map(|(e, a, b, c)| Ok((*e, rt.upload(a)?,
+                                            rt.upload(b)?, rt.upload(c)?)))
+                    .collect::<Result<Vec<_>>>()?,
+                shared: (rt.upload(&shared.0)?, rt.upload(&shared.1)?,
+                         rt.upload(&shared.2)?),
+            },
+        };
+        Ok(LayerDev {
+            wn1: rt.upload(&w.wn1)?,
+            wq: rt.upload(&w.wq)?,
+            wk: rt.upload(&w.wk)?,
+            wv: rt.upload(&w.wv)?,
+            wo_slice: rt.upload(&w.wo_slice)?,
+            wn2: rt.upload(&w.wn2)?,
+            ffn,
+        })
+    }
+}
+
+struct RankState {
+    init: RankInit,
+    rt: Runtime,
+    /// Per-layer device-resident weights.
+    dev: Vec<LayerDev>,
+    kv: Vec<KvShard>,
+    /// q/k/v from the most recent InProj, per layer.
+    qkv: Vec<Option<(HostTensor, HostTensor, HostTensor)>>,
+    /// Pre-resolved role -> program names (SPerf-L3: no per-command
+    /// manifest lookups or format! allocations on the hot path).
+    prog_in_proj: String,
+    prog_attn: String,
+    prog_attn_b1: Option<String>,
+    prog_combine: Option<String>,
+    prog_combine_b1: Option<String>,
+    prog_out_proj: String,
+    prog_ffn: Option<String>,
+    prog_router: Option<String>,
+    prog_expert: Option<String>,
+    prog_shared: Option<String>,
+    prog_embed: Option<String>,
+    prog_logits: Option<String>,
+}
+
+/// Rank thread entry point.
+pub fn run(init: RankInit, rx: Receiver<Cmd>, tx: Sender<Resp>) {
+    let id = init.id;
+    let mut st = match RankState::new(init) {
+        Ok(s) => s,
+        Err(e) => {
+            let _ = tx.send(Resp { rank: id,
+                                   payload: Payload::Err(format!("{e:#}")) });
+            return;
+        }
+    };
+    while let Ok(cmd) = rx.recv() {
+        if matches!(cmd, Cmd::Shutdown) {
+            break;
+        }
+        let payload = match st.handle(cmd) {
+            Ok(p) => p,
+            Err(e) => Payload::Err(format!("{e:#}")),
+        };
+        if tx.send(Resp { rank: id, payload }).is_err() {
+            break; // coordinator gone
+        }
+    }
+}
+
+impl RankState {
+    fn new(init: RankInit) -> Result<RankState> {
+        let mut rt = Runtime::new(init.manifest.clone())?;
+        let cfg = &init.cfg;
+        let lo = &init.layout;
+        let kh_local = cfg.kv_heads / lo.tpa;
+        let cap = cfg.seq_cap / lo.kvp;
+        let kv = (0..cfg.layers)
+            .map(|_| KvShard::new(cfg.batch, kh_local, cap, cfg.head_size))
+            .collect();
+        let qkv = (0..cfg.layers).map(|_| None).collect();
+
+        // Resolve every role this rank can be asked to play, and compile
+        // the programs up front so the first decode step pays no JIT
+        // latency (SPerf-L3: kills the first-token p99 spike).
+        let entry = init.manifest.model(&init.model)?;
+        let req = |role: String| -> Result<String> {
+            Ok(entry.role(&role)?.to_string())
+        };
+        let opt = |role: String| -> Option<String> {
+            entry.role(&role).ok().map(|s| s.to_string())
+        };
+        let n = lo.n();
+        let prog_in_proj = req(format!("in_proj_tpa{}", lo.tpa))?;
+        let prog_attn = req(format!("attn_kvp{}_tpa{}", lo.kvp, lo.tpa))?;
+        let prog_attn_b1 = opt(format!("attn_kvp{}_tpa{}_b1", lo.kvp, lo.tpa));
+        let prog_combine = opt(format!("combine_kvp{}_n{}", lo.kvp, n));
+        let prog_combine_b1 = opt(format!("combine_kvp{}_n{}_b1", lo.kvp, n));
+        let prog_out_proj = req(format!("out_proj_n{n}"))?;
+        let (prog_ffn, prog_router, prog_expert, prog_shared) =
+            if cfg.is_moe() {
+                (None, opt("router".into()),
+                 opt(format!("expert_tpf{}", lo.tpf)),
+                 opt(format!("shared_n{n}")))
+            } else {
+                (opt(format!("ffn_tpf{}", lo.tpf)), None, None, None)
+            };
+        let prog_embed = (init.id == 0).then(|| req("embed".into()))
+            .transpose()?;
+        let prog_logits = (init.id == 0).then(|| req("logits".into()))
+            .transpose()?;
+        for prog in [Some(&prog_in_proj), Some(&prog_attn),
+                     prog_attn_b1.as_ref(), prog_combine.as_ref(),
+                     prog_combine_b1.as_ref(), Some(&prog_out_proj),
+                     prog_ffn.as_ref(), prog_router.as_ref(),
+                     prog_expert.as_ref(), prog_shared.as_ref(),
+                     prog_embed.as_ref(), prog_logits.as_ref()]
+            .into_iter()
+            .flatten()
+        {
+            rt.prepare(prog)?;
+        }
+        let dev = init
+            .layers
+            .iter()
+            .map(|w| LayerDev::from_shard(&rt, w))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(RankState {
+            init, rt, dev, kv, qkv, prog_in_proj, prog_attn, prog_attn_b1,
+            prog_combine, prog_combine_b1, prog_out_proj, prog_ffn,
+            prog_router, prog_expert, prog_shared, prog_embed, prog_logits,
+        })
+    }
+
+    fn handle(&mut self, cmd: Cmd) -> Result<Payload> {
+        let _lo = self.init.layout;
+        match cmd {
+            Cmd::InProj { layer, x, pos } => {
+                let prog = self.prog_in_proj.clone();
+                let xb = self.rt.upload(&x)?;
+                let pb = self.rt.upload(&pos)?;
+                let w = &self.dev[layer];
+                let out = self.rt.execute_buffers(
+                    &prog, &[&xb, &pb, &w.wn1, &w.wq, &w.wk, &w.wv])?;
+                let mut it = out.into_iter();
+                let (q, k, v) = (it.next().unwrap(), it.next().unwrap(),
+                                 it.next().unwrap());
+                self.qkv[layer] = Some((q, k, v));
+                Ok(Payload::Ack)
+            }
+            Cmd::Append { layer, rows } => {
+                // Move q/k/v out (no copy) and restore after appending.
+                let qkv = self.qkv[layer].take()
+                    .context("Append before InProj")?;
+                for b_idx in rows {
+                    self.kv[layer].append(b_idx, &qkv.1, &qkv.2)?;
+                }
+                self.qkv[layer] = Some(qkv);
+                Ok(Payload::Ack)
+            }
+            Cmd::Attn { layer } => {
+                let qkv = self.qkv[layer].take()
+                    .context("Attn before InProj")?;
+                let shard = &self.kv[layer];
+                let lens = shard.lens_tensor();
+                let out = self.rt.execute(&self.prog_attn.clone(),
+                                          &[&qkv.0, &shard.k, &shard.v,
+                                            &lens]);
+                self.qkv[layer] = Some(qkv);
+                let mut it = out?.into_iter();
+                Ok(Payload::Attn { o: it.next().unwrap(),
+                                   lse: it.next().unwrap(), row: None })
+            }
+            Cmd::AttnRow { layer, row } => {
+                let prog = self.prog_attn_b1.clone()
+                    .context("no batch-1 attention program (kvp==1?)")?;
+                let q1 = self.qkv[layer].as_ref()
+                    .context("AttnRow before InProj")?
+                    .0.slice_axis(0, row, 1)?;
+                let (k1, v1, l1) = self.kv[layer].row_view(row)?;
+                let out = self.rt.execute(&prog, &[&q1, &k1, &v1, &l1])?;
+                let mut it = out.into_iter();
+                Ok(Payload::Attn { o: it.next().unwrap(),
+                                   lse: it.next().unwrap(), row: Some(row) })
+            }
+            Cmd::Combine { o_parts, lse_parts, row } => {
+                let prog = if row.is_some() {
+                    self.prog_combine_b1.clone()
+                } else {
+                    self.prog_combine.clone()
+                }
+                .context("no combine program (kvp==1?)")?;
+                let out = self.rt.execute(&prog, &[&o_parts, &lse_parts])?;
+                Ok(Payload::Combined { o_slice: out.into_iter().next()
+                                       .unwrap(), row })
+            }
+            Cmd::ResetRow { row } => {
+                for shard in &mut self.kv {
+                    shard.lens[row] = 0;
+                }
+                Ok(Payload::Ack)
+            }
+            Cmd::OutProj { layer, o_slice } => {
+                let prog = self.prog_out_proj.clone();
+                let ob = self.rt.upload(&o_slice)?;
+                let w = &self.dev[layer];
+                let out = self.rt.execute_buffers(&prog,
+                                                  &[&ob, &w.wo_slice])?;
+                Ok(Payload::Partial(out.into_iter().next().unwrap()))
+            }
+            Cmd::FfnDense { layer, h1 } => {
+                let prog = self.prog_ffn.clone()
+                    .context("dense FFN program missing (MoE model?)")?;
+                let hb = self.rt.upload(&h1)?;
+                let w = &self.dev[layer];
+                let FfnDev::Dense { w1, wg, w2 } = &w.ffn else {
+                    bail!("dense FFN requested on MoE shard");
+                };
+                let out = self.rt.execute_buffers(
+                    &prog, &[&hb, &w.wn2, w1, wg, w2])?;
+                Ok(Payload::Partial(out.into_iter().next().unwrap()))
+            }
+            Cmd::FfnMoe { layer, h1 } => self.ffn_moe(layer, h1),
+            Cmd::Embed { tokens } => {
+                let prog = self.prog_embed.clone()
+                    .context("embed runs on rank 0 only")?;
+                let (wemb, _, _) = self.init.embed_weights.as_ref()
+                    .context("embed weights only on rank 0")?;
+                let out = self.rt.execute(&prog, &[&tokens, wemb])?;
+                Ok(Payload::Embedded(out.into_iter().next().unwrap()))
+            }
+            Cmd::Logits { x } => {
+                let prog = self.prog_logits.clone()
+                    .context("logits runs on rank 0 only")?;
+                let (_, wnf, wlog) = self.init.embed_weights.as_ref()
+                    .context("logits weights only on rank 0")?;
+                let out = self.rt.execute(&prog, &[&x, wnf, wlog])?;
+                let mut it = out.into_iter();
+                Ok(Payload::Logits { logits: it.next().unwrap(),
+                                     next: it.next().unwrap() })
+            }
+            Cmd::Fail { msg } => Err(anyhow!("injected fault: {msg}")),
+            Cmd::Shutdown => unreachable!("handled by run()"),
+        }
+    }
+
+    /// MoE FFN partial: local router (redundant, DP-style), held experts
+    /// gate-scaled, plus the shared-expert slice.
+    fn ffn_moe(&mut self, layer: usize, h1: HostTensor) -> Result<Payload> {
+        let cfg = self.init.cfg.clone();
+        let hb = self.rt.upload(&h1)?;
+        let wn2 = &self.dev[layer].wn2;
+        let FfnDev::Moe { wr, .. } = &self.dev[layer].ffn else {
+            bail!("MoE FFN requested on dense shard");
+        };
+        let router = self.prog_router.clone().context("router program")?;
+        let out = self.rt.execute_buffers(&router, &[&hb, wn2, wr])?;
+        let mut it = out.into_iter();
+        let gates = it.next().unwrap();
+        let hn = it.next().unwrap();
+        let hnb = self.rt.upload(&hn)?;
+
+        let mut acc = HostTensor::zeros(&[cfg.batch, cfg.hidden]);
+        let eprog = self.prog_expert.clone().context("expert program")?;
+        let experts_and_shared = &self.dev[layer].ffn;
+        let FfnDev::Moe { experts, shared, .. } = experts_and_shared else {
+            unreachable!()
+        };
+        for (e, w1, wg, w2) in experts {
+            let out = self.rt.execute_buffers(&eprog, &[&hnb, w1, wg, w2])?;
+            let mut part = out.into_iter().next().unwrap();
+            scale_rows_by_gate(&mut part, &gates, *e)?;
+            acc.add_assign(&part)?;
+        }
+        let sprog = self.prog_shared.clone().context("shared program")?;
+        let (ws1, wsg, ws2) = shared;
+        let out = self.rt.execute_buffers(&sprog, &[&hnb, ws1, wsg, ws2])?;
+        acc.add_assign(&out.into_iter().next().unwrap())?;
+        Ok(Payload::Partial(acc))
+    }
+}
+
+/// Multiply each batch row of `part` [B, H] by `gates[b, e]`.
+fn scale_rows_by_gate(part: &mut HostTensor, gates: &HostTensor, e: usize)
+                      -> Result<()> {
+    let (b, h) = (part.shape[0], part.shape[1]);
+    let ne = gates.shape[1];
+    let g = gates.f32s()?.to_vec();
+    let p = part.f32s_mut()?;
+    for bi in 0..b {
+        let factor = g[bi * ne + e];
+        for x in &mut p[bi * h..(bi + 1) * h] {
+            *x *= factor;
+        }
+    }
+    Ok(())
+}
+
+/// The round-robin KVP rank a request appends to, given its logical
+/// length (paper S2.3: cycle every `kv_block` tokens).
+pub fn append_rank(logical_len: usize, kv_block: usize, kvp: usize) -> usize {
+    (logical_len / kv_block) % kvp
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kv_append_layout() {
+        let mut s = KvShard::new(2, 2, 4, 3);
+        let k_new = HostTensor::from_f32((0..12).map(|i| i as f32).collect(),
+                                         &[2, 2, 3]).unwrap();
+        let v_new = k_new.clone();
+        s.append(1, &k_new, &v_new).unwrap();
+        s.append(1, &k_new, &v_new).unwrap();
+        assert_eq!(s.lens, vec![0, 2]);
+        // Row 1, head 0, positions 0 and 1 hold k_new[1,0] = [6,7,8].
+        let k = s.k.f32s().unwrap();
+        let base = ((1 * 2 + 0) * 4 + 0) * 3;
+        assert_eq!(&k[base..base + 6], &[6.0, 7.0, 8.0, 6.0, 7.0, 8.0]);
+        // Row 0 untouched.
+        assert!(k[..24].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn kv_overflow_detected() {
+        let mut s = KvShard::new(1, 1, 2, 2);
+        let n = HostTensor::zeros(&[1, 1, 2]);
+        s.append(0, &n, &n).unwrap();
+        s.append(0, &n, &n).unwrap();
+        assert!(s.append(0, &n, &n).is_err());
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        // kv_block = 4, kvp = 2: tokens 0-3 -> rank 0, 4-7 -> rank 1, ...
+        let ranks: Vec<usize> =
+            (0..12).map(|l| append_rank(l, 4, 2)).collect();
+        assert_eq!(ranks, vec![0, 0, 0, 0, 1, 1, 1, 1, 0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn gate_scaling() {
+        let mut part = HostTensor::from_f32(vec![1.0; 6], &[2, 3]).unwrap();
+        let gates = HostTensor::from_f32(vec![0.5, 0.0, 2.0, 1.0], &[2, 2])
+            .unwrap();
+        scale_rows_by_gate(&mut part, &gates, 0).unwrap();
+        assert_eq!(part.f32s().unwrap(), &[0.5, 0.5, 0.5, 2.0, 2.0, 2.0]);
+    }
+}

@@ -1,0 +1,252 @@
+//! Weight sharding: slice full model weights into per-rank shards.
+//!
+//! This is the rust half of the contract with `python/tests/helix_sim.py`
+//! (the semantic spec): identical rank grid and slicing conventions.
+//!
+//! Rank grid:
+//! * attention phase: rank `n` has `tpa_j = n / kvp`, `kvp_k = n % kvp`;
+//! * FFN phase:       rank `n` has `tpf_i = n / ep`,  `ep_g = n % ep`;
+//! * post-All-to-All query-head slice of rank `n` starts at global head
+//!   `tpa_j * (Qh/tpa) + kvp_k * (Qh/N)` and spans `Qh/N` heads.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::artifacts::{EngineLayout, EngineModelConfig};
+use crate::runtime::HostTensor;
+
+/// One rank's slice of one layer's weights.
+#[derive(Debug, Clone)]
+pub struct LayerShard {
+    pub wn1: HostTensor,
+    pub wq: HostTensor,
+    pub wk: HostTensor,
+    pub wv: HostTensor,
+    /// Rows of Wo for this rank's post-combine query-head slice.
+    pub wo_slice: HostTensor,
+    pub wn2: HostTensor,
+    pub ffn: FfnShard,
+}
+
+/// FFN-phase weights for one rank.
+#[derive(Debug, Clone)]
+pub enum FfnShard {
+    Dense {
+        w1: HostTensor,
+        wg: HostTensor,
+        w2: HostTensor,
+    },
+    Moe {
+        wr: HostTensor,
+        /// (expert id, w1, wg, w2) for every expert this rank's EP group
+        /// holds, TPF-sliced.
+        experts: Vec<(usize, HostTensor, HostTensor, HostTensor)>,
+        /// Shared expert, sliced over all N ranks.
+        shared: (HostTensor, HostTensor, HostTensor),
+    },
+}
+
+/// Attention-phase coordinates of rank `n`.
+pub fn attn_coords(lo: &EngineLayout, n: usize) -> (usize, usize) {
+    (n / lo.kvp, n % lo.kvp)
+}
+
+/// FFN-phase coordinates of rank `n`.
+pub fn ffn_coords(lo: &EngineLayout, n: usize) -> (usize, usize) {
+    (n / lo.ep, n % lo.ep)
+}
+
+/// Global query-head offset of rank `n`'s post-combine slice.
+pub fn head_offset(cfg: &EngineModelConfig, lo: &EngineLayout, n: usize)
+                   -> usize {
+    let (j, k) = attn_coords(lo, n);
+    let qhl = cfg.q_heads / lo.tpa;
+    let qs = cfg.q_heads / lo.n();
+    j * qhl + k * qs
+}
+
+/// Slice one layer's full weights for rank `n` under `lo`.
+pub fn slice_layer(cfg: &EngineModelConfig, lo: &EngineLayout, n: usize,
+                   full: &BTreeMap<String, HostTensor>) -> Result<LayerShard> {
+    let get = |name: &str| -> Result<&HostTensor> {
+        full.get(name).with_context(|| format!("missing weight {name}"))
+    };
+    let hsz = cfg.head_size;
+    let (j, _k) = attn_coords(lo, n);
+    let qhl = cfg.q_heads / lo.tpa;
+    let khl = cfg.kv_heads / lo.tpa;
+    let qs = cfg.q_heads / lo.n();
+
+    let wq = get("wq")?.slice_axis(1, j * qhl * hsz, qhl * hsz)?;
+    let wk = get("wk")?.slice_axis(1, j * khl * hsz, khl * hsz)?;
+    let wv = get("wv")?.slice_axis(1, j * khl * hsz, khl * hsz)?;
+    let off = head_offset(cfg, lo, n);
+    let wo_slice = get("wo")?.slice_axis(0, off * hsz, qs * hsz)?;
+
+    let (i, g) = ffn_coords(lo, n);
+    let ffn = if cfg.is_moe() {
+        let fp = cfg.expert_ffn / lo.tpf;
+        let epg = cfg.experts / lo.ep;
+        let we1 = get("we1")?;
+        let weg = get("weg")?;
+        let we2 = get("we2")?;
+        let mut experts = Vec::new();
+        for e in g * epg..(g + 1) * epg {
+            let w1 = we1.slice_axis(0, e, 1)?
+                .reshape(&[cfg.hidden, cfg.expert_ffn])?
+                .slice_axis(1, i * fp, fp)?;
+            let wg = weg.slice_axis(0, e, 1)?
+                .reshape(&[cfg.hidden, cfg.expert_ffn])?
+                .slice_axis(1, i * fp, fp)?;
+            let w2 = we2.slice_axis(0, e, 1)?
+                .reshape(&[cfg.expert_ffn, cfg.hidden])?
+                .slice_axis(0, i * fp, fp)?;
+            experts.push((e, w1, wg, w2));
+        }
+        let fs = cfg.shared_ffn / lo.n();
+        let shared = (
+            get("ws1")?.slice_axis(1, n * fs, fs)?,
+            get("wsg")?.slice_axis(1, n * fs, fs)?,
+            get("ws2")?.slice_axis(0, n * fs, fs)?,
+        );
+        FfnShard::Moe { wr: get("wr")?.clone(), experts, shared }
+    } else {
+        let fp = cfg.ffn / lo.tpf;
+        FfnShard::Dense {
+            w1: get("w1")?.slice_axis(1, i * fp, fp)?,
+            wg: get("wg")?.slice_axis(1, i * fp, fp)?,
+            w2: get("w2")?.slice_axis(0, i * fp, fp)?,
+        }
+    };
+
+    Ok(LayerShard {
+        wn1: get("wn1")?.clone(),
+        wq,
+        wk,
+        wv,
+        wo_slice,
+        wn2: get("wn2")?.clone(),
+        ffn,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> EngineModelConfig {
+        EngineModelConfig {
+            hidden: 16, q_heads: 4, kv_heads: 2, head_size: 4, layers: 1,
+            vocab: 8, seq_cap: 8, batch: 2, kv_block: 2, ffn: 8, experts: 0,
+            top_k: 0, expert_ffn: 0, shared_ffn: 0,
+        }
+    }
+
+    fn full_dense(c: &EngineModelConfig) -> BTreeMap<String, HostTensor> {
+        let h = c.hidden;
+        let mk = |r: usize, cc: usize| {
+            HostTensor::from_f32((0..r * cc).map(|i| i as f32).collect(),
+                                 &[r, cc]).unwrap()
+        };
+        let mut m = BTreeMap::new();
+        m.insert("wn1".into(), HostTensor::zeros(&[h]));
+        m.insert("wq".into(), mk(h, c.q_heads * c.head_size));
+        m.insert("wk".into(), mk(h, c.kv_heads * c.head_size));
+        m.insert("wv".into(), mk(h, c.kv_heads * c.head_size));
+        m.insert("wo".into(), mk(h, h));
+        m.insert("wn2".into(), HostTensor::zeros(&[h]));
+        m.insert("w1".into(), mk(h, c.ffn));
+        m.insert("wg".into(), mk(h, c.ffn));
+        m.insert("w2".into(), mk(c.ffn, h));
+        m
+    }
+
+    #[test]
+    fn rank_grid_coordinates() {
+        let lo = EngineLayout { kvp: 2, tpa: 2, tpf: 4, ep: 1 };
+        assert_eq!(attn_coords(&lo, 0), (0, 0));
+        assert_eq!(attn_coords(&lo, 1), (0, 1));
+        assert_eq!(attn_coords(&lo, 2), (1, 0));
+        assert_eq!(attn_coords(&lo, 3), (1, 1));
+        assert_eq!(ffn_coords(&lo, 3), (3, 0));
+    }
+
+    #[test]
+    fn head_offsets_partition_q_heads() {
+        let c = cfg();
+        let lo = EngineLayout { kvp: 2, tpa: 2, tpf: 4, ep: 1 };
+        let offs: Vec<usize> =
+            (0..4).map(|n| head_offset(&c, &lo, n)).collect();
+        // qhl = 2, qs = 1: ranks cover heads 0,1 (tpa 0) and 2,3 (tpa 1).
+        assert_eq!(offs, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn qkv_slices_are_disjoint_and_cover() {
+        let c = cfg();
+        let lo = EngineLayout { kvp: 1, tpa: 2, tpf: 2, ep: 1 };
+        let full = full_dense(&c);
+        let s0 = slice_layer(&c, &lo, 0, &full).unwrap();
+        let s1 = slice_layer(&c, &lo, 1, &full).unwrap();
+        let cat = HostTensor::concat(&[&s0.wq, &s1.wq], 1).unwrap();
+        assert_eq!(&cat, full.get("wq").unwrap());
+    }
+
+    #[test]
+    fn wo_rows_reassemble() {
+        let c = cfg();
+        let lo = EngineLayout { kvp: 2, tpa: 2, tpf: 4, ep: 1 };
+        let full = full_dense(&c);
+        let parts: Vec<HostTensor> = (0..4)
+            .map(|n| slice_layer(&c, &lo, n, &full).unwrap().wo_slice)
+            .collect();
+        let refs: Vec<&HostTensor> = parts.iter().collect();
+        let cat = HostTensor::concat(&refs, 0).unwrap();
+        assert_eq!(&cat, full.get("wo").unwrap());
+    }
+
+    #[test]
+    fn moe_experts_partition() {
+        let c = EngineModelConfig {
+            experts: 4, top_k: 2, expert_ffn: 8, shared_ffn: 8, ffn: 0,
+            ..cfg()
+        };
+        let h = c.hidden;
+        let mut full = full_dense(&cfg());
+        full.remove("w1");
+        full.remove("wg");
+        full.remove("w2");
+        let mk3 = |a: usize, b: usize, cc: usize| {
+            HostTensor::from_f32((0..a * b * cc).map(|i| i as f32).collect(),
+                                 &[a, b, cc]).unwrap()
+        };
+        full.insert("wr".into(), HostTensor::zeros(&[h, 4]));
+        full.insert("we1".into(), mk3(4, h, 8));
+        full.insert("weg".into(), mk3(4, h, 8));
+        full.insert("we2".into(), mk3(4, 8, h));
+        full.insert("ws1".into(), HostTensor::zeros(&[h, 8]));
+        full.insert("wsg".into(), HostTensor::zeros(&[h, 8]));
+        full.insert("ws2".into(), HostTensor::zeros(&[8, h]));
+
+        let lo = EngineLayout { kvp: 2, tpa: 2, tpf: 2, ep: 2 };
+        let mut seen: Vec<Vec<usize>> = Vec::new();
+        for n in 0..4 {
+            let s = slice_layer(&c, &lo, n, &full).unwrap();
+            if let FfnShard::Moe { experts, .. } = s.ffn {
+                seen.push(experts.iter().map(|e| e.0).collect());
+                for (_, w1, _, w2) in &experts {
+                    assert_eq!(w1.shape, vec![h, 4]); // Fe/tpf = 8/2
+                    assert_eq!(w2.shape, vec![4, h]);
+                }
+            } else {
+                panic!("expected MoE shard");
+            }
+        }
+        // ep_g = n % 2: ranks 0,2 hold experts {0,1}; ranks 1,3 hold {2,3}.
+        assert_eq!(seen[0], vec![0, 1]);
+        assert_eq!(seen[1], vec![2, 3]);
+        assert_eq!(seen[2], vec![0, 1]);
+        assert_eq!(seen[3], vec![2, 3]);
+    }
+}

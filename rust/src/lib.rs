@@ -1,0 +1,42 @@
+//! # helix — Helix Parallelism for interactive multi-million-token LLM decoding
+//!
+//! A reproduction of *Helix Parallelism: Rethinking Sharding Strategies for
+//! Interactive Multi-Million-Token LLM Decoding* (NVIDIA, 2025) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordinator: Helix's temporal pipeline
+//!   (KVP×TPA attention → TPF×EP FFN on the same rank pool), the
+//!   All-to-All + LSE combine, HOP-B batch-wise overlap, round-robin KV
+//!   concatenation, a serving layer, and the analytic GB200 simulator
+//!   that regenerates every figure of the paper's evaluation.
+//! * **L2 (python/compile/model.py)** — JAX decode-step graphs, lowered
+//!   once to HLO text (`make artifacts`) and executed here via PJRT.
+//! * **L1 (python/compile/kernels/)** — the Pallas flash-decode kernel
+//!   (partial attention + log-sum-exp over a KV shard).
+//!
+//! Python never runs on the request path: the rust binary is
+//! self-contained once `artifacts/` is built.
+//!
+//! Module map:
+//! * [`util`] — offline-friendly substrates (mini-JSON, PRNG,
+//!   property-test driver, CLI parsing, stats, tables, timelines).
+//! * [`runtime`] — PJRT client wrapper + artifact manifest loading.
+//! * [`config`] — model presets (Llama-405B, DeepSeek-R1, tiny engine
+//!   models), GB200 hardware constants, Helix layouts + validity.
+//! * [`sim`] — the paper's evaluation apparatus: roofline memory model,
+//!   phase timing, HOP-B overlap, strategy sweep, Pareto frontiers.
+//! * [`engine`] — functional distributed decode: N rank threads, each
+//!   with its own PJRT client, exchanging host tensors through in-memory
+//!   collectives with an NVLink-delay emulation layer.
+//! * [`serve`] — request router, dynamic batcher, decode server with
+//!   TTL/throughput metrics.
+
+pub mod config;
+pub mod engine;
+pub mod runtime;
+pub mod serve;
+pub mod sim;
+pub mod util;
+
+/// Crate-wide result type (anyhow-based: errors cross PJRT/IO layers).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,210 @@
+//! helix CLI — leader entrypoint.
+//!
+//! Simulator commands (regenerate the paper's figures):
+//!   helix roofline                      Fig 1 (left/middle/right)
+//!   helix timeline                      Fig 3 HOP-B timeline
+//!   helix pareto --model <m>            Fig 5 / Fig 6 frontiers
+//!   helix ablate --model <m>            Fig 7 HOP-B ON/OFF
+//!   helix sweep --model <m>             raw sweep dump
+//!
+//! Engine commands (real execution over AOT artifacts):
+//!   helix verify --model tiny_gqa       sharded-vs-reference exactness
+//!   helix serve --model tiny_gqa        end-to-end batched serving
+//!   helix layouts --model tiny_gqa      show layouts (Fig 2)
+
+use anyhow::{bail, Result};
+
+use helix::config::{Hardware, ModelSpec};
+use helix::sim::decode::Strategy;
+use helix::sim::sweep::{self, SweepBounds};
+use helix::sim::{hopb, memory, pareto, Frontier};
+use helix::util::cli::Args;
+use helix::util::table::{fmt_ratio, Table};
+
+fn model_by_name(name: &str) -> Result<ModelSpec> {
+    Ok(match name {
+        "llama-405b" | "llama" => ModelSpec::llama_405b(),
+        "deepseek-r1" | "dsr1" => ModelSpec::deepseek_r1(),
+        "fig1" => ModelSpec::fig1_dense(),
+        _ => bail!("unknown simulator model {name:?} \
+                    (llama-405b | deepseek-r1 | fig1)"),
+    })
+}
+
+fn bounds_from(args: &Args) -> Result<SweepBounds> {
+    Ok(SweepBounds {
+        max_gpus: args.opt_usize("gpus", 64)?,
+        max_batch: args.opt_usize("max-batch", 1024)?,
+        seq_len: args.opt_f64("seq-len", 1.0e6)?,
+    })
+}
+
+fn cmd_roofline(args: &Args) -> Result<()> {
+    let hw = Hardware::gb200_nvl72();
+    let (b, k, hsz, f, h) = (8, 8, 128, 65536, 16384);
+
+    println!("Figure 1 (left): DRAM read latency vs TP width (S=1M, KVP=1)");
+    let mut t = Table::new(["TP", "KV read (ms)", "weight read (ms)",
+                            "total (ms)"]);
+    for tp in [1usize, 2, 4, 8, 16, 32, 64] {
+        let kv = memory::fig1_kv_read_time(&hw, b, k, hsz, 1e6, tp, 1);
+        let w = memory::fig1_weight_read_time(&hw, h, 128, k, hsz, f, tp, tp);
+        t.row([format!("{tp}"), format!("{:.3}", kv * 1e3),
+               format!("{:.3}", w * 1e3), format!("{:.3}", (kv + w) * 1e3)]);
+    }
+    print!("{}", t.render());
+
+    println!("\nFigure 1 (middle): DRAM read time vs KV length S (TP=8)");
+    let mut t = Table::new(["S (tokens)", "KV read (ms)", "weight read (ms)"]);
+    for s in [262144.0, 524288.0, 1.0e6, 2.0e6, 4.0e6] {
+        let kv = memory::fig1_kv_read_time(&hw, b, k, hsz, s, 8, 1);
+        let w = memory::fig1_weight_read_time(&hw, h, 128, k, hsz, f, 8, 8);
+        t.row([format!("{s:.0}"), format!("{:.3}", kv * 1e3),
+               format!("{:.3}", w * 1e3)]);
+    }
+    print!("{}", t.render());
+
+    println!("\nFigure 1 (right): DRAM read time vs KVP width (TPA=8, S=1M)");
+    let mut t = Table::new(["KVP", "GPUs", "KV read (ms)",
+                            "weight read @TPF=N (ms)"]);
+    for kvp in [1usize, 2, 4, 8] {
+        let n = kvp * 8;
+        let kv = memory::fig1_kv_read_time(&hw, b, k, hsz, 1e6, 8, kvp);
+        let w = memory::fig1_weight_read_time(&hw, h, 128, k, hsz, f, 8, n);
+        t.row([format!("{kvp}"), format!("{n}"),
+               format!("{:.3}", kv * 1e3), format!("{:.3}", w * 1e3)]);
+    }
+    print!("{}", t.render());
+    let _ = args;
+    Ok(())
+}
+
+fn cmd_timeline(args: &Args) -> Result<()> {
+    let chunks = args.opt_usize("requests", 8)?;
+    let c = args.opt_f64("compute", 2.0)?;
+    let m = args.opt_f64("comm", 1.2)?;
+    for &enabled in &[false, true] {
+        let tl = hopb::timeline(c, m, chunks, enabled);
+        println!("HOP-B {}: makespan {:.1} units, exposed comm {:.1} units",
+                 if enabled { "ON " } else { "OFF" }, tl.makespan(),
+                 tl.exposed_comm());
+        print!("{}", tl.render(64));
+        println!();
+    }
+    println!("(paper Fig 3: 25.6 units lockstep vs ~17 pipelined)");
+    Ok(())
+}
+
+fn frontier_for(m: &ModelSpec, hw: &Hardware, strategy: Strategy,
+                bounds: &SweepBounds) -> Frontier {
+    Frontier::from_points(sweep::sweep_strategy(m, hw, strategy, bounds))
+}
+
+fn print_frontier(label: &str, f: &Frontier, norm_inter: f64,
+                  norm_thpt: f64) {
+    println!("\n{label} frontier ({} points):", f.points.len());
+    let mut t = Table::new(["tok/s/user (norm)", "tok/s/gpu (norm)",
+                            "layout", "batch", "gpus", "strategy"]);
+    for p in &f.points {
+        t.row([format!("{:.3}", p.interactivity / norm_inter),
+               format!("{:.3}", p.throughput_per_gpu / norm_thpt),
+               format!("{}", p.layout), format!("{}", p.batch * p.layout.pp),
+               format!("{}", p.gpus), p.strategy.name().to_string()]);
+    }
+    print!("{}", t.render());
+}
+
+fn cmd_pareto(args: &Args) -> Result<()> {
+    let m = model_by_name(args.opt_or("model", "deepseek-r1"))?;
+    let hw = Hardware::gb200_nvl72();
+    let bounds = bounds_from(args)?;
+
+    println!("model {} | S = {:.0} tokens | <= {} GPUs | {} configs examined",
+             m.name, bounds.seq_len, bounds.max_gpus,
+             sweep::config_count(&m, &bounds));
+
+    let base = Frontier::from_points(sweep::sweep_baseline(&m, &hw, &bounds));
+    let helix = frontier_for(&m, &hw, Strategy::Helix { hopb: true },
+                             &bounds);
+    let (ni, nt) = (base.max_interactivity(), base.max_throughput());
+    print_frontier("baseline (best of TP/PP/KVP/EP)", &base, ni, nt);
+    print_frontier("helix", &helix, ni, nt);
+
+    let h = pareto::headline(&helix, &base);
+    println!("\nheadline: interactivity gain {} | max throughput gain {} \
+              (at {:.3} of baseline max interactivity) | batch gain {}",
+             fmt_ratio(h.interactivity_gain), fmt_ratio(h.throughput_gain),
+             h.gain_at_interactivity / ni, fmt_ratio(h.batch_gain));
+    Ok(())
+}
+
+fn cmd_ablate(args: &Args) -> Result<()> {
+    let m = model_by_name(args.opt_or("model", "llama-405b"))?;
+    let hw = Hardware::gb200_nvl72();
+    let bounds = bounds_from(args)?;
+    let on = frontier_for(&m, &hw, Strategy::Helix { hopb: true }, &bounds);
+    let off = frontier_for(&m, &hw, Strategy::Helix { hopb: false }, &bounds);
+    println!("model {}: HOP-B ablation (Fig 7)", m.name);
+    let mut t = Table::new(["tok/s/gpu (frac of max)", "tok/s/user ON",
+                            "tok/s/user OFF", "degradation"]);
+    let nt = on.max_throughput();
+    for frac in [0.01, 0.02, 0.05, 0.1, 0.2, 0.4, 0.6, 0.8, 1.0] {
+        let target = nt * frac;
+        // Invert: best interactivity subject to throughput >= target.
+        let inter_at = |f: &Frontier| {
+            f.points
+                .iter()
+                .filter(|p| p.throughput_per_gpu >= target)
+                .map(|p| p.interactivity)
+                .fold(0.0, f64::max)
+        };
+        let i_on = inter_at(&on);
+        let i_off = inter_at(&off);
+        if i_on <= 0.0 {
+            continue;
+        }
+        t.row([format!("{frac:.2}"), format!("{i_on:.1}"),
+               format!("{i_off:.1}"),
+               format!("{:.1}%", (1.0 - i_off / i_on) * 100.0)]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let m = model_by_name(args.opt_or("model", "llama-405b"))?;
+    let hw = Hardware::gb200_nvl72();
+    let bounds = bounds_from(args)?;
+    let mut all = sweep::sweep_baseline(&m, &hw, &bounds);
+    all.extend(sweep::sweep_strategy(&m, &hw, Strategy::Helix { hopb: true },
+                                     &bounds));
+    println!("strategy,layout,batch,gpus,ttl_ms,tok_s_user,tok_s_gpu");
+    for p in &all {
+        println!("{},{},{},{},{:.4},{:.2},{:.4}", p.strategy.name(),
+                 p.layout, p.batch * p.layout.pp, p.gpus, p.ttl * 1e3,
+                 p.interactivity, p.throughput_per_gpu);
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.subcommand.as_deref() {
+        Some("roofline") => cmd_roofline(&args),
+        Some("timeline") => cmd_timeline(&args),
+        Some("pareto") => cmd_pareto(&args),
+        Some("ablate") => cmd_ablate(&args),
+        Some("sweep") => cmd_sweep(&args),
+        Some("verify") | Some("serve") | Some("layouts") => {
+            helix::serve::cli::run(&args)
+        }
+        other => {
+            if let Some(o) = other {
+                eprintln!("unknown subcommand {o:?}\n");
+            }
+            eprintln!("usage: helix <roofline|timeline|pareto|ablate|sweep|\
+                       verify|serve|layouts> [--options]");
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,300 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the rust runtime.
+//!
+//! `artifacts/manifest.json` indexes every lowered HLO program (with its
+//! input/output tensor specs) and every model's full-weight files. The
+//! engine slices full weights per layout at init time (rust owns the
+//! sharding logic; python only authors the math).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{ensure, Context, Result};
+
+use crate::util::Json;
+
+use super::tensor::{DType, HostTensor};
+
+/// Shape+dtype of one program input or output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+/// One AOT-lowered HLO program.
+#[derive(Debug, Clone)]
+pub struct ProgramSpec {
+    pub name: String,
+    pub hlo_path: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Reference to a weight file on disk.
+#[derive(Debug, Clone)]
+pub struct WeightRef {
+    pub file: PathBuf,
+    pub shape: Vec<usize>,
+}
+
+/// Engine-model configuration (mirrors python/compile/configs.py).
+#[derive(Debug, Clone)]
+pub struct EngineModelConfig {
+    pub hidden: usize,
+    pub q_heads: usize,
+    pub kv_heads: usize,
+    pub head_size: usize,
+    pub layers: usize,
+    pub vocab: usize,
+    pub seq_cap: usize,
+    pub batch: usize,
+    pub kv_block: usize,
+    pub ffn: usize,
+    pub experts: usize,
+    pub top_k: usize,
+    pub expert_ffn: usize,
+    pub shared_ffn: usize,
+}
+
+impl EngineModelConfig {
+    pub fn is_moe(&self) -> bool {
+        self.experts > 0
+    }
+}
+
+/// An execution layout as emitted by aot.py.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EngineLayout {
+    pub kvp: usize,
+    pub tpa: usize,
+    pub tpf: usize,
+    pub ep: usize,
+}
+
+impl EngineLayout {
+    pub fn n(&self) -> usize {
+        self.kvp * self.tpa
+    }
+
+    pub fn key(&self) -> String {
+        format!("kvp{}_tpa{}_tpf{}_ep{}", self.kvp, self.tpa, self.tpf,
+                self.ep)
+    }
+}
+
+/// Per-model manifest entry.
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub config: EngineModelConfig,
+    pub layouts: Vec<EngineLayout>,
+    /// role key (e.g. `in_proj_tpa2`) -> program name.
+    pub program_index: BTreeMap<String, String>,
+    pub wemb: WeightRef,
+    pub wnf: WeightRef,
+    pub wlog: WeightRef,
+    /// per-layer weight name -> ref (wn1/wq/wk/wv/wo/wn2 + ffn or moe).
+    pub layers: Vec<BTreeMap<String, WeightRef>>,
+}
+
+/// The parsed artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub programs: BTreeMap<String, ProgramSpec>,
+    pub models: BTreeMap<String, ModelEntry>,
+}
+
+fn parse_tensor_spec(j: &Json) -> Result<TensorSpec> {
+    Ok(TensorSpec {
+        name: j.get("name")?.as_str()?.to_string(),
+        shape: j.get("shape")?.shape_vec()?,
+        dtype: DType::parse(j.get("dtype")?.as_str()?)?,
+    })
+}
+
+fn parse_weight_ref(j: &Json) -> Result<WeightRef> {
+    Ok(WeightRef {
+        file: PathBuf::from(j.get("file")?.as_str()?),
+        shape: j.get("shape")?.shape_vec()?,
+    })
+}
+
+impl Manifest {
+    /// Load `<root>/manifest.json`.
+    pub fn load(root: &Path) -> Result<Manifest> {
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`?)"))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        ensure!(j.get("version")?.as_usize()? == 1, "manifest version != 1");
+
+        let mut programs = BTreeMap::new();
+        for (name, pj) in j.get("programs")?.as_obj()? {
+            let inputs = pj.get("inputs")?.as_arr()?
+                .iter().map(parse_tensor_spec).collect::<Result<Vec<_>>>()?;
+            let outputs = pj.get("outputs")?.as_arr()?
+                .iter().map(parse_tensor_spec).collect::<Result<Vec<_>>>()?;
+            programs.insert(name.clone(), ProgramSpec {
+                name: name.clone(),
+                hlo_path: root.join(pj.get("hlo")?.as_str()?),
+                inputs,
+                outputs,
+            });
+        }
+
+        let mut models = BTreeMap::new();
+        for (name, mj) in j.get("models")?.as_obj()? {
+            let cj = mj.get("config")?;
+            let cfg = EngineModelConfig {
+                hidden: cj.get("hidden")?.as_usize()?,
+                q_heads: cj.get("q_heads")?.as_usize()?,
+                kv_heads: cj.get("kv_heads")?.as_usize()?,
+                head_size: cj.get("head_size")?.as_usize()?,
+                layers: cj.get("layers")?.as_usize()?,
+                vocab: cj.get("vocab")?.as_usize()?,
+                seq_cap: cj.get("seq_cap")?.as_usize()?,
+                batch: cj.get("batch")?.as_usize()?,
+                kv_block: cj.get("kv_block")?.as_usize()?,
+                ffn: cj.get("ffn")?.as_usize()?,
+                experts: cj.get("experts")?.as_usize()?,
+                top_k: cj.get("top_k")?.as_usize()?,
+                expert_ffn: cj.get("expert_ffn")?.as_usize()?,
+                shared_ffn: cj.get("shared_ffn")?.as_usize()?,
+            };
+            let mut layouts = Vec::new();
+            for lj in mj.get("layouts")?.as_arr()? {
+                layouts.push(EngineLayout {
+                    kvp: lj.get("kvp")?.as_usize()?,
+                    tpa: lj.get("tpa")?.as_usize()?,
+                    tpf: lj.get("tpf")?.as_usize()?,
+                    ep: lj.get("ep")?.as_usize()?,
+                });
+            }
+            let mut program_index = BTreeMap::new();
+            for (role, pj) in mj.get("program_index")?.as_obj()? {
+                let prog = pj.as_str()?.to_string();
+                ensure!(programs.contains_key(&prog),
+                        "model {name}: role {role} -> unknown program {prog}");
+                program_index.insert(role.clone(), prog);
+            }
+            let wj = mj.get("weights")?;
+            let mut layers = Vec::new();
+            for lj in wj.get("layers")?.as_arr()? {
+                let mut lw = BTreeMap::new();
+                for (wname, wref) in lj.as_obj()? {
+                    lw.insert(wname.clone(), parse_weight_ref(wref)?);
+                }
+                layers.push(lw);
+            }
+            models.insert(name.clone(), ModelEntry {
+                config: cfg,
+                layouts,
+                program_index,
+                wemb: parse_weight_ref(wj.get("wemb")?)?,
+                wnf: parse_weight_ref(wj.get("wnf")?)?,
+                wlog: parse_weight_ref(wj.get("wlog")?)?,
+                layers,
+            });
+        }
+
+        Ok(Manifest { root: root.to_path_buf(), programs, models })
+    }
+
+    /// Default artifact root: `$HELIX_ARTIFACTS` or `./artifacts`.
+    pub fn default_root() -> PathBuf {
+        std::env::var_os("HELIX_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    pub fn program(&self, name: &str) -> Result<&ProgramSpec> {
+        self.programs.get(name)
+            .with_context(|| format!("unknown program {name:?}"))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models.get(name)
+            .with_context(|| format!("unknown model {name:?}"))
+    }
+
+    /// Load a weight tensor from disk.
+    pub fn load_weight(&self, w: &WeightRef) -> Result<HostTensor> {
+        HostTensor::read_f32_file(&self.root.join(&w.file), &w.shape)
+    }
+}
+
+impl ModelEntry {
+    /// Resolve a role key (e.g. `attn_kvp2_tpa2`) to its program name.
+    pub fn role(&self, role: &str) -> Result<&str> {
+        self.program_index.get(role)
+            .map(|s| s.as_str())
+            .with_context(|| format!("model has no program for role {role:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Integration coverage for real manifests lives in rust/tests/;
+    /// here we exercise the parser against a synthetic document.
+    fn sample() -> &'static str {
+        r#"{
+          "version": 1,
+          "programs": {
+            "m.embed": {
+              "hlo": "programs/m.embed.hlo.txt",
+              "inputs": [{"name": "tokens", "shape": [4], "dtype": "i32"},
+                          {"name": "wemb", "shape": [16, 8], "dtype": "f32"}],
+              "outputs": [{"name": "x", "shape": [4, 8], "dtype": "f32"}]
+            }
+          },
+          "models": {
+            "m": {
+              "config": {"hidden": 8, "q_heads": 2, "kv_heads": 1,
+                          "head_size": 4, "layers": 1, "vocab": 16,
+                          "seq_cap": 32, "batch": 4, "kv_block": 16,
+                          "ffn": 32, "experts": 0, "top_k": 0,
+                          "expert_ffn": 0, "shared_ffn": 0},
+              "layouts": [{"kvp": 2, "tpa": 1, "tpf": 2, "ep": 1, "key": "k"}],
+              "program_index": {"embed": "m.embed"},
+              "weights": {
+                "wemb": {"file": "weights/m/wemb.bin", "shape": [16, 8]},
+                "wnf": {"file": "weights/m/wnf.bin", "shape": [8]},
+                "wlog": {"file": "weights/m/wlog.bin", "shape": [8, 16]},
+                "layers": [{"wn1": {"file": "weights/m/l0.wn1.bin",
+                                       "shape": [8]}}]
+              }
+            }
+          }
+        }"#
+    }
+
+    #[test]
+    fn parses_sample_manifest() {
+        let dir = std::env::temp_dir().join("helix_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), sample()).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let p = m.program("m.embed").unwrap();
+        assert_eq!(p.inputs[0].dtype, DType::I32);
+        assert_eq!(p.outputs[0].shape, vec![4, 8]);
+        let e = m.model("m").unwrap();
+        assert_eq!(e.config.hidden, 8);
+        assert_eq!(e.layouts[0].n(), 2);
+        assert_eq!(e.role("embed").unwrap(), "m.embed");
+        assert!(e.role("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_dangling_program_index() {
+        let bad = sample().replace("\"embed\": \"m.embed\"",
+                                   "\"embed\": \"m.missing\"");
+        let dir = std::env::temp_dir().join("helix_manifest_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), bad).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

@@ -1,0 +1,16 @@
+//! Runtime: load AOT artifacts (HLO text, per the xla_extension 0.5.1
+//! interchange constraint) and execute them on the PJRT CPU client.
+//!
+//! This is the only module that touches the `xla` crate. Everything
+//! above it exchanges [`tensor::HostTensor`]s, which are plain `Vec`s and
+//! therefore `Send` — rank threads each own a private [`client::Runtime`]
+//! (the crate's PJRT types are `Rc`-based and deliberately thread-local,
+//! mirroring one-client-per-GPU-process deployments).
+
+pub mod artifacts;
+pub mod client;
+pub mod tensor;
+
+pub use artifacts::{Manifest, ModelEntry, ProgramSpec, TensorSpec, WeightRef};
+pub use client::Runtime;
+pub use tensor::{DType, HostTensor};

@@ -1,0 +1,296 @@
+//! Host-side tensors: the engine's inter-rank currency.
+//!
+//! Plain row-major `Vec`-backed arrays with just enough shape algebra
+//! for weight sharding and collective reshuffles. `Send + Clone`, so
+//! rank threads can exchange them over channels.
+
+use anyhow::{bail, ensure, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            _ => bail!("unsupported dtype {s:?}"),
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// A dense row-major host tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl HostTensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        HostTensor {
+            shape: shape.to_vec(),
+            data: TensorData::F32(vec![0.0; shape.iter().product()]),
+        }
+    }
+
+    pub fn from_f32(data: Vec<f32>, shape: &[usize]) -> Result<Self> {
+        ensure!(data.len() == shape.iter().product::<usize>(),
+                "data len {} != shape {:?}", data.len(), shape);
+        Ok(HostTensor { shape: shape.to_vec(), data: TensorData::F32(data) })
+    }
+
+    pub fn from_i32(data: Vec<i32>, shape: &[usize]) -> Result<Self> {
+        ensure!(data.len() == shape.iter().product::<usize>(),
+                "data len {} != shape {:?}", data.len(), shape);
+        Ok(HostTensor { shape: shape.to_vec(), data: TensorData::I32(data) })
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self.data {
+            TensorData::F32(_) => DType::F32,
+            TensorData::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn f32s(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => bail!("expected f32 tensor"),
+        }
+    }
+
+    pub fn f32s_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => bail!("expected f32 tensor"),
+        }
+    }
+
+    pub fn i32s(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            _ => bail!("expected i32 tensor"),
+        }
+    }
+
+    /// Slice `len` indices starting at `start` along `axis` (copying).
+    pub fn slice_axis(&self, axis: usize, start: usize, len: usize)
+                      -> Result<HostTensor> {
+        ensure!(axis < self.shape.len(), "axis {axis} out of rank");
+        ensure!(start + len <= self.shape[axis],
+                "slice {start}+{len} exceeds dim {} on axis {axis}",
+                self.shape[axis]);
+        let outer: usize = self.shape[..axis].iter().product();
+        let inner: usize = self.shape[axis + 1..].iter().product();
+        let dim = self.shape[axis];
+        let mut shape = self.shape.clone();
+        shape[axis] = len;
+        let src = self.f32s()?;
+        let mut dst = Vec::with_capacity(outer * len * inner);
+        for o in 0..outer {
+            let base = o * dim * inner + start * inner;
+            dst.extend_from_slice(&src[base..base + len * inner]);
+        }
+        HostTensor::from_f32(dst, &shape)
+    }
+
+    /// Concatenate tensors along `axis`; all other dims must agree.
+    pub fn concat(parts: &[&HostTensor], axis: usize) -> Result<HostTensor> {
+        ensure!(!parts.is_empty(), "concat of nothing");
+        let rank = parts[0].shape.len();
+        ensure!(axis < rank);
+        let mut shape = parts[0].shape.clone();
+        let mut total = 0;
+        for p in parts {
+            ensure!(p.shape.len() == rank);
+            for (i, (&a, &b)) in p.shape.iter().zip(&shape).enumerate() {
+                if i != axis {
+                    ensure!(a == b, "concat dim mismatch on axis {i}");
+                }
+            }
+            total += p.shape[axis];
+        }
+        shape[axis] = total;
+        let outer: usize = shape[..axis].iter().product();
+        let inner: usize = shape[axis + 1..].iter().product();
+        let mut dst = vec![0.0f32; outer * total * inner];
+        let mut off = 0;
+        for p in parts {
+            let d = p.shape[axis];
+            let src = p.f32s()?;
+            for o in 0..outer {
+                let s = o * d * inner;
+                let t = o * total * inner + off * inner;
+                dst[t..t + d * inner].copy_from_slice(&src[s..s + d * inner]);
+            }
+            off += d;
+        }
+        HostTensor::from_f32(dst, &shape)
+    }
+
+    /// Stack equal-shaped tensors along a new leading axis.
+    pub fn stack(parts: &[&HostTensor]) -> Result<HostTensor> {
+        ensure!(!parts.is_empty());
+        let shape0 = &parts[0].shape;
+        let mut data = Vec::with_capacity(parts.len() * parts[0].numel());
+        for p in parts {
+            ensure!(&p.shape == shape0, "stack shape mismatch");
+            data.extend_from_slice(p.f32s()?);
+        }
+        let mut shape = vec![parts.len()];
+        shape.extend_from_slice(shape0);
+        HostTensor::from_f32(data, &shape)
+    }
+
+    /// Elementwise in-place accumulate (the host side of All-Reduce).
+    pub fn add_assign(&mut self, other: &HostTensor) -> Result<()> {
+        ensure!(self.shape == other.shape,
+                "add shape mismatch {:?} vs {:?}", self.shape, other.shape);
+        let b = other.f32s()?.to_vec();
+        let a = self.f32s_mut()?;
+        for (x, y) in a.iter_mut().zip(b) {
+            *x += y;
+        }
+        Ok(())
+    }
+
+    pub fn scale(&mut self, s: f32) -> Result<()> {
+        for x in self.f32s_mut()? {
+            *x *= s;
+        }
+        Ok(())
+    }
+
+    pub fn reshape(&self, shape: &[usize]) -> Result<HostTensor> {
+        ensure!(shape.iter().product::<usize>() == self.numel(),
+                "reshape {:?} -> {:?}", self.shape, shape);
+        let mut t = self.clone();
+        t.shape = shape.to_vec();
+        Ok(t)
+    }
+
+    /// Max |a - b| — the engine's exactness metric.
+    pub fn max_abs_diff(&self, other: &HostTensor) -> Result<f32> {
+        ensure!(self.shape == other.shape, "diff shape mismatch");
+        let a = self.f32s()?;
+        let b = other.f32s()?;
+        Ok(a.iter()
+            .zip(b)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max))
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.numel() * 4
+    }
+
+    /// Read a raw little-endian f32 file (the aot.py weight format).
+    pub fn read_f32_file(path: &std::path::Path, shape: &[usize])
+                         -> Result<HostTensor> {
+        let bytes = std::fs::read(path)?;
+        let n: usize = shape.iter().product();
+        ensure!(bytes.len() == 4 * n,
+                "{path:?}: {} bytes, want {}", bytes.len(), 4 * n);
+        let mut data = Vec::with_capacity(n);
+        for c in bytes.chunks_exact(4) {
+            data.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        HostTensor::from_f32(data, shape)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t2x3() -> HostTensor {
+        HostTensor::from_f32((0..6).map(|i| i as f32).collect(), &[2, 3])
+            .unwrap()
+    }
+
+    #[test]
+    fn slice_cols() {
+        let t = t2x3();
+        let s = t.slice_axis(1, 1, 2).unwrap();
+        assert_eq!(s.shape, vec![2, 2]);
+        assert_eq!(s.f32s().unwrap(), &[1.0, 2.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn slice_rows() {
+        let t = t2x3();
+        let s = t.slice_axis(0, 1, 1).unwrap();
+        assert_eq!(s.shape, vec![1, 3]);
+        assert_eq!(s.f32s().unwrap(), &[3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn slice_middle_axis() {
+        let t = HostTensor::from_f32((0..24).map(|i| i as f32).collect(),
+                                     &[2, 3, 4]).unwrap();
+        let s = t.slice_axis(1, 1, 2).unwrap();
+        assert_eq!(s.shape, vec![2, 2, 4]);
+        assert_eq!(&s.f32s().unwrap()[..4], &[4.0, 5.0, 6.0, 7.0]);
+        assert_eq!(&s.f32s().unwrap()[8..12], &[16.0, 17.0, 18.0, 19.0]);
+    }
+
+    #[test]
+    fn concat_inverts_slice() {
+        let t = t2x3();
+        let a = t.slice_axis(1, 0, 1).unwrap();
+        let b = t.slice_axis(1, 1, 2).unwrap();
+        let c = HostTensor::concat(&[&a, &b], 1).unwrap();
+        assert_eq!(c, t);
+    }
+
+    #[test]
+    fn stack_shapes() {
+        let t = t2x3();
+        let s = HostTensor::stack(&[&t, &t]).unwrap();
+        assert_eq!(s.shape, vec![2, 2, 3]);
+    }
+
+    #[test]
+    fn add_and_diff() {
+        let mut a = t2x3();
+        let b = t2x3();
+        a.add_assign(&b).unwrap();
+        assert_eq!(a.f32s().unwrap()[5], 10.0);
+        assert_eq!(a.max_abs_diff(&b).unwrap(), 5.0);
+    }
+
+    #[test]
+    fn reshape_checks() {
+        let t = t2x3();
+        assert!(t.reshape(&[3, 2]).is_ok());
+        assert!(t.reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn read_f32_file_roundtrip() {
+        let dir = std::env::temp_dir().join("helix_tensor_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.bin");
+        let vals = [1.5f32, -2.0, 3.25];
+        let bytes: Vec<u8> =
+            vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(&path, bytes).unwrap();
+        let t = HostTensor::read_f32_file(&path, &[3]).unwrap();
+        assert_eq!(t.f32s().unwrap(), &vals);
+        assert!(HostTensor::read_f32_file(&path, &[4]).is_err());
+    }
+}

@@ -1,0 +1,86 @@
+//! Dynamic batcher: turns router slot state into per-step engine inputs.
+
+use super::router::Router;
+
+/// Inputs for one engine step.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepBatch {
+    /// Token per batch slot (0 for idle slots — masked by active flags).
+    pub tokens: Vec<i32>,
+    /// Slots participating this step.
+    pub active: Vec<bool>,
+}
+
+/// Build the next step's batch from router state.
+pub fn build_step(router: &Router, batch: usize) -> StepBatch {
+    let mut tokens = vec![0i32; batch];
+    let mut active = vec![false; batch];
+    for (slot, st) in router.slots.iter().enumerate() {
+        if let Some(st) = st {
+            tokens[slot] = st.next_input();
+            active[slot] = true;
+        }
+    }
+    StepBatch { tokens, active }
+}
+
+/// Feed one step's engine outputs back into request state.
+/// `wall` is the step wall-clock time in seconds.
+pub fn apply_step(router: &mut Router, next: &[i32], wall: f64) {
+    for st in router.slots.iter_mut().flatten() {
+        if st.in_prefill() {
+            st.prompt_pos += 1;
+            // The token generated after the final prompt token is the
+            // first real output.
+            if !st.in_prefill() {
+                st.generated.push(next[st.slot]);
+                st.token_times.push(wall);
+            }
+        } else {
+            st.generated.push(next[st.slot]);
+            st.token_times.push(wall);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::router::Request;
+
+    fn router_with(prompts: &[usize]) -> Router {
+        let mut r = Router::new(prompts.len() + 1, 100);
+        for (i, &p) in prompts.iter().enumerate() {
+            r.submit(Request { id: i as u64, prompt: (0..p as i32).collect(),
+                               max_new_tokens: 2, arrival: 0.0 });
+        }
+        r.admit(0);
+        r
+    }
+
+    #[test]
+    fn builds_tokens_and_mask() {
+        let r = router_with(&[3, 2]);
+        let sb = build_step(&r, 3);
+        assert_eq!(sb.active, vec![true, true, false]);
+        assert_eq!(sb.tokens[0], 0); // first prompt token
+        assert_eq!(sb.tokens[2], 0); // idle slot
+    }
+
+    #[test]
+    fn prefill_advances_then_decodes() {
+        let mut r = router_with(&[2]);
+        // Step 1: feeds prompt[0].
+        apply_step(&mut r, &[9, 0], 0.01);
+        assert_eq!(r.slots[0].as_ref().unwrap().prompt_pos, 1);
+        assert!(r.slots[0].as_ref().unwrap().generated.is_empty());
+        // Step 2: feeds prompt[1]; its output is the first generation.
+        apply_step(&mut r, &[7, 0], 0.01);
+        let st = r.slots[0].as_ref().unwrap();
+        assert_eq!(st.generated, vec![7]);
+        // Step 3: decode.
+        apply_step(&mut r, &[8, 0], 0.01);
+        assert_eq!(r.slots[0].as_ref().unwrap().generated, vec![7, 8]);
+        assert!(r.slots[0].as_ref().unwrap().done());
+    }
+}

@@ -1,0 +1,136 @@
+//! Engine-facing CLI subcommands: verify / serve / layouts.
+
+use anyhow::{bail, Result};
+
+use crate::engine::{ClusterConfig, CommModel, HelixCluster};
+use crate::runtime::artifacts::EngineLayout;
+use crate::runtime::Manifest;
+use crate::util::cli::Args;
+use crate::util::table::Table;
+use crate::util::Rng;
+
+use super::server::{Server, Workload};
+
+fn parse_layout(manifest: &Manifest, model: &str, key: Option<&str>)
+                -> Result<EngineLayout> {
+    let entry = manifest.model(model)?;
+    match key {
+        None => Ok(entry.layouts[0]),
+        Some(k) => entry
+            .layouts
+            .iter()
+            .copied()
+            .find(|l| l.key() == k)
+            .ok_or_else(|| anyhow::anyhow!(
+                "layout {k:?} not built for {model}; available: {}",
+                entry.layouts.iter().map(|l| l.key())
+                    .collect::<Vec<_>>().join(", "))),
+    }
+}
+
+fn cluster_from(args: &Args, verify: bool) -> Result<HelixCluster> {
+    let model = args.opt_or("model", "tiny_gqa").to_string();
+    let root = Manifest::default_root();
+    let manifest = Manifest::load(&root)?;
+    let layout = parse_layout(&manifest, &model, args.opt("layout"))?;
+    let mut cc = ClusterConfig::new(&model, layout);
+    cc.artifacts = root;
+    cc.verify = verify || args.flag("verify");
+    cc.hopb = args.flag("hopb");
+    let scale = args.opt_f64("comm-scale", 0.0)?;
+    if scale > 0.0 {
+        cc.comm = CommModel { scale, ..CommModel::nvlink() };
+    }
+    HelixCluster::new(cc)
+}
+
+/// `helix verify`: run random decode steps, compare vs reference.
+fn cmd_verify(args: &Args) -> Result<()> {
+    let steps = args.opt_usize("steps", 24)?;
+    let mut cluster = cluster_from(args, true)?;
+    let b = cluster.batch();
+    for row in 0..b {
+        cluster.open_slot(row)?;
+    }
+    let mut rng = Rng::new(args.opt_usize("seed", 7)? as u64);
+    let vocab = cluster.cfg.vocab;
+    println!("model {} layout {} | {} ranks | verifying {} steps",
+             args.opt_or("model", "tiny_gqa"), cluster.layout.key(),
+             cluster.n(), steps);
+    let mut worst = 0.0f32;
+    for step in 0..steps {
+        let tokens: Vec<i32> =
+            (0..b).map(|_| rng.range(1, vocab) as i32).collect();
+        let (next, m) = cluster.decode_step(&tokens)?;
+        let d = m.max_ref_diff.unwrap_or(f32::NAN);
+        worst = worst.max(d);
+        println!("step {step:>3}: next={next:?} max|engine-ref|={d:.3e} \
+                  ({:.1} ms)", m.total.as_secs_f64() * 1e3);
+    }
+    println!("worst deviation over {steps} steps: {worst:.3e}");
+    if !(worst < 1e-3) {
+        bail!("exactness check FAILED (worst {worst:.3e} >= 1e-3)");
+    }
+    println!("exactness check PASSED");
+    Ok(())
+}
+
+/// `helix serve`: end-to-end batched serving on synthetic requests.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cluster = cluster_from(args, args.flag("verify"))?;
+    let gpus = cluster.n();
+    let model = args.opt_or("model", "tiny_gqa").to_string();
+    let layout = cluster.layout.key();
+    let workload = Workload {
+        num_requests: args.opt_usize("requests", 16)?,
+        prompt_len: (args.opt_usize("prompt-min", 4)?,
+                     args.opt_usize("prompt-max", 12)?),
+        gen_len: (args.opt_usize("gen-min", 16)?,
+                  args.opt_usize("gen-max", 32)?),
+        seed: args.opt_usize("seed", 42)? as u64,
+    };
+    let mut server = Server::new(cluster);
+    println!("serving {} requests on {model} [{layout}] over {gpus} ranks \
+              (hopb={}, comm-scale={})",
+             workload.num_requests, args.flag("hopb"),
+             args.opt_or("comm-scale", "0"));
+    let report = server.run(&workload, args.opt_usize("max-steps", 100_000)?
+                            as u64)?;
+    println!("{}", report.render());
+    Ok(())
+}
+
+/// `helix layouts`: show the built layouts for a model (Fig 2 view).
+fn cmd_layouts(args: &Args) -> Result<()> {
+    let root = Manifest::default_root();
+    let manifest = Manifest::load(&root)?;
+    let model = args.opt_or("model", "tiny_gqa");
+    let entry = manifest.model(model)?;
+    let c = &entry.config;
+    println!("model {model}: H={} Qh={} Kh={} Hsz={} layers={} seq_cap={} \
+              batch={}", c.hidden, c.q_heads, c.kv_heads, c.head_size,
+             c.layers, c.seq_cap, c.batch);
+    let mut t = Table::new(["layout", "N", "attn grid", "ffn grid",
+                            "kv/shard", "q-heads/rank", "kv dup"]);
+    for lo in &entry.layouts {
+        let dup = (lo.tpa as f64 / c.kv_heads as f64).max(1.0);
+        t.row([lo.key(), format!("{}", lo.n()),
+               format!("kvp{}xtpa{}", lo.kvp, lo.tpa),
+               format!("tpf{}xep{}", lo.tpf, lo.ep),
+               format!("{}", c.seq_cap / lo.kvp),
+               format!("{}", c.q_heads / lo.tpa),
+               format!("{dup:.0}x")]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+/// Entry point from main.rs.
+pub fn run(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("verify") => cmd_verify(args),
+        Some("serve") => cmd_serve(args),
+        Some("layouts") => cmd_layouts(args),
+        other => bail!("unknown engine subcommand {other:?}"),
+    }
+}

@@ -1,0 +1,82 @@
+//! Serving metrics: TTL distribution + throughput accounting.
+
+use crate::util::stats;
+
+/// Accumulated serving statistics.
+#[derive(Debug, Default, Clone)]
+pub struct ServeMetrics {
+    /// Wall time of each engine step (the observable TTL), seconds.
+    pub step_times: Vec<f64>,
+    /// Total generated (non-prefill) tokens.
+    pub generated_tokens: usize,
+    /// Total engine steps.
+    pub steps: u64,
+    /// Total serving wall time, seconds.
+    pub wall: f64,
+    /// Emulated communication time, seconds.
+    pub comm: f64,
+}
+
+impl ServeMetrics {
+    pub fn ttl_mean(&self) -> f64 {
+        stats::mean(&self.step_times)
+    }
+
+    pub fn ttl_p50(&self) -> f64 {
+        if self.step_times.is_empty() {
+            return 0.0;
+        }
+        stats::percentile(&self.step_times, 50.0)
+    }
+
+    pub fn ttl_p99(&self) -> f64 {
+        if self.step_times.is_empty() {
+            return 0.0;
+        }
+        stats::percentile(&self.step_times, 99.0)
+    }
+
+    /// System throughput: generated tokens per second of wall time.
+    pub fn tokens_per_sec(&self) -> f64 {
+        if self.wall <= 0.0 {
+            return 0.0;
+        }
+        self.generated_tokens as f64 / self.wall
+    }
+
+    /// Interactivity proxy: tokens/s/user = 1 / mean TTL.
+    pub fn tokens_per_sec_per_user(&self) -> f64 {
+        let m = self.ttl_mean();
+        if m <= 0.0 {
+            0.0
+        } else {
+            1.0 / m
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_math() {
+        let m = ServeMetrics {
+            step_times: vec![0.01, 0.02, 0.03],
+            generated_tokens: 30,
+            steps: 3,
+            wall: 0.06,
+            comm: 0.0,
+        };
+        assert!((m.tokens_per_sec() - 500.0).abs() < 1e-9);
+        assert!((m.ttl_mean() - 0.02).abs() < 1e-12);
+        assert!((m.tokens_per_sec_per_user() - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        let m = ServeMetrics::default();
+        assert_eq!(m.tokens_per_sec(), 0.0);
+        assert_eq!(m.ttl_p99(), 0.0);
+    }
+}

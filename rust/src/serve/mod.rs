@@ -1,0 +1,15 @@
+//! Serving layer: request router, dynamic batcher, decode server.
+//!
+//! Continuous batching over the engine's fixed batch slots: requests are
+//! admitted into free slots at step boundaries, prefill runs token by
+//! token through the same decode path (the paper is decode-phase only),
+//! and every slot advances one token per engine step.
+
+pub mod batcher;
+pub mod cli;
+pub mod metrics;
+pub mod router;
+pub mod server;
+
+pub use router::{Request, RequestState, Router};
+pub use server::{ServeReport, Server, Workload};

@@ -1,0 +1,198 @@
+//! Request router: admission control over the engine's batch slots.
+
+use std::collections::VecDeque;
+
+/// A decode request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    /// Arrival time, seconds since server start (workload clock).
+    pub arrival: f64,
+}
+
+/// Lifecycle of an admitted request.
+#[derive(Debug, Clone)]
+pub struct RequestState {
+    pub req: Request,
+    pub slot: usize,
+    /// Prompt tokens already fed.
+    pub prompt_pos: usize,
+    /// Tokens generated so far.
+    pub generated: Vec<i32>,
+    /// Engine step index at admission (for queueing metrics).
+    pub admitted_step: u64,
+    /// Wall-clock decode times for this request's generated tokens.
+    pub token_times: Vec<f64>,
+}
+
+impl RequestState {
+    pub fn in_prefill(&self) -> bool {
+        self.prompt_pos < self.req.prompt.len()
+    }
+
+    pub fn done(&self) -> bool {
+        !self.in_prefill() && self.generated.len() >= self.req.max_new_tokens
+    }
+
+    /// Next token to feed the engine for this request.
+    pub fn next_input(&self) -> i32 {
+        if self.in_prefill() {
+            self.req.prompt[self.prompt_pos]
+        } else {
+            *self.generated.last().unwrap_or(
+                self.req.prompt.last().unwrap_or(&0))
+        }
+    }
+
+    /// Total KV entries this request will need.
+    pub fn total_tokens(&self) -> usize {
+        self.req.prompt.len() + self.req.max_new_tokens
+    }
+}
+
+/// FIFO admission over a fixed number of slots.
+#[derive(Debug)]
+pub struct Router {
+    pub queue: VecDeque<Request>,
+    pub slots: Vec<Option<RequestState>>,
+    pub completed: Vec<RequestState>,
+    /// Requests rejected at submit time (would never fit the KV shard).
+    pub rejected: Vec<Request>,
+    capacity_tokens: usize,
+}
+
+impl Router {
+    pub fn new(num_slots: usize, capacity_tokens: usize) -> Router {
+        Router {
+            queue: VecDeque::new(),
+            slots: (0..num_slots).map(|_| None).collect(),
+            completed: Vec::new(),
+            rejected: Vec::new(),
+            capacity_tokens,
+        }
+    }
+
+    /// Submit a request; rejects immediately if it can never fit.
+    pub fn submit(&mut self, req: Request) {
+        if req.prompt.len() + req.max_new_tokens > self.capacity_tokens {
+            self.rejected.push(req);
+        } else {
+            self.queue.push_back(req);
+        }
+    }
+
+    /// Admit queued requests into free slots; returns (slot, id) pairs.
+    pub fn admit(&mut self, step: u64) -> Vec<(usize, u64)> {
+        let mut admitted = Vec::new();
+        for slot in 0..self.slots.len() {
+            if self.slots[slot].is_some() {
+                continue;
+            }
+            let Some(req) = self.queue.pop_front() else { break };
+            let id = req.id;
+            self.slots[slot] = Some(RequestState {
+                req,
+                slot,
+                prompt_pos: 0,
+                generated: Vec::new(),
+                admitted_step: step,
+                token_times: Vec::new(),
+            });
+            admitted.push((slot, id));
+        }
+        admitted
+    }
+
+    /// Retire finished requests; returns freed slots.
+    pub fn retire(&mut self) -> Vec<usize> {
+        let mut freed = Vec::new();
+        for slot in 0..self.slots.len() {
+            if self.slots[slot].as_ref().map(|s| s.done()).unwrap_or(false) {
+                let st = self.slots[slot].take().unwrap();
+                self.completed.push(st);
+                freed.push(slot);
+            }
+        }
+        freed
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn idle(&self) -> bool {
+        self.queue.is_empty() && self.active_count() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, prompt: usize, gen: usize) -> Request {
+        Request { id, prompt: vec![1; prompt], max_new_tokens: gen,
+                  arrival: 0.0 }
+    }
+
+    #[test]
+    fn admits_up_to_slot_count() {
+        let mut r = Router::new(2, 100);
+        for i in 0..4 {
+            r.submit(req(i, 3, 5));
+        }
+        let adm = r.admit(0);
+        assert_eq!(adm.len(), 2);
+        assert_eq!(r.queue.len(), 2);
+        assert_eq!(r.active_count(), 2);
+    }
+
+    #[test]
+    fn rejects_oversized() {
+        let mut r = Router::new(2, 10);
+        r.submit(req(0, 8, 5));
+        assert_eq!(r.rejected.len(), 1);
+        assert!(r.queue.is_empty());
+    }
+
+    #[test]
+    fn lifecycle_prefill_then_decode() {
+        let mut st = RequestState {
+            req: req(0, 2, 2),
+            slot: 0,
+            prompt_pos: 0,
+            generated: Vec::new(),
+            admitted_step: 0,
+            token_times: Vec::new(),
+        };
+        assert!(st.in_prefill());
+        assert_eq!(st.next_input(), 1);
+        st.prompt_pos = 2;
+        assert!(!st.in_prefill());
+        st.generated.push(42);
+        assert_eq!(st.next_input(), 42);
+        assert!(!st.done());
+        st.generated.push(43);
+        assert!(st.done());
+    }
+
+    #[test]
+    fn retire_frees_slots_for_queue() {
+        let mut r = Router::new(1, 100);
+        r.submit(req(0, 1, 1));
+        r.submit(req(1, 1, 1));
+        r.admit(0);
+        // Finish request 0.
+        {
+            let st = r.slots[0].as_mut().unwrap();
+            st.prompt_pos = 1;
+            st.generated.push(7);
+        }
+        let freed = r.retire();
+        assert_eq!(freed, vec![0]);
+        let adm = r.admit(1);
+        assert_eq!(adm, vec![(0, 1)]);
+        assert_eq!(r.completed.len(), 1);
+    }
+}

@@ -1,0 +1,149 @@
+//! Decode server: drives the engine over a workload with continuous
+//! batching, measuring TTL and throughput.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::engine::HelixCluster;
+use crate::util::Rng;
+
+use super::batcher;
+use super::metrics::ServeMetrics;
+use super::router::{Request, Router};
+
+/// Synthetic workload description (the paper's interactive-agent
+/// scenario: modest prompts, streaming decode).
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub num_requests: usize,
+    pub prompt_len: (usize, usize),   // min..=max
+    pub gen_len: (usize, usize),      // min..=max
+    pub seed: u64,
+}
+
+impl Workload {
+    pub fn generate(&self, vocab: usize) -> Vec<Request> {
+        let mut rng = Rng::new(self.seed);
+        (0..self.num_requests)
+            .map(|i| {
+                let plen = rng.range(self.prompt_len.0,
+                                     self.prompt_len.1 + 1);
+                let glen = rng.range(self.gen_len.0, self.gen_len.1 + 1);
+                Request {
+                    id: i as u64,
+                    prompt: (0..plen).map(|_| rng.range(1, vocab) as i32)
+                        .collect(),
+                    max_new_tokens: glen,
+                    arrival: 0.0, // all queued at start (offline serving)
+                }
+            })
+            .collect()
+    }
+}
+
+/// Serving summary.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub metrics: ServeMetrics,
+    pub completed: usize,
+    pub rejected: usize,
+    pub gpus: usize,
+    /// Max |engine - reference| seen across verified steps (if any).
+    pub max_ref_diff: Option<f32>,
+}
+
+impl ServeReport {
+    pub fn render(&self) -> String {
+        let m = &self.metrics;
+        format!(
+            "requests completed : {}\n\
+             requests rejected  : {}\n\
+             engine steps       : {}\n\
+             generated tokens   : {}\n\
+             wall time          : {:.3} s (comm {:.3} s)\n\
+             TTL mean/p50/p99   : {:.2} / {:.2} / {:.2} ms\n\
+             tokens/s (system)  : {:.1}\n\
+             tokens/s/user      : {:.1}\n\
+             tokens/s/GPU       : {:.1}{}",
+            self.completed, self.rejected, m.steps, m.generated_tokens,
+            m.wall, m.comm, m.ttl_mean() * 1e3, m.ttl_p50() * 1e3,
+            m.ttl_p99() * 1e3, m.tokens_per_sec(),
+            m.tokens_per_sec_per_user(),
+            m.tokens_per_sec() / self.gpus as f64,
+            match self.max_ref_diff {
+                Some(d) => format!("\nmax |engine-ref|   : {d:.2e}"),
+                None => String::new(),
+            }
+        )
+    }
+}
+
+/// The server: a cluster plus a router.
+pub struct Server {
+    pub cluster: HelixCluster,
+    pub router: Router,
+}
+
+impl Server {
+    pub fn new(cluster: HelixCluster) -> Server {
+        let slots = cluster.batch();
+        // Leave one kv_block of headroom per shard (round-robin skew).
+        let capacity = cluster.cfg.seq_cap
+            - cluster.cfg.kv_block * cluster.layout.kvp;
+        Server { cluster, router: Router::new(slots, capacity) }
+    }
+
+    /// Run the workload to completion (or `max_steps`).
+    pub fn run(&mut self, workload: &Workload, max_steps: u64)
+               -> Result<ServeReport> {
+        for req in workload.generate(self.cluster.cfg.vocab) {
+            self.router.submit(req);
+        }
+        let mut metrics = ServeMetrics::default();
+        let mut max_diff: Option<f32> = None;
+        let t0 = Instant::now();
+        let mut step: u64 = 0;
+
+        while !self.router.idle() && step < max_steps {
+            for (slot, _) in self.router.admit(step) {
+                self.cluster.open_slot(slot)?;
+            }
+            let sb = batcher::build_step(&self.router, self.cluster.batch());
+            // Slots the engine should treat as live this step.
+            self.cluster.active = sb.active.clone();
+
+            let ts = Instant::now();
+            let (next, sm) = self.cluster.decode_step(&sb.tokens)?;
+            let dt = ts.elapsed().as_secs_f64();
+
+            metrics.step_times.push(dt);
+            metrics.steps += 1;
+            if let Some(d) = sm.max_ref_diff {
+                max_diff = Some(max_diff.unwrap_or(0.0).max(d));
+            }
+            batcher::apply_step(&mut self.router, &next, dt);
+            metrics.generated_tokens += self
+                .router
+                .slots
+                .iter()
+                .flatten()
+                .filter(|st| !st.in_prefill())
+                .count();
+            for slot in self.router.retire() {
+                self.cluster.close_slot(slot);
+            }
+            step += 1;
+        }
+
+        metrics.wall = t0.elapsed().as_secs_f64();
+        metrics.comm = self.cluster.comm_total.as_secs_f64();
+        Ok(ServeReport {
+            completed: self.router.completed.len(),
+            rejected: self.router.rejected.len(),
+            gpus: self.cluster.n(),
+            metrics,
+            max_ref_diff: max_diff,
+        })
+    }
+}

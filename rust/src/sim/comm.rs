@@ -1,0 +1,92 @@
+//! NVLink collective cost models.
+//!
+//! GB200 NVL72 is a switched fabric: every GPU has full `nvlink_bw` to
+//! the switch plane, so All-to-All completes in one step and reductions
+//! use the tree/multicast engines (NVLS). Latency terms scale with
+//! log2(participants) rather than linearly, matching switch-based
+//! collectives.
+
+use crate::config::Hardware;
+
+fn lg(n: usize) -> f64 {
+    (n.max(1) as f64).log2().max(1.0)
+}
+
+/// All-to-All over `n` ranks; `bytes_per_gpu` is each rank's *send*
+/// volume (already excluding the slice it keeps).
+pub fn all_to_all(hw: &Hardware, bytes_per_gpu: f64, n: usize) -> f64 {
+    if n <= 1 || bytes_per_gpu <= 0.0 {
+        return 0.0;
+    }
+    hw.nvlink_latency + bytes_per_gpu / hw.nvlink_bw
+}
+
+/// All-Reduce of a `bytes`-sized tensor resident on each of `n` ranks.
+/// Switch-reduced (NVLS-style): each GPU sends + receives the tensor
+/// once; latency grows with tree depth.
+pub fn all_reduce(hw: &Hardware, bytes: f64, n: usize) -> f64 {
+    if n <= 1 || bytes <= 0.0 {
+        return 0.0;
+    }
+    hw.nvlink_latency * lg(n) + 2.0 * bytes / hw.nvlink_bw
+}
+
+/// All-Gather where each rank contributes `bytes / n` and ends with the
+/// full `bytes`.
+pub fn all_gather(hw: &Hardware, bytes: f64, n: usize) -> f64 {
+    if n <= 1 || bytes <= 0.0 {
+        return 0.0;
+    }
+    hw.nvlink_latency * lg(n) + bytes * (n as f64 - 1.0) / n as f64
+        / hw.nvlink_bw
+}
+
+/// One-to-all broadcast of `bytes` (switch multicast).
+pub fn broadcast(hw: &Hardware, bytes: f64, n: usize) -> f64 {
+    if n <= 1 || bytes <= 0.0 {
+        return 0.0;
+    }
+    hw.nvlink_latency + bytes / hw.nvlink_bw
+}
+
+/// Point-to-point transfer (PP stage boundary).
+pub fn p2p(hw: &Hardware, bytes: f64) -> f64 {
+    hw.nvlink_latency + bytes / hw.nvlink_bw
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Hardware;
+
+    #[test]
+    fn degenerate_cases_are_free() {
+        let hw = Hardware::gb200_nvl72();
+        assert_eq!(all_to_all(&hw, 1e6, 1), 0.0);
+        assert_eq!(all_reduce(&hw, 0.0, 8), 0.0);
+        assert_eq!(all_gather(&hw, 1e6, 1), 0.0);
+    }
+
+    #[test]
+    fn all_reduce_dominated_by_two_passes() {
+        let hw = Hardware::gb200_nvl72();
+        let t = all_reduce(&hw, 0.9e12, 8); // 1 s of line rate each way
+        assert!((t - 2.0).abs() < 0.01, "{t}");
+    }
+
+    #[test]
+    fn latency_grows_logarithmically() {
+        let hw = Hardware::gb200_nvl72();
+        let t8 = all_reduce(&hw, 1.0, 8);
+        let t64 = all_reduce(&hw, 1.0, 64);
+        assert!(t64 > t8);
+        assert!(t64 < t8 * 3.0, "switch collectives are not linear in n");
+    }
+
+    #[test]
+    fn a2a_is_single_step() {
+        let hw = Hardware::gb200_nvl72();
+        let t = all_to_all(&hw, 0.9e9, 64); // 1 ms of line rate
+        assert!((t - 1.002e-3).abs() < 1e-5, "{t}");
+    }
+}

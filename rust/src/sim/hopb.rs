@@ -1,0 +1,128 @@
+//! HOP-B: batch-wise communication/computation overlap (paper S2.1.3,
+//! Fig 3).
+//!
+//! With the batch split into `chunks` requests, request i's All-to-All
+//! runs while request i+1's attention computes. For per-chunk compute
+//! `c` and per-chunk communication `m`:
+//!
+//! * lockstep (HOP-B OFF):  makespan = chunks*c + chunks*m
+//! * pipelined (HOP-B ON):  makespan = c + (chunks-1)*max(c, m) + m
+//!
+//! so the *exposed* communication (makespan − total compute) collapses
+//! to a single chunk's `m` when compute dominates.
+
+use crate::util::timeline::{SpanKind, Timeline};
+
+/// Exposed communication time after overlapping `comm_total` against
+/// `compute_total` across `chunks` batch chunks. `chunks == 1` or
+/// overlap disabled => everything is exposed.
+pub fn exposed_comm(compute_total: f64, comm_total: f64, chunks: usize,
+                    enabled: bool) -> f64 {
+    if !enabled || chunks <= 1 {
+        return comm_total;
+    }
+    let n = chunks as f64;
+    let (c, m) = (compute_total / n, comm_total / n);
+    let makespan = c + (n - 1.0) * c.max(m) + m;
+    makespan - compute_total
+}
+
+/// Total phase time (compute + exposed comm) under HOP-B.
+pub fn phase_time(compute_total: f64, comm_total: f64, chunks: usize,
+                  enabled: bool) -> f64 {
+    compute_total + exposed_comm(compute_total, comm_total, chunks, enabled)
+}
+
+/// Build the Fig-3 style timeline for `chunks` requests with per-chunk
+/// compute `c` and comm `m`; `enabled` toggles pipelining.
+pub fn timeline(c: f64, m: f64, chunks: usize, enabled: bool) -> Timeline {
+    let mut t = Timeline::default();
+    if !enabled {
+        // Lockstep: all requests compute together, then communicate.
+        for i in 0..chunks {
+            t.push("compute", &format!("req{i}"), i as f64 * c,
+                   (i + 1) as f64 * c, SpanKind::Compute);
+        }
+        let c_end = chunks as f64 * c;
+        for i in 0..chunks {
+            t.push("network", &format!("req{i}"), c_end + i as f64 * m,
+                   c_end + (i + 1) as f64 * m, SpanKind::Comm);
+        }
+    } else {
+        let mut comm_free = 0.0f64;
+        for i in 0..chunks {
+            let cs = i as f64 * c;
+            let ce = cs + c;
+            t.push("compute", &format!("req{i}"), cs, ce, SpanKind::Compute);
+            let ms = ce.max(comm_free);
+            t.push("network", &format!("req{i}"), ms, ms + m, SpanKind::Comm);
+            comm_free = ms + m;
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Paper Fig 3: 8 requests, 16 units total attention (2 each), 9.6
+    /// units total comm (1.2 each). Lockstep span = 25.6; HOP-B span =
+    /// 16 + 1.2 = 17.2 (drawn as ~17 in the figure).
+    #[test]
+    fn fig3_numbers() {
+        let (c_total, m_total, chunks) = (16.0, 9.6, 8);
+        let off = phase_time(c_total, m_total, chunks, false);
+        assert!((off - 25.6).abs() < 1e-9);
+        let on = phase_time(c_total, m_total, chunks, true);
+        assert!((on - 17.2).abs() < 1e-9);
+        // TTL saving ~= 8.4 units (the paper's "TTL Saving" arrow).
+        assert!((off - on - 8.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn comm_dominated_regime() {
+        // m > c: pipeline is bound by the network.
+        let on = phase_time(4.0, 8.0, 4, true);
+        // c=1, m=2: makespan = 1 + 3*2 + 2 = 9.
+        assert!((on - 9.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_chunk_has_no_overlap() {
+        assert_eq!(exposed_comm(10.0, 3.0, 1, true), 3.0);
+    }
+
+    #[test]
+    fn disabled_exposes_everything() {
+        assert_eq!(exposed_comm(10.0, 3.0, 8, false), 3.0);
+    }
+
+    #[test]
+    fn exposed_never_negative_or_above_total() {
+        for &(c, m, n) in &[(10.0, 1.0, 8), (1.0, 10.0, 8), (5.0, 5.0, 2),
+                            (0.0, 3.0, 4)] {
+            let e = exposed_comm(c, m, n, true);
+            assert!(e >= 0.0);
+            assert!(e <= m + 1e-12);
+        }
+    }
+
+    #[test]
+    fn timeline_matches_formula() {
+        for &enabled in &[false, true] {
+            let tl = timeline(2.0, 1.2, 8, enabled);
+            let want = phase_time(16.0, 9.6, 8, enabled);
+            assert!((tl.makespan() - want).abs() < 1e-9,
+                    "enabled={enabled}");
+        }
+    }
+
+    #[test]
+    fn timeline_exposed_comm_matches() {
+        let tl = timeline(2.0, 1.2, 8, true);
+        assert!((tl.exposed_comm() - 1.2).abs() < 1e-9);
+        let tl_off = timeline(2.0, 1.2, 8, false);
+        assert!((tl_off.exposed_comm() - 9.6).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,302 @@
+//! Per-GPU DRAM traffic and capacity (paper Appendix A).
+//!
+//! Two levels of fidelity:
+//! * [`fig1_kv_read_time`] / [`fig1_weight_read_time`] — the *exact*
+//!   Appendix A expressions, used to regenerate Figure 1.
+//! * the `*_bytes` family — the per-phase split used by the full
+//!   simulator (it differs from Appendix A only in sharding the output
+//!   projection over the post-attention TP group of size N, which
+//!   Appendix A folds into TPA).
+
+use crate::config::{Attention, Ffn, Hardware, Layout, ModelSpec};
+
+/// ceil(a / b) on floats used as counts.
+fn ceil_div(a: usize, b: usize) -> f64 {
+    a.div_ceil(b) as f64
+}
+
+// ------------------------------------------------------------------------
+// Appendix A (Figure 1) — verbatim formulas
+// ------------------------------------------------------------------------
+
+/// Appendix A: time to read KV cache per layer.
+/// `B*2*ceil(K/TPA)*Hsz*(S/KVP)*bytes / MemBW`.
+pub fn fig1_kv_read_time(hw: &Hardware, b: usize, kv_heads: usize,
+                         head_size: usize, s: f64, tpa: usize, kvp: usize)
+                         -> f64 {
+    let bytes = b as f64
+        * 2.0
+        * ceil_div(kv_heads, tpa)
+        * head_size as f64
+        * (s / kvp as f64)
+        * hw.bytes_per_param();
+    hw.mem_time(bytes)
+}
+
+/// Appendix A: time to read weights per layer (SwiGLU FFN assumed).
+/// `((2*H*(Q/TPA)*Hsz) + (2*H*ceil(K/TPA)*Hsz) + 3*H*F/TPF) * bytes / MemBW`.
+pub fn fig1_weight_read_time(hw: &Hardware, hidden: usize, q_heads: usize,
+                             kv_heads: usize, head_size: usize, f: usize,
+                             tpa: usize, tpf: usize) -> f64 {
+    let h = hidden as f64;
+    let bytes = (2.0 * h * (q_heads as f64 / tpa as f64) * head_size as f64
+        + 2.0 * h * ceil_div(kv_heads, tpa) * head_size as f64
+        + 3.0 * h * f as f64 / tpf as f64)
+        * hw.bytes_per_param();
+    hw.mem_time(bytes)
+}
+
+// ------------------------------------------------------------------------
+// Full-model per-phase traffic
+// ------------------------------------------------------------------------
+
+/// KV-cache bytes *read per decode step per layer per GPU*.
+///
+/// `dup_tpa` ranks beyond the KV-head count do not reduce traffic (each
+/// duplicated rank still reads its full shard) — the Fig 1 (left)
+/// plateau.
+pub fn kv_read_bytes_per_gpu(m: &ModelSpec, hw: &Hardware, b: usize, s: f64,
+                             tpa: usize, kvp: usize) -> f64 {
+    let shard_s = s / kvp as f64;
+    let elems = match m.attention {
+        Attention::Gqa { kv_heads, head_size, .. } => {
+            2.0 * ceil_div(kv_heads, tpa) * head_size as f64
+        }
+        // Single latent shared by all heads: any TPA duplicates it.
+        Attention::Mla { kv_latent, .. } => kv_latent as f64,
+    };
+    b as f64 * elems * shard_s * hw.bytes_per_param() * m.kv_read_fraction
+}
+
+/// KV-cache bytes *stored* per GPU. Unlike reads, storage is never
+/// reduced by sparse-attention read fractions (paper S6: NSA reduces
+/// "KV read bandwidth but not overall memory capacity requirements").
+pub fn kv_stored_bytes_per_gpu(m: &ModelSpec, hw: &Hardware, b: usize,
+                               s: f64, tpa: usize, kvp: usize) -> f64 {
+    kv_read_bytes_per_gpu(m, hw, b, s, tpa, kvp) * m.layers as f64
+        / m.kv_read_fraction
+}
+
+/// QKV projection weight bytes per GPU per layer (sharded by TPA; the
+/// shared MLA down-projections are replicated across TPA ranks).
+pub fn qkv_weight_bytes_per_gpu(m: &ModelSpec, hw: &Hardware, tpa: usize)
+                                -> f64 {
+    let h = m.hidden as f64;
+    let params = match m.attention {
+        Attention::Gqa { q_heads, kv_heads, head_size } => {
+            h * (q_heads as f64 / tpa as f64) * head_size as f64
+                + 2.0 * h * ceil_div(kv_heads, tpa) * head_size as f64
+        }
+        Attention::Mla { q_heads, head_size, rope_size, kv_latent, q_lora } => {
+            let (q, dn, dr) = (q_heads as f64, head_size as f64,
+                               rope_size as f64);
+            let (lkv, lq) = (kv_latent as f64, q_lora as f64);
+            let per_head = lq * (dn + dr)          // W_UQ
+                + dn * (lkv - dr)                   // absorbed W_UK
+                + (lkv - dr) * dn;                  // absorbed W_UV
+            h * lq + h * lkv                        // replicated W_DQ, W_DKV
+                + (q / tpa as f64) * per_head
+        }
+    };
+    params * hw.bytes_per_param()
+}
+
+/// Output-projection weight bytes per GPU per layer, sharded over
+/// `out_shard` ranks (N for Helix, TP for the baseline).
+pub fn out_proj_bytes_per_gpu(m: &ModelSpec, hw: &Hardware, out_shard: usize)
+                              -> f64 {
+    let h = m.hidden as f64;
+    let params = match m.attention {
+        Attention::Gqa { q_heads, head_size, .. }
+        | Attention::Mla { q_heads, head_size, .. } => {
+            q_heads as f64 * head_size as f64 * h
+        }
+    };
+    params / out_shard as f64 * hw.bytes_per_param()
+}
+
+/// Expected number of *distinct* routed experts activated on a GPU that
+/// holds `held` of `total` experts, for `b` tokens choosing `top_k`
+/// (uniform routing assumption).
+pub fn expected_active_experts(held: usize, total: usize, top_k: usize,
+                               b: usize) -> f64 {
+    let p_inactive = (1.0 - top_k as f64 / total as f64).powi(b as i32);
+    held as f64 * (1.0 - p_inactive)
+}
+
+/// FFN kind of a specific layer index for this model.
+pub fn layer_ffn(m: &ModelSpec, layer: usize) -> LayerFfn {
+    match m.ffn {
+        Ffn::Dense { inter } => LayerFfn::Dense { inter },
+        Ffn::Moe { experts, top_k, expert_inter, shared_inter, dense_layers,
+                   dense_inter } => {
+            if layer < dense_layers {
+                LayerFfn::Dense { inter: dense_inter }
+            } else {
+                LayerFfn::Moe { experts, top_k, expert_inter, shared_inter }
+            }
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub enum LayerFfn {
+    Dense { inter: usize },
+    Moe { experts: usize, top_k: usize, expert_inter: usize,
+          shared_inter: usize },
+}
+
+/// FFN weight bytes *read* per GPU for one layer.
+///
+/// Dense: 3 SwiGLU matrices / TPF (dense layers shard over the whole
+/// pool, tpf*ep). MoE: only experts actually activated by this batch are
+/// streamed (the "multi-expert GEMMs" the paper notes dominate R1).
+pub fn ffn_read_bytes_per_gpu(m: &ModelSpec, hw: &Hardware, layer: usize,
+                              b: usize, tpf: usize, ep: usize) -> f64 {
+    let h = m.hidden as f64;
+    match layer_ffn(m, layer) {
+        LayerFfn::Dense { inter } => {
+            3.0 * h * inter as f64 / (tpf * ep) as f64 * hw.bytes_per_param()
+        }
+        LayerFfn::Moe { experts, top_k, expert_inter, shared_inter } => {
+            let held = experts / ep;
+            let active = expected_active_experts(held, experts, top_k, b);
+            let routed =
+                active * 3.0 * h * expert_inter as f64 / tpf as f64;
+            let shared = 3.0 * h * shared_inter as f64 / (tpf * ep) as f64;
+            (routed + shared) * hw.bytes_per_param()
+        }
+    }
+}
+
+/// FFN weight bytes *stored* per GPU for one layer (all held experts).
+pub fn ffn_stored_bytes_per_gpu(m: &ModelSpec, hw: &Hardware, layer: usize,
+                                tpf: usize, ep: usize) -> f64 {
+    let h = m.hidden as f64;
+    match layer_ffn(m, layer) {
+        LayerFfn::Dense { inter } => {
+            3.0 * h * inter as f64 / (tpf * ep) as f64 * hw.bytes_per_param()
+        }
+        LayerFfn::Moe { experts, expert_inter, shared_inter, .. } => {
+            let held = (experts / ep) as f64;
+            (held * 3.0 * h * expert_inter as f64 / tpf as f64
+                + 3.0 * h * shared_inter as f64 / (tpf * ep) as f64)
+                * hw.bytes_per_param()
+        }
+    }
+}
+
+/// Total weight bytes stored per GPU under a layout (layers split by PP).
+pub fn weights_stored_bytes_per_gpu(m: &ModelSpec, hw: &Hardware,
+                                    lo: &Layout) -> f64 {
+    let mut total = 0.0;
+    for layer in 0..m.layers {
+        total += qkv_weight_bytes_per_gpu(m, hw, lo.tpa)
+            + out_proj_bytes_per_gpu(m, hw, lo.n())
+            + ffn_stored_bytes_per_gpu(m, hw, layer, lo.tpf, lo.ep);
+    }
+    total / lo.pp as f64
+}
+
+/// Does (weights + KV at batch `b_inflight`, context `s`) fit HBM?
+pub fn fits_capacity(m: &ModelSpec, hw: &Hardware, lo: &Layout,
+                     b_inflight: usize, s: f64) -> bool {
+    let w = weights_stored_bytes_per_gpu(m, hw, lo);
+    let kv = kv_stored_bytes_per_gpu(m, hw, b_inflight, s, lo.tpa, lo.kvp)
+        / lo.pp as f64;
+    w + kv <= hw.hbm_capacity
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hw() -> Hardware {
+        Hardware::gb200_nvl72()
+    }
+
+    #[test]
+    fn fig1_left_plateaus_at_k() {
+        // Fig 1 (left): KV read time stops improving once TPA > K.
+        let h = hw();
+        let t8 = fig1_kv_read_time(&h, 8, 8, 128, 1e6, 8, 1);
+        let t16 = fig1_kv_read_time(&h, 8, 8, 128, 1e6, 16, 1);
+        let t64 = fig1_kv_read_time(&h, 8, 8, 128, 1e6, 64, 1);
+        assert_eq!(t8, t16);
+        assert_eq!(t8, t64);
+        // ...but improves up to K.
+        let t4 = fig1_kv_read_time(&h, 8, 8, 128, 1e6, 4, 1);
+        assert!(t4 > t8);
+    }
+
+    #[test]
+    fn fig1_right_kvp_scales_linearly() {
+        let h = hw();
+        let t1 = fig1_kv_read_time(&h, 8, 8, 128, 1e6, 8, 1);
+        let t8 = fig1_kv_read_time(&h, 8, 8, 128, 1e6, 8, 8);
+        let t64 = fig1_kv_read_time(&h, 8, 8, 128, 1e6, 8, 64);
+        assert!((t1 / t8 - 8.0).abs() < 1e-9);
+        assert!((t1 / t64 - 64.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fig1_weight_read_hand_computed() {
+        // TPA=TPF=8: (2*16384*16*128 + 2*16384*1*128 + 3*16384*65536/8)
+        // * 0.5 B = (67.1e6 + 4.19e6 + 402.7e6)*0.5 ~= 237e6 B => 29.6 us.
+        let h = hw();
+        let t = fig1_weight_read_time(&h, 16384, 128, 8, 128, 65536, 8, 8);
+        assert!((t - 2.965e-5).abs() < 2e-7, "weight read {t}");
+    }
+
+    #[test]
+    fn mla_kv_read_ignores_tpa() {
+        let m = ModelSpec::deepseek_r1();
+        let h = hw();
+        let a = kv_read_bytes_per_gpu(&m, &h, 8, 1e6, 1, 4);
+        let b = kv_read_bytes_per_gpu(&m, &h, 8, 1e6, 2, 4);
+        assert_eq!(a, b, "MLA latent is duplicated, not split, by TPA");
+    }
+
+    #[test]
+    fn expected_experts_bounds() {
+        // One token activates exactly top_k of the total.
+        let e1 = expected_active_experts(256, 256, 8, 1);
+        assert!((e1 - 8.0).abs() < 0.05, "{e1}");
+        // Huge batches activate everything held.
+        let e_inf = expected_active_experts(32, 256, 8, 4096);
+        assert!((e_inf - 32.0).abs() < 1e-6);
+        // Monotone in b.
+        assert!(expected_active_experts(32, 256, 8, 16)
+                < expected_active_experts(32, 256, 8, 64));
+    }
+
+    #[test]
+    fn capacity_excludes_1m_batch64_tp8_llama() {
+        // The motivating wall: TP=8 cannot hold 64 users of 1M context
+        // (64 * ~129 GB of KV across 8 GPUs >> 8 * 192 GB).
+        let m = ModelSpec::llama_405b();
+        let h = hw();
+        assert!(!fits_capacity(&m, &h, &Layout::tp(8), 64, 1e6));
+        // Helix over 64 GPUs (kvp=8) makes room.
+        assert!(fits_capacity(&m, &h, &Layout::helix(8, 8, 64, 1), 8, 1e6));
+    }
+
+    #[test]
+    fn stored_weights_scale_down_with_pool() {
+        let m = ModelSpec::llama_405b();
+        let h = hw();
+        let w8 = weights_stored_bytes_per_gpu(&m, &h, &Layout::tp(8));
+        let w64 = weights_stored_bytes_per_gpu(&m, &h,
+                                               &Layout::helix(8, 8, 64, 1));
+        // QKV weights shard by TPA (8 in both layouts); FFN + out-proj
+        // shard by the full pool, so the drop is ~5x, not 8x.
+        assert!(w64 < w8 / 4.0, "w8={w8:.3e} w64={w64:.3e}");
+    }
+
+    #[test]
+    fn dsr1_first_layers_are_dense() {
+        let m = ModelSpec::deepseek_r1();
+        assert!(matches!(layer_ffn(&m, 0), LayerFfn::Dense { inter: 18432 }));
+        assert!(matches!(layer_ffn(&m, 3), LayerFfn::Moe { .. }));
+    }
+}

@@ -1,0 +1,30 @@
+//! Analytic GB200 performance simulator — the paper's evaluation
+//! apparatus (S3.1: "an in-house high-fidelity simulator modeling the
+//! latest GB200 hardware ... accounts for both compute and communication
+//! costs").
+//!
+//! Organization:
+//! * [`memory`] — DRAM traffic per GPU (Appendix A formulas + the
+//!   faithful per-phase split used by the full model).
+//! * [`comm`] — NVLink collective cost models.
+//! * [`hopb`] — batch-wise communication/computation overlap (Fig 3).
+//! * [`phases`] — attention-phase and FFN-phase times per strategy
+//!   (Helix, TP, Medha-style vanilla KVP, DP-attention + EP).
+//! * [`decode`] — end-to-end TTL, interactivity, throughput/GPU.
+//! * [`sweep`] — exhaustive configuration enumeration (the paper's
+//!   >100k-config search).
+//! * [`pareto`] — frontier extraction + headline ratios.
+//!
+//! All outputs are reported normalized to the best baseline, exactly as
+//! the paper does; absolute constants cancel.
+
+pub mod comm;
+pub mod decode;
+pub mod hopb;
+pub mod memory;
+pub mod pareto;
+pub mod phases;
+pub mod sweep;
+
+pub use decode::{DecodePoint, Strategy};
+pub use pareto::Frontier;

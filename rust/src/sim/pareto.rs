@@ -1,0 +1,180 @@
+//! Pareto-frontier extraction + the paper's headline ratios.
+//!
+//! "Each point on the Pareto frontier corresponds to a unique combination
+//! of model partitioning and batch size. For any given TTL constraint, we
+//! report the configuration that maximizes system throughput." (S3.1)
+
+use super::decode::DecodePoint;
+
+/// A throughput-vs-interactivity Pareto frontier.
+#[derive(Debug, Clone)]
+pub struct Frontier {
+    /// Points sorted by interactivity ascending; each strictly dominates
+    /// on throughput as interactivity decreases.
+    pub points: Vec<DecodePoint>,
+}
+
+impl Frontier {
+    /// Extract the frontier: keep points not dominated in both
+    /// (interactivity, throughput/GPU).
+    pub fn from_points(mut points: Vec<DecodePoint>) -> Frontier {
+        points.sort_by(|a, b| {
+            b.interactivity
+                .partial_cmp(&a.interactivity)
+                .unwrap()
+                .then(b.throughput_per_gpu
+                    .partial_cmp(&a.throughput_per_gpu)
+                    .unwrap())
+        });
+        let mut best = f64::NEG_INFINITY;
+        let mut keep = Vec::new();
+        for p in points {
+            if p.throughput_per_gpu > best {
+                best = p.throughput_per_gpu;
+                keep.push(p);
+            }
+        }
+        keep.reverse(); // ascending interactivity
+        Frontier { points: keep }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Highest achievable interactivity (tokens/s/user).
+    pub fn max_interactivity(&self) -> f64 {
+        self.points.last().map(|p| p.interactivity).unwrap_or(0.0)
+    }
+
+    /// Highest achievable throughput (tokens/s/GPU).
+    pub fn max_throughput(&self) -> f64 {
+        self.points.first().map(|p| p.throughput_per_gpu).unwrap_or(0.0)
+    }
+
+    /// Best throughput subject to interactivity >= `min_inter`
+    /// (i.e. a TTL budget). 0 if unattainable.
+    pub fn throughput_at(&self, min_inter: f64) -> f64 {
+        self.points
+            .iter()
+            .filter(|p| p.interactivity >= min_inter)
+            .map(|p| p.throughput_per_gpu)
+            .fold(0.0, f64::max)
+    }
+
+    /// Largest batch sustainable at interactivity >= `min_inter`
+    /// ("batch scalability", S3).
+    pub fn batch_at(&self, min_inter: f64) -> usize {
+        self.points
+            .iter()
+            .filter(|p| p.interactivity >= min_inter)
+            .map(|p| p.batch * p.layout.pp)
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// Headline comparison of two frontiers (paper S3.2).
+#[derive(Debug, Clone, Copy)]
+pub struct Headline {
+    /// Ratio of max interactivity (ours / baseline) — "up to 1.5x".
+    pub interactivity_gain: f64,
+    /// Max over the shared interactivity range of the throughput ratio —
+    /// "up to 32x higher tokens/s/GPU".
+    pub throughput_gain: f64,
+    /// Interactivity at which the largest throughput gain occurs.
+    pub gain_at_interactivity: f64,
+    /// Max over the shared range of the batch-capacity ratio — "supports
+    /// up to 32x more concurrent users under the same latency budget".
+    pub batch_gain: f64,
+}
+
+/// Compare `ours` against `baseline` on a log-spaced interactivity grid.
+pub fn headline(ours: &Frontier, baseline: &Frontier) -> Headline {
+    let interactivity_gain =
+        ours.max_interactivity() / baseline.max_interactivity().max(1e-30);
+    let lo = 1e-3f64;
+    let hi = baseline.max_interactivity().max(lo * 2.0);
+    let mut best = (0.0, 0.0);
+    let mut best_batch = 0.0f64;
+    let steps = 200;
+    for i in 0..=steps {
+        let x = lo * (hi / lo).powf(i as f64 / steps as f64);
+        let b = baseline.throughput_at(x);
+        let o = ours.throughput_at(x);
+        if b > 0.0 && o > 0.0 {
+            let r = o / b;
+            if r > best.0 {
+                best = (r, x);
+            }
+        }
+        let bb = baseline.batch_at(x);
+        let ob = ours.batch_at(x);
+        if bb > 0 && ob > 0 {
+            best_batch = best_batch.max(ob as f64 / bb as f64);
+        }
+    }
+    Headline {
+        interactivity_gain,
+        throughput_gain: best.0,
+        gain_at_interactivity: best.1,
+        batch_gain: best_batch,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Layout;
+    use crate::sim::decode::Strategy;
+
+    fn pt(inter: f64, thpt: f64) -> DecodePoint {
+        DecodePoint {
+            strategy: Strategy::Tp,
+            layout: Layout::tp(8),
+            batch: 1,
+            ttl: 1.0 / inter,
+            interactivity: inter,
+            throughput_per_gpu: thpt,
+            gpus: 8,
+        }
+    }
+
+    #[test]
+    fn dominated_points_removed() {
+        let f = Frontier::from_points(vec![pt(10.0, 1.0), pt(5.0, 2.0),
+                                           pt(7.0, 0.5), pt(5.0, 1.5)]);
+        assert_eq!(f.points.len(), 2);
+        assert_eq!(f.max_interactivity(), 10.0);
+        assert_eq!(f.max_throughput(), 2.0);
+    }
+
+    #[test]
+    fn frontier_is_monotone() {
+        let f = Frontier::from_points(vec![pt(1.0, 1.0), pt(2.0, 0.9),
+                                           pt(3.0, 0.5), pt(4.0, 0.6)]);
+        for w in f.points.windows(2) {
+            assert!(w[0].interactivity < w[1].interactivity);
+            assert!(w[0].throughput_per_gpu > w[1].throughput_per_gpu);
+        }
+    }
+
+    #[test]
+    fn throughput_at_budget() {
+        let f = Frontier::from_points(vec![pt(10.0, 1.0), pt(5.0, 2.0),
+                                           pt(2.0, 4.0)]);
+        assert_eq!(f.throughput_at(6.0), 1.0);
+        assert_eq!(f.throughput_at(4.0), 2.0);
+        assert_eq!(f.throughput_at(1.0), 4.0);
+        assert_eq!(f.throughput_at(11.0), 0.0);
+    }
+
+    #[test]
+    fn headline_ratios() {
+        let base = Frontier::from_points(vec![pt(10.0, 1.0), pt(5.0, 2.0)]);
+        let ours = Frontier::from_points(vec![pt(15.0, 1.0), pt(5.0, 8.0)]);
+        let h = headline(&ours, &base);
+        assert!((h.interactivity_gain - 1.5).abs() < 1e-9);
+        assert!(h.throughput_gain >= 4.0);
+    }
+}

@@ -1,0 +1,310 @@
+//! Per-layer phase timing for each sharding strategy.
+//!
+//! Every strategy yields a [`LayerTimes`]: attention-phase compute,
+//! attention-phase communication (overlappable batch-wise), FFN-phase
+//! compute, and FFN-phase communication. [`super::decode`] assembles
+//! these into TTL with the HOP-B overlap model.
+//!
+//! Fairness: all strategies share the same roofline, collective, and
+//! MoE-activation models; they differ only in how bytes and FLOPs are
+//! divided across GPUs — which is exactly the paper's comparison.
+
+use crate::config::{Hardware, Layout, ModelSpec};
+
+use super::{comm, memory};
+
+/// Timing breakdown for one transformer layer on one strategy.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LayerTimes {
+    pub attn_compute: f64,
+    /// The KVP All-to-All — the communication HOP-B pipelines (Fig 3).
+    pub attn_a2a: f64,
+    /// Other attention-phase collectives (post-projection All-Reduce),
+    /// overlapped by standard runtimes regardless of HOP-B.
+    pub attn_comm: f64,
+    pub ffn_compute: f64,
+    pub ffn_comm: f64,
+}
+
+impl LayerTimes {
+    pub fn total_unoverlapped(&self) -> f64 {
+        self.attn_compute + self.attn_a2a + self.attn_comm
+            + self.ffn_compute + self.ffn_comm
+    }
+}
+
+fn act_bytes(hw: &Hardware) -> f64 {
+    // Paper S3.1: weights, KV *and arithmetic* all in FP4.
+    hw.bytes_per_param()
+}
+
+/// QKV projection time (weights streamed once per decode step).
+fn qkv_time(m: &ModelSpec, hw: &Hardware, b: usize, tpa: usize) -> f64 {
+    let bytes = memory::qkv_weight_bytes_per_gpu(m, hw, tpa);
+    let flops = 2.0 * b as f64 * bytes / hw.bytes_per_param();
+    hw.roofline(bytes, flops)
+}
+
+/// Local attention time over a context shard of `s_local` tokens.
+fn attn_time(m: &ModelSpec, hw: &Hardware, b: usize, s_local: f64,
+             tpa: usize, kvp: usize) -> f64 {
+    let bytes = memory::kv_read_bytes_per_gpu(m, hw, b, s_local * kvp as f64,
+                                              tpa, kvp);
+    let flops = b as f64 * m.attention.attn_flops(s_local)
+        / tpa.min(m.attention.kv_heads().max(1)) as f64;
+    hw.roofline(bytes, flops)
+}
+
+/// Post-attention output projection over `out_shard` ranks.
+fn out_proj_time(m: &ModelSpec, hw: &Hardware, b: usize, out_shard: usize)
+                 -> f64 {
+    let bytes = memory::out_proj_bytes_per_gpu(m, hw, out_shard);
+    let flops = 2.0 * b as f64 * bytes / hw.bytes_per_param();
+    hw.roofline(bytes, flops)
+}
+
+/// FFN compute time for one layer (dense or MoE) on a tpf x ep grid.
+fn ffn_time(m: &ModelSpec, hw: &Hardware, layer: usize, b: usize,
+            tpf: usize, ep: usize) -> f64 {
+    let bytes = memory::ffn_read_bytes_per_gpu(m, hw, layer, b, tpf, ep);
+    let h = m.hidden as f64;
+    let flops = match memory::layer_ffn(m, layer) {
+        memory::LayerFfn::Dense { inter } => {
+            2.0 * b as f64 * 3.0 * h * inter as f64 / (tpf * ep) as f64
+        }
+        memory::LayerFfn::Moe { top_k, expert_inter, shared_inter, .. } => {
+            let routed = 2.0 * (b * top_k) as f64 / ep as f64 * 3.0 * h
+                * expert_inter as f64 / tpf as f64;
+            let shared = 2.0 * b as f64 * 3.0 * h * shared_inter as f64
+                / (tpf * ep) as f64;
+            routed + shared
+        }
+    };
+    hw.roofline(bytes, flops)
+}
+
+/// FFN-phase communication for one layer on a tpf x ep grid spanning
+/// `pool` GPUs.
+fn ffn_comm(m: &ModelSpec, hw: &Hardware, layer: usize, b: usize, tpf: usize,
+            ep: usize, pool: usize) -> f64 {
+    let h = m.hidden as f64;
+    let bh = b as f64 * h * act_bytes(hw);
+    match memory::layer_ffn(m, layer) {
+        memory::LayerFfn::Dense { .. } => comm::all_reduce(hw, bh, tpf * ep),
+        memory::LayerFfn::Moe { top_k, .. } => {
+            // Token dispatch to expert groups, intra-expert reduction,
+            // inter-expert gather, then the shared-expert reduction is
+            // folded into the final All-Reduce over the pool.
+            let dispatch = comm::all_to_all(
+                hw,
+                b as f64 * top_k as f64 * h * act_bytes(hw)
+                    * (ep as f64 - 1.0) / ep as f64 / tpf as f64,
+                ep,
+            );
+            let intra = comm::all_reduce(hw, bh / ep as f64, tpf);
+            let inter = comm::all_gather(hw, bh, ep);
+            let shared = comm::all_reduce(hw, bh, pool);
+            dispatch + intra + inter + shared
+        }
+    }
+}
+
+/// Helix (paper S2): attention on kvp x tpa, FFN on tpf x ep, single
+/// All-to-All + LSE combine in between, TP=N output projection.
+pub fn helix_layer(m: &ModelSpec, hw: &Hardware, lo: &Layout, b: usize,
+                   s: f64, layer: usize) -> LayerTimes {
+    let n = lo.n();
+    let h = m.hidden as f64;
+    let attn_compute = qkv_time(m, hw, b, lo.tpa)
+        + attn_time(m, hw, b, s / lo.kvp as f64, lo.tpa, lo.kvp)
+        + out_proj_time(m, hw, b, n);
+    // All-to-All over the query-head axis: each rank keeps 1/kvp of its
+    // [B, H/tpa] partials and sends the rest (volume independent of S —
+    // the paper's key scalability property).
+    let a2a = comm::all_to_all(
+        hw,
+        b as f64 * (h / lo.tpa as f64) * act_bytes(hw)
+            * (lo.kvp as f64 - 1.0) / lo.kvp as f64,
+        lo.kvp,
+    );
+    let ar = comm::all_reduce(hw, b as f64 * h * act_bytes(hw), n);
+    LayerTimes {
+        attn_compute,
+        attn_a2a: a2a,
+        attn_comm: ar,
+        ffn_compute: ffn_time(m, hw, layer, b, lo.tpf, lo.ep),
+        ffn_comm: ffn_comm(m, hw, layer, b, lo.tpf, lo.ep, n),
+    }
+}
+
+/// Megatron-style tensor parallelism: one TP width for everything;
+/// TP > K duplicates KV (read time stops shrinking — Fig 1 left).
+pub fn tp_layer(m: &ModelSpec, hw: &Hardware, tp: usize, b: usize, s: f64,
+                layer: usize) -> LayerTimes {
+    let h = m.hidden as f64;
+    let attn_compute = qkv_time(m, hw, b, tp)
+        + attn_time(m, hw, b, s, tp, 1)
+        + out_proj_time(m, hw, b, tp);
+    let ar = comm::all_reduce(hw, b as f64 * h * act_bytes(hw), tp);
+    LayerTimes {
+        attn_compute,
+        attn_a2a: 0.0,
+        attn_comm: ar,
+        ffn_compute: ffn_time(m, hw, layer, b, tp, 1),
+        ffn_comm: ffn_comm(m, hw, layer, b, tp, 1, tp),
+    }
+}
+
+/// Medha-style vanilla KVP: KV sharding for attention, but TP width tied
+/// between attention and FFN — the FFN runs on only `tp` of the
+/// `tp * kvp` GPUs, and all communication is exposed (paper S3.2).
+pub fn medha_layer(m: &ModelSpec, hw: &Hardware, tp: usize, kvp: usize,
+                   b: usize, s: f64, layer: usize) -> LayerTimes {
+    let h = m.hidden as f64;
+    let attn_compute = qkv_time(m, hw, b, tp)
+        + attn_time(m, hw, b, s / kvp as f64, tp, kvp)
+        + out_proj_time(m, hw, b, tp);
+    // Gather partials from the KVP pool onto the TP group + combine.
+    let gather = comm::all_to_all(
+        hw,
+        b as f64 * (h / tp as f64) * act_bytes(hw) * (kvp as f64 - 1.0)
+            / kvp as f64,
+        kvp,
+    );
+    let ar = comm::all_reduce(hw, b as f64 * h * act_bytes(hw), tp);
+    LayerTimes {
+        attn_compute,
+        attn_a2a: gather,
+        attn_comm: ar,
+        ffn_compute: ffn_time(m, hw, layer, b, tp, 1),
+        ffn_comm: ffn_comm(m, hw, layer, b, tp, 1, tp),
+    }
+}
+
+/// DeepSeek-production recipe: data-parallel attention (each GPU holds
+/// the full context of B/dp requests and the full attention weights) +
+/// expert-parallel FFN over the whole pool (paper S3.1 "EP").
+pub fn dp_ep_layer(m: &ModelSpec, hw: &Hardware, dp: usize, tpf: usize,
+                   ep: usize, b: usize, s: f64, layer: usize) -> LayerTimes {
+    debug_assert_eq!(b % dp, 0);
+    let b_local = b / dp;
+    let attn_compute = qkv_time(m, hw, b_local, 1)
+        + attn_time(m, hw, b_local, s, 1, 1)
+        + out_proj_time(m, hw, b_local, 1);
+    LayerTimes {
+        attn_compute,
+        attn_a2a: 0.0,
+        attn_comm: 0.0, // DP attention needs no pre-FFN collective
+        ffn_compute: ffn_time(m, hw, layer, b, tpf, ep),
+        ffn_comm: ffn_comm(m, hw, layer, b, tpf, ep, dp),
+    }
+}
+
+/// FLOPs-free sanity metric: fraction of a layer's time spent on KV
+/// reads (used by tests and the roofline CLI).
+pub fn kv_read_fraction(m: &ModelSpec, hw: &Hardware, lo: &Layout, b: usize,
+                        s: f64, layer: usize) -> f64 {
+    let lt = helix_layer(m, hw, lo, b, s, layer);
+    let kv = hw.mem_time(memory::kv_read_bytes_per_gpu(m, hw, b, s, lo.tpa,
+                                                       lo.kvp));
+    kv / lt.total_unoverlapped()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hw() -> Hardware {
+        Hardware::gb200_nvl72()
+    }
+
+    #[test]
+    fn helix_beats_tp_at_long_context_llama() {
+        // 64 GPUs, 1M context: Helix (kvp=8, tpa=8 -> tpf=64) must beat
+        // TP=64 (which duplicates KV 8x and caps attention speedup at K).
+        let m = ModelSpec::llama_405b();
+        let h = hw();
+        let s = 1.0e6;
+        let helix: f64 = (0..1)
+            .map(|l| helix_layer(&m, &h, &Layout::helix(8, 8, 64, 1), 8, s, l)
+                 .total_unoverlapped())
+            .sum();
+        let tp: f64 = (0..1)
+            .map(|l| tp_layer(&m, &h, 64, 8, s, l).total_unoverlapped())
+            .sum();
+        assert!(helix < tp, "helix {helix} vs tp {tp}");
+    }
+
+    #[test]
+    fn helix_a2a_volume_independent_of_s() {
+        let m = ModelSpec::llama_405b();
+        let h = hw();
+        let lo = Layout::helix(8, 8, 64, 1);
+        let a = helix_layer(&m, &h, &lo, 8, 1.0e6, 0).attn_a2a;
+        let b = helix_layer(&m, &h, &lo, 8, 4.0e6, 0).attn_a2a;
+        assert!((a - b).abs() < 1e-12,
+                "comm volume must not scale with S (paper S2.1.2)");
+    }
+
+    #[test]
+    fn medha_ffn_slower_than_helix_ffn() {
+        // Same 32-GPU pool (tp=8, kvp=4): Medha's FFN reads on 8 GPUs,
+        // Helix's on all 32.
+        let m = ModelSpec::llama_405b();
+        let h = hw();
+        let med = medha_layer(&m, &h, 8, 4, 8, 1.0e6, 0);
+        let hel = helix_layer(&m, &h, &Layout::helix(4, 8, 32, 1), 8, 1.0e6,
+                              0);
+        assert!(hel.ffn_compute < med.ffn_compute * 0.5,
+                "helix ffn {} vs medha {}", hel.ffn_compute,
+                med.ffn_compute);
+    }
+
+    #[test]
+    fn tp_attention_plateaus_beyond_k() {
+        let m = ModelSpec::llama_405b(); // K = 8
+        let h = hw();
+        let t8 = tp_layer(&m, &h, 8, 8, 1.0e6, 0);
+        let t32 = tp_layer(&m, &h, 32, 8, 1.0e6, 0);
+        // KV-read portion does not improve; FFN does. Attention compute
+        // at tp=32 must be >= 1/4 of tp=8 (qkv shrinks, kv read doesn't).
+        let kv8 = h.mem_time(memory::kv_read_bytes_per_gpu(&m, &h, 8, 1.0e6,
+                                                           8, 1));
+        let kv32 = h.mem_time(memory::kv_read_bytes_per_gpu(&m, &h, 8, 1.0e6,
+                                                            32, 1));
+        assert_eq!(kv8, kv32);
+        assert!(t32.ffn_compute < t8.ffn_compute);
+    }
+
+    #[test]
+    fn dp_ep_attention_scales_with_dp() {
+        let m = ModelSpec::deepseek_r1();
+        let h = hw();
+        let d4 = dp_ep_layer(&m, &h, 4, 1, 4, 16, 1.0e6, 10);
+        let d16 = dp_ep_layer(&m, &h, 16, 1, 16, 16, 1.0e6, 10);
+        assert!(d16.attn_compute < d4.attn_compute);
+    }
+
+    #[test]
+    fn moe_ffn_read_grows_sublinearly_with_batch() {
+        // Bigger batches activate more experts per GPU, but bounded by
+        // what the GPU holds.
+        let m = ModelSpec::deepseek_r1();
+        let h = hw();
+        let f1 = ffn_time(&m, &h, 10, 1, 1, 8);
+        let f64_ = ffn_time(&m, &h, 10, 64, 1, 8);
+        assert!(f64_ > f1);
+        assert!(f64_ < f1 * 64.0);
+    }
+
+    #[test]
+    fn kv_fraction_grows_with_context() {
+        let m = ModelSpec::llama_405b();
+        let h = hw();
+        let lo = Layout::helix(2, 8, 16, 1);
+        let f_short = kv_read_fraction(&m, &h, &lo, 8, 3.2e4, 0);
+        let f_long = kv_read_fraction(&m, &h, &lo, 8, 4.0e6, 0);
+        assert!(f_long > f_short, "Fig 1 middle: S eventually dominates");
+        assert!(f_long > 0.5);
+    }
+}

@@ -1,0 +1,228 @@
+//! Exhaustive configuration enumeration — the paper's >100k-config
+//! search over {TP, PP, EP, KVP, batch} plus Helix layouts (S3.2).
+
+use crate::config::{Ffn, Hardware, Layout, ModelSpec};
+
+use super::decode::{evaluate, DecodePoint, Strategy};
+
+/// Search bounds (paper: 1-64 GPUs within one GB200 NVL72 node).
+#[derive(Debug, Clone, Copy)]
+pub struct SweepBounds {
+    pub max_gpus: usize,
+    pub max_batch: usize,
+    /// KV history length in tokens.
+    pub seq_len: f64,
+}
+
+impl Default for SweepBounds {
+    fn default() -> Self {
+        SweepBounds { max_gpus: 64, max_batch: 1024, seq_len: 1.0e6 }
+    }
+}
+
+fn pow2s(max: usize) -> Vec<usize> {
+    let mut v = vec![1usize];
+    while *v.last().unwrap() * 2 <= max {
+        let n = v.last().unwrap() * 2;
+        v.push(n);
+    }
+    v
+}
+
+/// Pipeline widths: divisors of the layer count, bounded.
+fn pp_choices(m: &ModelSpec, max: usize) -> Vec<usize> {
+    (1..=max.min(m.layers))
+        .filter(|pp| m.layers % pp == 0)
+        .collect()
+}
+
+/// Factor pairs (tpf, ep) of n, both powers of two, ep dividing experts.
+fn ffn_grids(m: &ModelSpec, n: usize) -> Vec<(usize, usize)> {
+    match m.ffn {
+        Ffn::Dense { .. } => vec![(n, 1)],
+        Ffn::Moe { experts, .. } => pow2s(n)
+            .into_iter()
+            .filter(|&ep| n % ep == 0 && experts % ep == 0)
+            .map(|ep| (n / ep, ep))
+            .collect(),
+    }
+}
+
+/// All candidate layouts for a strategy, pre-validated.
+pub fn layouts(m: &ModelSpec, strategy: Strategy, bounds: &SweepBounds)
+               -> Vec<Layout> {
+    let q = m.attention.q_heads();
+    let k = m.attention.kv_heads();
+    let gmax = bounds.max_gpus;
+    let mut out = Vec::new();
+    match strategy {
+        Strategy::Helix { .. } => {
+            for tpa in pow2s(k.min(gmax)) {
+                if q % tpa != 0 {
+                    continue;
+                }
+                for kvp in pow2s(gmax / tpa) {
+                    let n = kvp * tpa;
+                    if q % n != 0 {
+                        continue;
+                    }
+                    for (tpf, ep) in ffn_grids(m, n) {
+                        let lo = Layout { kvp, tpa, tpf, ep, pp: 1 };
+                        if lo.validate(m, false).is_ok() {
+                            out.push(lo);
+                        }
+                    }
+                }
+            }
+        }
+        Strategy::Tp => {
+            for tp in pow2s(gmax.min(q)) {
+                for pp in pp_choices(m, gmax / tp) {
+                    let mut lo = Layout::tp(tp);
+                    lo.pp = pp;
+                    if lo.validate(m, true).is_ok() {
+                        out.push(lo);
+                    }
+                }
+            }
+        }
+        Strategy::MedhaKvp => {
+            // TP tied across attention/FFN; KVP >= 2 (else it's TP).
+            for tp in pow2s(k.min(gmax)) {
+                if q % tp != 0 {
+                    continue;
+                }
+                for kvp in pow2s(gmax / tp) {
+                    if kvp < 2 {
+                        continue;
+                    }
+                    let lo = Layout { kvp, tpa: tp, tpf: tp, ep: 1, pp: 1 };
+                    // Medha runs the FFN on the TP group only; encode
+                    // tpf = tp but keep n() = kvp*tp for GPU accounting.
+                    if q % lo.n() == 0 && lo.tpa <= k {
+                        out.push(lo);
+                    }
+                }
+            }
+        }
+        Strategy::DpEp => {
+            if !matches!(m.ffn, Ffn::Moe { .. }) {
+                return out;
+            }
+            for dp in pow2s(gmax) {
+                for (tpf, ep) in ffn_grids(m, dp) {
+                    out.push(Layout { kvp: dp, tpa: 1, tpf, ep, pp: 1 });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Run the full sweep for one strategy.
+pub fn sweep_strategy(m: &ModelSpec, hw: &Hardware, strategy: Strategy,
+                      bounds: &SweepBounds) -> Vec<DecodePoint> {
+    let mut points = Vec::new();
+    for lo in layouts(m, strategy, bounds) {
+        for b in pow2s(bounds.max_batch) {
+            if matches!(strategy, Strategy::DpEp) && b % lo.kvp != 0 {
+                continue; // DP needs a whole number of requests per GPU
+            }
+            if let Some(p) = evaluate(m, hw, strategy, &lo, b, bounds.seq_len)
+            {
+                points.push(p);
+            }
+        }
+    }
+    points
+}
+
+/// The paper's baseline = best of {TP, PP, EP(dp), vanilla KVP}.
+pub fn baseline_strategies(m: &ModelSpec) -> Vec<Strategy> {
+    let mut v = vec![Strategy::Tp, Strategy::MedhaKvp];
+    if matches!(m.ffn, Ffn::Moe { .. }) {
+        v.push(Strategy::DpEp);
+    }
+    v
+}
+
+/// Sweep every baseline strategy.
+pub fn sweep_baseline(m: &ModelSpec, hw: &Hardware, bounds: &SweepBounds)
+                      -> Vec<DecodePoint> {
+    baseline_strategies(m)
+        .into_iter()
+        .flat_map(|s| sweep_strategy(m, hw, s, bounds))
+        .collect()
+}
+
+/// Total number of configurations examined (valid or not) — reported by
+/// the CLI the way the paper reports its 100k sweep.
+pub fn config_count(m: &ModelSpec, bounds: &SweepBounds) -> usize {
+    let mut n = 0;
+    for s in [Strategy::Helix { hopb: true }, Strategy::Tp,
+              Strategy::MedhaKvp, Strategy::DpEp] {
+        n += layouts(m, s, bounds).len() * pow2s(bounds.max_batch).len();
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bounds() -> SweepBounds {
+        SweepBounds::default()
+    }
+
+    #[test]
+    fn helix_layouts_never_duplicate_kv() {
+        let m = ModelSpec::llama_405b();
+        for lo in layouts(&m, Strategy::Helix { hopb: true }, &bounds()) {
+            assert!(lo.tpa <= m.attention.kv_heads());
+            assert_eq!(lo.tpf * lo.ep, lo.n());
+        }
+    }
+
+    #[test]
+    fn mla_helix_layouts_are_pure_kvp() {
+        let m = ModelSpec::deepseek_r1();
+        for lo in layouts(&m, Strategy::Helix { hopb: true }, &bounds()) {
+            assert_eq!(lo.tpa, 1, "MLA: any TPA>1 duplicates the latent");
+        }
+    }
+
+    #[test]
+    fn dp_ep_absent_for_dense_models() {
+        let m = ModelSpec::llama_405b();
+        assert!(layouts(&m, Strategy::DpEp, &bounds()).is_empty());
+        assert_eq!(baseline_strategies(&m).len(), 2);
+        assert_eq!(baseline_strategies(&ModelSpec::deepseek_r1()).len(), 3);
+    }
+
+    #[test]
+    fn sweeps_produce_points() {
+        let m = ModelSpec::llama_405b();
+        let hw = Hardware::gb200_nvl72();
+        let b = SweepBounds { max_batch: 64, ..bounds() };
+        let helix = sweep_strategy(&m, &hw, Strategy::Helix { hopb: true },
+                                   &b);
+        let base = sweep_baseline(&m, &hw, &b);
+        assert!(helix.len() > 20, "helix points {}", helix.len());
+        assert!(base.len() > 20, "baseline points {}", base.len());
+    }
+
+    #[test]
+    fn medha_requires_kvp_at_least_two() {
+        let m = ModelSpec::llama_405b();
+        for lo in layouts(&m, Strategy::MedhaKvp, &bounds()) {
+            assert!(lo.kvp >= 2);
+            assert_eq!(lo.tpa, lo.tpf, "Medha ties TP widths");
+        }
+    }
+
+    #[test]
+    fn config_count_is_substantial() {
+        let m = ModelSpec::deepseek_r1();
+        assert!(config_count(&m, &bounds()) > 500);
+    }
+}

@@ -1,0 +1,80 @@
+//! Bench harness (criterion is unavailable offline).
+//!
+//! Benches are `harness = false` binaries that call [`bench`] /
+//! [`bench_once`] and print a fixed-format report; `make bench` runs
+//! them all. Warmup + multiple samples + median/min reporting keeps the
+//! numbers stable enough for before/after perf comparisons
+//! (EXPERIMENTS.md SPerf).
+
+use std::time::Instant;
+
+use super::stats;
+
+/// One measured result.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub samples: Vec<f64>,
+}
+
+impl Measurement {
+    pub fn median(&self) -> f64 {
+        stats::median(&self.samples)
+    }
+
+    pub fn min(&self) -> f64 {
+        stats::min(&self.samples)
+    }
+
+    pub fn mean(&self) -> f64 {
+        stats::mean(&self.samples)
+    }
+
+    pub fn report(&self) -> String {
+        format!("bench {:<44} median {:>12} min {:>12} ({} samples)",
+                self.name, super::table::fmt_time(self.median()),
+                super::table::fmt_time(self.min()), self.samples.len())
+    }
+}
+
+/// Run `f` `samples` times after `warmup` unmeasured runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, samples: usize,
+                         mut f: F) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed().as_secs_f64());
+    }
+    let m = Measurement { name: name.to_string(), samples: times };
+    println!("{}", m.report());
+    m
+}
+
+/// Measure a single run (for expensive end-to-end benches).
+pub fn bench_once<F: FnOnce()>(name: &str, f: F) -> Measurement {
+    let t = Instant::now();
+    f();
+    let m = Measurement { name: name.to_string(),
+                          samples: vec![t.elapsed().as_secs_f64()] };
+    println!("{}", m.report());
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_samples() {
+        let m = bench("noop", 1, 5, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(m.samples.len(), 5);
+        assert!(m.min() >= 0.0);
+        assert!(m.median() >= m.min());
+    }
+}

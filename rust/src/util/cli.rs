@@ -1,0 +1,122 @@
+//! Minimal CLI argument parsing (clap is unavailable offline).
+//!
+//! Supports `binary <subcommand> [--key value] [--flag] [positional...]`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed command line: a subcommand, `--key value` options, bare
+/// `--flag`s and positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (no argv[0]).
+    pub fn parse_from<I: IntoIterator<Item = String>>(it: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut tokens = it.into_iter().peekable();
+        while let Some(tok) = tokens.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                if key.is_empty() {
+                    bail!("bare `--` is not supported");
+                }
+                if let Some((k, v)) = key.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if tokens
+                    .peek()
+                    .map(|t| !t.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = tokens.next().unwrap();
+                    args.options.insert(key.to_string(), v);
+                } else {
+                    args.flags.push(key.to_string());
+                }
+            } else if args.subcommand.is_none() && args.positional.is_empty() {
+                args.subcommand = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse the process arguments (skipping argv[0]).
+    pub fn from_env() -> Result<Args> {
+        Args::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        // Note: a bare `--flag` followed by a non-option token would be
+        // parsed as `--key value`; flags therefore go last.
+        let a = parse("pareto --model deepseek-r1 --gpus 64 out.csv --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("pareto"));
+        assert_eq!(a.opt("model"), Some("deepseek-r1"));
+        assert_eq!(a.opt_usize("gpus", 8).unwrap(), 64);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["out.csv"]);
+    }
+
+    #[test]
+    fn eq_form() {
+        let a = parse("run --x=1 --y=a=b");
+        assert_eq!(a.opt("x"), Some("1"));
+        assert_eq!(a.opt("y"), Some("a=b"));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("run --fast");
+        assert!(a.flag("fast"));
+        assert_eq!(a.opt("fast"), None);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("run");
+        assert_eq!(a.opt_or("model", "tiny_gqa"), "tiny_gqa");
+        assert_eq!(a.opt_f64("scale", 1.5).unwrap(), 1.5);
+    }
+}

@@ -1,0 +1,19 @@
+//! Offline-friendly substrates.
+//!
+//! The build environment has no network access and only the `xla` crate's
+//! vendored dependency closure, so the usual ecosystem crates (serde,
+//! clap, criterion, proptest, rand) are unavailable. This module provides
+//! the small, well-tested subset of their functionality the rest of the
+//! crate needs.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod timeline;
+
+pub use json::Json;
+pub use rng::Rng;

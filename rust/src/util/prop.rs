@@ -1,0 +1,60 @@
+//! Tiny property-test driver (proptest is unavailable offline).
+//!
+//! Runs a property closure against many seeded [`Rng`]s and reports the
+//! failing seed so a regression can be pinned as a plain unit test.
+//! No shrinking — cases here are small enough to debug from the seed.
+
+use super::rng::Rng;
+
+/// Run `cases` iterations of `prop`, each with a fresh deterministic RNG.
+/// Panics with the failing seed on the first failure.
+pub fn forall<F: FnMut(&mut Rng)>(name: &str, cases: u64, mut prop: F) {
+    for case in 0..cases {
+        let seed = case_seed(case);
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || prop(&mut rng),
+        ));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| e.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property {name:?} failed on case {case} (seed {seed:#x}):\n{msg}"
+            );
+        }
+    }
+}
+
+/// Decorrelate consecutive case seeds.
+fn case_seed(case: u64) -> u64 {
+    case.wrapping_mul(0x9e3779b97f4a7c15) ^ 0x48454c4958 // "HELIX"
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        forall("additive identity", 100, |rng| {
+            let x = rng.range(0, 1000) as i64;
+            assert_eq!(x + 0, x);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn reports_failures() {
+        forall("always fails eventually", 50, |rng| {
+            assert!(rng.range(0, 10) < 9, "hit the 10% case");
+        });
+    }
+
+    #[test]
+    fn seeds_are_distinct() {
+        assert_ne!(case_seed(1), case_seed(2));
+    }
+}

@@ -1,0 +1,184 @@
+//! Event timeline + ASCII Gantt rendering (paper Fig. 3).
+//!
+//! The HOP-B analysis reasons about intervals (compute vs communication
+//! per request); this module records them and renders the same style of
+//! diagram as the paper's Figure 3, and computes makespans / exposed
+//! communication time.
+
+/// One half-open interval `[start, end)` on a named lane.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    pub lane: String,
+    pub label: String,
+    pub start: f64,
+    pub end: f64,
+    pub kind: SpanKind,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    Compute,
+    Comm,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct Timeline {
+    pub spans: Vec<Span>,
+}
+
+impl Timeline {
+    pub fn push(&mut self, lane: &str, label: &str, start: f64, end: f64,
+                kind: SpanKind) {
+        assert!(end >= start, "negative span {label}: {start}..{end}");
+        self.spans.push(Span {
+            lane: lane.to_string(),
+            label: label.to_string(),
+            start,
+            end,
+            kind,
+        });
+    }
+
+    /// Total makespan (max end).
+    pub fn makespan(&self) -> f64 {
+        self.spans.iter().map(|s| s.end).fold(0.0, f64::max)
+    }
+
+    /// Communication time not hidden behind any compute span: the union
+    /// of comm intervals minus the union of compute intervals.
+    pub fn exposed_comm(&self) -> f64 {
+        let comm = union(self.spans.iter().filter(|s| s.kind == SpanKind::Comm));
+        let comp =
+            union(self.spans.iter().filter(|s| s.kind == SpanKind::Compute));
+        subtract_len(&comm, &comp)
+    }
+
+    /// Sum of comm span lengths (with overlap between lanes collapsed).
+    pub fn total_comm(&self) -> f64 {
+        union(self.spans.iter().filter(|s| s.kind == SpanKind::Comm))
+            .iter()
+            .map(|(a, b)| b - a)
+            .sum()
+    }
+
+    /// Render an ASCII Gantt chart: one row per lane, `#` compute,
+    /// `~` communication, `width` characters across the makespan.
+    pub fn render(&self, width: usize) -> String {
+        let span = self.makespan().max(1e-12);
+        let mut lanes: Vec<String> = Vec::new();
+        for s in &self.spans {
+            if !lanes.contains(&s.lane) {
+                lanes.push(s.lane.clone());
+            }
+        }
+        let name_w = lanes.iter().map(|l| l.len()).max().unwrap_or(0);
+        let mut out = String::new();
+        for lane in &lanes {
+            let mut row = vec![' '; width];
+            for s in self.spans.iter().filter(|s| &s.lane == lane) {
+                let a = ((s.start / span) * width as f64).floor() as usize;
+                let b = (((s.end / span) * width as f64).ceil() as usize)
+                    .min(width);
+                let c = match s.kind {
+                    SpanKind::Compute => '#',
+                    SpanKind::Comm => '~',
+                };
+                for cell in row.iter_mut().take(b).skip(a.min(width)) {
+                    *cell = c;
+                }
+            }
+            out.push_str(&format!(
+                "{lane:<name_w$} |{}|\n",
+                row.into_iter().collect::<String>()
+            ));
+        }
+        out.push_str(&format!(
+            "{:<name_w$}  0{:>w$.1}\n",
+            "t",
+            span,
+            w = width - 1
+        ));
+        out
+    }
+}
+
+/// Union of intervals -> sorted disjoint list.
+fn union<'a, I: Iterator<Item = &'a Span>>(spans: I) -> Vec<(f64, f64)> {
+    let mut iv: Vec<(f64, f64)> = spans.map(|s| (s.start, s.end)).collect();
+    iv.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let mut out: Vec<(f64, f64)> = Vec::new();
+    for (a, b) in iv {
+        match out.last_mut() {
+            Some(last) if a <= last.1 => last.1 = last.1.max(b),
+            _ => out.push((a, b)),
+        }
+    }
+    out
+}
+
+/// Total length of `a` minus (set-difference) the intervals in `b`.
+fn subtract_len(a: &[(f64, f64)], b: &[(f64, f64)]) -> f64 {
+    let mut total = 0.0;
+    for &(s, e) in a {
+        let mut cur = s;
+        for &(bs, be) in b {
+            if be <= cur || bs >= e {
+                continue;
+            }
+            if bs > cur {
+                total += bs - cur;
+            }
+            cur = cur.max(be);
+            if cur >= e {
+                break;
+            }
+        }
+        if cur < e {
+            total += e - cur;
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn makespan_and_union() {
+        let mut t = Timeline::default();
+        t.push("gpu0", "a", 0.0, 2.0, SpanKind::Compute);
+        t.push("net", "x", 1.0, 3.0, SpanKind::Comm);
+        assert_eq!(t.makespan(), 3.0);
+        // comm [1,3) minus compute [0,2) => exposed [2,3) = 1.0
+        assert!((t.exposed_comm() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fully_hidden_comm() {
+        let mut t = Timeline::default();
+        t.push("gpu0", "a", 0.0, 10.0, SpanKind::Compute);
+        t.push("net", "x", 2.0, 4.0, SpanKind::Comm);
+        assert_eq!(t.exposed_comm(), 0.0);
+    }
+
+    #[test]
+    fn disjoint_comm_sums() {
+        let mut t = Timeline::default();
+        t.push("net", "x", 0.0, 1.0, SpanKind::Comm);
+        t.push("net", "y", 2.0, 4.0, SpanKind::Comm);
+        assert!((t.total_comm() - 3.0).abs() < 1e-12);
+        assert!((t.exposed_comm() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn render_shape() {
+        let mut t = Timeline::default();
+        t.push("r0", "a", 0.0, 1.0, SpanKind::Compute);
+        t.push("r1", "b", 1.0, 2.0, SpanKind::Comm);
+        let s = t.render(20);
+        assert_eq!(s.lines().count(), 3);
+        assert!(s.contains('#'));
+        assert!(s.contains('~'));
+    }
+}

@@ -1,0 +1,156 @@
+//! Engine integration: sharded Helix execution must match the unsharded
+//! reference executable across every model x layout in the artifacts,
+//! including the HOP-B pipelined path, across enough steps to cycle the
+//! round-robin KV append.
+//!
+//! Requires `make artifacts`.
+
+use helix::engine::{ClusterConfig, CommModel, HelixCluster};
+use helix::runtime::artifacts::EngineLayout;
+use helix::runtime::Manifest;
+
+const TOL: f32 = 1e-3;
+
+fn manifest() -> Manifest {
+    Manifest::load(&Manifest::default_root())
+        .expect("artifacts missing — run `make artifacts` first")
+}
+
+fn run_steps(model: &str, layout: EngineLayout, hopb: bool, steps: usize)
+             -> f32 {
+    let mut cc = ClusterConfig::new(model, layout);
+    cc.verify = true;
+    cc.hopb = hopb;
+    let mut cluster = HelixCluster::new(cc).expect("cluster");
+    for s in 0..cluster.batch() {
+        cluster.open_slot(s).unwrap();
+    }
+    let mut tokens: Vec<i32> = (0..cluster.batch() as i32).map(|i| i + 5)
+        .collect();
+    let mut worst = 0.0f32;
+    for _ in 0..steps {
+        let (next, m) = cluster.decode_step(&tokens).expect("step");
+        worst = worst.max(m.max_ref_diff.unwrap());
+        tokens = next;
+    }
+    cluster.shutdown();
+    worst
+}
+
+#[test]
+fn all_models_all_layouts_match_reference() {
+    let man = manifest();
+    for (model, entry) in &man.models {
+        // Enough steps to cross a kv_block boundary and cycle ranks.
+        let steps = entry.config.kv_block + 4;
+        for lo in &entry.layouts {
+            let worst = run_steps(model, *lo, false, steps);
+            assert!(worst < TOL,
+                    "{model} {} diverged: {worst:.3e}", lo.key());
+            println!("{model} {}: worst |engine-ref| = {worst:.3e}",
+                     lo.key());
+        }
+    }
+}
+
+#[test]
+fn hopb_pipeline_is_equally_exact() {
+    // The per-request pipelined attention path must produce identical
+    // results to lockstep (same programs, different schedule).
+    let worst = run_steps("tiny_gqa",
+                          EngineLayout { kvp: 2, tpa: 2, tpf: 4, ep: 1 },
+                          true, 12);
+    assert!(worst < TOL, "HOP-B path diverged: {worst:.3e}");
+}
+
+#[test]
+fn comm_emulation_does_not_change_numerics() {
+    let mut cc = ClusterConfig::new(
+        "tiny_gqa", EngineLayout { kvp: 2, tpa: 2, tpf: 4, ep: 1 });
+    cc.verify = true;
+    cc.comm = CommModel { scale: 50.0, ..CommModel::nvlink() };
+    let mut cluster = HelixCluster::new(cc).unwrap();
+    for s in 0..cluster.batch() {
+        cluster.open_slot(s).unwrap();
+    }
+    let (_, m) = cluster.decode_step(&[1, 2, 3, 4]).unwrap();
+    assert!(m.max_ref_diff.unwrap() < TOL);
+    assert!(cluster.comm_total.as_secs_f64() > 0.0,
+            "emulated comm must be accounted");
+    cluster.shutdown();
+}
+
+#[test]
+fn partial_batch_and_slot_reuse() {
+    let mut cc = ClusterConfig::new(
+        "tiny_gqa", EngineLayout { kvp: 2, tpa: 2, tpf: 4, ep: 1 });
+    cc.verify = true;
+    let mut cluster = HelixCluster::new(cc).unwrap();
+    // Only slots 0 and 2 live.
+    cluster.open_slot(0).unwrap();
+    cluster.open_slot(2).unwrap();
+    for step in 0..6 {
+        let (_, m) = cluster.decode_step(&[9, 0, 17, 0]).unwrap();
+        assert!(m.max_ref_diff.unwrap() < TOL, "step {step}");
+    }
+    assert_eq!(cluster.lens, vec![6, 0, 6, 0]);
+    // Evict slot 0 and admit a fresh request into it.
+    cluster.close_slot(0);
+    cluster.open_slot(0).unwrap();
+    assert_eq!(cluster.lens[0], 0);
+    for _ in 0..4 {
+        let (_, m) = cluster.decode_step(&[3, 0, 21, 0]).unwrap();
+        assert!(m.max_ref_diff.unwrap() < TOL);
+    }
+    assert_eq!(cluster.lens, vec![4, 0, 10, 0]);
+    cluster.shutdown();
+}
+
+#[test]
+fn long_decode_crosses_many_kv_blocks() {
+    // 3+ full round-robin cycles on the kvp=4 layout.
+    let worst = run_steps("tiny_gqa",
+                          EngineLayout { kvp: 4, tpa: 1, tpf: 4, ep: 1 },
+                          false, 3 * 16 * 4 / 4);
+    assert!(worst < TOL, "long decode diverged: {worst:.3e}");
+}
+
+#[test]
+fn fault_injection_surfaces_rank_errors() {
+    let cc = ClusterConfig::new(
+        "tiny_gqa", EngineLayout { kvp: 2, tpa: 2, tpf: 4, ep: 1 });
+    let mut cluster = HelixCluster::new(cc).unwrap();
+    let err = cluster.inject_fault(1, "simulated XID").unwrap();
+    assert!(err.contains("simulated XID"), "got {err:?}");
+    // The pool survives an injected command failure and keeps serving.
+    cluster.open_slot(0).unwrap();
+    let (next, _) = cluster.decode_step(&[1, 0, 0, 0]).unwrap();
+    assert_eq!(next.len(), 4);
+    cluster.shutdown();
+}
+
+#[test]
+fn unknown_layout_is_rejected() {
+    let cc = ClusterConfig::new(
+        "tiny_gqa", EngineLayout { kvp: 8, tpa: 1, tpf: 8, ep: 1 });
+    let err = HelixCluster::new(cc).err().expect("must fail");
+    assert!(format!("{err:#}").contains("not in artifacts"));
+}
+
+#[test]
+fn kv_overflow_is_an_error_not_corruption() {
+    let mut cc = ClusterConfig::new(
+        "tiny_gqa", EngineLayout { kvp: 1, tpa: 1, tpf: 1, ep: 1 });
+    cc.verify = false;
+    let mut cluster = HelixCluster::new(cc).unwrap();
+    cluster.open_slot(0).unwrap();
+    let cap = cluster.cfg.seq_cap;
+    let mut failed = false;
+    for _ in 0..cap + 2 {
+        if cluster.decode_step(&[1, 0, 0, 0]).is_err() {
+            failed = true;
+            break;
+        }
+    }
+    assert!(failed, "decoding past seq_cap must fail loudly");
+}

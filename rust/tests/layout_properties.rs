@@ -1,0 +1,120 @@
+//! Property tests over layouts and sharding math (paper Fig 2 semantics).
+
+use helix::config::{Layout, ModelSpec};
+use helix::util::prop::forall;
+use helix::util::Rng;
+
+fn random_model(rng: &mut Rng) -> ModelSpec {
+    *rng.choose(&[ModelSpec::llama_405b(), ModelSpec::deepseek_r1(),
+                  ModelSpec::fig1_dense()])
+}
+
+fn pow2(rng: &mut Rng, max_log: usize) -> usize {
+    1usize << rng.range(0, max_log + 1)
+}
+
+#[test]
+fn valid_helix_layouts_never_duplicate_kv() {
+    forall("no KV duplication under validity", 500, |rng| {
+        let m = random_model(rng);
+        let lo = Layout {
+            kvp: pow2(rng, 6),
+            tpa: pow2(rng, 6),
+            tpf: 1,
+            ep: 1,
+            pp: 1,
+        };
+        let lo = Layout { tpf: lo.n(), ..lo };
+        if lo.validate(&m, false).is_ok() {
+            assert_eq!(lo.kv_duplication(&m), 1.0,
+                       "{lo:?} on {} claims valid but duplicates", m.name);
+            assert!(lo.tpa <= m.attention.kv_heads());
+            assert_eq!(m.attention.q_heads() % lo.n(), 0);
+        }
+    });
+}
+
+#[test]
+fn duplication_factor_matches_definition() {
+    forall("dup = max(1, tpa/K)", 200, |rng| {
+        let m = random_model(rng);
+        let tpa = pow2(rng, 7);
+        let lo = Layout { kvp: 1, tpa, tpf: tpa, ep: 1, pp: 1 };
+        let k = m.attention.kv_heads() as f64;
+        let want = (tpa as f64 / k).max(1.0);
+        assert_eq!(lo.kv_duplication(&m), want);
+    });
+}
+
+#[test]
+fn gpu_accounting_is_consistent() {
+    forall("gpus = kvp*tpa*pp = tpf*ep*pp", 300, |rng| {
+        let m = ModelSpec::deepseek_r1();
+        let kvp = pow2(rng, 5);
+        let ep = *rng.choose(&[1usize, 2, 4, 8]);
+        if kvp % ep != 0 {
+            return;
+        }
+        let lo = Layout { kvp, tpa: 1, tpf: kvp / ep, ep, pp: 1 };
+        if lo.validate(&m, false).is_ok() {
+            assert_eq!(lo.gpus(), lo.n());
+            assert_eq!(lo.tpf * lo.ep, lo.kvp * lo.tpa);
+        }
+    });
+}
+
+#[test]
+fn validate_rejects_mismatched_ffn_grid() {
+    forall("tpf*ep != n rejected", 200, |rng| {
+        let m = ModelSpec::llama_405b();
+        let kvp = pow2(rng, 3);
+        let tpa = pow2(rng, 3);
+        let lo = Layout { kvp, tpa, tpf: kvp * tpa * 2, ep: 1, pp: 1 };
+        assert!(lo.validate(&m, true).is_err());
+    });
+}
+
+#[test]
+fn round_robin_append_is_balanced() {
+    // Paper S2.3: staggered append keeps shard growth within one block.
+    forall("round-robin balance", 200, |rng| {
+        let kvp = *rng.choose(&[1usize, 2, 4, 8]);
+        let kv_block = *rng.choose(&[4usize, 16, 64]);
+        let total = rng.range(1, 4096);
+        let mut shard_lens = vec![0usize; kvp];
+        for t in 0..total {
+            shard_lens[(t / kv_block) % kvp] += 1;
+        }
+        assert_eq!(shard_lens.iter().sum::<usize>(), total);
+        let (mn, mx) = (shard_lens.iter().min().unwrap(),
+                        shard_lens.iter().max().unwrap());
+        assert!(mx - mn <= kv_block,
+                "imbalance {mx}-{mn} > block {kv_block} (kvp={kvp})");
+    });
+}
+
+#[test]
+fn head_slices_partition_exactly() {
+    // The All-to-All head arithmetic: every (tpa_j, kvp_k) destination
+    // slice is disjoint and covers all Q heads.
+    forall("a2a head partition", 300, |rng| {
+        let q = 128usize;
+        let tpa = *rng.choose(&[1usize, 2, 4, 8]);
+        let kvp = *rng.choose(&[1usize, 2, 4, 8]);
+        let n = tpa * kvp;
+        if q % n != 0 {
+            return;
+        }
+        let (qhl, qs) = (q / tpa, q / n);
+        let mut seen = vec![false; q];
+        for nn in 0..n {
+            let (j, k) = (nn / kvp, nn % kvp);
+            let off = j * qhl + k * qs;
+            for h in off..off + qs {
+                assert!(!seen[h], "head {h} assigned twice");
+                seen[h] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "heads not fully covered");
+    });
+}

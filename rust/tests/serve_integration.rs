@@ -1,0 +1,107 @@
+//! Serving-layer integration: continuous batching over the real engine.
+//! Requires `make artifacts`.
+
+use helix::engine::{ClusterConfig, HelixCluster};
+use helix::runtime::artifacts::EngineLayout;
+use helix::serve::{Server, Workload};
+
+fn cluster(model: &str, layout: EngineLayout, verify: bool) -> HelixCluster {
+    let mut cc = ClusterConfig::new(model, layout);
+    cc.verify = verify;
+    HelixCluster::new(cc).expect("cluster (run `make artifacts`?)")
+}
+
+#[test]
+fn completes_more_requests_than_slots() {
+    // 10 requests through 4 slots: exercises admission, retirement and
+    // slot reuse (continuous batching).
+    let c = cluster("tiny_gqa", EngineLayout { kvp: 2, tpa: 2, tpf: 4,
+                                               ep: 1 }, true);
+    let mut server = Server::new(c);
+    let workload = Workload { num_requests: 10, prompt_len: (2, 5),
+                              gen_len: (4, 8), seed: 3 };
+    let report = server.run(&workload, 10_000).unwrap();
+    assert_eq!(report.completed, 10);
+    assert_eq!(report.rejected, 0);
+    assert!(report.max_ref_diff.unwrap() < 1e-3,
+            "serving diverged: {:?}", report.max_ref_diff);
+    assert!(report.metrics.generated_tokens >= 10 * 4);
+    assert!(report.metrics.tokens_per_sec() > 0.0);
+}
+
+#[test]
+fn every_request_generates_requested_tokens() {
+    let c = cluster("tiny_gqa", EngineLayout { kvp: 4, tpa: 1, tpf: 4,
+                                               ep: 1 }, false);
+    let mut server = Server::new(c);
+    let workload = Workload { num_requests: 6, prompt_len: (3, 3),
+                              gen_len: (5, 9), seed: 11 };
+    server.run(&workload, 10_000).unwrap();
+    for st in &server.router.completed {
+        assert_eq!(st.generated.len(), st.req.max_new_tokens,
+                   "request {} under-generated", st.req.id);
+        assert_eq!(st.token_times.len(), st.generated.len());
+        // Greedy decode over a fixed vocab must stay in range.
+        for &t in &st.generated {
+            assert!((0..server.cluster.cfg.vocab as i32).contains(&t));
+        }
+    }
+}
+
+#[test]
+fn oversized_requests_are_rejected_not_wedged() {
+    let c = cluster("tiny_gqa", EngineLayout { kvp: 2, tpa: 2, tpf: 4,
+                                               ep: 1 }, false);
+    let cap = c.cfg.seq_cap;
+    let mut server = Server::new(c);
+    let workload = Workload { num_requests: 3, prompt_len: (cap, cap + 4),
+                              gen_len: (8, 8), seed: 1 };
+    let report = server.run(&workload, 1_000).unwrap();
+    assert_eq!(report.completed, 0);
+    assert_eq!(report.rejected, 3);
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let run = || {
+        let c = cluster("tiny_gqa", EngineLayout { kvp: 2, tpa: 2, tpf: 4,
+                                                   ep: 1 }, false);
+        let mut server = Server::new(c);
+        let workload = Workload { num_requests: 4, prompt_len: (2, 4),
+                                  gen_len: (4, 6), seed: 99 };
+        server.run(&workload, 10_000).unwrap();
+        let mut outs: Vec<(u64, Vec<i32>)> = server
+            .router
+            .completed
+            .iter()
+            .map(|st| (st.req.id, st.generated.clone()))
+            .collect();
+        outs.sort();
+        outs
+    };
+    assert_eq!(run(), run(), "same seed must reproduce the same tokens");
+}
+
+#[test]
+fn moe_serving_works() {
+    let c = cluster("tiny_moe", EngineLayout { kvp: 2, tpa: 2, tpf: 2,
+                                               ep: 2 }, true);
+    let mut server = Server::new(c);
+    let workload = Workload { num_requests: 5, prompt_len: (2, 4),
+                              gen_len: (4, 6), seed: 5 };
+    let report = server.run(&workload, 10_000).unwrap();
+    assert_eq!(report.completed, 5);
+    assert!(report.max_ref_diff.unwrap() < 1e-3);
+}
+
+#[test]
+fn mla_serving_works() {
+    let c = cluster("tiny_mla", EngineLayout { kvp: 4, tpa: 1, tpf: 4,
+                                               ep: 1 }, true);
+    let mut server = Server::new(c);
+    let workload = Workload { num_requests: 5, prompt_len: (2, 4),
+                              gen_len: (4, 6), seed: 6 };
+    let report = server.run(&workload, 10_000).unwrap();
+    assert_eq!(report.completed, 5);
+    assert!(report.max_ref_diff.unwrap() < 1e-3);
+}

@@ -1,0 +1,226 @@
+//! Property tests over the analytic simulator: Pareto invariants, HOP-B
+//! bounds, memory-model monotonicity, sweep validity.
+
+use helix::config::{Hardware, Layout, ModelSpec};
+use helix::sim::decode::{evaluate, Strategy};
+use helix::sim::sweep::{self, SweepBounds};
+use helix::sim::{hopb, memory, Frontier};
+use helix::util::prop::forall;
+
+fn hw() -> Hardware {
+    Hardware::gb200_nvl72()
+}
+
+#[test]
+fn frontier_has_no_dominated_points() {
+    forall("frontier dominance", 30, |rng| {
+        let m = if rng.bool(0.5) {
+            ModelSpec::llama_405b()
+        } else {
+            ModelSpec::deepseek_r1()
+        };
+        let bounds = SweepBounds {
+            max_gpus: *rng.choose(&[8usize, 16, 64]),
+            max_batch: 256,
+            seq_len: *rng.choose(&[1.0e5, 1.0e6]),
+        };
+        let pts = sweep::sweep_baseline(&m, &hw(), &bounds);
+        let f = Frontier::from_points(pts.clone());
+        // No point in the raw sweep dominates any frontier point.
+        for fp in &f.points {
+            for p in &pts {
+                assert!(
+                    !(p.interactivity > fp.interactivity
+                      && p.throughput_per_gpu > fp.throughput_per_gpu),
+                    "frontier point dominated"
+                );
+            }
+        }
+        // Frontier is monotone.
+        for w in f.points.windows(2) {
+            assert!(w[0].interactivity < w[1].interactivity);
+            assert!(w[0].throughput_per_gpu >= w[1].throughput_per_gpu);
+        }
+    });
+}
+
+#[test]
+fn hopb_exposed_comm_bounds() {
+    forall("hopb bounds", 1000, |rng| {
+        let c = rng.f64() * 100.0;
+        let m = rng.f64() * 100.0;
+        let chunks = rng.range(1, 64);
+        let e = hopb::exposed_comm(c, m, chunks, true);
+        assert!(e >= -1e-9, "negative exposure");
+        assert!(e <= m + 1e-9, "exposure exceeds total comm");
+        // Overlap never helps less than lockstep.
+        assert!(e <= hopb::exposed_comm(c, m, chunks, false) + 1e-9);
+        // More chunks never hurt.
+        if chunks >= 2 {
+            let e2 = hopb::exposed_comm(c, m, chunks * 2, true);
+            assert!(e2 <= e + 1e-9, "more chunks increased exposure");
+        }
+    });
+}
+
+#[test]
+fn kv_read_monotone_in_batch_and_s() {
+    forall("kv read monotonicity", 300, |rng| {
+        let m = ModelSpec::llama_405b();
+        let h = hw();
+        let b = rng.range(1, 128);
+        let s = 1e4 + rng.f64() * 4e6;
+        let tpa = *rng.choose(&[1usize, 2, 4, 8]);
+        let kvp = *rng.choose(&[1usize, 2, 4, 8]);
+        let base = memory::kv_read_bytes_per_gpu(&m, &h, b, s, tpa, kvp);
+        assert!(memory::kv_read_bytes_per_gpu(&m, &h, b + 1, s, tpa, kvp)
+                > base);
+        assert!(memory::kv_read_bytes_per_gpu(&m, &h, b, s * 2.0, tpa, kvp)
+                > base);
+        // KVP strictly reduces per-GPU traffic.
+        assert!(memory::kv_read_bytes_per_gpu(&m, &h, b, s, tpa, kvp * 2)
+                < base);
+    });
+}
+
+#[test]
+fn capacity_monotone_in_batch() {
+    forall("capacity monotone", 200, |rng| {
+        let m = ModelSpec::llama_405b();
+        let h = hw();
+        let lo = Layout::helix(*rng.choose(&[1usize, 2, 4, 8]), 8, 0, 1);
+        let lo = Layout { tpf: lo.n(), ..lo };
+        if lo.validate(&m, false).is_err() {
+            return;
+        }
+        let s = 1.0e6;
+        let mut prev = true;
+        for b in [1usize, 2, 4, 8, 16, 32, 64, 128, 256] {
+            let fits = memory::fits_capacity(&m, &h, &lo, b, s);
+            assert!(prev || !fits, "capacity must be monotone in batch");
+            prev = fits;
+        }
+    });
+}
+
+#[test]
+fn evaluate_rejects_what_capacity_rejects() {
+    forall("evaluate respects capacity", 100, |rng| {
+        let m = ModelSpec::deepseek_r1();
+        let h = hw();
+        let kvp = *rng.choose(&[1usize, 4, 16, 64]);
+        let lo = Layout { kvp, tpa: 1, tpf: kvp, ep: 1, pp: 1 };
+        let b = *rng.choose(&[1usize, 16, 256, 1024]);
+        let p = evaluate(&m, &h, Strategy::Helix { hopb: true }, &lo, b,
+                         1.0e6);
+        let fits = memory::fits_capacity(&m, &h, &lo, b, 1.0e6)
+            && lo.gpus() <= h.max_domain;
+        assert_eq!(p.is_some(), fits);
+        if let Some(p) = p {
+            assert!(p.ttl > 0.0 && p.ttl.is_finite());
+            assert!(p.throughput_per_gpu > 0.0);
+        }
+    });
+}
+
+#[test]
+fn helix_ttl_never_worse_than_medha_same_pool() {
+    // Same pool, same batch: decoupling the FFN grid + overlap must not
+    // lose to the tied-TP exposed-comm baseline.
+    forall("helix <= medha", 100, |rng| {
+        let m = ModelSpec::llama_405b();
+        let h = hw();
+        let tp = *rng.choose(&[2usize, 4, 8]);
+        let kvp = *rng.choose(&[2usize, 4, 8]);
+        let b = *rng.choose(&[1usize, 4, 8]);
+        let lo_medha = Layout { kvp, tpa: tp, tpf: tp, ep: 1, pp: 1 };
+        let lo_helix = Layout { kvp, tpa: tp, tpf: kvp * tp, ep: 1, pp: 1 };
+        let me = evaluate(&m, &h, Strategy::MedhaKvp, &lo_medha, b, 1.0e6);
+        let he = evaluate(&m, &h, Strategy::Helix { hopb: true }, &lo_helix,
+                          b, 1.0e6);
+        if let (Some(me), Some(he)) = (me, he) {
+            assert!(he.ttl <= me.ttl * 1.001,
+                    "helix {} vs medha {} (tp={tp} kvp={kvp} b={b})",
+                    he.ttl, me.ttl);
+        }
+    });
+}
+
+#[test]
+fn sweep_points_all_satisfy_domain_and_capacity() {
+    let m = ModelSpec::deepseek_r1();
+    let h = hw();
+    let bounds = SweepBounds { max_gpus: 64, max_batch: 256, seq_len: 1.0e6 };
+    for strat in [Strategy::Helix { hopb: true }, Strategy::Tp,
+                  Strategy::MedhaKvp, Strategy::DpEp] {
+        for p in sweep::sweep_strategy(&m, &h, strat, &bounds) {
+            assert!(p.gpus <= 64);
+            assert!(memory::fits_capacity(&m, &h, &p.layout,
+                                          p.batch * p.layout.pp, 1.0e6));
+            assert!(p.interactivity.is_finite());
+        }
+    }
+}
+
+#[test]
+fn sparse_attention_cuts_reads_not_capacity() {
+    // Paper S6: NSA-style sparsity reduces KV read bandwidth but not
+    // memory capacity requirements.
+    let dense = ModelSpec::llama_405b();
+    let sparse = ModelSpec::llama_405b().with_sparse_attention(0.125);
+    let h = hw();
+    let read_d = memory::kv_read_bytes_per_gpu(&dense, &h, 8, 1.0e6, 8, 4);
+    let read_s = memory::kv_read_bytes_per_gpu(&sparse, &h, 8, 1.0e6, 8, 4);
+    assert!((read_d / read_s - 8.0).abs() < 1e-9);
+    let cap_d = memory::kv_stored_bytes_per_gpu(&dense, &h, 8, 1.0e6, 8, 4);
+    let cap_s = memory::kv_stored_bytes_per_gpu(&sparse, &h, 8, 1.0e6, 8, 4);
+    assert_eq!(cap_d, cap_s, "sparsity must not shrink stored bytes");
+    // Helix still matters under sparsity: batch capacity is unchanged,
+    // so KVP remains the only way to fit multi-million-token caches.
+    let lo = Layout::tp(8);
+    assert!(!memory::fits_capacity(&sparse, &h, &lo, 64, 1.0e6));
+}
+
+#[test]
+fn helix_advantage_grows_with_context_length() {
+    // Paper S5: in the short-context regime Helix degenerates to the
+    // patterns serving frameworks already use — its edge over the best
+    // baseline must shrink as S shrinks and grow as S grows.
+    let m = ModelSpec::llama_405b();
+    let h = hw();
+    let gain_at = |s: f64| {
+        let bounds = SweepBounds { max_gpus: 64, max_batch: 256,
+                                   seq_len: s };
+        let base = Frontier::from_points(
+            sweep::sweep_baseline(&m, &h, &bounds));
+        let helix = Frontier::from_points(sweep::sweep_strategy(
+            &m, &h, Strategy::Helix { hopb: true }, &bounds));
+        helix.max_interactivity() / base.max_interactivity()
+    };
+    let short = gain_at(2048.0);
+    let medium = gain_at(262_144.0);
+    let long = gain_at(4.0e6);
+    assert!(short < 1.15, "short-context gain should vanish: {short}");
+    assert!(long > medium && medium >= short * 0.95,
+            "gain must grow with S: {short} -> {medium} -> {long}");
+}
+
+#[test]
+fn precision_does_not_change_who_wins() {
+    // Robustness ablation: FP8/FP16 shift absolute times but not the
+    // Helix-vs-baseline ordering.
+    use helix::config::hardware::Precision;
+    let m = ModelSpec::llama_405b();
+    for precision in [Precision::Fp4, Precision::Fp8, Precision::Fp16] {
+        let mut h = hw();
+        h.precision = precision;
+        let bounds = SweepBounds { max_gpus: 64, max_batch: 128,
+                                   seq_len: 1.0e6 };
+        let base = Frontier::from_points(
+            sweep::sweep_baseline(&m, &h, &bounds));
+        let helix = Frontier::from_points(sweep::sweep_strategy(
+            &m, &h, Strategy::Helix { hopb: true }, &bounds));
+        assert!(helix.max_interactivity() > base.max_interactivity(),
+                "{precision:?}: helix must keep winning interactivity");
+    }
+}

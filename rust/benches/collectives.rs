@@ -29,6 +29,25 @@ fn main() {
         std::hint::black_box(stacks);
     });
 
+    // The zero-copy reshuffle the engine actually runs now: borrowed
+    // strided views + one gather into the destination stack.
+    bench("l3/a2a_reshuffle_view_gather", 10, 500, || {
+        let mut stacks = Vec::with_capacity(4);
+        for k in 0..2usize {
+            let views = [partials[0].slice_axis_view(1, k * 2, 2).unwrap(),
+                         partials[1].slice_axis_view(1, k * 2, 2).unwrap()];
+            stacks.push(HostTensor::stack_views(&views).unwrap());
+        }
+        std::hint::black_box(stacks);
+    });
+
+    // Broadcast cost: Arc clone per destination rank (was a deep copy).
+    let bx = randn(&mut rng, &[8, 16384]);
+    bench("l3/broadcast_clone_8x(8x16384)", 10, 5000, || {
+        let clones: Vec<HostTensor> = (0..8).map(|_| bx.clone()).collect();
+        std::hint::black_box(clones);
+    });
+
     // All-Reduce accumulation over N=4 partials of [B=4, H=256].
     let parts: Vec<HostTensor> =
         (0..4).map(|_| randn(&mut rng, &[4, 256])).collect();
@@ -63,7 +82,8 @@ fn main() {
         std::hint::black_box(x.reshape(&[1024]).unwrap());
     });
 
-    // KV row view (HOP-B per-request path): [4, 2, 128, 32] row slice.
+    // KV row view (HOP-B per-request path): [4, 2, 128, 32] row slice —
+    // now a zero-copy Arc view (shared storage + offset).
     let kc = randn(&mut rng, &[4, 2, 128, 32]);
     bench("l3/kv_row_view", 10, 2000, || {
         std::hint::black_box(kc.slice_axis(0, 2, 1).unwrap());

@@ -6,14 +6,22 @@
 //! flash-decode -> All-to-All + combine -> TP out-proj -> FFN grid) on
 //! the PJRT CPU client, plus the HOP-B overlap comparison under an
 //! emulated NVLink.
+//!
+//! Besides the stdout report it writes `BENCH_engine.json` (tokens/s,
+//! per-phase ns, allocations per step) into `$BENCH_OUT` (default: the
+//! working directory) — the machine-readable perf trajectory this repo
+//! diffs across PRs.
 
 use helix::engine::{ClusterConfig, CommModel, HelixCluster};
 use helix::runtime::artifacts::EngineLayout;
 use helix::runtime::Manifest;
-use helix::util::bench::bench;
+use helix::util::bench::{alloc_count, bench, CountingAlloc, JsonReport};
 
-fn step_bench(name: &str, model: &str, layout: EngineLayout, hopb: bool,
-              a2a_bw: f64) {
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn step_bench(report: &mut JsonReport, name: &str, model: &str,
+              layout: EngineLayout, hopb: bool, a2a_bw: f64) {
     let mut cc = ClusterConfig::new(model, layout);
     cc.hopb = hopb;
     if a2a_bw > 0.0 {
@@ -34,38 +42,87 @@ fn step_bench(name: &str, model: &str, layout: EngineLayout, hopb: bool,
     }
     let tokens: Vec<i32> = (0..cluster.batch() as i32).map(|i| i + 3)
         .collect();
-    bench(name, 3, 10, || {
+    let batch = cluster.batch() as f64;
+    const WARMUP: u64 = 3;
+    const SAMPLES: usize = 10;
+    // Per-phase seconds + allocations over the measured samples only
+    // (warmup steps run on a near-empty KV cache and would skew the
+    // per-step averages the JSON report diffs across PRs).
+    let mut phases = [0.0f64; 3];
+    let mut steps = 0u64;
+    let mut calls = 0u64;
+    // Alloc window bounds captured inside the closure, symmetric around
+    // the measured samples only — harness bookkeeping (Measurement
+    // construction, report formatting) stays outside the window.
+    let (mut a0, mut a1) = (0u64, 0u64);
+    let m = bench(name, WARMUP as usize, SAMPLES, || {
         // Steps accumulate context, so later samples attend over more
         // KV — representative of steady-state decode.
-        let (next, _) = cluster.decode_step(&tokens).unwrap();
+        if calls == WARMUP {
+            a0 = alloc_count();
+        }
+        let (next, sm) = cluster.decode_step(&tokens).unwrap();
+        if calls >= WARMUP {
+            phases[0] += sm.attn.as_secs_f64();
+            phases[1] += sm.comm.as_secs_f64();
+            phases[2] += sm.ffn.as_secs_f64();
+            steps += 1;
+        }
+        calls += 1;
+        if calls == WARMUP + SAMPLES as u64 {
+            a1 = alloc_count();
+        }
         std::hint::black_box(next);
     });
+    let allocs_per_step = (a1 - a0) as f64 / steps as f64;
+    report.add(&m);
+    report.metric(&format!("{name}/tokens_per_s"), batch / m.median());
+    report.metric(&format!("{name}/attn_ns_per_step"),
+                  phases[0] / steps as f64 * 1e9);
+    report.metric(&format!("{name}/comm_ns_per_step"),
+                  phases[1] / steps as f64 * 1e9);
+    report.metric(&format!("{name}/ffn_ns_per_step"),
+                  phases[2] / steps as f64 * 1e9);
+    report.metric(&format!("{name}/allocs_per_step"), allocs_per_step);
     cluster.shutdown();
 }
 
+fn write_report(report: &JsonReport) {
+    let dir = std::env::var("BENCH_OUT").unwrap_or_else(|_| ".".to_string());
+    match report.write(std::path::Path::new(&dir)) {
+        Ok(p) => println!("\nwrote {}", p.display()),
+        Err(e) => eprintln!("bench report write failed: {e:#}"),
+    }
+}
+
 fn main() {
+    let mut report = JsonReport::new("engine");
     if Manifest::load(&Manifest::default_root()).is_err() {
         eprintln!("artifacts missing — run `make artifacts` first; \
                    skipping engine benches");
+        report.note("status", "skipped: artifacts missing");
+        write_report(&report);
         return;
     }
     println!("## engine decode-step latency (real PJRT execution)");
-    step_bench("engine/tiny_gqa/helix_kvp2_tpa2", "tiny_gqa",
+    step_bench(&mut report, "engine/tiny_gqa/helix_kvp2_tpa2", "tiny_gqa",
                EngineLayout { kvp: 2, tpa: 2, tpf: 4, ep: 1 }, false, 0.0);
-    step_bench("engine/tiny_gqa/pure_kvp4", "tiny_gqa",
+    step_bench(&mut report, "engine/tiny_gqa/pure_kvp4", "tiny_gqa",
                EngineLayout { kvp: 4, tpa: 1, tpf: 4, ep: 1 }, false, 0.0);
-    step_bench("engine/tiny_gqa/tp4", "tiny_gqa",
+    step_bench(&mut report, "engine/tiny_gqa/tp4", "tiny_gqa",
                EngineLayout { kvp: 1, tpa: 4, tpf: 4, ep: 1 }, false, 0.0);
-    step_bench("engine/tiny_gqa/single_rank", "tiny_gqa",
+    step_bench(&mut report, "engine/tiny_gqa/single_rank", "tiny_gqa",
                EngineLayout { kvp: 1, tpa: 1, tpf: 1, ep: 1 }, false, 0.0);
-    step_bench("engine/tiny_mla/pure_kvp4", "tiny_mla",
+    step_bench(&mut report, "engine/tiny_mla/pure_kvp4", "tiny_mla",
                EngineLayout { kvp: 4, tpa: 1, tpf: 4, ep: 1 }, false, 0.0);
-    step_bench("engine/tiny_moe/tpf2_ep2", "tiny_moe",
+    step_bench(&mut report, "engine/tiny_moe/tpf2_ep2", "tiny_moe",
                EngineLayout { kvp: 2, tpa: 2, tpf: 2, ep: 2 }, false, 0.0);
 
     println!("\n## HOP-B under an emulated slow All-to-All link");
-    step_bench("engine/tiny_gqa/a2a_hopb_off", "tiny_gqa",
+    step_bench(&mut report, "engine/tiny_gqa/a2a_hopb_off", "tiny_gqa",
                EngineLayout { kvp: 2, tpa: 2, tpf: 4, ep: 1 }, false, 2.0e4);
-    step_bench("engine/tiny_gqa/a2a_hopb_on", "tiny_gqa",
+    step_bench(&mut report, "engine/tiny_gqa/a2a_hopb_on", "tiny_gqa",
                EngineLayout { kvp: 2, tpa: 2, tpf: 4, ep: 1 }, true, 2.0e4);
+    report.note("status", "ok");
+    write_report(&report);
 }

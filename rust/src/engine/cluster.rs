@@ -88,6 +88,12 @@ pub struct HelixCluster {
     verify: Option<VerifyState>,
     /// Cumulative emulated-communication wall time.
     pub comm_total: Duration,
+    /// Step arena: reusable [B] i32 scratch tensors, refilled in place
+    /// once per decode step. Broadcast clones are Arc refcount bumps;
+    /// COW detaches automatically if a rank still holds last step's
+    /// copy, so reuse is safe by construction.
+    scratch_tok: HostTensor,
+    scratch_pos: HostTensor,
 }
 
 impl HelixCluster {
@@ -159,6 +165,10 @@ impl HelixCluster {
         Ok(HelixCluster {
             lens: vec![0; cfg.batch],
             active: vec![false; cfg.batch],
+            scratch_tok: HostTensor::from_i32(vec![0; cfg.batch],
+                                              &[cfg.batch])?,
+            scratch_pos: HostTensor::from_i32(vec![0; cfg.batch],
+                                              &[cfg.batch])?,
             cfg,
             layout: lo,
             model: cc.model,
@@ -232,8 +242,12 @@ impl HelixCluster {
         self.lens[row] = 0;
         self.active[row] = true;
         if let Some(v) = &mut self.verify {
-            // Mirror reset = lens go to 0; stale cache rows are masked.
-            let _ = &mut v.k_full;
+            // A reopened slot must not inherit the previous request's
+            // mirror rows: zero them so the reference replay (and
+            // max_ref_diff) never sees a stale cache.
+            for t in v.k_full.iter_mut().chain(v.v_full.iter_mut()) {
+                zero_batch_row(t, row)?;
+            }
         }
         Ok(())
     }
@@ -260,9 +274,20 @@ impl HelixCluster {
         let t0 = Instant::now();
         let mut metrics = StepMetrics::default();
 
+        // Refill the step arena in place: positions are constant for the
+        // whole step (lens advance only at the end), so every layer
+        // broadcasts refcount bumps of the same two scratch tensors.
+        self.scratch_tok.i32s_mut()?.copy_from_slice(tokens);
+        {
+            let pos = self.scratch_pos.i32s_mut()?;
+            for (p, &l) in pos.iter_mut().zip(&self.lens) {
+                *p = l as i32;
+            }
+        }
+
         // Embed on rank 0.
-        let tok = HostTensor::from_i32(tokens.to_vec(), &[self.cfg.batch])?;
-        self.send(0, Cmd::Embed { tokens: tok.clone() })?;
+        let tok = self.scratch_tok.clone();
+        self.send(0, Cmd::Embed { tokens: tok })?;
         let mut x = match self.collect(1)?.remove(0) {
             Payload::Embedded(x) => x,
             p => bail!("expected embed output, got {}", p.name()),
@@ -302,12 +327,12 @@ impl HelixCluster {
         let (b, h) = (self.cfg.batch, self.cfg.hidden);
 
         // --- in-projection (every rank; redundant across KVP) ----------
+        // Broadcasts are Arc refcount bumps: N ranks share one buffer.
         let t_attn = Instant::now();
-        let pos = self.pos_tensor();
         self.emulate(x.size_bytes()); // token broadcast (S2.3)
         for r in 0..n {
             self.send(r, Cmd::InProj { layer, x: x.clone(),
-                                       pos: pos.clone() })?;
+                                       pos: self.scratch_pos.clone() })?;
         }
         self.collect(n)?;
 
@@ -336,11 +361,7 @@ impl HelixCluster {
         for (r, o_slice) in o_slices.into_iter().enumerate() {
             self.send(r, Cmd::OutProj { layer, o_slice })?;
         }
-        let mut attn_out = HostTensor::zeros(&[b, h]);
-        for p in self.collect(n)? {
-            let Payload::Partial(t) = p else { bail!("expected partial") };
-            attn_out.add_assign(&t)?;
-        }
+        let attn_out = self.reduce_partials(n)?;
         self.emulate(2 * b * h * 4); // All-Reduce over N
         let mut h1 = x;
         h1.add_assign(&attn_out)?;
@@ -356,11 +377,7 @@ impl HelixCluster {
             };
             self.send(r, cmd)?;
         }
-        let mut ffn_out = HostTensor::zeros(&[b, h]);
-        for p in self.collect(n)? {
-            let Payload::Partial(t) = p else { bail!("expected partial") };
-            ffn_out.add_assign(&t)?;
-        }
+        let ffn_out = self.reduce_partials(n)?;
         self.emulate(2 * b * h * 4); // All-Reduce over N
         let mut y = h1;
         y.add_assign(&ffn_out)?;
@@ -368,25 +385,47 @@ impl HelixCluster {
         Ok(y)
     }
 
+    /// Host side of an All-Reduce: sum `n` rank partials, seeding the
+    /// accumulator from rank 0's buffer (no zero-init allocation, one
+    /// fewer add pass; rank order is preserved, so numerics are
+    /// identical to the zero-seeded sum).
+    fn reduce_partials(&mut self, n: usize) -> Result<HostTensor> {
+        let mut acc: Option<HostTensor> = None;
+        for p in self.collect(n)? {
+            let Payload::Partial(t) = p else { bail!("expected partial") };
+            match acc {
+                None => acc = Some(t),
+                Some(ref mut a) => a.add_assign(&t)?,
+            }
+        }
+        acc.context("no partials collected")
+    }
+
     /// Reshuffle rank partials into each destination rank's combine
     /// inputs: dest (j, k') receives, from every (j, r), query-head slice
     /// [k'*qs, (k'+1)*qs) of the partial output and LSE.
+    ///
+    /// Zero-copy reshuffle: the per-source slices are borrowed strided
+    /// views ([`crate::runtime::AxisView`]) — indices, not buffers — and
+    /// the only copy is the single gather into each destination stack
+    /// (previously: one copy per slice *plus* the stack copy).
     fn a2a_stacks(&self, partials: &[(HostTensor, HostTensor)], qs: usize)
                   -> Result<Vec<(HostTensor, HostTensor)>> {
         let lo = self.layout;
         let mut out = Vec::with_capacity(lo.n());
+        let mut os = Vec::with_capacity(lo.kvp);
+        let mut ls = Vec::with_capacity(lo.kvp);
         for dest in 0..lo.n() {
             let (j, k) = shard::attn_coords(&lo, dest);
-            let mut os = Vec::with_capacity(lo.kvp);
-            let mut ls = Vec::with_capacity(lo.kvp);
+            os.clear();
+            ls.clear();
             for r in 0..lo.kvp {
                 let (o, lse) = &partials[j * lo.kvp + r];
-                os.push(o.slice_axis(1, k * qs, qs)?);
-                ls.push(lse.slice_axis(1, k * qs, qs)?);
+                os.push(o.slice_axis_view(1, k * qs, qs)?);
+                ls.push(lse.slice_axis_view(1, k * qs, qs)?);
             }
-            let orefs: Vec<&HostTensor> = os.iter().collect();
-            let lrefs: Vec<&HostTensor> = ls.iter().collect();
-            out.push((HostTensor::stack(&orefs)?, HostTensor::stack(&lrefs)?));
+            out.push((HostTensor::stack_views(&os)?,
+                      HostTensor::stack_views(&ls)?));
         }
         Ok(out)
     }
@@ -404,18 +443,25 @@ impl HelixCluster {
         for r in 0..n {
             self.send(r, Cmd::Attn { layer })?;
         }
-        let mut partials: Vec<(HostTensor, HostTensor)> =
-            vec![(HostTensor::zeros(&[0]), HostTensor::zeros(&[0])); n];
+        let mut partials: Vec<Option<(HostTensor, HostTensor)>> =
+            (0..n).map(|_| None).collect();
         for _ in 0..n {
             let resp = self.rx.recv().context("rank pool hung up")?;
             match resp.payload {
-                Payload::Attn { o, lse, .. } => partials[resp.rank] = (o, lse),
+                Payload::Attn { o, lse, .. } => {
+                    partials[resp.rank] = Some((o, lse));
+                }
                 Payload::Err(e) => bail!("rank {}: {e}", resp.rank),
                 p => bail!("expected attn, got {}", p.name()),
             }
         }
+        let partials: Vec<(HostTensor, HostTensor)> = partials
+            .into_iter()
+            .map(|p| p.context("missing attention partial"))
+            .collect::<Result<_>>()?;
         if lo.kvp == 1 {
-            // No All-to-All needed: each rank already owns its N-slice.
+            // No All-to-All needed: each rank already owns its N-slice
+            // (reshape is a refcount bump).
             return partials.into_iter()
                 .map(|(o, _)| o.reshape(&[b, qhl * hsz]))
                 .collect();
@@ -490,8 +536,8 @@ impl HelixCluster {
             self.emulate_a2a(row_bytes);
             metrics.comm += t.elapsed();
             let rows: Vec<(HostTensor, HostTensor)> = partials[row]
-                .iter()
-                .map(|p| p.clone().unwrap())
+                .iter_mut()
+                .map(|p| p.take().expect("row partials incomplete"))
                 .collect();
             let stacks = self.a2a_stacks(&rows, qs)?;
             for (r, (o_parts, lse_parts)) in stacks.into_iter().enumerate() {
@@ -511,11 +557,13 @@ impl HelixCluster {
                 p => bail!("unexpected {}", p.name()),
             }
         }
-        // Reassemble per-rank [B, qs*hsz] slices from the row pieces.
+        // Reassemble per-rank [B, qs*hsz] slices from the row pieces
+        // (moves, not clones — each piece is consumed exactly once).
         let mut out = Vec::with_capacity(n);
         for r in 0..n {
             let rows: Vec<HostTensor> = (0..b)
-                .map(|row| combined[row][r].clone().unwrap())
+                .map(|row| combined[row][r].take()
+                    .expect("combined slice missing"))
                 .collect();
             let refs: Vec<&HostTensor> = rows.iter().collect();
             out.push(HostTensor::concat(&refs, 0)?);
@@ -601,7 +649,7 @@ fn mirror_append(cache: &mut HostTensor, new: &HostTensor, lens: &[usize],
                  active: &[bool]) -> Result<()> {
     let (b, kh, cap, hsz) = (cache.shape[0], cache.shape[1], cache.shape[2],
                              cache.shape[3]);
-    let src = new.f32s()?.to_vec();
+    let src = new.f32s()?;
     let dst = cache.f32s_mut()?;
     for bi in 0..b {
         if !active[bi] || lens[bi] >= cap {
@@ -613,6 +661,14 @@ fn mirror_append(cache: &mut HostTensor, new: &HostTensor, lens: &[usize],
             dst[d..d + hsz].copy_from_slice(&src[s..s + hsz]);
         }
     }
+    Ok(())
+}
+
+/// Zero batch row `row` of a [B, ...] tensor (verify-mirror eviction).
+fn zero_batch_row(t: &mut HostTensor, row: usize) -> Result<()> {
+    let stride: usize = t.shape[1..].iter().product();
+    let d = t.f32s_mut()?;
+    d[row * stride..(row + 1) * stride].fill(0.0);
     Ok(())
 }
 

@@ -1,9 +1,12 @@
 //! Coordinator <-> rank message protocol.
 //!
 //! One mpsc command channel per rank, one shared response channel back
-//! to the coordinator. All payloads are [`HostTensor`]s (Send). Each
-//! response carries the rank id so the coordinator can reassemble
-//! collective inputs in rank order.
+//! to the coordinator. All payloads are [`HostTensor`]s (Send), whose
+//! storage is `Arc`-shared: broadcasting one activation to N ranks
+//! costs N refcount bumps, not N deep copies, and copy-on-write keeps
+//! receivers from ever aliasing the sender's buffer. Each response
+//! carries the rank id so the coordinator can reassemble collective
+//! inputs in rank order.
 
 use crate::runtime::HostTensor;
 

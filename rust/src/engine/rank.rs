@@ -21,6 +21,11 @@ pub struct KvShard {
     pub k: HostTensor,
     pub v: HostTensor,
     pub lens: Vec<i32>,
+    /// Reusable [B] i32 tensor mirroring `lens` (refilled in place per
+    /// use — no per-command allocation).
+    lens_t: HostTensor,
+    /// Single-row twin of `lens_t` for the HOP-B per-row path.
+    row_len_t: HostTensor,
     cap: usize,
 }
 
@@ -30,6 +35,8 @@ impl KvShard {
             k: HostTensor::zeros(&[b, kh_local, cap, hsz]),
             v: HostTensor::zeros(&[b, kh_local, cap, hsz]),
             lens: vec![0; b],
+            lens_t: HostTensor::from_i32(vec![0; b], &[b]).unwrap(),
+            row_len_t: HostTensor::from_i32(vec![0], &[1]).unwrap(),
             cap,
         }
     }
@@ -56,15 +63,31 @@ impl KvShard {
         Ok(())
     }
 
-    fn lens_tensor(&self) -> HostTensor {
-        HostTensor::from_i32(self.lens.clone(), &[self.lens.len()]).unwrap()
+    /// Evict one batch row (request close/reopen).
+    pub fn reset_row(&mut self, row: usize) {
+        self.lens[row] = 0;
     }
 
-    fn row_view(&self, b_idx: usize) -> Result<(HostTensor, HostTensor,
-                                                HostTensor)> {
+    /// `lens` as an i32 tensor. The scratch is refilled in place and
+    /// handed out as an Arc refcount bump (COW detaches if the previous
+    /// clone is somehow still alive).
+    fn lens_tensor(&mut self) -> HostTensor {
+        self.lens_t
+            .i32s_mut()
+            .expect("lens_t is i32")
+            .copy_from_slice(&self.lens);
+        self.lens_t.clone()
+    }
+
+    /// Per-row K/V access for the HOP-B path. Axis-0 slices are
+    /// zero-copy views into the cache, and the row-length tensor is a
+    /// reused scratch — no per-row allocations at all.
+    fn row_view(&mut self, b_idx: usize) -> Result<(HostTensor, HostTensor,
+                                                    HostTensor)> {
+        self.row_len_t.i32s_mut()?[0] = self.lens[b_idx];
         Ok((self.k.slice_axis(0, b_idx, 1)?,
             self.v.slice_axis(0, b_idx, 1)?,
-            HostTensor::from_i32(vec![self.lens[b_idx]], &[1])?))
+            self.row_len_t.clone()))
     }
 }
 
@@ -248,16 +271,19 @@ impl RankState {
         })
     }
 
+    // Hot-path discipline (SPerf-L3): no program-name clones, no
+    // qkv take/restore round-trips, no intermediate tensor copies —
+    // activations arrive as Arc refcount bumps and leave as program
+    // outputs.
     fn handle(&mut self, cmd: Cmd) -> Result<Payload> {
-        let _lo = self.init.layout;
         match cmd {
             Cmd::InProj { layer, x, pos } => {
-                let prog = self.prog_in_proj.clone();
                 let xb = self.rt.upload(&x)?;
                 let pb = self.rt.upload(&pos)?;
                 let w = &self.dev[layer];
                 let out = self.rt.execute_buffers(
-                    &prog, &[&xb, &pb, &w.wn1, &w.wq, &w.wk, &w.wv])?;
+                    &self.prog_in_proj,
+                    &[&xb, &pb, &w.wn1, &w.wq, &w.wk, &w.wv])?;
                 let mut it = out.into_iter();
                 let (q, k, v) = (it.next().unwrap(), it.next().unwrap(),
                                  it.next().unwrap());
@@ -265,67 +291,64 @@ impl RankState {
                 Ok(Payload::Ack)
             }
             Cmd::Append { layer, rows } => {
-                // Move q/k/v out (no copy) and restore after appending.
-                let qkv = self.qkv[layer].take()
+                let qkv = self.qkv[layer].as_ref()
                     .context("Append before InProj")?;
                 for b_idx in rows {
                     self.kv[layer].append(b_idx, &qkv.1, &qkv.2)?;
                 }
-                self.qkv[layer] = Some(qkv);
                 Ok(Payload::Ack)
             }
             Cmd::Attn { layer } => {
-                let qkv = self.qkv[layer].take()
+                let lens = self.kv[layer].lens_tensor();
+                let qkv = self.qkv[layer].as_ref()
                     .context("Attn before InProj")?;
                 let shard = &self.kv[layer];
-                let lens = shard.lens_tensor();
-                let out = self.rt.execute(&self.prog_attn.clone(),
+                let out = self.rt.execute(&self.prog_attn,
                                           &[&qkv.0, &shard.k, &shard.v,
-                                            &lens]);
-                self.qkv[layer] = Some(qkv);
-                let mut it = out?.into_iter();
+                                            &lens])?;
+                let mut it = out.into_iter();
                 Ok(Payload::Attn { o: it.next().unwrap(),
                                    lse: it.next().unwrap(), row: None })
             }
             Cmd::AttnRow { layer, row } => {
-                let prog = self.prog_attn_b1.clone()
+                let prog = self.prog_attn_b1.as_ref()
                     .context("no batch-1 attention program (kvp==1?)")?;
+                // Zero-copy: q row and K/V rows are Arc views.
                 let q1 = self.qkv[layer].as_ref()
                     .context("AttnRow before InProj")?
                     .0.slice_axis(0, row, 1)?;
                 let (k1, v1, l1) = self.kv[layer].row_view(row)?;
-                let out = self.rt.execute(&prog, &[&q1, &k1, &v1, &l1])?;
+                let out = self.rt.execute(prog, &[&q1, &k1, &v1, &l1])?;
                 let mut it = out.into_iter();
                 Ok(Payload::Attn { o: it.next().unwrap(),
                                    lse: it.next().unwrap(), row: Some(row) })
             }
             Cmd::Combine { o_parts, lse_parts, row } => {
                 let prog = if row.is_some() {
-                    self.prog_combine_b1.clone()
+                    self.prog_combine_b1.as_ref()
                 } else {
-                    self.prog_combine.clone()
+                    self.prog_combine.as_ref()
                 }
                 .context("no combine program (kvp==1?)")?;
-                let out = self.rt.execute(&prog, &[&o_parts, &lse_parts])?;
+                let out = self.rt.execute(prog, &[&o_parts, &lse_parts])?;
                 Ok(Payload::Combined { o_slice: out.into_iter().next()
                                        .unwrap(), row })
             }
             Cmd::ResetRow { row } => {
                 for shard in &mut self.kv {
-                    shard.lens[row] = 0;
+                    shard.reset_row(row);
                 }
                 Ok(Payload::Ack)
             }
             Cmd::OutProj { layer, o_slice } => {
-                let prog = self.prog_out_proj.clone();
                 let ob = self.rt.upload(&o_slice)?;
                 let w = &self.dev[layer];
-                let out = self.rt.execute_buffers(&prog,
+                let out = self.rt.execute_buffers(&self.prog_out_proj,
                                                   &[&ob, &w.wo_slice])?;
                 Ok(Payload::Partial(out.into_iter().next().unwrap()))
             }
             Cmd::FfnDense { layer, h1 } => {
-                let prog = self.prog_ffn.clone()
+                let prog = self.prog_ffn.as_ref()
                     .context("dense FFN program missing (MoE model?)")?;
                 let hb = self.rt.upload(&h1)?;
                 let w = &self.dev[layer];
@@ -333,24 +356,24 @@ impl RankState {
                     bail!("dense FFN requested on MoE shard");
                 };
                 let out = self.rt.execute_buffers(
-                    &prog, &[&hb, &w.wn2, w1, wg, w2])?;
+                    prog, &[&hb, &w.wn2, w1, wg, w2])?;
                 Ok(Payload::Partial(out.into_iter().next().unwrap()))
             }
             Cmd::FfnMoe { layer, h1 } => self.ffn_moe(layer, h1),
             Cmd::Embed { tokens } => {
-                let prog = self.prog_embed.clone()
+                let prog = self.prog_embed.as_ref()
                     .context("embed runs on rank 0 only")?;
                 let (wemb, _, _) = self.init.embed_weights.as_ref()
                     .context("embed weights only on rank 0")?;
-                let out = self.rt.execute(&prog, &[&tokens, wemb])?;
+                let out = self.rt.execute(prog, &[&tokens, wemb])?;
                 Ok(Payload::Embedded(out.into_iter().next().unwrap()))
             }
             Cmd::Logits { x } => {
-                let prog = self.prog_logits.clone()
+                let prog = self.prog_logits.as_ref()
                     .context("logits runs on rank 0 only")?;
                 let (_, wnf, wlog) = self.init.embed_weights.as_ref()
                     .context("logits weights only on rank 0")?;
-                let out = self.rt.execute(&prog, &[&x, wnf, wlog])?;
+                let out = self.rt.execute(prog, &[&x, wnf, wlog])?;
                 let mut it = out.into_iter();
                 Ok(Payload::Logits { logits: it.next().unwrap(),
                                      next: it.next().unwrap() })
@@ -361,37 +384,47 @@ impl RankState {
     }
 
     /// MoE FFN partial: local router (redundant, DP-style), held experts
-    /// gate-scaled, plus the shared-expert slice.
+    /// gate-scaled, plus the shared-expert slice. The accumulator is
+    /// seeded from the first partial — no zero-init buffer, one fewer
+    /// add pass.
     fn ffn_moe(&mut self, layer: usize, h1: HostTensor) -> Result<Payload> {
-        let cfg = self.init.cfg.clone();
         let hb = self.rt.upload(&h1)?;
         let wn2 = &self.dev[layer].wn2;
         let FfnDev::Moe { wr, .. } = &self.dev[layer].ffn else {
             bail!("MoE FFN requested on dense shard");
         };
-        let router = self.prog_router.clone().context("router program")?;
-        let out = self.rt.execute_buffers(&router, &[&hb, wn2, wr])?;
+        let router = self.prog_router.as_ref().context("router program")?;
+        let out = self.rt.execute_buffers(router, &[&hb, wn2, wr])?;
         let mut it = out.into_iter();
         let gates = it.next().unwrap();
         let hn = it.next().unwrap();
         let hnb = self.rt.upload(&hn)?;
 
-        let mut acc = HostTensor::zeros(&[cfg.batch, cfg.hidden]);
-        let eprog = self.prog_expert.clone().context("expert program")?;
-        let experts_and_shared = &self.dev[layer].ffn;
-        let FfnDev::Moe { experts, shared, .. } = experts_and_shared else {
+        let mut acc: Option<HostTensor> = None;
+        let eprog = self.prog_expert.as_ref().context("expert program")?;
+        let FfnDev::Moe { experts, shared, .. } = &self.dev[layer].ffn else {
             unreachable!()
         };
         for (e, w1, wg, w2) in experts {
-            let out = self.rt.execute_buffers(&eprog, &[&hnb, w1, wg, w2])?;
+            let out = self.rt.execute_buffers(eprog, &[&hnb, w1, wg, w2])?;
             let mut part = out.into_iter().next().unwrap();
             scale_rows_by_gate(&mut part, &gates, *e)?;
-            acc.add_assign(&part)?;
+            match acc {
+                None => acc = Some(part),
+                Some(ref mut a) => a.add_assign(&part)?,
+            }
         }
-        let sprog = self.prog_shared.clone().context("shared program")?;
+        let sprog = self.prog_shared.as_ref().context("shared program")?;
         let (ws1, wsg, ws2) = shared;
-        let out = self.rt.execute_buffers(&sprog, &[&hnb, ws1, wsg, ws2])?;
-        acc.add_assign(&out.into_iter().next().unwrap())?;
+        let out = self.rt.execute_buffers(sprog, &[&hnb, ws1, wsg, ws2])?;
+        let shared_part = out.into_iter().next().unwrap();
+        let acc = match acc {
+            None => shared_part,
+            Some(mut a) => {
+                a.add_assign(&shared_part)?;
+                a
+            }
+        };
         Ok(Payload::Partial(acc))
     }
 }
@@ -401,7 +434,7 @@ fn scale_rows_by_gate(part: &mut HostTensor, gates: &HostTensor, e: usize)
                       -> Result<()> {
     let (b, h) = (part.shape[0], part.shape[1]);
     let ne = gates.shape[1];
-    let g = gates.f32s()?.to_vec();
+    let g = gates.f32s()?;
     let p = part.f32s_mut()?;
     for bi in 0..b {
         let factor = g[bi * ne + e];

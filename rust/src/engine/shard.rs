@@ -8,6 +8,10 @@
 //! * FFN phase:       rank `n` has `tpf_i = n / ep`,  `ep_g = n % ep`;
 //! * post-All-to-All query-head slice of rank `n` starts at global head
 //!   `tpa_j * (Qh/tpa) + kvp_k * (Qh/N)` and spans `Qh/N` heads.
+//!
+//! Replicated weights (`wn1`, `wn2`, `wr`) and row slices (`wo_slice`,
+//! axis 0) share the full tensor's `Arc` storage across every rank —
+//! only column slices (axis 1) materialize per-rank copies.
 
 use std::collections::BTreeMap;
 

@@ -10,7 +10,7 @@ use std::collections::HashMap;
 use anyhow::{ensure, Context, Result};
 
 use super::artifacts::{Manifest, ProgramSpec, TensorSpec};
-use super::tensor::{DType, HostTensor, TensorData};
+use super::tensor::{DType, HostTensor};
 
 /// A PJRT CPU client plus a cache of compiled executables.
 ///
@@ -104,11 +104,11 @@ impl Runtime {
     /// (weight shards) are uploaded once at init and reused every step
     /// (SPerf-L3: removes per-call host->device weight copies).
     pub fn upload(&self, t: &HostTensor) -> Result<xla::PjRtBuffer> {
-        match &t.data {
-            TensorData::F32(v) => self.client
-                .buffer_from_host_buffer::<f32>(v, &t.shape, None),
-            TensorData::I32(v) => self.client
-                .buffer_from_host_buffer::<i32>(v, &t.shape, None),
+        match t.dtype() {
+            DType::F32 => self.client
+                .buffer_from_host_buffer::<f32>(t.f32s()?, &t.shape, None),
+            DType::I32 => self.client
+                .buffer_from_host_buffer::<i32>(t.i32s()?, &t.shape, None),
         }
         .map_err(|e| anyhow::anyhow!("upload {:?}: {e:?}", t.shape))
     }
@@ -146,9 +146,9 @@ impl Runtime {
 
 fn to_literal(t: &HostTensor) -> Result<xla::Literal> {
     let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
-    let lit = match &t.data {
-        TensorData::F32(v) => xla::Literal::vec1(v),
-        TensorData::I32(v) => xla::Literal::vec1(v),
+    let lit = match t.dtype() {
+        DType::F32 => xla::Literal::vec1(t.f32s()?),
+        DType::I32 => xla::Literal::vec1(t.i32s()?),
     };
     lit.reshape(&dims)
         .map_err(|e| anyhow::anyhow!("literal reshape {:?}: {e:?}", t.shape))

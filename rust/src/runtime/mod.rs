@@ -2,8 +2,9 @@
 //! interchange constraint) and execute them on the PJRT CPU client.
 //!
 //! This is the only module that touches the `xla` crate. Everything
-//! above it exchanges [`tensor::HostTensor`]s, which are plain `Vec`s and
-//! therefore `Send` — rank threads each own a private [`client::Runtime`]
+//! above it exchanges [`tensor::HostTensor`]s — `Arc`-backed
+//! copy-on-write buffers, so they are `Send` and clone as refcount
+//! bumps — rank threads each own a private [`client::Runtime`]
 //! (the crate's PJRT types are `Rc`-based and deliberately thread-local,
 //! mirroring one-client-per-GPU-process deployments).
 
@@ -13,4 +14,4 @@ pub mod tensor;
 
 pub use artifacts::{Manifest, ModelEntry, ProgramSpec, TensorSpec, WeightRef};
 pub use client::Runtime;
-pub use tensor::{DType, HostTensor};
+pub use tensor::{AxisView, DType, HostTensor};

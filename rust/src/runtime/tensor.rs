@@ -1,8 +1,13 @@
 //! Host-side tensors: the engine's inter-rank currency.
 //!
-//! Plain row-major `Vec`-backed arrays with just enough shape algebra
-//! for weight sharding and collective reshuffles. `Send + Clone`, so
-//! rank threads can exchange them over channels.
+//! Row-major arrays backed by `Arc`'d storage with copy-on-write
+//! mutation: cloning a tensor — the coordinator's broadcast primitive —
+//! is a refcount bump, not a deep copy, and axis-0 slices are zero-copy
+//! views (shared storage + element offset). Mutating ops go through
+//! `Arc::make_mut`, so siblings never alias. `Send + Sync + Clone`, so
+//! rank threads can exchange tensors over channels for free.
+
+use std::sync::Arc;
 
 use anyhow::{bail, ensure, Result};
 
@@ -22,37 +27,65 @@ impl DType {
     }
 }
 
-#[derive(Debug, Clone, PartialEq)]
+/// Shared, reference-counted storage. Cloning bumps a refcount; writers
+/// detach via `Arc::make_mut` (copy-on-write).
+#[derive(Debug, Clone)]
 pub enum TensorData {
-    F32(Vec<f32>),
-    I32(Vec<i32>),
+    F32(Arc<Vec<f32>>),
+    I32(Arc<Vec<i32>>),
 }
 
-/// A dense row-major host tensor.
-#[derive(Debug, Clone, PartialEq)]
+/// A dense row-major host tensor, possibly a zero-copy view into a
+/// larger shared buffer (`offset` = element index of the first element;
+/// views are always contiguous).
+#[derive(Debug, Clone)]
 pub struct HostTensor {
     pub shape: Vec<usize>,
-    pub data: TensorData,
+    data: TensorData,
+    offset: usize,
+}
+
+impl PartialEq for HostTensor {
+    fn eq(&self, other: &Self) -> bool {
+        if self.shape != other.shape {
+            return false;
+        }
+        match (&self.data, &other.data) {
+            (TensorData::F32(_), TensorData::F32(_)) => {
+                self.f32s().unwrap() == other.f32s().unwrap()
+            }
+            (TensorData::I32(_), TensorData::I32(_)) => {
+                self.i32s().unwrap() == other.i32s().unwrap()
+            }
+            _ => false,
+        }
+    }
 }
 
 impl HostTensor {
     pub fn zeros(shape: &[usize]) -> Self {
         HostTensor {
             shape: shape.to_vec(),
-            data: TensorData::F32(vec![0.0; shape.iter().product()]),
+            data: TensorData::F32(Arc::new(vec![0.0;
+                                               shape.iter().product()])),
+            offset: 0,
         }
     }
 
     pub fn from_f32(data: Vec<f32>, shape: &[usize]) -> Result<Self> {
         ensure!(data.len() == shape.iter().product::<usize>(),
                 "data len {} != shape {:?}", data.len(), shape);
-        Ok(HostTensor { shape: shape.to_vec(), data: TensorData::F32(data) })
+        Ok(HostTensor { shape: shape.to_vec(),
+                        data: TensorData::F32(Arc::new(data)),
+                        offset: 0 })
     }
 
     pub fn from_i32(data: Vec<i32>, shape: &[usize]) -> Result<Self> {
         ensure!(data.len() == shape.iter().product::<usize>(),
                 "data len {} != shape {:?}", data.len(), shape);
-        Ok(HostTensor { shape: shape.to_vec(), data: TensorData::I32(data) })
+        Ok(HostTensor { shape: shape.to_vec(),
+                        data: TensorData::I32(Arc::new(data)),
+                        offset: 0 })
     }
 
     pub fn dtype(&self) -> DType {
@@ -66,30 +99,80 @@ impl HostTensor {
         self.shape.iter().product()
     }
 
-    pub fn f32s(&self) -> Result<&[f32]> {
+    /// True when the storage is shared with another tensor or is a
+    /// sub-view of a larger buffer (the next mutation copies-on-write).
+    pub fn is_shared(&self) -> bool {
+        let n = self.numel();
         match &self.data {
-            TensorData::F32(v) => Ok(v),
+            TensorData::F32(v) => Arc::strong_count(v) > 1 || v.len() != n,
+            TensorData::I32(v) => Arc::strong_count(v) > 1 || v.len() != n,
+        }
+    }
+
+    pub fn f32s(&self) -> Result<&[f32]> {
+        let n = self.numel();
+        match &self.data {
+            TensorData::F32(v) => Ok(&v[self.offset..self.offset + n]),
             _ => bail!("expected f32 tensor"),
         }
     }
 
+    /// Mutable element access; detaches shared or sub-view storage first
+    /// (copy-on-write), so siblings are never affected.
     pub fn f32s_mut(&mut self) -> Result<&mut [f32]> {
+        let n = self.numel();
         match &mut self.data {
-            TensorData::F32(v) => Ok(v),
+            TensorData::F32(v) => Ok(cow_slice_mut(v, &mut self.offset, n)),
             _ => bail!("expected f32 tensor"),
         }
     }
 
     pub fn i32s(&self) -> Result<&[i32]> {
+        let n = self.numel();
         match &self.data {
-            TensorData::I32(v) => Ok(v),
+            TensorData::I32(v) => Ok(&v[self.offset..self.offset + n]),
             _ => bail!("expected i32 tensor"),
         }
     }
 
-    /// Slice `len` indices starting at `start` along `axis` (copying).
+    /// `f32s_mut`'s i32 twin (used by the engine's reusable token and
+    /// position scratch tensors).
+    pub fn i32s_mut(&mut self) -> Result<&mut [i32]> {
+        let n = self.numel();
+        match &mut self.data {
+            TensorData::I32(v) => Ok(cow_slice_mut(v, &mut self.offset, n)),
+            _ => bail!("expected i32 tensor"),
+        }
+    }
+
+    /// Slice `len` indices starting at `start` along `axis`. Zero-copy
+    /// (shared storage + offset) when the slice is contiguous — i.e.
+    /// every dim before `axis` is 1, which covers all axis-0 slicing —
+    /// otherwise gathers into fresh storage (f32 only, as before).
     pub fn slice_axis(&self, axis: usize, start: usize, len: usize)
                       -> Result<HostTensor> {
+        ensure!(axis < self.shape.len(), "axis {axis} out of rank");
+        ensure!(start + len <= self.shape[axis],
+                "slice {start}+{len} exceeds dim {} on axis {axis}",
+                self.shape[axis]);
+        let outer: usize = self.shape[..axis].iter().product();
+        let inner: usize = self.shape[axis + 1..].iter().product();
+        let mut shape = self.shape.clone();
+        shape[axis] = len;
+        if outer == 1 {
+            return Ok(HostTensor { shape,
+                                   data: self.data.clone(),
+                                   offset: self.offset + start * inner });
+        }
+        self.slice_axis_view(axis, start, len)?.to_tensor()
+    }
+
+    /// Borrowed strided slice along `axis` — no copy until the view is
+    /// gathered (see [`AxisView`]). This is the All-to-All's currency:
+    /// the reshuffle passes indices around and copies exactly once, into
+    /// the destination stack.
+    pub fn slice_axis_view(&self, axis: usize, start: usize, len: usize)
+                           -> Result<AxisView<'_>> {
         ensure!(axis < self.shape.len(), "axis {axis} out of rank");
         ensure!(start + len <= self.shape[axis],
                 "slice {start}+{len} exceeds dim {} on axis {axis}",
@@ -99,13 +182,14 @@ impl HostTensor {
         let dim = self.shape[axis];
         let mut shape = self.shape.clone();
         shape[axis] = len;
-        let src = self.f32s()?;
-        let mut dst = Vec::with_capacity(outer * len * inner);
-        for o in 0..outer {
-            let base = o * dim * inner + start * inner;
-            dst.extend_from_slice(&src[base..base + len * inner]);
-        }
-        HostTensor::from_f32(dst, &shape)
+        Ok(AxisView {
+            src: self.f32s()?,
+            shape,
+            base: start * inner,
+            block: len * inner,
+            stride: dim * inner,
+            outer,
+        })
     }
 
     /// Concatenate tensors along `axis`; all other dims must agree.
@@ -156,14 +240,31 @@ impl HostTensor {
         HostTensor::from_f32(data, &shape)
     }
 
+    /// Stack equal-shaped borrowed views along a new leading axis —
+    /// one gather pass, no intermediate tensors (the zero-copy
+    /// All-to-All's single materialization point).
+    pub fn stack_views(parts: &[AxisView<'_>]) -> Result<HostTensor> {
+        ensure!(!parts.is_empty());
+        let shape0 = parts[0].shape.clone();
+        let mut data = Vec::with_capacity(parts.len() * parts[0].numel());
+        for p in parts {
+            ensure!(p.shape == shape0, "stack shape mismatch");
+            p.append_into(&mut data);
+        }
+        let mut shape = vec![parts.len()];
+        shape.extend_from_slice(&shape0);
+        HostTensor::from_f32(data, &shape)
+    }
+
     /// Elementwise in-place accumulate (the host side of All-Reduce).
+    /// No intermediate buffer; copy-on-write protects shared operands.
     pub fn add_assign(&mut self, other: &HostTensor) -> Result<()> {
         ensure!(self.shape == other.shape,
                 "add shape mismatch {:?} vs {:?}", self.shape, other.shape);
-        let b = other.f32s()?.to_vec();
+        let b = other.f32s()?;
         let a = self.f32s_mut()?;
         for (x, y) in a.iter_mut().zip(b) {
-            *x += y;
+            *x += *y;
         }
         Ok(())
     }
@@ -178,7 +279,7 @@ impl HostTensor {
     pub fn reshape(&self, shape: &[usize]) -> Result<HostTensor> {
         ensure!(shape.iter().product::<usize>() == self.numel(),
                 "reshape {:?} -> {:?}", self.shape, shape);
-        let mut t = self.clone();
+        let mut t = self.clone(); // refcount bump, not a copy
         t.shape = shape.to_vec();
         Ok(t)
     }
@@ -210,6 +311,69 @@ impl HostTensor {
             data.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
         }
         HostTensor::from_f32(data, shape)
+    }
+}
+
+/// The copy-on-write core shared by both dtypes: detach shared or
+/// sub-view storage into compact private storage covering exactly
+/// `offset..offset + n` (in place when this handle is the only owner),
+/// then hand out mutable access.
+fn cow_slice_mut<T: Copy>(v: &mut Arc<Vec<T>>, offset: &mut usize,
+                          n: usize) -> &mut [T] {
+    if *offset != 0 || v.len() != n {
+        // Two-step get_mut: NLL can't yet prove the `None -> reassign`
+        // pattern safe in a single match.
+        if Arc::get_mut(v).is_some() {
+            let vec = Arc::get_mut(v).unwrap();
+            vec.copy_within(*offset..*offset + n, 0);
+            vec.truncate(n);
+        } else {
+            *v = Arc::new(v[*offset..*offset + n].to_vec());
+        }
+        *offset = 0;
+    }
+    Arc::make_mut(v).as_mut_slice()
+}
+
+/// A borrowed, strided slice of a [`HostTensor`] along one axis: `outer`
+/// blocks of `block` contiguous elements, `stride` apart. Materializes
+/// only when gathered ([`AxisView::append_into`] /
+/// [`HostTensor::stack_views`]).
+#[derive(Debug, Clone)]
+pub struct AxisView<'a> {
+    src: &'a [f32],
+    shape: Vec<usize>,
+    /// Element offset of the first block within `src`.
+    base: usize,
+    /// Contiguous elements per outer block (len * inner).
+    block: usize,
+    /// Element stride between outer blocks (dim * inner).
+    stride: usize,
+    outer: usize,
+}
+
+impl AxisView<'_> {
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn numel(&self) -> usize {
+        self.outer * self.block
+    }
+
+    /// Append the view's elements (row-major order) onto `dst`.
+    pub fn append_into(&self, dst: &mut Vec<f32>) {
+        for o in 0..self.outer {
+            let s = self.base + o * self.stride;
+            dst.extend_from_slice(&self.src[s..s + self.block]);
+        }
+    }
+
+    /// Materialize into an owned tensor (one copy).
+    pub fn to_tensor(&self) -> Result<HostTensor> {
+        let mut data = Vec::with_capacity(self.numel());
+        self.append_into(&mut data);
+        HostTensor::from_f32(data, &self.shape)
     }
 }
 
@@ -278,6 +442,68 @@ mod tests {
         let t = t2x3();
         assert!(t.reshape(&[3, 2]).is_ok());
         assert!(t.reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn clone_is_refcount_bump_until_write() {
+        let a = t2x3();
+        let mut b = a.clone();
+        assert!(a.is_shared() && b.is_shared());
+        b.f32s_mut().unwrap()[0] = 99.0;
+        assert_eq!(a.f32s().unwrap()[0], 0.0, "sibling must not alias");
+        assert_eq!(b.f32s().unwrap()[0], 99.0);
+        assert!(!a.is_shared() && !b.is_shared());
+    }
+
+    #[test]
+    fn axis0_slice_is_zero_copy_view() {
+        let t = t2x3();
+        let mut s = t.slice_axis(0, 1, 1).unwrap();
+        assert!(t.is_shared() && s.is_shared(), "axis-0 slice must share");
+        s.f32s_mut().unwrap()[0] = -1.0;
+        assert_eq!(t.f32s().unwrap()[3], 3.0, "parent must not alias");
+        assert_eq!(s.f32s().unwrap(), &[-1.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn parent_write_leaves_views_stable() {
+        let mut t = t2x3();
+        let s = t.slice_axis(0, 0, 1).unwrap();
+        t.f32s_mut().unwrap()[0] = 42.0;
+        assert_eq!(s.f32s().unwrap(), &[0.0, 1.0, 2.0]);
+        assert_eq!(t.f32s().unwrap()[0], 42.0);
+    }
+
+    #[test]
+    fn add_assign_with_shared_operand() {
+        let mut a = t2x3();
+        let b = a.clone();
+        a.add_assign(&b).unwrap();
+        assert_eq!(a.f32s().unwrap(), &[0.0, 2.0, 4.0, 6.0, 8.0, 10.0]);
+        assert_eq!(b.f32s().unwrap(), &[0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn stack_views_matches_slice_then_stack() {
+        let t = HostTensor::from_f32((0..24).map(|i| i as f32).collect(),
+                                     &[2, 3, 4]).unwrap();
+        let a = t.slice_axis(1, 1, 2).unwrap();
+        let b = t.slice_axis(1, 0, 2).unwrap();
+        let want = HostTensor::stack(&[&a, &b]).unwrap();
+        let got = HostTensor::stack_views(&[
+            t.slice_axis_view(1, 1, 2).unwrap(),
+            t.slice_axis_view(1, 0, 2).unwrap(),
+        ]).unwrap();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn i32_scratch_refill_in_place() {
+        let mut t = HostTensor::from_i32(vec![1, 2, 3], &[3]).unwrap();
+        let c = t.clone();
+        t.i32s_mut().unwrap().copy_from_slice(&[7, 8, 9]);
+        assert_eq!(t.i32s().unwrap(), &[7, 8, 9]);
+        assert_eq!(c.i32s().unwrap(), &[1, 2, 3]);
     }
 
     #[test]

@@ -16,15 +16,18 @@ pub struct Frontier {
 
 impl Frontier {
     /// Extract the frontier: keep points not dominated in both
-    /// (interactivity, throughput/GPU).
+    /// (interactivity, throughput/GPU). NaN/inf metrics (degenerate
+    /// configs) are dropped up front — they can't sit on a frontier —
+    /// and the sort uses `total_cmp`, so a pathological point can never
+    /// panic the extraction.
     pub fn from_points(mut points: Vec<DecodePoint>) -> Frontier {
+        points.retain(|p| p.interactivity.is_finite()
+                      && p.throughput_per_gpu.is_finite());
         points.sort_by(|a, b| {
             b.interactivity
-                .partial_cmp(&a.interactivity)
-                .unwrap()
+                .total_cmp(&a.interactivity)
                 .then(b.throughput_per_gpu
-                    .partial_cmp(&a.throughput_per_gpu)
-                    .unwrap())
+                    .total_cmp(&a.throughput_per_gpu))
         });
         let mut best = f64::NEG_INFINITY;
         let mut keep = Vec::new();
@@ -167,6 +170,30 @@ mod tests {
         assert_eq!(f.throughput_at(4.0), 2.0);
         assert_eq!(f.throughput_at(1.0), 4.0);
         assert_eq!(f.throughput_at(11.0), 0.0);
+    }
+
+    #[test]
+    fn nan_points_do_not_poison_frontier() {
+        // Regression: a NaN-throughput or NaN-interactivity point used
+        // to panic the partial_cmp sort; now it is filtered and the
+        // finite frontier survives untouched.
+        let f = Frontier::from_points(vec![
+            pt(10.0, 1.0),
+            pt(f64::NAN, 2.0),
+            pt(5.0, f64::NAN),
+            pt(5.0, 2.0),
+            pt(2.0, f64::INFINITY),
+        ]);
+        assert_eq!(f.points.len(), 2);
+        assert_eq!(f.max_interactivity(), 10.0);
+        assert_eq!(f.max_throughput(), 2.0);
+    }
+
+    #[test]
+    fn all_nan_input_yields_empty_frontier() {
+        let f = Frontier::from_points(vec![pt(f64::NAN, f64::NAN)]);
+        assert!(f.is_empty());
+        assert_eq!(f.throughput_at(1.0), 0.0);
     }
 
     #[test]

@@ -1,5 +1,13 @@
 //! Exhaustive configuration enumeration — the paper's >100k-config
 //! search over {TP, PP, EP, KVP, batch} plus Helix layouts (S3.2).
+//!
+//! The per-strategy sweep fans out over all cores: scoped workers pull
+//! layout indices off a shared atomic counter (layouts differ wildly in
+//! valid-batch count, so self-scheduling beats pre-splitting) and the
+//! per-layout results are merged back in layout order, keeping the
+//! output bit-identical to a serial sweep.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::config::{Ffn, Hardware, Layout, ModelSpec};
 
@@ -119,22 +127,74 @@ pub fn layouts(m: &ModelSpec, strategy: Strategy, bounds: &SweepBounds)
     out
 }
 
-/// Run the full sweep for one strategy.
+/// Worker count for the sweep: all available cores, overridable with
+/// `HELIX_SWEEP_THREADS` (1 = serial).
+pub fn sweep_workers() -> usize {
+    if let Ok(s) = std::env::var("HELIX_SWEEP_THREADS") {
+        if let Ok(n) = s.trim().parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run the full sweep for one strategy, parallelized across cores (see
+/// module docs); results are identical to the serial sweep, in the same
+/// order.
 pub fn sweep_strategy(m: &ModelSpec, hw: &Hardware, strategy: Strategy,
                       bounds: &SweepBounds) -> Vec<DecodePoint> {
-    let mut points = Vec::new();
-    for lo in layouts(m, strategy, bounds) {
-        for b in pow2s(bounds.max_batch) {
+    let los = layouts(m, strategy, bounds);
+    let batches = pow2s(bounds.max_batch);
+    let eval_layout = |lo: &Layout, points: &mut Vec<DecodePoint>| {
+        for &b in &batches {
             if matches!(strategy, Strategy::DpEp) && b % lo.kvp != 0 {
                 continue; // DP needs a whole number of requests per GPU
             }
-            if let Some(p) = evaluate(m, hw, strategy, &lo, b, bounds.seq_len)
+            if let Some(p) = evaluate(m, hw, strategy, lo, b, bounds.seq_len)
             {
                 points.push(p);
             }
         }
+    };
+
+    let workers = sweep_workers().min(los.len().max(1));
+    if workers <= 1 {
+        let mut points = Vec::new();
+        for lo in &los {
+            eval_layout(lo, &mut points);
+        }
+        return points;
     }
-    points
+
+    let next = AtomicUsize::new(0);
+    let mut chunks: Vec<(usize, Vec<DecodePoint>)> = Vec::new();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                s.spawn(|| {
+                    let mut local: Vec<(usize, Vec<DecodePoint>)> =
+                        Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= los.len() {
+                            break;
+                        }
+                        let mut pts = Vec::new();
+                        eval_layout(&los[i], &mut pts);
+                        if !pts.is_empty() {
+                            local.push((i, pts));
+                        }
+                    }
+                    local
+                })
+            })
+            .collect();
+        for h in handles {
+            chunks.extend(h.join().expect("sweep worker panicked"));
+        }
+    });
+    chunks.sort_by_key(|(i, _)| *i);
+    chunks.into_iter().flat_map(|(_, p)| p).collect()
 }
 
 /// The paper's baseline = best of {TP, PP, EP(dp), vanilla KVP}.
@@ -224,5 +284,31 @@ mod tests {
     fn config_count_is_substantial() {
         let m = ModelSpec::deepseek_r1();
         assert!(config_count(&m, &bounds()) > 500);
+    }
+
+    #[test]
+    fn parallel_sweep_matches_serial() {
+        let m = ModelSpec::deepseek_r1();
+        let hw = Hardware::gb200_nvl72();
+        let b = SweepBounds { max_gpus: 16, max_batch: 64, seq_len: 1.0e6 };
+        let strategy = Strategy::Helix { hopb: true };
+        let par = sweep_strategy(&m, &hw, strategy, &b);
+        // Serial reference: the same loop, inline and single-threaded.
+        let mut ser = Vec::new();
+        for lo in layouts(&m, strategy, &b) {
+            for bb in pow2s(b.max_batch) {
+                if let Some(p) = evaluate(&m, &hw, strategy, &lo, bb,
+                                          b.seq_len) {
+                    ser.push(p);
+                }
+            }
+        }
+        assert_eq!(par.len(), ser.len());
+        for (a, s) in par.iter().zip(&ser) {
+            assert_eq!(a.layout, s.layout);
+            assert_eq!(a.batch, s.batch);
+            assert_eq!(a.ttl.to_bits(), s.ttl.to_bits(),
+                       "parallel sweep must be bit-identical");
+        }
     }
 }

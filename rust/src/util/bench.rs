@@ -5,9 +5,21 @@
 //! them all. Warmup + multiple samples + median/min reporting keeps the
 //! numbers stable enough for before/after perf comparisons
 //! (EXPERIMENTS.md SPerf).
+//!
+//! For the perf trajectory, benches also emit a machine-readable
+//! `BENCH_<name>.json` via [`JsonReport`] (tokens/s, per-phase ns, and
+//! an allocations proxy from [`CountingAlloc`]), so successive PRs can
+//! diff numbers mechanically instead of eyeballing stdout.
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
+use anyhow::Result;
+
+use super::json::Json;
 use super::stats;
 
 /// One measured result.
@@ -64,6 +76,96 @@ pub fn bench_once<F: FnOnce()>(name: &str, f: F) -> Measurement {
     m
 }
 
+static ALLOC_COUNT: AtomicU64 = AtomicU64::new(0);
+
+/// Allocation-counting wrapper around the system allocator — the
+/// repo's allocations proxy for hot-path regressions. Install it in a
+/// bench binary:
+///
+/// ```ignore
+/// #[global_allocator]
+/// static ALLOC: helix::util::bench::CountingAlloc = CountingAlloc;
+/// ```
+///
+/// then diff [`alloc_count`] around the region of interest.
+pub struct CountingAlloc;
+
+// SAFETY: pure pass-through to `System`; the counter has no effect on
+// allocation behavior.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout,
+                      new_size: usize) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+/// Heap allocations since process start (0 unless [`CountingAlloc`] is
+/// installed as the global allocator).
+pub fn alloc_count() -> u64 {
+    ALLOC_COUNT.load(Ordering::Relaxed)
+}
+
+/// Accumulates [`Measurement`]s and scalar metrics, then serializes to
+/// `BENCH_<name>.json` with the crate's own mini-JSON writer.
+pub struct JsonReport {
+    name: String,
+    benches: BTreeMap<String, Json>,
+    metrics: BTreeMap<String, Json>,
+}
+
+impl JsonReport {
+    pub fn new(name: &str) -> JsonReport {
+        JsonReport { name: name.to_string(),
+                     benches: BTreeMap::new(),
+                     metrics: BTreeMap::new() }
+    }
+
+    /// Record a measurement as {median_s, min_s, mean_s, samples}.
+    pub fn add(&mut self, m: &Measurement) {
+        let mut o = BTreeMap::new();
+        o.insert("median_s".to_string(), Json::Num(m.median()));
+        o.insert("min_s".to_string(), Json::Num(m.min()));
+        o.insert("mean_s".to_string(), Json::Num(m.mean()));
+        o.insert("samples".to_string(), Json::Num(m.samples.len() as f64));
+        self.benches.insert(m.name.clone(), Json::Obj(o));
+    }
+
+    /// Record a free-form scalar metric (tokens/s, per-phase ns, ...).
+    pub fn metric(&mut self, key: &str, value: f64) {
+        self.metrics.insert(key.to_string(), Json::Num(value));
+    }
+
+    /// Record a free-form string annotation (status, machine, ...).
+    pub fn note(&mut self, key: &str, value: &str) {
+        self.metrics.insert(key.to_string(), Json::Str(value.to_string()));
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("name".to_string(), Json::Str(self.name.clone()));
+        o.insert("benches".to_string(), Json::Obj(self.benches.clone()));
+        o.insert("metrics".to_string(), Json::Obj(self.metrics.clone()));
+        Json::Obj(o)
+    }
+
+    /// Write `BENCH_<name>.json` under `dir`; returns the path.
+    pub fn write(&self, dir: &Path) -> Result<PathBuf> {
+        let path = dir.join(format!("BENCH_{}.json", self.name));
+        std::fs::write(&path, format!("{}\n", self.to_json()))?;
+        Ok(path)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -76,5 +178,30 @@ mod tests {
         assert_eq!(m.samples.len(), 5);
         assert!(m.min() >= 0.0);
         assert!(m.median() >= m.min());
+    }
+
+    #[test]
+    fn json_report_roundtrip() {
+        let m = Measurement { name: "decode/step".to_string(),
+                              samples: vec![0.25, 0.5, 1.0] };
+        let mut r = JsonReport::new("engine_test");
+        r.add(&m);
+        r.metric("decode/step/tokens_per_s", 8.0);
+        r.note("status", "ok");
+        let dir = std::env::temp_dir().join("helix_bench_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = r.write(&dir).unwrap();
+        assert!(path.ends_with("BENCH_engine_test.json"));
+        let parsed = Json::parse(&std::fs::read_to_string(&path).unwrap())
+            .unwrap();
+        assert_eq!(parsed.get("name").unwrap().as_str().unwrap(),
+                   "engine_test");
+        let b = parsed.get("benches").unwrap().get("decode/step").unwrap();
+        assert_eq!(b.get("median_s").unwrap().as_f64().unwrap(), 0.5);
+        assert_eq!(b.get("samples").unwrap().as_usize().unwrap(), 3);
+        let ms = parsed.get("metrics").unwrap();
+        assert_eq!(ms.get("decode/step/tokens_per_s").unwrap()
+                   .as_f64().unwrap(), 8.0);
+        assert_eq!(ms.get("status").unwrap().as_str().unwrap(), "ok");
     }
 }

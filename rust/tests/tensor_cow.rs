@@ -1,0 +1,151 @@
+//! Copy-on-write + zero-copy view semantics of `HostTensor`.
+//!
+//! The zero-copy refactor must be invisible to numerics: mutating a
+//! cloned/shared tensor can never alias its sibling, axis-0 slices are
+//! shared views until written, and the shape-algebra round-trips
+//! (slice/concat/stack) stay bit-exact.
+
+use helix::runtime::HostTensor;
+use helix::util::Rng;
+
+fn randn(rng: &mut Rng, shape: &[usize]) -> HostTensor {
+    let n: usize = shape.iter().product();
+    HostTensor::from_f32((0..n).map(|_| rng.f32_signed()).collect(), shape)
+        .unwrap()
+}
+
+#[test]
+fn clone_shares_storage_then_detaches_on_write() {
+    let a = HostTensor::from_f32(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+    let mut b = a.clone();
+    assert!(a.is_shared() && b.is_shared(), "clone must share storage");
+    b.f32s_mut().unwrap()[3] = 99.0;
+    assert_eq!(a.f32s().unwrap(), &[1.0, 2.0, 3.0, 4.0]);
+    assert_eq!(b.f32s().unwrap(), &[1.0, 2.0, 3.0, 99.0]);
+    assert!(!a.is_shared() && !b.is_shared(),
+            "write must leave both sides private");
+}
+
+#[test]
+fn broadcast_fanout_never_aliases() {
+    // The coordinator's broadcast pattern: one tensor, N rank clones,
+    // each mutated independently.
+    let x = HostTensor::from_f32(vec![0.5; 64], &[4, 16]).unwrap();
+    let mut clones: Vec<HostTensor> = (0..8).map(|_| x.clone()).collect();
+    for (i, c) in clones.iter_mut().enumerate() {
+        c.scale(i as f32).unwrap();
+    }
+    assert_eq!(x.f32s().unwrap()[0], 0.5, "source must survive fan-out");
+    for (i, c) in clones.iter().enumerate() {
+        assert_eq!(c.f32s().unwrap()[0], 0.5 * i as f32);
+    }
+}
+
+#[test]
+fn axis0_slice_is_shared_view_with_correct_contents() {
+    let mut rng = Rng::new(7);
+    let t = randn(&mut rng, &[4, 3, 2]);
+    let s = t.slice_axis(0, 1, 2).unwrap();
+    assert!(t.is_shared() && s.is_shared(), "axis-0 slice must be a view");
+    assert_eq!(s.shape, vec![2, 3, 2]);
+    assert_eq!(s.f32s().unwrap(), &t.f32s().unwrap()[6..18]);
+}
+
+#[test]
+fn view_write_does_not_touch_parent_and_vice_versa() {
+    let t = HostTensor::from_f32((0..12).map(|i| i as f32).collect(),
+                                 &[4, 3]).unwrap();
+    let mut view = t.slice_axis(0, 2, 1).unwrap();
+    view.f32s_mut().unwrap()[0] = -1.0;
+    assert_eq!(t.f32s().unwrap()[6], 6.0, "parent aliased by view write");
+    assert_eq!(view.f32s().unwrap(), &[-1.0, 7.0, 8.0]);
+
+    let mut t2 = HostTensor::from_f32((0..12).map(|i| i as f32).collect(),
+                                      &[4, 3]).unwrap();
+    let view2 = t2.slice_axis(0, 1, 1).unwrap();
+    t2.f32s_mut().unwrap()[4] = 42.0;
+    assert_eq!(view2.f32s().unwrap(), &[3.0, 4.0, 5.0],
+               "view aliased by parent write");
+}
+
+#[test]
+fn add_assign_with_self_clone_is_exact() {
+    let mut a = HostTensor::from_f32(vec![1.0, -2.5, 3.0], &[3]).unwrap();
+    let b = a.clone();
+    a.add_assign(&b).unwrap();
+    assert_eq!(a.f32s().unwrap(), &[2.0, -5.0, 6.0]);
+    assert_eq!(b.f32s().unwrap(), &[1.0, -2.5, 3.0]);
+}
+
+#[test]
+fn slice_concat_roundtrip_every_axis() {
+    let mut rng = Rng::new(11);
+    let t = randn(&mut rng, &[3, 4, 5]);
+    for axis in 0..3 {
+        let dim = t.shape[axis];
+        let cut = dim / 2;
+        let a = t.slice_axis(axis, 0, cut).unwrap();
+        let b = t.slice_axis(axis, cut, dim - cut).unwrap();
+        let back = HostTensor::concat(&[&a, &b], axis).unwrap();
+        assert_eq!(back, t, "round-trip broke on axis {axis}");
+        assert_eq!(back.max_abs_diff(&t).unwrap(), 0.0);
+    }
+}
+
+#[test]
+fn stack_then_slice_recovers_parts() {
+    let mut rng = Rng::new(13);
+    let parts: Vec<HostTensor> =
+        (0..4).map(|_| randn(&mut rng, &[2, 3])).collect();
+    let refs: Vec<&HostTensor> = parts.iter().collect();
+    let stacked = HostTensor::stack(&refs).unwrap();
+    for (i, p) in parts.iter().enumerate() {
+        let back = stacked.slice_axis(0, i, 1).unwrap()
+            .reshape(&[2, 3]).unwrap();
+        assert_eq!(&back, p);
+    }
+}
+
+#[test]
+fn stack_views_matches_slice_then_stack() {
+    let mut rng = Rng::new(17);
+    let parts: Vec<HostTensor> =
+        (0..2).map(|_| randn(&mut rng, &[4, 6, 8])).collect();
+    for (start, len) in [(0, 3), (2, 4), (5, 1)] {
+        let a = parts[0].slice_axis(1, start, len).unwrap();
+        let b = parts[1].slice_axis(1, start, len).unwrap();
+        let want = HostTensor::stack(&[&a, &b]).unwrap();
+        let got = HostTensor::stack_views(&[
+            parts[0].slice_axis_view(1, start, len).unwrap(),
+            parts[1].slice_axis_view(1, start, len).unwrap(),
+        ]).unwrap();
+        assert_eq!(got, want);
+    }
+}
+
+#[test]
+fn reshape_of_view_stays_exact() {
+    let t = HostTensor::from_f32((0..12).map(|i| i as f32).collect(),
+                                 &[4, 3]).unwrap();
+    let r = t.slice_axis(0, 1, 2).unwrap().reshape(&[3, 2]).unwrap();
+    assert_eq!(r.shape, vec![3, 2]);
+    assert_eq!(r.f32s().unwrap(), &[3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+}
+
+#[test]
+fn i32_clone_and_write_do_not_alias() {
+    let a = HostTensor::from_i32(vec![1, 2, 3, 4], &[4]).unwrap();
+    let mut b = a.clone();
+    b.i32s_mut().unwrap()[0] = -9;
+    assert_eq!(a.i32s().unwrap(), &[1, 2, 3, 4]);
+    assert_eq!(b.i32s().unwrap(), &[-9, 2, 3, 4]);
+}
+
+#[test]
+fn equality_sees_through_views() {
+    let t = HostTensor::from_f32((0..6).map(|i| i as f32).collect(),
+                                 &[2, 3]).unwrap();
+    let view = t.slice_axis(0, 1, 1).unwrap();
+    let owned = HostTensor::from_f32(vec![3.0, 4.0, 5.0], &[1, 3]).unwrap();
+    assert_eq!(view, owned, "view equality must compare logical contents");
+}

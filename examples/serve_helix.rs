@@ -55,6 +55,8 @@ fn main() -> Result<()> {
         prompt_len: (4, 10),
         gen_len: (12, 24),
         seed: 7,
+        arrival_rate: args.opt_f64("arrival-rate", 0.0)?,
+        burst: args.opt_usize("burst", 1)?,
     };
 
     // The same 4-rank pool under different sharding regimes, plus the

@@ -148,6 +148,36 @@ impl HelixCluster {
             txs.push(tx);
         }
 
+        // Probe the pool: a rank that failed init (no PJRT backend, bad
+        // artifacts) has already queued an Err payload and/or closed its
+        // command channel. Surface that as a constructor error — callers
+        // (and the test suite's skip logic) rely on `new` failing fast
+        // rather than the first decode step panicking.
+        for tx in &txs {
+            if tx.send(Cmd::ResetRow { row: 0 }).is_err() {
+                // The rank died during init; its parting Err (sent
+                // before it closed the command channel) explains why.
+                let mut reason = "command channel closed".to_string();
+                while let Ok(resp) = rx.try_recv() {
+                    if let Payload::Err(e) = resp.payload {
+                        reason = e;
+                        break;
+                    }
+                }
+                bail!("rank pool failed to initialise: {reason}");
+            }
+        }
+        for _ in 0..n {
+            match rx.recv() {
+                Ok(resp) => {
+                    if let Payload::Err(e) = resp.payload {
+                        bail!("rank {} failed to initialise: {e}", resp.rank);
+                    }
+                }
+                Err(_) => bail!("rank pool hung up during init"),
+            }
+        }
+
         let verify = if cc.verify {
             let rt = Runtime::new(manifest.clone())?;
             let shape = [cfg.batch, cfg.kv_heads, cfg.seq_cap, cfg.head_size];
@@ -256,13 +286,33 @@ impl HelixCluster {
         self.active[row] = false;
     }
 
-    /// Remaining KV capacity (logical tokens) for slot `row`,
-    /// conservatively accounting for round-robin imbalance (the
+    /// Number of batch slots holding live requests.
+    pub fn active_count(&self) -> usize {
+        self.active.iter().filter(|&&a| a).count()
+    }
+
+    /// Logical KV tokens currently held by live slots (lens of inactive
+    /// slots are stale until the slot is reopened).
+    pub fn live_kv_tokens(&self) -> usize {
+        self.lens
+            .iter()
+            .zip(&self.active)
+            .filter(|(_, &a)| a)
+            .map(|(&l, _)| l)
+            .sum()
+    }
+
+    /// Per-slot KV token capacity net of round-robin skew headroom (the
     /// most-loaded KVP shard leads by at most one kv_block).
-    pub fn slot_capacity_left(&self, row: usize) -> usize {
-        let per_shard = self.cfg.seq_cap / self.layout.kvp;
-        let worst = self.lens[row] / self.layout.kvp + self.cfg.kv_block;
-        per_shard.saturating_sub(worst) * self.layout.kvp
+    pub fn slot_kv_tokens(&self) -> usize {
+        self.cfg.seq_cap
+            .saturating_sub(self.cfg.kv_block * self.layout.kvp)
+    }
+
+    /// Aggregate KV-token budget: what the KVP shards can hold across
+    /// every batch slot (the serve layer's admission ceiling).
+    pub fn kv_budget_tokens(&self) -> usize {
+        self.cfg.batch * self.slot_kv_tokens()
     }
 
     /// One decode step over all active slots. `tokens[b]` is the input
@@ -349,7 +399,10 @@ impl HelixCluster {
         self.collect(n)?;
 
         // --- local flash-decode + All-to-All + combine ------------------
-        let o_slices = if self.hopb && lo.kvp > 1 && b > 1 {
+        // HOP-B chunk count follows the LIVE batch, not the compiled
+        // width: pipelining over idle slots would add dead compute and
+        // dead All-to-All chunks for rows nobody is decoding.
+        let o_slices = if self.hopb && lo.kvp > 1 && self.active_count() > 1 {
             self.attention_hopb(layer, metrics)?
         } else {
             self.attention_lockstep(layer, metrics)?
@@ -488,6 +541,10 @@ impl HelixCluster {
     /// HOP-B attention (Fig 3 bottom): request i's All-to-All overlaps
     /// request i+1's flash-decode. The coordinator sleeps the emulated
     /// link delay *after* dispatching the next row's compute.
+    ///
+    /// The pipeline runs over the *live* rows only (continuous batching
+    /// leaves holes in the compiled batch); idle slots contribute a zero
+    /// slice at reassembly and cost neither compute nor All-to-All.
     fn attention_hopb(&mut self, layer: usize, metrics: &mut StepMetrics)
                       -> Result<Vec<HostTensor>> {
         let lo = self.layout;
@@ -497,17 +554,22 @@ impl HelixCluster {
         let qhl = self.cfg.q_heads / lo.tpa;
         let row_bytes = qhl * hsz * 4 * (lo.kvp - 1) / lo.kvp;
 
+        // The chunk sequence: occupied slots, in slot order. Callers
+        // guarantee at least two (otherwise lockstep is cheaper).
+        let live: Vec<usize> = (0..b).filter(|&i| self.active[i]).collect();
+
         // row -> per-rank partials / combined slices
         let mut partials: Vec<Vec<Option<(HostTensor, HostTensor)>>> =
             vec![vec![None; n]; b];
         let mut combined: Vec<Vec<Option<HostTensor>>> = vec![vec![None; n]; b];
         let mut attn_seen = vec![0usize; b];
-        let mut comb_seen = vec![0usize; b];
+        let mut comb_seen = 0usize;
 
         for r in 0..n {
-            self.send(r, Cmd::AttnRow { layer, row: 0 })?;
+            self.send(r, Cmd::AttnRow { layer, row: live[0] })?;
         }
-        for row in 0..b {
+        for li in 0..live.len() {
+            let row = live[li];
             // Wait for this row's partials (absorbing combine replies).
             while attn_seen[row] < n {
                 let resp = self.rx.recv().context("rank pool hung up")?;
@@ -518,16 +580,16 @@ impl HelixCluster {
                     }
                     Payload::Combined { o_slice, row: Some(rr) } => {
                         combined[rr][resp.rank] = Some(o_slice);
-                        comb_seen[rr] += 1;
+                        comb_seen += 1;
                     }
                     Payload::Err(e) => bail!("rank {}: {e}", resp.rank),
                     p => bail!("unexpected {}", p.name()),
                 }
             }
-            // Kick off the next row's compute before communicating.
-            if row + 1 < b {
+            // Kick off the next live row's compute before communicating.
+            if li + 1 < live.len() {
                 for r in 0..n {
-                    self.send(r, Cmd::AttnRow { layer, row: row + 1 })?;
+                    self.send(r, Cmd::AttnRow { layer, row: live[li + 1] })?;
                 }
             }
             // Emulated All-to-All for this row, overlapped with the
@@ -535,35 +597,37 @@ impl HelixCluster {
             let t = Instant::now();
             self.emulate_a2a(row_bytes);
             metrics.comm += t.elapsed();
-            let rows: Vec<(HostTensor, HostTensor)> = partials[row]
+            let row_parts: Vec<(HostTensor, HostTensor)> = partials[row]
                 .iter_mut()
                 .map(|p| p.take().expect("row partials incomplete"))
                 .collect();
-            let stacks = self.a2a_stacks(&rows, qs)?;
+            let stacks = self.a2a_stacks(&row_parts, qs)?;
             for (r, (o_parts, lse_parts)) in stacks.into_iter().enumerate() {
                 self.send(r, Cmd::Combine { o_parts, lse_parts,
                                             row: Some(row) })?;
             }
         }
         // Drain outstanding combines.
-        while comb_seen.iter().sum::<usize>() < b * n {
+        while comb_seen < live.len() * n {
             let resp = self.rx.recv().context("rank pool hung up")?;
             match resp.payload {
                 Payload::Combined { o_slice, row: Some(rr) } => {
                     combined[rr][resp.rank] = Some(o_slice);
-                    comb_seen[rr] += 1;
+                    comb_seen += 1;
                 }
                 Payload::Err(e) => bail!("rank {}: {e}", resp.rank),
                 p => bail!("unexpected {}", p.name()),
             }
         }
         // Reassemble per-rank [B, qs*hsz] slices from the row pieces
-        // (moves, not clones — each piece is consumed exactly once).
+        // (moves, not clones — each piece is consumed exactly once);
+        // idle rows get zeros, which downstream masking never reads.
+        let zero_row = HostTensor::zeros(&[1, qs * hsz]);
         let mut out = Vec::with_capacity(n);
         for r in 0..n {
             let rows: Vec<HostTensor> = (0..b)
                 .map(|row| combined[row][r].take()
-                    .expect("combined slice missing"))
+                    .unwrap_or_else(|| zero_row.clone()))
                 .collect();
             let refs: Vec<&HostTensor> = rows.iter().collect();
             out.push(HostTensor::concat(&refs, 0)?);

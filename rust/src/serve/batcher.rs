@@ -1,4 +1,10 @@
 //! Dynamic batcher: turns router slot state into per-step engine inputs.
+//!
+//! [`StepBatch`] is a snapshot: its `active` mask records exactly which
+//! slots participated in the step it was built for, and
+//! [`apply_step`] only credits those slots. A request admitted between
+//! `build_step` and `apply_step` (continuous batching admits at any
+//! boundary) must never be credited a token it did not compute.
 
 use super::router::Router;
 
@@ -24,10 +30,16 @@ pub fn build_step(router: &Router, batch: usize) -> StepBatch {
     StepBatch { tokens, active }
 }
 
-/// Feed one step's engine outputs back into request state.
-/// `wall` is the step wall-clock time in seconds.
-pub fn apply_step(router: &mut Router, next: &[i32], wall: f64) {
+/// Feed one step's engine outputs back into request state. Only slots
+/// that were active in `batch` — the mask the engine actually ran with —
+/// advance; slots filled after the batch was built are left untouched.
+/// `wall` is the serving clock (seconds since serve start) at step end.
+pub fn apply_step(router: &mut Router, batch: &StepBatch, next: &[i32],
+                  wall: f64) {
     for st in router.slots.iter_mut().flatten() {
+        if !batch.active.get(st.slot).copied().unwrap_or(false) {
+            continue;
+        }
         if st.in_prefill() {
             st.prompt_pos += 1;
             // The token generated after the final prompt token is the
@@ -46,15 +58,16 @@ pub fn apply_step(router: &mut Router, next: &[i32], wall: f64) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::serve::router::Request;
+    use crate::serve::router::{KvBudget, Request};
 
     fn router_with(prompts: &[usize]) -> Router {
-        let mut r = Router::new(prompts.len() + 1, 100);
+        let mut r = Router::new(prompts.len() + 1, KvBudget::uniform(100));
         for (i, &p) in prompts.iter().enumerate() {
-            r.submit(Request { id: i as u64, prompt: (0..p as i32).collect(),
-                               max_new_tokens: 2, arrival: 0.0 });
+            r.submit(Request { id: i as u64,
+                               prompt: (0..p as i32).collect(),
+                               max_new_tokens: 2, arrival: 0.0 }, 0.0);
         }
-        r.admit(0);
+        r.admit(0, 0.0);
         r
     }
 
@@ -71,16 +84,44 @@ mod tests {
     fn prefill_advances_then_decodes() {
         let mut r = router_with(&[2]);
         // Step 1: feeds prompt[0].
-        apply_step(&mut r, &[9, 0], 0.01);
+        let sb = build_step(&r, 2);
+        apply_step(&mut r, &sb, &[9, 0], 0.01);
         assert_eq!(r.slots[0].as_ref().unwrap().prompt_pos, 1);
         assert!(r.slots[0].as_ref().unwrap().generated.is_empty());
         // Step 2: feeds prompt[1]; its output is the first generation.
-        apply_step(&mut r, &[7, 0], 0.01);
+        let sb = build_step(&r, 2);
+        apply_step(&mut r, &sb, &[7, 0], 0.02);
         let st = r.slots[0].as_ref().unwrap();
         assert_eq!(st.generated, vec![7]);
         // Step 3: decode.
-        apply_step(&mut r, &[8, 0], 0.01);
+        let sb = build_step(&r, 2);
+        apply_step(&mut r, &sb, &[8, 0], 0.03);
         assert_eq!(r.slots[0].as_ref().unwrap().generated, vec![7, 8]);
+        assert_eq!(r.slots[0].as_ref().unwrap().token_times,
+                   vec![0.02, 0.03]);
         assert!(r.slots[0].as_ref().unwrap().done());
+    }
+
+    /// Regression for the mid-step admission race: a slot filled after
+    /// the batch was built must not be credited that step's output.
+    #[test]
+    fn mid_step_admission_is_not_credited() {
+        let mut r = router_with(&[2]);
+        let sb = build_step(&r, 2); // only slot 0 is active
+        // A request lands in slot 1 *after* the batch snapshot.
+        r.submit(Request { id: 9, prompt: vec![5, 6],
+                           max_new_tokens: 2, arrival: 0.0 }, 0.0);
+        r.admit(1, 0.0);
+        assert!(r.slots[1].is_some());
+
+        apply_step(&mut r, &sb, &[7, 8], 0.01);
+        // Slot 0 (in the batch) advanced ...
+        assert_eq!(r.slots[0].as_ref().unwrap().prompt_pos, 1);
+        // ... slot 1 (admitted mid-step) did not: no prompt consumed,
+        // no token credited.
+        let late = r.slots[1].as_ref().unwrap();
+        assert_eq!(late.prompt_pos, 0);
+        assert!(late.generated.is_empty());
+        assert!(late.token_times.is_empty());
     }
 }

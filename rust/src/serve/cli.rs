@@ -76,6 +76,11 @@ fn cmd_verify(args: &Args) -> Result<()> {
 }
 
 /// `helix serve`: end-to-end batched serving on synthetic requests.
+///
+/// Continuous-batching knobs: `--arrival-rate R` (requests per engine
+/// step; 0 queues everything up front), `--burst K` (arrivals land K at
+/// a time), `--kv-budget T` (aggregate KV-token admission budget; 0 uses
+/// the cluster's full physical pool).
 fn cmd_serve(args: &Args) -> Result<()> {
     let cluster = cluster_from(args, args.flag("verify"))?;
     let gpus = cluster.n();
@@ -88,12 +93,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
         gen_len: (args.opt_usize("gen-min", 16)?,
                   args.opt_usize("gen-max", 32)?),
         seed: args.opt_usize("seed", 42)? as u64,
+        arrival_rate: args.opt_f64("arrival-rate", 0.0)?,
+        burst: args.opt_usize("burst", 1)?,
     };
-    let mut server = Server::new(cluster);
+    let kv_budget = args.opt_usize("kv-budget", 0)?;
+    let mut server = if kv_budget > 0 {
+        Server::with_kv_budget(cluster, kv_budget)
+    } else {
+        Server::new(cluster)
+    };
     println!("serving {} requests on {model} [{layout}] over {gpus} ranks \
-              (hopb={}, comm-scale={})",
+              (hopb={}, comm-scale={}, arrival-rate={}, burst={}, \
+              kv-budget={})",
              workload.num_requests, args.flag("hopb"),
-             args.opt_or("comm-scale", "0"));
+             args.opt_or("comm-scale", "0"), workload.arrival_rate,
+             workload.burst, server.router.budget().budget_tokens);
     let report = server.run(&workload, args.opt_usize("max-steps", 100_000)?
                             as u64)?;
     println!("{}", report.render());

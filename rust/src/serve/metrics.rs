@@ -1,12 +1,41 @@
-//! Serving metrics: TTL distribution + throughput accounting.
+//! Serving metrics: per-request latency distributions + throughput and
+//! KV-occupancy accounting.
+//!
+//! Clock semantics: every sample is in seconds on the serving clock
+//! (cumulative engine time since serve start). Per-request samples are
+//! recorded at retirement from the request's `token_times` trail:
+//!
+//! * **TTL** (token-to-token latency, the paper's interactivity metric):
+//!   every gap between a request's consecutive generated tokens, pooled
+//!   across requests.
+//! * **TTFT** (time to first token): submission → first generated token;
+//!   includes queueing and prefill.
+//! * **TPOT** (time per output token): a request's mean inter-token gap.
+//! * **queue delay**: submission → slot admission.
 
+use crate::serve::router::RequestState;
 use crate::util::stats;
+
+fn pct(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    stats::percentile(xs, p)
+}
 
 /// Accumulated serving statistics.
 #[derive(Debug, Default, Clone)]
 pub struct ServeMetrics {
-    /// Wall time of each engine step (the observable TTL), seconds.
+    /// Wall time of each engine step, seconds.
     pub step_times: Vec<f64>,
+    /// Pooled per-request inter-token gaps (token-to-token latency).
+    pub ttl: Vec<f64>,
+    /// Per-request time to first token (submission → first output).
+    pub ttft: Vec<f64>,
+    /// Per-request mean time per output token.
+    pub tpot: Vec<f64>,
+    /// Per-request queueing delay (submission → admission).
+    pub queue_delay: Vec<f64>,
     /// Total generated (non-prefill) tokens.
     pub generated_tokens: usize,
     /// Total engine steps.
@@ -15,25 +44,97 @@ pub struct ServeMetrics {
     pub wall: f64,
     /// Emulated communication time, seconds.
     pub comm: f64,
+    /// Peak live KV tokens across steps (sum of slot lens).
+    pub peak_kv_tokens: usize,
+    /// Peak aggregate KV commitment across steps (router accounting).
+    pub peak_committed_tokens: usize,
+    /// Peak concurrently active slots.
+    pub peak_active: usize,
 }
 
 impl ServeMetrics {
+    /// Fold one retired request's timeline into the distributions.
+    pub fn record_request(&mut self, st: &RequestState) {
+        // Zero-generation fast-path requests (slot == usize::MAX) never
+        // queued for a slot; a 0.0 sample would dilute the queue-delay
+        // distribution of requests that actually waited.
+        if st.slot != usize::MAX {
+            self.queue_delay
+                .push((st.admitted_wall - st.submitted_wall).max(0.0));
+        }
+        if let Some(&first) = st.token_times.first() {
+            self.ttft.push((first - st.submitted_wall).max(0.0));
+        }
+        if st.token_times.len() >= 2 {
+            for w in st.token_times.windows(2) {
+                self.ttl.push((w[1] - w[0]).max(0.0));
+            }
+            let span = st.token_times.last().unwrap()
+                - st.token_times.first().unwrap();
+            self.tpot.push(span / (st.token_times.len() - 1) as f64);
+        }
+    }
+
+    /// TTL sample set; falls back to raw step times when no request
+    /// produced two tokens (every decode step is then one TTL sample).
+    fn ttl_samples(&self) -> &[f64] {
+        if self.ttl.is_empty() {
+            &self.step_times
+        } else {
+            &self.ttl
+        }
+    }
+
     pub fn ttl_mean(&self) -> f64 {
-        stats::mean(&self.step_times)
+        stats::mean(self.ttl_samples())
     }
 
     pub fn ttl_p50(&self) -> f64 {
-        if self.step_times.is_empty() {
-            return 0.0;
-        }
-        stats::percentile(&self.step_times, 50.0)
+        pct(self.ttl_samples(), 50.0)
+    }
+
+    pub fn ttl_p95(&self) -> f64 {
+        pct(self.ttl_samples(), 95.0)
     }
 
     pub fn ttl_p99(&self) -> f64 {
-        if self.step_times.is_empty() {
-            return 0.0;
-        }
-        stats::percentile(&self.step_times, 99.0)
+        pct(self.ttl_samples(), 99.0)
+    }
+
+    pub fn ttft_mean(&self) -> f64 {
+        stats::mean(&self.ttft)
+    }
+
+    pub fn ttft_p99(&self) -> f64 {
+        pct(&self.ttft, 99.0)
+    }
+
+    pub fn tpot_mean(&self) -> f64 {
+        stats::mean(&self.tpot)
+    }
+
+    pub fn tpot_p50(&self) -> f64 {
+        pct(&self.tpot, 50.0)
+    }
+
+    pub fn tpot_p95(&self) -> f64 {
+        pct(&self.tpot, 95.0)
+    }
+
+    pub fn tpot_p99(&self) -> f64 {
+        pct(&self.tpot, 99.0)
+    }
+
+    pub fn queue_delay_mean(&self) -> f64 {
+        stats::mean(&self.queue_delay)
+    }
+
+    pub fn step_p50(&self) -> f64 {
+        pct(&self.step_times, 50.0)
+    }
+
+    pub fn step_p99(&self) -> f64 {
+        pct(&self.step_times, 99.0)
     }
 
     /// System throughput: generated tokens per second of wall time.
@@ -58,17 +159,19 @@ impl ServeMetrics {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::serve::router::Request;
 
     #[test]
     fn throughput_math() {
         let m = ServeMetrics {
             step_times: vec![0.01, 0.02, 0.03],
             generated_tokens: 30,
-            steps: 3,
             wall: 0.06,
-            comm: 0.0,
+            steps: 3,
+            ..Default::default()
         };
         assert!((m.tokens_per_sec() - 500.0).abs() < 1e-9);
+        // No per-request TTL samples: falls back to step times.
         assert!((m.ttl_mean() - 0.02).abs() < 1e-12);
         assert!((m.tokens_per_sec_per_user() - 50.0).abs() < 1e-9);
     }
@@ -78,5 +181,55 @@ mod tests {
         let m = ServeMetrics::default();
         assert_eq!(m.tokens_per_sec(), 0.0);
         assert_eq!(m.ttl_p99(), 0.0);
+        assert_eq!(m.ttft_p99(), 0.0);
+        assert_eq!(m.tpot_p95(), 0.0);
+    }
+
+    #[test]
+    fn per_request_distributions() {
+        let st = RequestState {
+            req: Request { id: 0, prompt: vec![1, 2],
+                           max_new_tokens: 3, arrival: 0.0 },
+            slot: 0,
+            prompt_pos: 2,
+            generated: vec![5, 6, 7],
+            admitted_step: 1,
+            // Submitted at 1.0, admitted at 1.5, tokens at 2.0/2.2/2.6.
+            token_times: vec![2.0, 2.2, 2.6],
+            submitted_wall: 1.0,
+            admitted_wall: 1.5,
+        };
+        let mut m = ServeMetrics::default();
+        m.record_request(&st);
+        assert_eq!(m.ttft.len(), 1);
+        assert!((m.ttft[0] - 1.0).abs() < 1e-12);
+        assert!((m.queue_delay[0] - 0.5).abs() < 1e-12);
+        // Two inter-token gaps: 0.2 and 0.4.
+        assert_eq!(m.ttl.len(), 2);
+        assert!((m.ttl[0] - 0.2).abs() < 1e-12);
+        assert!((m.ttl[1] - 0.4).abs() < 1e-12);
+        // TPOT = (2.6 - 2.0) / 2 = 0.3.
+        assert!((m.tpot[0] - 0.3).abs() < 1e-12);
+        assert!((m.ttl_p99() - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_token_requests_skip_ttl_and_tpot() {
+        let st = RequestState {
+            req: Request { id: 0, prompt: vec![1],
+                           max_new_tokens: 1, arrival: 0.0 },
+            slot: 0,
+            prompt_pos: 1,
+            generated: vec![3],
+            admitted_step: 0,
+            token_times: vec![0.4],
+            submitted_wall: 0.1,
+            admitted_wall: 0.1,
+        };
+        let mut m = ServeMetrics::default();
+        m.record_request(&st);
+        assert!(m.ttl.is_empty());
+        assert!(m.tpot.is_empty());
+        assert_eq!(m.ttft.len(), 1);
     }
 }

@@ -1,9 +1,17 @@
 //! Serving layer: request router, dynamic batcher, decode server.
 //!
-//! Continuous batching over the engine's fixed batch slots: requests are
-//! admitted into free slots at step boundaries, prefill runs token by
-//! token through the same decode path (the paper is decode-phase only),
-//! and every slot advances one token per engine step.
+//! Continuous batching over the engine's fixed batch slots: requests
+//! arrive on a step clock, are admitted into free slots at step
+//! boundaries *only while the aggregate KV-token budget holds* (a
+//! reserve watermark absorbs in-flight round-robin skew), prefill runs
+//! token by token through the same decode path (the paper is
+//! decode-phase only), and every admitted slot advances one token per
+//! engine step under the step's own active mask — a slot admitted
+//! mid-step is never credited a token it did not compute. Retirement
+//! closes the engine slot and releases the KV commitment, and the
+//! metrics layer reports per-request TTL/TTFT/TPOT percentiles.
+//!
+//! See docs/SERVING.md for the full request lifecycle and budget math.
 
 pub mod batcher;
 pub mod cli;
@@ -11,5 +19,6 @@ pub mod metrics;
 pub mod router;
 pub mod server;
 
-pub use router::{Request, RequestState, Router};
+pub use metrics::ServeMetrics;
+pub use router::{KvBudget, Request, RequestState, Router};
 pub use server::{ServeReport, Server, Workload};

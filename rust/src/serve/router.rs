@@ -1,4 +1,13 @@
 //! Request router: admission control over the engine's batch slots.
+//!
+//! Admission is *KV-budget correct*: beyond the classic "one free slot
+//! per request" constraint, the router tracks the aggregate KV-token
+//! commitment of every in-flight request and refuses to admit past the
+//! shard budget (minus a reserve watermark held back for in-flight
+//! round-robin skew). Without this, B near-capacity requests would each
+//! pass a per-request check and jointly oversubscribe the KVP shards —
+//! the exact failure mode the paper's fixed-HBM batch-scaling claim
+//! rules out. See docs/SERVING.md.
 
 use std::collections::VecDeque;
 
@@ -8,14 +17,55 @@ pub struct Request {
     pub id: u64,
     pub prompt: Vec<i32>,
     pub max_new_tokens: usize,
-    /// Arrival time, seconds since server start (workload clock).
+    /// Arrival time in engine-step units (workload clock). Requests are
+    /// only visible to the router once the serve loop reaches this step.
     pub arrival: f64,
+}
+
+impl Request {
+    /// Worst-case KV footprint: every prompt token plus every generated
+    /// token occupies one logical KV entry by completion.
+    pub fn kv_tokens(&self) -> usize {
+        self.prompt.len() + self.max_new_tokens
+    }
+}
+
+/// KV admission budget (tokens are *logical* KV entries; each is spread
+/// over the KVP shards in `kv_block` round-robin chunks).
+#[derive(Debug, Clone, Copy)]
+pub struct KvBudget {
+    /// Max KV tokens a single request may occupy: the per-slot physical
+    /// cache capacity net of round-robin skew headroom.
+    pub slot_tokens: usize,
+    /// Aggregate KV tokens across every admitted request (the per-shard
+    /// pool, summed over KVP shards).
+    pub budget_tokens: usize,
+    /// Watermark held back from the aggregate at admission so in-flight
+    /// growth (staggered appends mid-block) never lands on a full shard.
+    pub reserve_tokens: usize,
+}
+
+impl KvBudget {
+    /// Uniform budget: per-request and aggregate caps coincide, no
+    /// reserve. Matches the historical single-knob router behaviour and
+    /// keeps unit tests compact.
+    pub fn uniform(tokens: usize) -> KvBudget {
+        KvBudget { slot_tokens: tokens, budget_tokens: tokens,
+                   reserve_tokens: 0 }
+    }
+
+    /// Tokens actually available to admissions.
+    pub fn admissible(&self) -> usize {
+        self.budget_tokens.saturating_sub(self.reserve_tokens)
+    }
 }
 
 /// Lifecycle of an admitted request.
 #[derive(Debug, Clone)]
 pub struct RequestState {
     pub req: Request,
+    /// Batch slot this request occupies (`usize::MAX` for requests that
+    /// completed at submit time without ever touching the engine).
     pub slot: usize,
     /// Prompt tokens already fed.
     pub prompt_pos: usize,
@@ -23,8 +73,13 @@ pub struct RequestState {
     pub generated: Vec<i32>,
     /// Engine step index at admission (for queueing metrics).
     pub admitted_step: u64,
-    /// Wall-clock decode times for this request's generated tokens.
+    /// Serving clock (seconds since serve start) at each generated
+    /// token — cumulative timestamps, not per-step durations.
     pub token_times: Vec<f64>,
+    /// Serving clock at submission (entering the router queue).
+    pub submitted_wall: f64,
+    /// Serving clock at admission (winning a slot).
+    pub admitted_wall: f64,
 }
 
 impl RequestState {
@@ -41,56 +96,110 @@ impl RequestState {
         if self.in_prefill() {
             self.req.prompt[self.prompt_pos]
         } else {
-            *self.generated.last().unwrap_or(
-                self.req.prompt.last().unwrap_or(&0))
+            // Post-prefill, the final prompt step has already produced
+            // the first generated token; the prompt fallback is only a
+            // defensive guard (empty prompts are rejected at submit, so
+            // there is no silent token-0 path any more).
+            *self.generated.last().unwrap_or_else(|| {
+                self.req.prompt.last()
+                    .expect("empty prompts are rejected at submit")
+            })
         }
     }
 
     /// Total KV entries this request will need.
     pub fn total_tokens(&self) -> usize {
-        self.req.prompt.len() + self.req.max_new_tokens
+        self.req.kv_tokens()
     }
 }
 
-/// FIFO admission over a fixed number of slots.
+/// FIFO admission over a fixed number of slots, bounded by a [`KvBudget`].
 #[derive(Debug)]
 pub struct Router {
-    pub queue: VecDeque<Request>,
+    /// Waiting requests with their submission clock.
+    pub queue: VecDeque<(Request, f64)>,
     pub slots: Vec<Option<RequestState>>,
     pub completed: Vec<RequestState>,
-    /// Requests rejected at submit time (would never fit the KV shard).
+    /// Requests rejected at submit time (can never fit the KV budget,
+    /// or are degenerate: empty prompt with tokens to generate).
     pub rejected: Vec<Request>,
-    capacity_tokens: usize,
+    budget: KvBudget,
+    /// Sum of `total_tokens` over currently admitted requests.
+    committed_tokens: usize,
 }
 
 impl Router {
-    pub fn new(num_slots: usize, capacity_tokens: usize) -> Router {
+    pub fn new(num_slots: usize, budget: KvBudget) -> Router {
         Router {
             queue: VecDeque::new(),
             slots: (0..num_slots).map(|_| None).collect(),
             completed: Vec::new(),
             rejected: Vec::new(),
-            capacity_tokens,
+            budget,
+            committed_tokens: 0,
         }
     }
 
-    /// Submit a request; rejects immediately if it can never fit.
-    pub fn submit(&mut self, req: Request) {
-        if req.prompt.len() + req.max_new_tokens > self.capacity_tokens {
+    pub fn budget(&self) -> KvBudget {
+        self.budget
+    }
+
+    /// Aggregate KV tokens committed to admitted requests.
+    pub fn committed_tokens(&self) -> usize {
+        self.committed_tokens
+    }
+
+    /// Submit a request at serving clock `now`.
+    ///
+    /// * `max_new_tokens == 0` completes immediately — it would otherwise
+    ///   occupy a slot for a full engine step only to retire untouched.
+    /// * Empty prompts (with tokens to generate) are rejected — there is
+    ///   no first input token to feed, and the old fallback silently
+    ///   decoded from token 0.
+    /// * Requests that can never fit the per-slot or aggregate KV budget
+    ///   are rejected up front rather than wedging the FIFO head.
+    pub fn submit(&mut self, req: Request, now: f64) {
+        if req.max_new_tokens == 0 {
+            self.completed.push(RequestState {
+                req,
+                slot: usize::MAX,
+                prompt_pos: 0,
+                generated: Vec::new(),
+                admitted_step: 0,
+                token_times: Vec::new(),
+                submitted_wall: now,
+                admitted_wall: now,
+            });
+            return;
+        }
+        let need = req.kv_tokens();
+        if req.prompt.is_empty()
+            || need > self.budget.slot_tokens
+            || need > self.budget.admissible()
+        {
             self.rejected.push(req);
-        } else {
-            self.queue.push_back(req);
+            return;
         }
+        self.queue.push_back((req, now));
     }
 
-    /// Admit queued requests into free slots; returns (slot, id) pairs.
-    pub fn admit(&mut self, step: u64) -> Vec<(usize, u64)> {
+    /// Admit queued requests into free slots while the aggregate KV
+    /// budget holds; returns (slot, id) pairs. Strictly FIFO: admission
+    /// stops at the first request the budget cannot take, so a large
+    /// request at the head is never starved by smaller later arrivals.
+    pub fn admit(&mut self, step: u64, now: f64) -> Vec<(usize, u64)> {
         let mut admitted = Vec::new();
         for slot in 0..self.slots.len() {
             if self.slots[slot].is_some() {
                 continue;
             }
-            let Some(req) = self.queue.pop_front() else { break };
+            let Some((req, _)) = self.queue.front() else { break };
+            let need = req.kv_tokens();
+            if self.committed_tokens + need > self.budget.admissible() {
+                break;
+            }
+            let (req, submitted_wall) = self.queue.pop_front().unwrap();
+            self.committed_tokens += need;
             let id = req.id;
             self.slots[slot] = Some(RequestState {
                 req,
@@ -99,18 +208,24 @@ impl Router {
                 generated: Vec::new(),
                 admitted_step: step,
                 token_times: Vec::new(),
+                submitted_wall,
+                admitted_wall: now,
             });
             admitted.push((slot, id));
         }
         admitted
     }
 
-    /// Retire finished requests; returns freed slots.
+    /// Retire finished requests, releasing their KV commitment; returns
+    /// freed slots.
     pub fn retire(&mut self) -> Vec<usize> {
         let mut freed = Vec::new();
         for slot in 0..self.slots.len() {
             if self.slots[slot].as_ref().map(|s| s.done()).unwrap_or(false) {
                 let st = self.slots[slot].take().unwrap();
+                self.committed_tokens = self
+                    .committed_tokens
+                    .saturating_sub(st.total_tokens());
                 self.completed.push(st);
                 freed.push(slot);
             }
@@ -138,22 +253,109 @@ mod tests {
 
     #[test]
     fn admits_up_to_slot_count() {
-        let mut r = Router::new(2, 100);
+        let mut r = Router::new(2, KvBudget::uniform(100));
         for i in 0..4 {
-            r.submit(req(i, 3, 5));
+            r.submit(req(i, 3, 5), 0.0);
         }
-        let adm = r.admit(0);
+        let adm = r.admit(0, 0.0);
         assert_eq!(adm.len(), 2);
         assert_eq!(r.queue.len(), 2);
         assert_eq!(r.active_count(), 2);
+        assert_eq!(r.committed_tokens(), 16);
     }
 
     #[test]
     fn rejects_oversized() {
-        let mut r = Router::new(2, 10);
-        r.submit(req(0, 8, 5));
+        let mut r = Router::new(2, KvBudget::uniform(10));
+        r.submit(req(0, 8, 5), 0.0);
         assert_eq!(r.rejected.len(), 1);
         assert!(r.queue.is_empty());
+    }
+
+    /// Regression: per-request checks alone let B near-capacity requests
+    /// jointly oversubscribe the shard; the aggregate budget must gate
+    /// admission even when free slots remain.
+    #[test]
+    fn aggregate_budget_gates_admission() {
+        // 4 slots, aggregate budget 20, each request needs 8 tokens:
+        // only two fit concurrently (24 > 20), despite 4 free slots.
+        let budget = KvBudget { slot_tokens: 10, budget_tokens: 20,
+                                reserve_tokens: 0 };
+        let mut r = Router::new(4, budget);
+        for i in 0..4 {
+            r.submit(req(i, 3, 5), 0.0);
+        }
+        let adm = r.admit(0, 0.0);
+        assert_eq!(adm.len(), 2, "budget must stop the third admission");
+        assert_eq!(r.committed_tokens(), 16);
+        assert_eq!(r.queue.len(), 2);
+
+        // Retiring one request frees its commitment and unblocks the
+        // FIFO head.
+        {
+            let st = r.slots[adm[0].0].as_mut().unwrap();
+            st.prompt_pos = 3;
+            st.generated = vec![1, 2, 3, 4, 5];
+        }
+        assert_eq!(r.retire().len(), 1);
+        assert_eq!(r.committed_tokens(), 8);
+        assert_eq!(r.admit(1, 0.0).len(), 1);
+        assert_eq!(r.committed_tokens(), 16);
+    }
+
+    #[test]
+    fn reserve_watermark_shrinks_admissible_budget() {
+        let budget = KvBudget { slot_tokens: 10, budget_tokens: 20,
+                                reserve_tokens: 5 };
+        assert_eq!(budget.admissible(), 15);
+        let mut r = Router::new(4, budget);
+        for i in 0..2 {
+            r.submit(req(i, 3, 5), 0.0); // 8 tokens each
+        }
+        // 8 + 8 = 16 > 15: the reserve holds the second request back.
+        assert_eq!(r.admit(0, 0.0).len(), 1);
+        assert_eq!(r.queue.len(), 1);
+    }
+
+    #[test]
+    fn fifo_head_is_not_starved_by_smaller_requests() {
+        let budget = KvBudget { slot_tokens: 12, budget_tokens: 16,
+                                reserve_tokens: 0 };
+        let mut r = Router::new(4, budget);
+        r.submit(req(0, 5, 5), 0.0); // 10 tokens, admitted
+        r.submit(req(1, 6, 6), 0.0); // 12 tokens, blocked (22 > 16)
+        r.submit(req(2, 1, 1), 0.0); // 2 tokens, would fit — must wait
+        let adm = r.admit(0, 0.0);
+        assert_eq!(adm.len(), 1);
+        assert_eq!(adm[0].1, 0);
+        // Strict FIFO: request 2 is NOT admitted around the blocked head.
+        assert_eq!(r.queue.len(), 2);
+        assert_eq!(r.queue[0].0.id, 1);
+    }
+
+    #[test]
+    fn empty_prompt_is_rejected_not_token0() {
+        let mut r = Router::new(2, KvBudget::uniform(100));
+        r.submit(req(0, 0, 4), 0.0);
+        assert_eq!(r.rejected.len(), 1);
+        assert!(r.queue.is_empty());
+        assert!(r.idle());
+    }
+
+    #[test]
+    fn zero_generation_requests_complete_without_a_slot() {
+        let mut r = Router::new(1, KvBudget::uniform(100));
+        r.submit(req(0, 5, 0), 0.25);
+        assert_eq!(r.completed.len(), 1);
+        assert!(r.queue.is_empty());
+        assert_eq!(r.active_count(), 0);
+        let st = &r.completed[0];
+        assert!(st.generated.is_empty());
+        assert_eq!(st.slot, usize::MAX);
+        assert_eq!(st.submitted_wall, 0.25);
+        // The single slot stays free for real work.
+        r.submit(req(1, 2, 2), 0.5);
+        assert_eq!(r.admit(0, 0.5).len(), 1);
     }
 
     #[test]
@@ -165,6 +367,8 @@ mod tests {
             generated: Vec::new(),
             admitted_step: 0,
             token_times: Vec::new(),
+            submitted_wall: 0.0,
+            admitted_wall: 0.0,
         };
         assert!(st.in_prefill());
         assert_eq!(st.next_input(), 1);
@@ -179,10 +383,10 @@ mod tests {
 
     #[test]
     fn retire_frees_slots_for_queue() {
-        let mut r = Router::new(1, 100);
-        r.submit(req(0, 1, 1));
-        r.submit(req(1, 1, 1));
-        r.admit(0);
+        let mut r = Router::new(1, KvBudget::uniform(100));
+        r.submit(req(0, 1, 1), 0.0);
+        r.submit(req(1, 1, 1), 0.0);
+        r.admit(0, 0.0);
         // Finish request 0.
         {
             let st = r.slots[0].as_mut().unwrap();
@@ -191,7 +395,8 @@ mod tests {
         }
         let freed = r.retire();
         assert_eq!(freed, vec![0]);
-        let adm = r.admit(1);
+        assert_eq!(r.committed_tokens(), 0);
+        let adm = r.admit(1, 0.0);
         assert_eq!(adm, vec![(0, 1)]);
         assert_eq!(r.completed.len(), 1);
     }

@@ -1,6 +1,8 @@
 //! Decode server: drives the engine over a workload with continuous
-//! batching, measuring TTL and throughput.
+//! batching — arrival-driven submission, KV-budget admission, per-step
+//! active masks, retirement — measuring TTL/TTFT/TPOT and throughput.
 
+use std::collections::VecDeque;
 use std::time::Instant;
 
 use anyhow::Result;
@@ -10,32 +12,47 @@ use crate::util::Rng;
 
 use super::batcher;
 use super::metrics::ServeMetrics;
-use super::router::{Request, Router};
+use super::router::{KvBudget, Request, Router};
 
 /// Synthetic workload description (the paper's interactive-agent
-/// scenario: modest prompts, streaming decode).
+/// scenario: modest prompts, streaming decode, bursty arrivals).
 #[derive(Debug, Clone)]
 pub struct Workload {
     pub num_requests: usize,
     pub prompt_len: (usize, usize),   // min..=max
     pub gen_len: (usize, usize),      // min..=max
     pub seed: u64,
+    /// Mean request arrivals per engine step (Poisson process over the
+    /// step clock). `0.0` queues every request before the first step
+    /// (offline serving, the historical behaviour).
+    pub arrival_rate: f64,
+    /// Requests per burst: arrivals land `burst` at a time at the same
+    /// step (models agentic fan-out). `<= 1` means independent arrivals.
+    pub burst: usize,
 }
 
 impl Workload {
     pub fn generate(&self, vocab: usize) -> Vec<Request> {
         let mut rng = Rng::new(self.seed);
+        let burst = self.burst.max(1);
+        let mut clock = 0.0f64;
         (0..self.num_requests)
             .map(|i| {
                 let plen = rng.range(self.prompt_len.0,
                                      self.prompt_len.1 + 1);
                 let glen = rng.range(self.gen_len.0, self.gen_len.1 + 1);
+                let prompt = (0..plen).map(|_| rng.range(1, vocab) as i32)
+                    .collect();
+                if self.arrival_rate > 0.0 && i > 0 && i % burst == 0 {
+                    // Exponential inter-burst gaps; mean burst/rate steps
+                    // per burst keeps the long-run rate at arrival_rate.
+                    clock += rng.exp(self.arrival_rate / burst as f64);
+                }
                 Request {
                     id: i as u64,
-                    prompt: (0..plen).map(|_| rng.range(1, vocab) as i32)
-                        .collect(),
+                    prompt,
                     max_new_tokens: glen,
-                    arrival: 0.0, // all queued at start (offline serving)
+                    arrival: clock,
                 }
             })
             .collect()
@@ -49,6 +66,8 @@ pub struct ServeReport {
     pub completed: usize,
     pub rejected: usize,
     pub gpus: usize,
+    /// Aggregate KV-token budget admission ran under.
+    pub kv_budget: KvBudget,
     /// Max |engine - reference| seen across verified steps (if any).
     pub max_ref_diff: Option<f32>,
 }
@@ -62,14 +81,25 @@ impl ServeReport {
              engine steps       : {}\n\
              generated tokens   : {}\n\
              wall time          : {:.3} s (comm {:.3} s)\n\
+             step p50/p99       : {:.2} / {:.2} ms\n\
              TTL mean/p50/p99   : {:.2} / {:.2} / {:.2} ms\n\
+             TTFT mean/p99      : {:.2} / {:.2} ms\n\
+             TPOT mean/p95      : {:.2} / {:.2} ms\n\
+             queue delay mean   : {:.2} ms\n\
+             peak active slots  : {}\n\
+             peak KV tokens     : {} committed {} (budget {}, reserve {})\n\
              tokens/s (system)  : {:.1}\n\
              tokens/s/user      : {:.1}\n\
              tokens/s/GPU       : {:.1}{}",
             self.completed, self.rejected, m.steps, m.generated_tokens,
-            m.wall, m.comm, m.ttl_mean() * 1e3, m.ttl_p50() * 1e3,
-            m.ttl_p99() * 1e3, m.tokens_per_sec(),
-            m.tokens_per_sec_per_user(),
+            m.wall, m.comm, m.step_p50() * 1e3, m.step_p99() * 1e3,
+            m.ttl_mean() * 1e3, m.ttl_p50() * 1e3, m.ttl_p99() * 1e3,
+            m.ttft_mean() * 1e3, m.ttft_p99() * 1e3,
+            m.tpot_mean() * 1e3, m.tpot_p95() * 1e3,
+            m.queue_delay_mean() * 1e3,
+            m.peak_active, m.peak_kv_tokens, m.peak_committed_tokens,
+            self.kv_budget.budget_tokens, self.kv_budget.reserve_tokens,
+            m.tokens_per_sec(), m.tokens_per_sec_per_user(),
             m.tokens_per_sec() / self.gpus as f64,
             match self.max_ref_diff {
                 Some(d) => format!("\nmax |engine-ref|   : {d:.2e}"),
@@ -86,27 +116,76 @@ pub struct Server {
 }
 
 impl Server {
+    /// Server with the cluster's full physical KV pool as the budget.
     pub fn new(cluster: HelixCluster) -> Server {
-        let slots = cluster.batch();
-        // Leave one kv_block of headroom per shard (round-robin skew).
-        let capacity = cluster.cfg.seq_cap
-            - cluster.cfg.kv_block * cluster.layout.kvp;
-        Server { cluster, router: Router::new(slots, capacity) }
+        let budget = cluster.kv_budget_tokens();
+        Server::with_kv_budget(cluster, budget)
     }
 
-    /// Run the workload to completion (or `max_steps`).
+    /// Server with an explicit aggregate KV-token budget (modelling a
+    /// tighter HBM envelope than the preallocated caches). The reserve
+    /// watermark holds one round-robin block per KVP shard back from
+    /// admission, clamped so a single full-size request stays
+    /// admissible.
+    pub fn with_kv_budget(cluster: HelixCluster, budget_tokens: usize)
+                          -> Server {
+        let slots = cluster.batch();
+        let slot_tokens = cluster.slot_kv_tokens();
+        let reserve = (cluster.cfg.kv_block * cluster.layout.kvp)
+            .min(budget_tokens.saturating_sub(slot_tokens));
+        let budget = KvBudget {
+            slot_tokens,
+            budget_tokens,
+            reserve_tokens: reserve,
+        };
+        Server { cluster, router: Router::new(slots, budget) }
+    }
+
+    /// Run a synthetic workload to completion (or `max_steps`).
     pub fn run(&mut self, workload: &Workload, max_steps: u64)
                -> Result<ServeReport> {
-        for req in workload.generate(self.cluster.cfg.vocab) {
-            self.router.submit(req);
-        }
+        let reqs = workload.generate(self.cluster.cfg.vocab);
+        self.run_trace(reqs, max_steps)
+    }
+
+    /// Drive an explicit request trace (arrival times in engine steps)
+    /// end to end: submit on arrival, admit under the KV budget, open
+    /// engine slots, step, apply the step's own active mask, retire and
+    /// close slots — continuously, until the trace drains.
+    pub fn run_trace(&mut self, mut reqs: Vec<Request>, max_steps: u64)
+                     -> Result<ServeReport> {
+        reqs.sort_by(|a, b| a.arrival.total_cmp(&b.arrival)
+            .then(a.id.cmp(&b.id)));
+        let mut arrivals: VecDeque<Request> = reqs.into();
+        let done0 = self.router.completed.len();
+        let rej0 = self.router.rejected.len();
+        let comm0 = self.cluster.comm_total;
         let mut metrics = ServeMetrics::default();
         let mut max_diff: Option<f32> = None;
         let t0 = Instant::now();
         let mut step: u64 = 0;
+        // Serving clock: cumulative engine time, the base for every
+        // per-request timestamp.
+        let mut clock = 0.0f64;
 
-        while !self.router.idle() && step < max_steps {
-            for (slot, _) in self.router.admit(step) {
+        while step < max_steps {
+            // Submissions due by this step enter the router queue.
+            while arrivals
+                .front()
+                .map(|r| r.arrival <= step as f64)
+                .unwrap_or(false)
+            {
+                self.router.submit(arrivals.pop_front().unwrap(), clock);
+            }
+            if self.router.idle() {
+                if arrivals.is_empty() {
+                    break; // trace drained
+                }
+                step += 1; // idle tick: wait for the next arrival
+                continue;
+            }
+
+            for (slot, _) in self.router.admit(step, clock) {
                 self.cluster.open_slot(slot)?;
             }
             let sb = batcher::build_step(&self.router, self.cluster.batch());
@@ -116,20 +195,29 @@ impl Server {
             let ts = Instant::now();
             let (next, sm) = self.cluster.decode_step(&sb.tokens)?;
             let dt = ts.elapsed().as_secs_f64();
+            clock += dt;
 
             metrics.step_times.push(dt);
             metrics.steps += 1;
             if let Some(d) = sm.max_ref_diff {
                 max_diff = Some(max_diff.unwrap_or(0.0).max(d));
             }
-            batcher::apply_step(&mut self.router, &next, dt);
+            batcher::apply_step(&mut self.router, &sb, &next, clock);
             metrics.generated_tokens += self
                 .router
                 .slots
                 .iter()
                 .flatten()
-                .filter(|st| !st.in_prefill())
+                .filter(|st| sb.active[st.slot] && !st.in_prefill())
                 .count();
+            metrics.peak_kv_tokens = metrics
+                .peak_kv_tokens
+                .max(self.cluster.live_kv_tokens());
+            metrics.peak_committed_tokens = metrics
+                .peak_committed_tokens
+                .max(self.router.committed_tokens());
+            metrics.peak_active =
+                metrics.peak_active.max(self.router.active_count());
             for slot in self.router.retire() {
                 self.cluster.close_slot(slot);
             }
@@ -137,13 +225,63 @@ impl Server {
         }
 
         metrics.wall = t0.elapsed().as_secs_f64();
-        metrics.comm = self.cluster.comm_total.as_secs_f64();
+        // Delta, not the cluster's lifetime total: a Server can drive
+        // several traces (the solo-reference loops in tests do).
+        metrics.comm = (self.cluster.comm_total - comm0).as_secs_f64();
+        for st in &self.router.completed[done0..] {
+            metrics.record_request(st);
+        }
         Ok(ServeReport {
-            completed: self.router.completed.len(),
-            rejected: self.router.rejected.len(),
+            completed: self.router.completed.len() - done0,
+            rejected: self.router.rejected.len() - rej0,
             gpus: self.cluster.n(),
+            kv_budget: self.router.budget(),
             metrics,
             max_ref_diff: max_diff,
         })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workload_arrivals_are_monotone_and_bursty() {
+        let w = Workload { num_requests: 12, prompt_len: (2, 4),
+                           gen_len: (3, 5), seed: 9,
+                           arrival_rate: 0.5, burst: 3 };
+        let reqs = w.generate(128);
+        assert_eq!(reqs.len(), 12);
+        for pair in reqs.windows(2) {
+            assert!(pair[1].arrival >= pair[0].arrival);
+        }
+        // Bursts of 3 share an arrival step.
+        for chunk in reqs.chunks(3) {
+            assert!(chunk.iter().all(|r| r.arrival == chunk[0].arrival));
+        }
+        // At least two distinct burst times (rate is low enough).
+        assert!(reqs.last().unwrap().arrival > 0.0);
+    }
+
+    #[test]
+    fn offline_workload_arrives_at_step_zero() {
+        let w = Workload { num_requests: 5, prompt_len: (2, 4),
+                           gen_len: (3, 5), seed: 9,
+                           arrival_rate: 0.0, burst: 1 };
+        assert!(w.generate(128).iter().all(|r| r.arrival == 0.0));
+    }
+
+    #[test]
+    fn workload_is_deterministic_per_seed() {
+        let w = Workload { num_requests: 8, prompt_len: (2, 6),
+                           gen_len: (3, 5), seed: 41,
+                           arrival_rate: 1.5, burst: 2 };
+        let (a, b) = (w.generate(64), w.generate(64));
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.max_new_tokens, y.max_new_tokens);
+            assert_eq!(x.arrival, y.arrival);
+        }
     }
 }

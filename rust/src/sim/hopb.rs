@@ -14,17 +14,24 @@
 use crate::util::timeline::{SpanKind, Timeline};
 
 /// Exposed communication time after overlapping `comm_total` against
-/// `compute_total` across `chunks` batch chunks. `chunks == 1` or
-/// overlap disabled => everything is exposed.
+/// `compute_total` across `chunks` batch chunks. `chunks <= 1` (there
+/// is nothing to pipeline against — including the degenerate
+/// `chunks == 0` empty batch) or overlap disabled => everything is
+/// exposed; zero compute likewise has nothing to hide the link behind.
+/// The result is always within `[0, comm_total]` — the pipeline can
+/// neither un-send bytes nor expose more than was communicated — and
+/// the clamp keeps float cancellation from ever reporting a negative
+/// exposure.
 pub fn exposed_comm(compute_total: f64, comm_total: f64, chunks: usize,
                     enabled: bool) -> f64 {
-    if !enabled || chunks <= 1 {
+    let comm_total = comm_total.max(0.0);
+    if !enabled || chunks <= 1 || compute_total <= 0.0 {
         return comm_total;
     }
     let n = chunks as f64;
     let (c, m) = (compute_total / n, comm_total / n);
     let makespan = c + (n - 1.0) * c.max(m) + m;
-    makespan - compute_total
+    (makespan - compute_total).clamp(0.0, comm_total)
 }
 
 /// Total phase time (compute + exposed comm) under HOP-B.
@@ -106,6 +113,46 @@ mod tests {
             assert!(e >= 0.0);
             assert!(e <= m + 1e-12);
         }
+    }
+
+    #[test]
+    fn degenerate_inputs_are_guarded() {
+        // chunks == 0 (empty batch): nothing pipelines, comm is exposed
+        // — and no division by zero / NaN escapes.
+        assert_eq!(exposed_comm(10.0, 3.0, 0, true), 3.0);
+        assert_eq!(phase_time(10.0, 3.0, 0, true), 13.0);
+        // Zero compute: the link has nothing to hide behind.
+        assert_eq!(exposed_comm(0.0, 3.0, 8, true), 3.0);
+        // Zero comm: nothing to expose.
+        assert_eq!(exposed_comm(10.0, 0.0, 8, true), 0.0);
+        // Negative comm (a buggy upstream model) clamps to zero rather
+        // than propagating a negative exposure.
+        assert!(exposed_comm(10.0, -2.0, 8, true) >= 0.0);
+    }
+
+    /// Property: for any (compute, comm, chunks) the exposed comm stays
+    /// in [0, comm_total] and the phase time in
+    /// [compute_total, compute_total + comm_total].
+    #[test]
+    fn prop_exposed_comm_is_bounded() {
+        crate::util::prop::forall("exposed_comm bounded", 500, |rng| {
+            let c = rng.f64() * 100.0;
+            let m = rng.f64() * 100.0;
+            let chunks = rng.range(0, 33);
+            for &enabled in &[false, true] {
+                let e = exposed_comm(c, m, chunks, enabled);
+                assert!(e >= 0.0,
+                        "negative exposure: c={c} m={m} n={chunks} \
+                         enabled={enabled} -> {e}");
+                assert!(e <= m + 1e-9,
+                        "exposure above comm: c={c} m={m} n={chunks} \
+                         enabled={enabled} -> {e}");
+                let p = phase_time(c, m, chunks, enabled);
+                assert!(p >= c - 1e-9 && p <= c + m + 1e-9,
+                        "phase time out of range: c={c} m={m} n={chunks} \
+                         enabled={enabled} -> {p}");
+            }
+        });
     }
 
     #[test]

@@ -1,0 +1,48 @@
+//! Shared helpers for engine-backed integration tests.
+//!
+//! Tests skip (with a stderr note) only for the two *environmental*
+//! failure modes — artifacts not built, or the offline stub `xla`
+//! backend — and stay loud for every other `HelixCluster::new` failure,
+//! so a genuine engine regression can never turn the suite silently
+//! green.
+#![allow(dead_code)] // each test binary uses a subset of these helpers
+
+use helix::engine::{ClusterConfig, HelixCluster};
+use helix::runtime::Manifest;
+
+/// True only for failures that mean "this environment cannot run the
+/// engine at all", never for engine bugs.
+fn environment_unavailable(msg: &str) -> bool {
+    msg.contains("manifest.json")              // `make artifacts` not run
+        || msg.contains("PJRT backend unavailable") // stub xla crate
+}
+
+/// Build a cluster, or skip the test when the environment cannot run
+/// the engine. Panics on any other constructor failure.
+pub fn cluster_or_skip(cc: ClusterConfig) -> Option<HelixCluster> {
+    match HelixCluster::new(cc) {
+        Ok(c) => Some(c),
+        Err(e) => {
+            let msg = format!("{e:#}");
+            assert!(environment_unavailable(&msg),
+                    "cluster construction failed for a non-environmental \
+                     reason (not skipping): {msg}");
+            eprintln!("skipping: engine backend/artifacts unavailable — \
+                       run `make artifacts` with the real xla crate \
+                       vendored ({msg})");
+            None
+        }
+    }
+}
+
+/// Load the artifact manifest, or skip when artifacts are not built.
+pub fn manifest_or_skip() -> Option<Manifest> {
+    match Manifest::load(&Manifest::default_root()) {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("skipping: artifacts missing — run `make artifacts` \
+                       ({e:#})");
+            None
+        }
+    }
+}

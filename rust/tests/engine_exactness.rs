@@ -3,25 +3,25 @@
 //! including the HOP-B pipelined path, across enough steps to cycle the
 //! round-robin KV append.
 //!
-//! Requires `make artifacts`.
+//! Requires `make artifacts` plus the real PJRT backend; tests skip
+//! gracefully (with a note on stderr) when either is missing so the
+//! tier-1 gate runs in offline builds against the stub `xla` crate.
+
+mod common;
 
 use helix::engine::{ClusterConfig, CommModel, HelixCluster};
 use helix::runtime::artifacts::EngineLayout;
-use helix::runtime::Manifest;
+
+use crate::common::{cluster_or_skip as cluster, manifest_or_skip as manifest};
 
 const TOL: f32 = 1e-3;
 
-fn manifest() -> Manifest {
-    Manifest::load(&Manifest::default_root())
-        .expect("artifacts missing — run `make artifacts` first")
-}
-
 fn run_steps(model: &str, layout: EngineLayout, hopb: bool, steps: usize)
-             -> f32 {
+             -> Option<f32> {
     let mut cc = ClusterConfig::new(model, layout);
     cc.verify = true;
     cc.hopb = hopb;
-    let mut cluster = HelixCluster::new(cc).expect("cluster");
+    let mut cluster = cluster(cc)?;
     for s in 0..cluster.batch() {
         cluster.open_slot(s).unwrap();
     }
@@ -34,17 +34,18 @@ fn run_steps(model: &str, layout: EngineLayout, hopb: bool, steps: usize)
         tokens = next;
     }
     cluster.shutdown();
-    worst
+    Some(worst)
 }
 
 #[test]
 fn all_models_all_layouts_match_reference() {
-    let man = manifest();
+    let Some(man) = manifest() else { return };
     for (model, entry) in &man.models {
         // Enough steps to cross a kv_block boundary and cycle ranks.
         let steps = entry.config.kv_block + 4;
         for lo in &entry.layouts {
-            let worst = run_steps(model, *lo, false, steps);
+            let Some(worst) = run_steps(model, *lo, false, steps)
+            else { return };
             assert!(worst < TOL,
                     "{model} {} diverged: {worst:.3e}", lo.key());
             println!("{model} {}: worst |engine-ref| = {worst:.3e}",
@@ -57,9 +58,11 @@ fn all_models_all_layouts_match_reference() {
 fn hopb_pipeline_is_equally_exact() {
     // The per-request pipelined attention path must produce identical
     // results to lockstep (same programs, different schedule).
-    let worst = run_steps("tiny_gqa",
-                          EngineLayout { kvp: 2, tpa: 2, tpf: 4, ep: 1 },
-                          true, 12);
+    let Some(worst) = run_steps("tiny_gqa",
+                                EngineLayout { kvp: 2, tpa: 2, tpf: 4,
+                                               ep: 1 },
+                                true, 12)
+    else { return };
     assert!(worst < TOL, "HOP-B path diverged: {worst:.3e}");
 }
 
@@ -69,7 +72,7 @@ fn comm_emulation_does_not_change_numerics() {
         "tiny_gqa", EngineLayout { kvp: 2, tpa: 2, tpf: 4, ep: 1 });
     cc.verify = true;
     cc.comm = CommModel { scale: 50.0, ..CommModel::nvlink() };
-    let mut cluster = HelixCluster::new(cc).unwrap();
+    let Some(mut cluster) = cluster(cc) else { return };
     for s in 0..cluster.batch() {
         cluster.open_slot(s).unwrap();
     }
@@ -85,7 +88,7 @@ fn partial_batch_and_slot_reuse() {
     let mut cc = ClusterConfig::new(
         "tiny_gqa", EngineLayout { kvp: 2, tpa: 2, tpf: 4, ep: 1 });
     cc.verify = true;
-    let mut cluster = HelixCluster::new(cc).unwrap();
+    let Some(mut cluster) = cluster(cc) else { return };
     // Only slots 0 and 2 live.
     cluster.open_slot(0).unwrap();
     cluster.open_slot(2).unwrap();
@@ -94,6 +97,8 @@ fn partial_batch_and_slot_reuse() {
         assert!(m.max_ref_diff.unwrap() < TOL, "step {step}");
     }
     assert_eq!(cluster.lens, vec![6, 0, 6, 0]);
+    assert_eq!(cluster.active_count(), 2);
+    assert_eq!(cluster.live_kv_tokens(), 12);
     // Evict slot 0 and admit a fresh request into it.
     cluster.close_slot(0);
     cluster.open_slot(0).unwrap();
@@ -109,9 +114,11 @@ fn partial_batch_and_slot_reuse() {
 #[test]
 fn long_decode_crosses_many_kv_blocks() {
     // 3+ full round-robin cycles on the kvp=4 layout.
-    let worst = run_steps("tiny_gqa",
-                          EngineLayout { kvp: 4, tpa: 1, tpf: 4, ep: 1 },
-                          false, 3 * 16 * 4 / 4);
+    let Some(worst) = run_steps("tiny_gqa",
+                                EngineLayout { kvp: 4, tpa: 1, tpf: 4,
+                                               ep: 1 },
+                                false, 3 * 16 * 4 / 4)
+    else { return };
     assert!(worst < TOL, "long decode diverged: {worst:.3e}");
 }
 
@@ -119,7 +126,7 @@ fn long_decode_crosses_many_kv_blocks() {
 fn fault_injection_surfaces_rank_errors() {
     let cc = ClusterConfig::new(
         "tiny_gqa", EngineLayout { kvp: 2, tpa: 2, tpf: 4, ep: 1 });
-    let mut cluster = HelixCluster::new(cc).unwrap();
+    let Some(mut cluster) = cluster(cc) else { return };
     let err = cluster.inject_fault(1, "simulated XID").unwrap();
     assert!(err.contains("simulated XID"), "got {err:?}");
     // The pool survives an injected command failure and keeps serving.
@@ -131,6 +138,9 @@ fn fault_injection_surfaces_rank_errors() {
 
 #[test]
 fn unknown_layout_is_rejected() {
+    if manifest().is_none() {
+        return;
+    }
     let cc = ClusterConfig::new(
         "tiny_gqa", EngineLayout { kvp: 8, tpa: 1, tpf: 8, ep: 1 });
     let err = HelixCluster::new(cc).err().expect("must fail");
@@ -142,7 +152,7 @@ fn kv_overflow_is_an_error_not_corruption() {
     let mut cc = ClusterConfig::new(
         "tiny_gqa", EngineLayout { kvp: 1, tpa: 1, tpf: 1, ep: 1 });
     cc.verify = false;
-    let mut cluster = HelixCluster::new(cc).unwrap();
+    let Some(mut cluster) = cluster(cc) else { return };
     cluster.open_slot(0).unwrap();
     let cap = cluster.cfg.seq_cap;
     let mut failed = false;

@@ -1,25 +1,111 @@
 //! Serving-layer integration: continuous batching over the real engine.
-//! Requires `make artifacts`.
+//!
+//! Requires `make artifacts` plus the real PJRT backend; when either is
+//! missing (offline build against the stub `xla` crate, or no
+//! artifacts), every test skips gracefully instead of failing, so the
+//! tier-1 gate runs everywhere.
+
+mod common;
+
+use std::collections::BTreeMap;
 
 use helix::engine::{ClusterConfig, HelixCluster};
 use helix::runtime::artifacts::EngineLayout;
-use helix::serve::{Server, Workload};
+use helix::serve::{Request, Server, Workload};
 
-fn cluster(model: &str, layout: EngineLayout, verify: bool) -> HelixCluster {
+fn cluster(model: &str, layout: EngineLayout, verify: bool)
+           -> Option<HelixCluster> {
+    cluster_cfg(model, layout, verify, false)
+}
+
+fn cluster_cfg(model: &str, layout: EngineLayout, verify: bool, hopb: bool)
+               -> Option<HelixCluster> {
     let mut cc = ClusterConfig::new(model, layout);
     cc.verify = verify;
-    HelixCluster::new(cc).expect("cluster (run `make artifacts`?)")
+    cc.hopb = hopb;
+    common::cluster_or_skip(cc)
+}
+
+/// The headline acceptance test: a bursty multi-request trace runs end
+/// to end through `HelixCluster` under a squeezed KV budget with
+/// continuous admission/retirement; no step may exceed the aggregate
+/// KV-token budget, and every request's generated tokens must be
+/// bit-identical to serving that request alone — batching must not
+/// change numerics.
+#[test]
+fn bursty_trace_respects_kv_budget_and_matches_solo_decode() {
+    let layout = EngineLayout { kvp: 2, tpa: 2, tpf: 4, ep: 1 };
+    let Some(c) = cluster("tiny_gqa", layout, false) else { return };
+    let vocab = c.cfg.vocab;
+
+    // Budget of 30 logical KV tokens: requests need 8-15 each, so two
+    // always fit together but three near-capacity ones do not — the
+    // budget, not the slot count (4), is the binding constraint.
+    const BUDGET: usize = 30;
+    let workload = Workload { num_requests: 12, prompt_len: (3, 6),
+                              gen_len: (5, 9), seed: 13,
+                              arrival_rate: 1.5, burst: 3 };
+    let trace = workload.generate(vocab);
+    assert!(trace.iter().all(|r| {
+        let t = r.prompt.len() + r.max_new_tokens;
+        (8..=15).contains(&t)
+    }));
+
+    let mut server = Server::with_kv_budget(c, BUDGET);
+    let report = server.run_trace(trace.clone(), 100_000).unwrap();
+
+    assert_eq!(report.completed, 12, "bursty trace must drain");
+    assert_eq!(report.rejected, 0);
+    // The budget was respected at every step, in both the admission
+    // accounting and the engine's actual KV occupancy...
+    assert!(report.metrics.peak_committed_tokens <= BUDGET,
+            "admission oversubscribed: committed {} > budget {BUDGET}",
+            report.metrics.peak_committed_tokens);
+    assert!(report.metrics.peak_kv_tokens <= BUDGET,
+            "engine KV exceeded budget: {} > {BUDGET}",
+            report.metrics.peak_kv_tokens);
+    // ... and batching genuinely happened under it.
+    assert!(report.metrics.peak_active >= 2,
+            "trace never batched (peak_active {})",
+            report.metrics.peak_active);
+    assert!(report.metrics.peak_active <= 4);
+
+    let batched: BTreeMap<u64, Vec<i32>> = server
+        .router
+        .completed
+        .iter()
+        .map(|st| (st.req.id, st.generated.clone()))
+        .collect();
+
+    // Solo reference: each request served alone on a fresh-slot cluster
+    // must yield bit-identical tokens.
+    let Some(c2) = cluster("tiny_gqa", layout, false) else { return };
+    let mut solo = Server::new(c2);
+    for req in &trace {
+        let solo_req = Request { id: req.id, prompt: req.prompt.clone(),
+                                 max_new_tokens: req.max_new_tokens,
+                                 arrival: 0.0 };
+        let rep = solo.run_trace(vec![solo_req], 10_000).unwrap();
+        assert_eq!(rep.completed, 1);
+        let st = solo.router.completed.last().unwrap();
+        assert_eq!(st.req.id, req.id);
+        assert_eq!(&st.generated, batched.get(&req.id).unwrap(),
+                   "request {} decoded differently under batching",
+                   req.id);
+    }
 }
 
 #[test]
 fn completes_more_requests_than_slots() {
     // 10 requests through 4 slots: exercises admission, retirement and
     // slot reuse (continuous batching).
-    let c = cluster("tiny_gqa", EngineLayout { kvp: 2, tpa: 2, tpf: 4,
-                                               ep: 1 }, true);
+    let Some(c) = cluster("tiny_gqa", EngineLayout { kvp: 2, tpa: 2, tpf: 4,
+                                                     ep: 1 }, true)
+    else { return };
     let mut server = Server::new(c);
     let workload = Workload { num_requests: 10, prompt_len: (2, 5),
-                              gen_len: (4, 8), seed: 3 };
+                              gen_len: (4, 8), seed: 3,
+                              arrival_rate: 0.0, burst: 1 };
     let report = server.run(&workload, 10_000).unwrap();
     assert_eq!(report.completed, 10);
     assert_eq!(report.rejected, 0);
@@ -27,20 +113,51 @@ fn completes_more_requests_than_slots() {
             "serving diverged: {:?}", report.max_ref_diff);
     assert!(report.metrics.generated_tokens >= 10 * 4);
     assert!(report.metrics.tokens_per_sec() > 0.0);
+    // Per-request latency distributions were recorded.
+    assert_eq!(report.metrics.ttft.len(), 10);
+    assert_eq!(report.metrics.tpot.len(), 10);
+    assert!(report.metrics.ttl_p99() >= report.metrics.ttl_p50());
+}
+
+/// The live-row HOP-B pipeline (chunking follows the active slots, not
+/// the compiled batch width) must stay exact under partial batches.
+#[test]
+fn hopb_partial_batch_serving_is_exact() {
+    let Some(c) = cluster_cfg("tiny_gqa",
+                              EngineLayout { kvp: 2, tpa: 2, tpf: 4, ep: 1 },
+                              true, true)
+    else { return };
+    // Squeeze admission to 2-3 concurrent requests so HOP-B steps run
+    // with holes in the batch.
+    let mut server = Server::with_kv_budget(c, 30);
+    let workload = Workload { num_requests: 8, prompt_len: (3, 6),
+                              gen_len: (5, 9), seed: 21,
+                              arrival_rate: 2.0, burst: 2 };
+    let report = server.run(&workload, 100_000).unwrap();
+    assert_eq!(report.completed, 8);
+    assert!(report.metrics.peak_active >= 2, "HOP-B path never exercised");
+    assert!(report.max_ref_diff.unwrap() < 1e-3,
+            "live-row HOP-B diverged: {:?}", report.max_ref_diff);
 }
 
 #[test]
 fn every_request_generates_requested_tokens() {
-    let c = cluster("tiny_gqa", EngineLayout { kvp: 4, tpa: 1, tpf: 4,
-                                               ep: 1 }, false);
+    let Some(c) = cluster("tiny_gqa", EngineLayout { kvp: 4, tpa: 1, tpf: 4,
+                                                     ep: 1 }, false)
+    else { return };
     let mut server = Server::new(c);
     let workload = Workload { num_requests: 6, prompt_len: (3, 3),
-                              gen_len: (5, 9), seed: 11 };
+                              gen_len: (5, 9), seed: 11,
+                              arrival_rate: 0.0, burst: 1 };
     server.run(&workload, 10_000).unwrap();
     for st in &server.router.completed {
         assert_eq!(st.generated.len(), st.req.max_new_tokens,
                    "request {} under-generated", st.req.id);
         assert_eq!(st.token_times.len(), st.generated.len());
+        // Timestamps are cumulative serving-clock values.
+        for w in st.token_times.windows(2) {
+            assert!(w[1] >= w[0], "token clock went backwards");
+        }
         // Greedy decode over a fixed vocab must stay in range.
         for &t in &st.generated {
             assert!((0..server.cluster.cfg.vocab as i32).contains(&t));
@@ -50,25 +167,52 @@ fn every_request_generates_requested_tokens() {
 
 #[test]
 fn oversized_requests_are_rejected_not_wedged() {
-    let c = cluster("tiny_gqa", EngineLayout { kvp: 2, tpa: 2, tpf: 4,
-                                               ep: 1 }, false);
+    let Some(c) = cluster("tiny_gqa", EngineLayout { kvp: 2, tpa: 2, tpf: 4,
+                                                     ep: 1 }, false)
+    else { return };
     let cap = c.cfg.seq_cap;
     let mut server = Server::new(c);
     let workload = Workload { num_requests: 3, prompt_len: (cap, cap + 4),
-                              gen_len: (8, 8), seed: 1 };
+                              gen_len: (8, 8), seed: 1,
+                              arrival_rate: 0.0, burst: 1 };
     let report = server.run(&workload, 1_000).unwrap();
     assert_eq!(report.completed, 0);
     assert_eq!(report.rejected, 3);
+    assert_eq!(report.metrics.steps, 0, "rejections must not step engine");
+}
+
+#[test]
+fn degenerate_requests_never_reach_the_engine() {
+    let Some(c) = cluster("tiny_gqa", EngineLayout { kvp: 2, tpa: 2, tpf: 4,
+                                                     ep: 1 }, false)
+    else { return };
+    let mut server = Server::new(c);
+    // Zero-generation requests fast-path to completion at submit...
+    let zero_gen = Workload { num_requests: 4, prompt_len: (2, 5),
+                              gen_len: (0, 0), seed: 17,
+                              arrival_rate: 0.0, burst: 1 };
+    let report = server.run(&zero_gen, 1_000).unwrap();
+    assert_eq!(report.completed, 4);
+    assert_eq!(report.metrics.steps, 0,
+               "zero-gen requests must not occupy engine steps");
+    // ... and empty prompts are rejected, not silently fed token 0.
+    let empty = Request { id: 99, prompt: vec![], max_new_tokens: 3,
+                          arrival: 0.0 };
+    let report = server.run_trace(vec![empty], 1_000).unwrap();
+    assert_eq!(report.completed, 0);
+    assert_eq!(report.rejected, 1);
+    assert_eq!(report.metrics.steps, 0);
 }
 
 #[test]
 fn deterministic_given_seed() {
     let run = || {
         let c = cluster("tiny_gqa", EngineLayout { kvp: 2, tpa: 2, tpf: 4,
-                                                   ep: 1 }, false);
+                                                   ep: 1 }, false)?;
         let mut server = Server::new(c);
         let workload = Workload { num_requests: 4, prompt_len: (2, 4),
-                                  gen_len: (4, 6), seed: 99 };
+                                  gen_len: (4, 6), seed: 99,
+                                  arrival_rate: 0.7, burst: 2 };
         server.run(&workload, 10_000).unwrap();
         let mut outs: Vec<(u64, Vec<i32>)> = server
             .router
@@ -77,18 +221,21 @@ fn deterministic_given_seed() {
             .map(|st| (st.req.id, st.generated.clone()))
             .collect();
         outs.sort();
-        outs
+        Some(outs)
     };
-    assert_eq!(run(), run(), "same seed must reproduce the same tokens");
+    let (Some(a), Some(b)) = (run(), run()) else { return };
+    assert_eq!(a, b, "same seed must reproduce the same tokens");
 }
 
 #[test]
 fn moe_serving_works() {
-    let c = cluster("tiny_moe", EngineLayout { kvp: 2, tpa: 2, tpf: 2,
-                                               ep: 2 }, true);
+    let Some(c) = cluster("tiny_moe", EngineLayout { kvp: 2, tpa: 2, tpf: 2,
+                                                     ep: 2 }, true)
+    else { return };
     let mut server = Server::new(c);
     let workload = Workload { num_requests: 5, prompt_len: (2, 4),
-                              gen_len: (4, 6), seed: 5 };
+                              gen_len: (4, 6), seed: 5,
+                              arrival_rate: 0.0, burst: 1 };
     let report = server.run(&workload, 10_000).unwrap();
     assert_eq!(report.completed, 5);
     assert!(report.max_ref_diff.unwrap() < 1e-3);
@@ -96,11 +243,13 @@ fn moe_serving_works() {
 
 #[test]
 fn mla_serving_works() {
-    let c = cluster("tiny_mla", EngineLayout { kvp: 4, tpa: 1, tpf: 4,
-                                               ep: 1 }, true);
+    let Some(c) = cluster("tiny_mla", EngineLayout { kvp: 4, tpa: 1, tpf: 4,
+                                                     ep: 1 }, true)
+    else { return };
     let mut server = Server::new(c);
     let workload = Workload { num_requests: 5, prompt_len: (2, 4),
-                              gen_len: (4, 6), seed: 6 };
+                              gen_len: (4, 6), seed: 6,
+                              arrival_rate: 0.0, burst: 1 };
     let report = server.run(&workload, 10_000).unwrap();
     assert_eq!(report.completed, 5);
     assert!(report.max_ref_diff.unwrap() < 1e-3);

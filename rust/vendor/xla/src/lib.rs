@@ -1,0 +1,233 @@
+//! Offline stub of the `xla` crate (the xla_extension 0.5.1 PJRT
+//! bindings helix executes its AOT artifacts with).
+//!
+//! The real bindings link the PJRT CPU plugin and cannot be fetched in
+//! an offline build environment, so this stub keeps the crate
+//! *compiling* everywhere: the [`Literal`] host-side container is fully
+//! functional (helix round-trips tensors through it in unit tests),
+//! while every device-facing entry point fails cleanly at
+//! [`PjRtClient::cpu`] with an actionable message. Engine integration
+//! tests detect that failure and skip rather than abort, so
+//! `cargo build --release && cargo test -q` — the tier-1 gate — runs
+//! green with or without the real backend.
+//!
+//! To run the engine for real, replace `rust/vendor/xla/` with the
+//! vendored xla-rs checkout (same package name, same API surface) and
+//! rebuild; no helix source changes are needed.
+
+use std::fmt;
+
+/// Error type mirroring the real bindings' surface: helix only ever
+/// formats it with `{:?}`.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+const STUB: &str = "PJRT backend unavailable: helix was built against the \
+                    offline stub `xla` crate (rust/vendor/xla). Vendor the \
+                    real xla_extension 0.5.1 bindings there to execute AOT \
+                    artifacts";
+
+fn stub_err<T>() -> Result<T> {
+    Err(Error(STUB.to_string()))
+}
+
+/// Typed storage behind a [`Literal`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum LiteralData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Element types the helix runtime moves across the PJRT boundary.
+pub trait NativeType: Copy {
+    fn into_data(v: Vec<Self>) -> LiteralData;
+    fn from_data(d: &LiteralData) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn into_data(v: Vec<Self>) -> LiteralData {
+        LiteralData::F32(v)
+    }
+
+    fn from_data(d: &LiteralData) -> Option<Vec<Self>> {
+        match d {
+            LiteralData::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn into_data(v: Vec<Self>) -> LiteralData {
+        LiteralData::I32(v)
+    }
+
+    fn from_data(d: &LiteralData) -> Option<Vec<Self>> {
+        match d {
+            LiteralData::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+/// Host-side literal: fully functional in the stub (helix round-trips
+/// tensors through it without a device).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: LiteralData,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(xs: &[T]) -> Literal {
+        Literal {
+            data: T::into_data(xs.to_vec()),
+            dims: vec![xs.len() as i64],
+        }
+    }
+
+    /// Reinterpret the literal under new dimensions (element count must
+    /// match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want != self.element_count() {
+            return Err(Error(format!(
+                "reshape {:?} -> {:?}: element count mismatch",
+                self.dims, dims
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Copy the elements out as a host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::from_data(&self.data)
+            .ok_or_else(|| Error("literal element type mismatch".to_string()))
+    }
+
+    /// Decompose a tuple literal into its parts.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match &self.data {
+            LiteralData::Tuple(parts) => Ok(parts.clone()),
+            _ => Err(Error("literal is not a tuple".to_string())),
+        }
+    }
+
+    fn element_count(&self) -> i64 {
+        match &self.data {
+            LiteralData::F32(v) => v.len() as i64,
+            LiteralData::I32(v) => v.len() as i64,
+            LiteralData::Tuple(v) => v.len() as i64,
+        }
+    }
+}
+
+/// Parsed HLO module text (opaque in the stub).
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        stub_err()
+    }
+}
+
+/// An XLA computation handle (opaque in the stub).
+#[derive(Debug)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Device-resident buffer handle (never constructible in the stub).
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        stub_err()
+    }
+}
+
+/// Compiled executable handle (never constructible in the stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        stub_err()
+    }
+
+    pub fn execute_b<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        stub_err()
+    }
+}
+
+/// PJRT client. `cpu()` is the single entry point helix calls first;
+/// in the stub it fails with a clear remediation message, which the
+/// engine surfaces as "backend unavailable" and tests treat as a skip.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        stub_err()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation)
+                   -> Result<PjRtLoadedExecutable> {
+        stub_err()
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self, _data: &[T], _dims: &[usize], _device: Option<usize>)
+        -> Result<PjRtBuffer> {
+        stub_err()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 2]).is_err());
+        assert!(l.to_vec::<i32>().is_err());
+        assert!(l.to_tuple().is_err());
+    }
+
+    #[test]
+    fn client_is_unavailable_with_clear_message() {
+        let err = PjRtClient::cpu().err().expect("stub must fail");
+        assert!(format!("{err:?}").contains("rust/vendor/xla"));
+    }
+}

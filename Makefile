@@ -1,0 +1,45 @@
+# Helix reproduction — build/test/artifact entry points.
+#
+# The rust engine selects its execution backend at runtime
+# (HELIX_BACKEND=native|pjrt, default: auto -> native when the PJRT
+# closure is absent). The native backend needs no artifacts at all (a
+# synthetic deterministic-init manifest is built in memory); these
+# targets exist for the PJRT path and for pinning artifacts on disk.
+
+ARTIFACTS ?= artifacts
+PY ?= python3
+
+.PHONY: build test bench artifacts artifacts-synthetic golden clean-artifacts
+
+# Tier-1 gate (ROADMAP.md).
+build:
+	cd rust && cargo build --release
+
+test:
+	cd rust && cargo test -q
+
+# Engine decode bench: emits BENCH_engine.json (tokens/s, per-phase ns,
+# context-length scaling). Diff against the checked-in baseline with
+# scripts/check_bench_regression.py.
+bench:
+	cd rust && cargo bench --bench engine_decode
+
+# Full AOT artifacts: HLO text + weight files + manifest (requires jax;
+# this is what the PJRT backend executes).
+artifacts:
+	$(PY) -m python.compile.aot --out $(ARTIFACTS)
+
+# Deterministic-init manifest only — no jax, no numpy, no weight files.
+# The native backend generates weights from the seeded init; use this to
+# pin an on-disk artifact root ($HELIX_ARTIFACTS) without the python
+# toolchain. (The native backend also works with no artifacts at all.)
+artifacts-synthetic:
+	$(PY) -m python.compile.synthetic --out $(ARTIFACTS)
+
+# Golden parity vectors for the native kernels (requires jax; the
+# generated files are checked in under rust/tests/golden/).
+golden:
+	$(PY) -m python.tests.gen_golden
+
+clean-artifacts:
+	rm -rf $(ARTIFACTS)

@@ -1,0 +1,239 @@
+"""Emit a deterministic-init ("synthetic") artifact manifest — no jax,
+no numpy, no weight files.
+
+This is the file-based twin of the rust runtime's in-memory
+``Manifest::synthetic()``: the same program specs, role index, layouts
+and weight refs ``aot.py`` emits, with ``"synthetic": true`` set so the
+rust side generates any missing weight file with its seeded init. Use it
+to pin an artifact root on disk (``$HELIX_ARTIFACTS``) for the native
+backend on machines where the jax toolchain isn't installed:
+
+    make artifacts-synthetic        # writes artifacts/manifest.json
+
+The PJRT backend still needs the real ``make artifacts`` (HLO lowering
+requires jax); loading this manifest under ``HELIX_BACKEND=pjrt`` fails
+at compile time with a missing-HLO error, which is the correct loud
+failure for that configuration.
+
+``python/tests/test_aot_manifest.py`` asserts this module and ``aot.py``
+agree on every program shape and role, so the two cannot drift.
+"""
+
+import argparse
+import json
+import os
+
+from .configs import MODELS, ModelConfig
+
+F32, I32 = "f32", "i32"
+
+
+def arg(name, shape, dtype=F32):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def _add(programs, name, inputs, outputs):
+    if name not in programs:
+        programs[name] = {"hlo": f"programs/{name}.hlo.txt",
+                          "inputs": inputs, "outputs": outputs}
+    return name
+
+
+def _wref(model, wname, shape):
+    return {"file": f"weights/{model}/{wname}.bin", "shape": list(shape)}
+
+
+def build_model(programs: dict, cfg: ModelConfig) -> dict:
+    """Register cfg's programs into `programs`; return the model entry.
+
+    Mirrors ``aot.build_model`` minus the lowering — names, shapes and
+    role keys must stay identical (pinned by test_aot_manifest.py).
+    """
+    h, hsz, qh, kh, bsz = (cfg.hidden, cfg.head_size, cfg.q_heads,
+                           cfg.kv_heads, cfg.batch)
+    idx = {}
+
+    tpas = sorted({lo.tpa for lo in cfg.layouts})
+    ns = sorted({lo.n for lo in cfg.layouts})
+    tpfs = sorted({lo.tpf for lo in cfg.layouts})
+
+    # --- attention phase -------------------------------------------------
+    for t in tpas:
+        qhl, khl = qh // t, kh // t
+        name = _add(programs, f"{cfg.name}.in_proj.tpa{t}",
+                    [arg("x", (bsz, h)), arg("pos", (bsz,), I32),
+                     arg("wn1", (h,)), arg("wq", (h, qhl * hsz)),
+                     arg("wk", (h, khl * hsz)), arg("wv", (h, khl * hsz))],
+                    [arg("q", (bsz, qhl, hsz)), arg("k", (bsz, khl, hsz)),
+                     arg("v", (bsz, khl, hsz))])
+        idx[f"in_proj_tpa{t}"] = name
+
+    for lo in cfg.layouts:
+        qhl, khl = qh // lo.tpa, kh // lo.tpa
+        scap = cfg.seq_cap // lo.kvp
+        for bvar in sorted({bsz, 1}):
+            suffix = "" if bvar == bsz else ".b1"
+            role_suffix = "" if bvar == bsz else "_b1"
+            name = _add(programs,
+                        f"{cfg.name}.attn.tpa{lo.tpa}.scap{scap}{suffix}",
+                        [arg("q", (bvar, qhl, hsz)),
+                         arg("k_cache", (bvar, khl, scap, hsz)),
+                         arg("v_cache", (bvar, khl, scap, hsz)),
+                         arg("lens", (bvar,), I32)],
+                        [arg("o", (bvar, qhl, hsz)),
+                         arg("lse", (bvar, qhl))])
+            idx[f"attn_kvp{lo.kvp}_tpa{lo.tpa}{role_suffix}"] = name
+
+        qs = qh // lo.n
+        if lo.kvp > 1:
+            for bvar in sorted({bsz, 1}):
+                suffix = "" if bvar == bsz else ".b1"
+                role_suffix = "" if bvar == bsz else "_b1"
+                cname = _add(programs,
+                             f"{cfg.name}.combine.r{lo.kvp}.qs{qs}{suffix}",
+                             [arg("o_parts", (lo.kvp, bvar, qs, hsz)),
+                              arg("lse_parts", (lo.kvp, bvar, qs))],
+                             [arg("o", (bvar, qs * hsz))])
+                idx[f"combine_kvp{lo.kvp}_n{lo.n}{role_suffix}"] = cname
+
+    for n in ns:
+        hs = h // n
+        name = _add(programs, f"{cfg.name}.out_proj.n{n}",
+                    [arg("o_slice", (bsz, hs)), arg("wo_slice", (hs, h))],
+                    [arg("partial", (bsz, h))])
+        idx[f"out_proj_n{n}"] = name
+
+    # --- FFN phase --------------------------------------------------------
+    if cfg.is_moe:
+        name = _add(programs, f"{cfg.name}.router",
+                    [arg("h1", (bsz, h)), arg("wn2", (h,)),
+                     arg("wr", (h, cfg.experts))],
+                    [arg("gates", (bsz, cfg.experts)), arg("hn", (bsz, h))])
+        idx["router"] = name
+        for f_ in tpfs:
+            fp = cfg.expert_ffn // f_
+            name = _add(programs, f"{cfg.name}.expert.tpf{f_}",
+                        [arg("hn", (bsz, h)), arg("w1", (h, fp)),
+                         arg("wg", (h, fp)), arg("w2", (fp, h))],
+                        [arg("partial", (bsz, h))])
+            idx[f"expert_tpf{f_}"] = name
+        for n in ns:
+            fp = cfg.shared_ffn // n
+            name = _add(programs, f"{cfg.name}.shared.n{n}",
+                        [arg("hn", (bsz, h)), arg("w1", (h, fp)),
+                         arg("wg", (h, fp)), arg("w2", (fp, h))],
+                        [arg("partial", (bsz, h))])
+            idx[f"shared_n{n}"] = name
+    else:
+        for f_ in tpfs:
+            fp = cfg.ffn // f_
+            name = _add(programs, f"{cfg.name}.ffn.tpf{f_}",
+                        [arg("h1", (bsz, h)), arg("wn2", (h,)),
+                         arg("w1", (h, fp)), arg("wg", (h, fp)),
+                         arg("w2", (fp, h))],
+                        [arg("partial", (bsz, h))])
+            idx[f"ffn_tpf{f_}"] = name
+
+    # --- embedding / logits -----------------------------------------------
+    name = _add(programs, f"{cfg.name}.embed",
+                [arg("tokens", (bsz,), I32), arg("wemb", (cfg.vocab, h))],
+                [arg("x", (bsz, h))])
+    idx["embed"] = name
+    name = _add(programs, f"{cfg.name}.logits",
+                [arg("x", (bsz, h)), arg("wnf", (h,)),
+                 arg("wlog", (h, cfg.vocab))],
+                [arg("logits", (bsz, cfg.vocab)), arg("next", (bsz,), I32)])
+    idx["logits"] = name
+
+    # --- unsharded reference layer ------------------------------------------
+    scap = cfg.seq_cap
+    common = [arg("x", (bsz, h)),
+              arg("k_cache", (bsz, kh, scap, hsz)),
+              arg("v_cache", (bsz, kh, scap, hsz)),
+              arg("lens", (bsz,), I32), arg("pos", (bsz,), I32),
+              arg("wn1", (h,)), arg("wq", (h, qh * hsz)),
+              arg("wk", (h, kh * hsz)), arg("wv", (h, kh * hsz)),
+              arg("wo", (h, h)), arg("wn2", (h,))]
+    outs = [arg("y", (bsz, h)), arg("k_new", (bsz, kh, hsz)),
+            arg("v_new", (bsz, kh, hsz))]
+    if cfg.is_moe:
+        e, fe, fs = cfg.experts, cfg.expert_ffn, cfg.shared_ffn
+        extra = [arg("wr", (h, e)), arg("we1", (e, h, fe)),
+                 arg("weg", (e, h, fe)), arg("we2", (e, fe, h)),
+                 arg("ws1", (h, fs)), arg("wsg", (h, fs)),
+                 arg("ws2", (fs, h))]
+    else:
+        f = cfg.ffn
+        extra = [arg("w1", (h, f)), arg("wg", (h, f)), arg("w2", (f, h))]
+    name = _add(programs, f"{cfg.name}.ref_layer", common + extra, outs)
+    idx["ref_layer"] = name
+
+    # --- weight index -------------------------------------------------------
+    m = cfg.name
+    weights = {"wemb": _wref(m, "wemb", (cfg.vocab, h)),
+               "wnf": _wref(m, "wnf", (h,)),
+               "wlog": _wref(m, "wlog", (h, cfg.vocab)),
+               "layers": []}
+    for li in range(cfg.layers):
+        lw = {"wn1": _wref(m, f"l{li}.wn1", (h,)),
+              "wq": _wref(m, f"l{li}.wq", (h, qh * hsz)),
+              "wk": _wref(m, f"l{li}.wk", (h, kh * hsz)),
+              "wv": _wref(m, f"l{li}.wv", (h, kh * hsz)),
+              "wo": _wref(m, f"l{li}.wo", (h, h)),
+              "wn2": _wref(m, f"l{li}.wn2", (h,))}
+        if cfg.is_moe:
+            e, fe, fs = cfg.experts, cfg.expert_ffn, cfg.shared_ffn
+            lw.update({"wr": _wref(m, f"l{li}.wr", (h, e)),
+                       "we1": _wref(m, f"l{li}.we1", (e, h, fe)),
+                       "weg": _wref(m, f"l{li}.weg", (e, h, fe)),
+                       "we2": _wref(m, f"l{li}.we2", (e, fe, h)),
+                       "ws1": _wref(m, f"l{li}.ws1", (h, fs)),
+                       "wsg": _wref(m, f"l{li}.wsg", (h, fs)),
+                       "ws2": _wref(m, f"l{li}.ws2", (fs, h))})
+        else:
+            f = cfg.ffn
+            lw.update({"w1": _wref(m, f"l{li}.w1", (h, f)),
+                       "wg": _wref(m, f"l{li}.wg", (h, f)),
+                       "w2": _wref(m, f"l{li}.w2", (f, h))})
+        weights["layers"].append(lw)
+
+    return {
+        "config": {
+            "hidden": h, "q_heads": qh, "kv_heads": kh, "head_size": hsz,
+            "layers": cfg.layers, "vocab": cfg.vocab,
+            "seq_cap": cfg.seq_cap, "batch": bsz, "kv_block": cfg.kv_block,
+            "ffn": cfg.ffn, "experts": cfg.experts, "top_k": cfg.top_k,
+            "expert_ffn": cfg.expert_ffn, "shared_ffn": cfg.shared_ffn,
+        },
+        "layouts": [{"kvp": lo.kvp, "tpa": lo.tpa, "tpf": lo.tpf,
+                     "ep": lo.ep, "key": lo.key()} for lo in cfg.layouts],
+        "program_index": idx,
+        "weights": weights,
+    }
+
+
+def build_manifest(model_names=None) -> dict:
+    programs, models = {}, {}
+    for mname in sorted(model_names or MODELS):
+        models[mname] = build_model(programs, MODELS[mname])
+    return {"version": 1, "synthetic": True, "programs": programs,
+            "models": models}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="artifacts")
+    ap.add_argument("--models", nargs="*", default=sorted(MODELS))
+    args = ap.parse_args()
+    manifest = build_manifest(args.models)
+    os.makedirs(args.out, exist_ok=True)
+    path = os.path.join(args.out, "manifest.json")
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"[synthetic] wrote {len(manifest['programs'])} program specs "
+          f"for {len(manifest['models'])} models to {path} "
+          f"(no HLO, no weight files: native backend only)")
+
+
+if __name__ == "__main__":
+    main()

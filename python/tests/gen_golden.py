@@ -1,0 +1,114 @@
+"""Generate golden vectors for the rust native backend's kernels.
+
+Runs the pure-jnp oracles in ``python/compile/kernels/ref.py`` (the
+repo's correctness ground truth) over deterministic inputs and writes
+them to ``rust/tests/golden/``; ``rust/tests/native_kernels.rs`` asserts
+the native blocked flash-decode and LSE combine match within 1e-5.
+
+Cases cover the ISSUE-3 checklist: block-boundary lens
+(``len % block_s == 0``, including a full shard), ragged lens (empty
+shard included), and the single-row ``_b1`` HOP-B shape.
+
+Usage:  python3 -m python.tests.gen_golden   (from the repo root)
+"""
+
+import json
+import os
+
+import numpy as np
+
+from python.compile.kernels.ref import (flash_decode_ref, kvp_combine_ref)
+from python.compile.kernels.flash_decode import NEG_INF
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "..", "rust", "tests",
+                   "golden")
+
+
+def _flat(a) -> list:
+    return [float(x) for x in np.asarray(a, dtype=np.float32).ravel()]
+
+
+def flash_case(name, b, kh, g, hsz, scap, block_s, lens, seed):
+    rng = np.random.default_rng(seed)
+    q = rng.standard_normal((b, kh, g, hsz)).astype(np.float32)
+    k = rng.standard_normal((b, kh, scap, hsz)).astype(np.float32)
+    v = rng.standard_normal((b, kh, scap, hsz)).astype(np.float32)
+    lens = np.asarray(lens, dtype=np.int32)
+    assert lens.shape == (b,)
+    o, lse = flash_decode_ref(q, k, v, lens)
+    return {
+        "name": name, "b": b, "kh": kh, "g": g, "hsz": hsz, "scap": scap,
+        "block_s": block_s, "lens": [int(x) for x in lens],
+        "q": _flat(q), "k": _flat(k), "v": _flat(v),
+        "o": _flat(o), "lse": _flat(lse),
+    }
+
+
+def combine_case(name, r, b, qs, hsz, empty, seed):
+    """`empty` is a list of (r, b) shard coordinates to mark empty
+    (o = 0, lse = NEG_INF), mirroring what the flash kernel emits for
+    shards that hold no KV for a row."""
+    rng = np.random.default_rng(seed)
+    o = rng.standard_normal((r, b, qs, hsz)).astype(np.float32)
+    lse = rng.standard_normal((r, b, qs)).astype(np.float32)
+    for (ri, bi) in empty:
+        o[ri, bi] = 0.0
+        lse[ri, bi] = NEG_INF
+    out = kvp_combine_ref(o, lse)
+    return {
+        "name": name, "r": r, "b": b, "qs": qs, "hsz": hsz,
+        "o_parts": _flat(o), "lse_parts": _flat(lse), "o": _flat(out),
+    }
+
+
+def main():
+    os.makedirs(OUT, exist_ok=True)
+
+    flash = [
+        # ragged: empty shard, mid-block, unaligned
+        flash_case("ragged", b=3, kh=2, g=2, hsz=8, scap=32, block_s=8,
+                   lens=[0, 13, 27], seed=101),
+        # block boundaries: len % block_s == 0, incl. the full shard
+        flash_case("block_boundary", b=3, kh=1, g=4, hsz=16, scap=64,
+                   block_s=16, lens=[16, 48, 64], seed=202),
+        # single-row HOP-B shape (the _b1 program)
+        flash_case("b1", b=1, kh=2, g=2, hsz=8, scap=32, block_s=8,
+                   lens=[21], seed=303),
+        # MQA (tiny_mla decode shape): one KV head, all queries grouped
+        flash_case("mqa", b=2, kh=1, g=8, hsz=16, scap=64, block_s=64,
+                   lens=[40, 64], seed=404),
+    ]
+    with open(os.path.join(OUT, "flash_decode.json"), "w") as f:
+        json.dump({"cases": flash}, f)
+
+    combine = [
+        combine_case("dense", r=2, b=2, qs=2, hsz=8, empty=[], seed=505),
+        # one empty shard for row 0; row 1 sees both shards
+        combine_case("one_empty", r=2, b=2, qs=2, hsz=8,
+                     empty=[(0, 0)], seed=606),
+        # an entirely empty row (padded batch slot) -> zeros
+        combine_case("all_empty_row", r=3, b=2, qs=1, hsz=4,
+                     empty=[(0, 1), (1, 1), (2, 1)], seed=707),
+        # single-row b1 shape
+        combine_case("b1", r=4, b=1, qs=2, hsz=8, empty=[(2, 0)], seed=808),
+    ]
+    with open(os.path.join(OUT, "combine.json"), "w") as f:
+        json.dump({"cases": combine}, f)
+
+    # Synthetic-manifest fixture: pins the rust `Manifest::synthetic()`
+    # twin against compile/synthetic.py (whose own agreement with
+    # aot.py is pinned by test_aot_manifest.py) — the third leg of the
+    # drift contract, asserted by rust/tests/synthetic_manifest.rs.
+    from python.compile.synthetic import build_manifest
+    fdir = os.path.join(OUT, "synthetic_manifest")
+    os.makedirs(fdir, exist_ok=True)
+    with open(os.path.join(fdir, "manifest.json"), "w") as f:
+        json.dump(build_manifest(), f, indent=1, sort_keys=True)
+
+    print(f"wrote {len(flash)} flash_decode + {len(combine)} combine "
+          f"cases + the synthetic-manifest fixture to "
+          f"{os.path.normpath(OUT)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -86,6 +86,27 @@ def test_weights_are_deterministic(tmp_path):
     assert outs[0] == outs[1]
 
 
+def test_synthetic_manifest_matches_aot(artifacts):
+    """compile.synthetic (the no-jax manifest writer the native rust
+    backend consumes) must agree with aot.py on every program shape,
+    role key, layout, config field and weight ref — pinning the
+    three-way contract (aot.py / synthetic.py / rust
+    Manifest::synthetic) against drift."""
+    from compile.synthetic import build_manifest
+    m = load_manifest(artifacts)
+    s = build_manifest(["tiny_moe"])
+    assert s["synthetic"] is True
+    sm, am = s["models"]["tiny_moe"], m["models"]["tiny_moe"]
+    assert sm["program_index"] == am["program_index"]
+    assert sm["config"] == am["config"]
+    assert sm["layouts"] == am["layouts"]
+    assert sm["weights"] == am["weights"]
+    assert set(s["programs"]) == set(m["programs"])
+    for name, sp in s["programs"].items():
+        assert sp["inputs"] == m["programs"][name]["inputs"], name
+        assert sp["outputs"] == m["programs"][name]["outputs"], name
+
+
 def test_inputs_declared_match_ref_layer_arity(artifacts):
     m = load_manifest(artifacts)
     ref = m["programs"]["tiny_moe.ref_layer"]

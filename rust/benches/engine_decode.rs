@@ -1,16 +1,19 @@
 //! Engine end-to-end microbench: real decode-step latency per model and
-//! layout over the AOT artifacts (requires `make artifacts`).
+//! layout. Runs on whichever backend `HELIX_BACKEND` selects — the
+//! native backend needs no artifacts (the synthetic manifest kicks in),
+//! the PJRT backend needs `make artifacts` plus the real xla crate.
 //!
 //! This is the measured counterpart of the simulator's TTL: it times the
 //! full L3 path (broadcast -> redundant QKV -> round-robin append ->
-//! flash-decode -> All-to-All + combine -> TP out-proj -> FFN grid) on
-//! the PJRT CPU client, plus the HOP-B overlap comparison under an
-//! emulated NVLink.
+//! flash-decode -> All-to-All + combine -> TP out-proj -> FFN grid),
+//! plus the HOP-B overlap comparison under an emulated NVLink, plus a
+//! context-length sweep that pins the KV-read scaling of the decode
+//! step (the paper's core cost driver).
 //!
 //! Besides the stdout report it writes `BENCH_engine.json` (tokens/s,
 //! per-phase ns, allocations per step) into `$BENCH_OUT` (default: the
 //! working directory) — the machine-readable perf trajectory this repo
-//! diffs across PRs.
+//! diffs across PRs (see scripts/check_bench_regression.py).
 
 use helix::engine::{ClusterConfig, CommModel, HelixCluster};
 use helix::runtime::artifacts::EngineLayout;
@@ -95,16 +98,76 @@ fn write_report(report: &JsonReport) {
     }
 }
 
+/// Decode-step attention cost as a function of accumulated context:
+/// fill the KV caches by decoding, and sample the per-phase split at
+/// increasing context lengths. At long context the step must be
+/// attention-dominated, with attn ns growing ~linearly in the KV length
+/// (the paper's DeepSeek/Llama Fig 1 argument, measured for real).
+fn context_scaling(report: &mut JsonReport, model: &str,
+                   layout: EngineLayout) {
+    let cc = ClusterConfig::new(model, layout);
+    let mut cluster = match HelixCluster::new(cc) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("skipping context scaling: {e:#}");
+            return;
+        }
+    };
+    for s in 0..cluster.batch() {
+        cluster.open_slot(s).unwrap();
+    }
+    let tokens: Vec<i32> = (0..cluster.batch() as i32).map(|i| i + 3)
+        .collect();
+    let cap = cluster.slot_kv_tokens();
+    // Sample windows at ~1/8, 1/4, 1/2 and ~full of the per-slot KV
+    // capacity; each window averages `PROBE` steps.
+    const PROBE: usize = 4;
+    let marks: Vec<usize> = [8, 4, 2, 1].iter()
+        .map(|d| (cap / d).saturating_sub(PROBE))
+        .collect();
+    println!("\n## decode-step phase split vs context length \
+              ({model} {})", layout.key());
+    let mut len = 0usize;
+    for &mark in &marks {
+        while len < mark {
+            cluster.decode_step(&tokens).unwrap();
+            len += 1;
+        }
+        let (mut attn, mut ffn, mut comm) = (0.0f64, 0.0f64, 0.0f64);
+        for _ in 0..PROBE {
+            let (_, sm) = cluster.decode_step(&tokens).unwrap();
+            attn += sm.attn.as_secs_f64();
+            ffn += sm.ffn.as_secs_f64();
+            comm += sm.comm.as_secs_f64();
+            len += 1;
+        }
+        let (attn, ffn, comm) = (attn / PROBE as f64, ffn / PROBE as f64,
+                                 comm / PROBE as f64);
+        println!("ctx {len:>6}: attn {:>10.1} ns  ffn {:>10.1} ns  \
+                  (attn share {:.0}%)", attn * 1e9, ffn * 1e9,
+                 100.0 * attn / (attn + ffn + comm).max(1e-12));
+        report.metric(&format!("engine/{model}/ctx{len}/attn_ns_per_step"),
+                      attn * 1e9);
+        report.metric(&format!("engine/{model}/ctx{len}/ffn_ns_per_step"),
+                      ffn * 1e9);
+    }
+    cluster.shutdown();
+}
+
 fn main() {
     let mut report = JsonReport::new("engine");
-    if Manifest::load(&Manifest::default_root()).is_err() {
-        eprintln!("artifacts missing — run `make artifacts` first; \
-                   skipping engine benches");
+    let backend = std::env::var("HELIX_BACKEND")
+        .unwrap_or_else(|_| "auto".to_string());
+    report.note("backend", &backend);
+    if Manifest::load_or_synthetic(&Manifest::default_root()).is_err() {
+        eprintln!("no artifacts and no native backend (HELIX_BACKEND=\
+                   {backend}) — run `make artifacts` first; skipping \
+                   engine benches");
         report.note("status", "skipped: artifacts missing");
         write_report(&report);
         return;
     }
-    println!("## engine decode-step latency (real PJRT execution)");
+    println!("## engine decode-step latency (backend: {backend})");
     step_bench(&mut report, "engine/tiny_gqa/helix_kvp2_tpa2", "tiny_gqa",
                EngineLayout { kvp: 2, tpa: 2, tpf: 4, ep: 1 }, false, 0.0);
     step_bench(&mut report, "engine/tiny_gqa/pure_kvp4", "tiny_gqa",
@@ -123,6 +186,9 @@ fn main() {
                EngineLayout { kvp: 2, tpa: 2, tpf: 4, ep: 1 }, false, 2.0e4);
     step_bench(&mut report, "engine/tiny_gqa/a2a_hopb_on", "tiny_gqa",
                EngineLayout { kvp: 2, tpa: 2, tpf: 4, ep: 1 }, true, 2.0e4);
+
+    context_scaling(&mut report, "tiny_gqa",
+                    EngineLayout { kvp: 2, tpa: 2, tpf: 4, ep: 1 });
     report.note("status", "ok");
     write_report(&report);
 }

@@ -98,7 +98,7 @@ pub struct HelixCluster {
 
 impl HelixCluster {
     pub fn new(cc: ClusterConfig) -> Result<HelixCluster> {
-        let manifest = Manifest::load(&cc.artifacts)?;
+        let manifest = Manifest::load_or_synthetic(&cc.artifacts)?;
         let entry = manifest.model(&cc.model)?.clone();
         let cfg = entry.config.clone();
         let lo = cc.layout;

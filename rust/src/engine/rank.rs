@@ -1,17 +1,18 @@
 //! Rank thread: one simulated GPU.
 //!
-//! Each rank owns a private PJRT CPU client (the `xla` crate's handles
-//! are thread-local by design), its weight shards, and its KV shard per
-//! layer, and executes [`Cmd`]s from the coordinator. The KV shard is
-//! preallocated at `seq_cap / kvp` capacity with per-request lengths —
-//! the shapes the AOT attention programs were compiled for.
+//! Each rank owns a private execution backend (PJRT handles are
+//! thread-local by design; the native backend keeps its scratch arenas
+//! rank-private), its weight shards, and its KV shard per layer, and
+//! executes [`Cmd`]s from the coordinator. The KV shard is preallocated
+//! at `seq_cap / kvp` capacity with per-request lengths — the shapes
+//! the attention programs were compiled/resolved for.
 
 use std::sync::mpsc::{Receiver, Sender};
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::runtime::artifacts::{EngineLayout, EngineModelConfig};
-use crate::runtime::{HostTensor, Manifest, Runtime};
+use crate::runtime::{DeviceTensor, HostTensor, Manifest, Runtime};
 
 use super::proto::{Cmd, Payload, Resp};
 use super::shard::{FfnShard, LayerShard};
@@ -106,24 +107,25 @@ pub struct RankInit {
 }
 
 /// Device-resident weight buffers for one layer (uploaded once at init;
-/// SPerf-L3: the hot path uploads only activations).
+/// SPerf-L3: the hot path uploads only activations). On the native
+/// backend an upload is an `Arc` refcount bump, so this costs nothing
+/// extra there.
 struct LayerDev {
-    wn1: xla::PjRtBuffer,
-    wq: xla::PjRtBuffer,
-    wk: xla::PjRtBuffer,
-    wv: xla::PjRtBuffer,
-    wo_slice: xla::PjRtBuffer,
-    wn2: xla::PjRtBuffer,
+    wn1: DeviceTensor,
+    wq: DeviceTensor,
+    wk: DeviceTensor,
+    wv: DeviceTensor,
+    wo_slice: DeviceTensor,
+    wn2: DeviceTensor,
     ffn: FfnDev,
 }
 
 enum FfnDev {
-    Dense { w1: xla::PjRtBuffer, wg: xla::PjRtBuffer, w2: xla::PjRtBuffer },
+    Dense { w1: DeviceTensor, wg: DeviceTensor, w2: DeviceTensor },
     Moe {
-        wr: xla::PjRtBuffer,
-        experts: Vec<(usize, xla::PjRtBuffer, xla::PjRtBuffer,
-                      xla::PjRtBuffer)>,
-        shared: (xla::PjRtBuffer, xla::PjRtBuffer, xla::PjRtBuffer),
+        wr: DeviceTensor,
+        experts: Vec<(usize, DeviceTensor, DeviceTensor, DeviceTensor)>,
+        shared: (DeviceTensor, DeviceTensor, DeviceTensor),
     },
 }
 

@@ -1,17 +1,21 @@
-//! Runtime: load AOT artifacts (HLO text, per the xla_extension 0.5.1
-//! interchange constraint) and execute them on the PJRT CPU client.
+//! Runtime: load AOT artifacts and execute them on a pluggable
+//! [`client::Backend`] — the PJRT CPU client over the lowered HLO, or
+//! the pure-Rust [`native`] backend that implements every role program
+//! directly (selected via `HELIX_BACKEND=native|pjrt`; native is the
+//! default whenever the offline stub `xla` crate is linked).
 //!
 //! This is the only module that touches the `xla` crate. Everything
 //! above it exchanges [`tensor::HostTensor`]s — `Arc`-backed
 //! copy-on-write buffers, so they are `Send` and clone as refcount
 //! bumps — rank threads each own a private [`client::Runtime`]
-//! (the crate's PJRT types are `Rc`-based and deliberately thread-local,
+//! (the PJRT types are `Rc`-based and deliberately thread-local,
 //! mirroring one-client-per-GPU-process deployments).
 
 pub mod artifacts;
 pub mod client;
+pub mod native;
 pub mod tensor;
 
 pub use artifacts::{Manifest, ModelEntry, ProgramSpec, TensorSpec, WeightRef};
-pub use client::Runtime;
+pub use client::{Backend, BackendKind, DeviceTensor, Runtime};
 pub use tensor::{AxisView, DType, HostTensor};

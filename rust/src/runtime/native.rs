@@ -1,0 +1,1024 @@
+//! Native CPU backend: pure-Rust execution of every role program.
+//!
+//! The PJRT path executes AOT-lowered HLO; this backend implements the
+//! same programs directly from their [`ProgramSpec`] shapes, so the
+//! engine executes on any machine — no HLO files, no PJRT shared
+//! library, no python. Numerics mirror `python/compile/model.py` and
+//! the L1 kernels (`python/compile/kernels/`): the blocked flash-decode
+//! kernel here is the line-for-line CPU twin of `flash_decode.py`
+//! (online softmax over `block_s` KV tiles, ragged `lens` masking,
+//! empty shards -> `o == 0`, `lse == NEG_INF`), and the LSE combine
+//! matches `combine.py`. Parity is pinned by golden vectors generated
+//! from `kernels/ref.py` (rust/tests/golden/).
+//!
+//! Hot-path discipline (PR-1):
+//! * every program's outputs live in a per-program scratch arena —
+//!   refilled in place each call and handed out as `Arc` refcount
+//!   bumps (COW detaches only if a consumer still holds last call's
+//!   buffer), so steady-state decode performs no output allocations;
+//! * intermediate buffers (`xn`, gate/score tiles, online-softmax
+//!   state) are reused `Vec`s that reach a fixed point after the first
+//!   call;
+//! * flash-decode fans out over batch-rows x KV-heads with scoped
+//!   threads (the `sim::sweep` worker pattern; `HELIX_NATIVE_THREADS`
+//!   overrides, 1 = serial), gated by a work threshold so tiny shapes
+//!   stay on one core.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::artifacts::{Manifest, ProgramSpec};
+use super::client::{check_inputs, Backend, DeviceTensor};
+use super::tensor::{DType, HostTensor};
+
+/// Finite stand-in for -inf (mirrors `flash_decode.NEG_INF`): keeps the
+/// online-softmax recurrence NaN-free when a whole shard is masked.
+pub const NEG_INF: f32 = -1.0e30;
+
+/// KV tile length streamed per flash-decode step; mirrors
+/// `configs.attn_block_size` so the native kernel blocks exactly like
+/// the compiled Pallas program.
+pub fn attn_block_size(shard_cap: usize) -> usize {
+    let mut bs = 64usize;
+    while bs > 1 && shard_cap % bs != 0 {
+        bs /= 2;
+    }
+    bs.max(1)
+}
+
+/// Worker count for the native kernels: all cores, overridable with
+/// `HELIX_NATIVE_THREADS` (1 = serial). Same contract as
+/// `sim::sweep::sweep_workers`.
+pub fn native_workers() -> usize {
+    if let Ok(s) = std::env::var("HELIX_NATIVE_THREADS") {
+        if let Ok(n) = s.trim().parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Below this many streamed KV elements per call, thread spawn overhead
+/// beats the parallel win and flash-decode stays serial. At tiny
+/// contexts decode stays single-core; past it (long-KV decode, the
+/// paper's regime) the batch-rows x KV-heads grid fans out.
+const PAR_THRESHOLD_ELEMS: usize = 16 * 1024;
+
+// ---------------------------------------------------------------------------
+// program resolution
+// ---------------------------------------------------------------------------
+
+/// What math a program performs, resolved once at `prepare` time from
+/// the role the manifest's `program_index` assigns it (shape parameters
+/// come from the `ProgramSpec` itself).
+#[derive(Debug, Clone, Copy)]
+enum Kernel {
+    Embed,
+    InProj,
+    Attn { block_s: usize },
+    Combine,
+    OutProj,
+    FfnDense,
+    Router { top_k: usize },
+    /// Routed or shared expert: SwiGLU without the pre-norm.
+    Expert,
+    Logits,
+    RefLayer { moe: bool, top_k: usize },
+}
+
+/// A resolved program: spec + kernel + its private scratch arena.
+struct NativeProgram {
+    spec: ProgramSpec,
+    kernel: Kernel,
+    /// Output arena, shaped per `spec.outputs`; refilled in place and
+    /// handed out as refcount bumps.
+    outs: Vec<HostTensor>,
+    scratch: KernelScratch,
+}
+
+/// Reusable intermediate buffers (sized on first use, then stable).
+#[derive(Default)]
+struct KernelScratch {
+    xn: Vec<f32>,
+    t1: Vec<f32>,
+    t2: Vec<f32>,
+    t3: Vec<f32>,
+    /// One online-softmax state block per flash-decode worker.
+    attn: Vec<AttnScratch>,
+}
+
+/// Per-worker flash-decode state: scores tile + running (m, l, acc).
+#[derive(Default, Clone)]
+pub struct AttnScratch {
+    s: Vec<f32>,
+    m: Vec<f32>,
+    l: Vec<f32>,
+    acc: Vec<f32>,
+}
+
+/// The native backend: manifest + resolved-program cache.
+pub struct NativeBackend {
+    /// program name -> (top_k, is_moe) of the owning model, from the
+    /// manifest's per-model program_index (reverse role index).
+    roles: HashMap<String, RoleInfo>,
+    /// Shared with the owning `Runtime` — not a deep copy.
+    manifest: Arc<Manifest>,
+    programs: HashMap<String, NativeProgram>,
+    workers: usize,
+}
+
+#[derive(Debug, Clone)]
+struct RoleInfo {
+    role: String,
+    top_k: usize,
+    moe: bool,
+}
+
+impl NativeBackend {
+    pub fn new(manifest: Arc<Manifest>) -> Result<NativeBackend> {
+        let mut roles = HashMap::new();
+        for entry in manifest.models.values() {
+            for (role, prog) in &entry.program_index {
+                roles.insert(prog.clone(), RoleInfo {
+                    role: role.clone(),
+                    top_k: entry.config.top_k,
+                    moe: entry.config.is_moe(),
+                });
+            }
+        }
+        Ok(NativeBackend {
+            roles,
+            manifest,
+            programs: HashMap::new(),
+            workers: native_workers(),
+        })
+    }
+
+    fn resolve(&self, name: &str, spec: &ProgramSpec) -> Result<Kernel> {
+        let info = self.roles.get(name).with_context(|| {
+            format!("program {name:?} is in no model's program_index; \
+                     the native backend resolves kernels by role")
+        })?;
+        let role = info.role.as_str();
+        Ok(if role == "embed" {
+            Kernel::Embed
+        } else if role == "logits" {
+            Kernel::Logits
+        } else if role == "router" {
+            Kernel::Router { top_k: info.top_k }
+        } else if role == "ref_layer" {
+            Kernel::RefLayer { moe: info.moe, top_k: info.top_k }
+        } else if role.starts_with("in_proj_") {
+            Kernel::InProj
+        } else if role.starts_with("attn_") {
+            // inputs: q, k_cache [B, Khl, Scap, Hsz], v_cache, lens
+            let scap = spec.inputs[1].shape[2];
+            Kernel::Attn { block_s: attn_block_size(scap) }
+        } else if role.starts_with("combine_") {
+            Kernel::Combine
+        } else if role.starts_with("out_proj_") {
+            Kernel::OutProj
+        } else if role.starts_with("ffn_") {
+            Kernel::FfnDense
+        } else if role.starts_with("expert_") || role.starts_with("shared_") {
+            Kernel::Expert
+        } else {
+            bail!("native backend: unknown role {role:?} for {name:?}")
+        })
+    }
+}
+
+impl Backend for NativeBackend {
+    fn prepare(&mut self, name: &str) -> Result<()> {
+        if self.programs.contains_key(name) {
+            return Ok(());
+        }
+        let spec = self.manifest.program(name)?.clone();
+        let kernel = self.resolve(name, &spec)?;
+        let outs = spec
+            .outputs
+            .iter()
+            .map(|s| match s.dtype {
+                DType::F32 => Ok(HostTensor::zeros(&s.shape)),
+                DType::I32 => HostTensor::from_i32(
+                    vec![0; s.shape.iter().product()], &s.shape),
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let mut scratch = KernelScratch::default();
+        if let Kernel::Attn { .. } = kernel {
+            // One state block per worker, capped at the task count
+            // (batch x local KV heads).
+            let tasks = spec.inputs[1].shape[0] * spec.inputs[1].shape[1];
+            scratch.attn =
+                vec![AttnScratch::default(); self.workers.min(tasks).max(1)];
+        }
+        self.programs.insert(name.to_string(),
+                             NativeProgram { spec, kernel, outs, scratch });
+        Ok(())
+    }
+
+    fn execute(&mut self, name: &str, inputs: &[&HostTensor])
+               -> Result<Vec<HostTensor>> {
+        self.prepare(name)?;
+        let workers = self.workers;
+        let prog = self.programs.get_mut(name).unwrap();
+        check_inputs(name, &prog.spec, inputs)?;
+        run_kernel(prog, inputs, workers)
+            .with_context(|| format!("native kernel {name}"))?;
+        Ok(prog.outs.to_vec())
+    }
+
+    fn upload(&self, t: &HostTensor) -> Result<DeviceTensor> {
+        // The native "device" is host memory: an upload is a refcount
+        // bump of the Arc storage.
+        Ok(DeviceTensor::Host(t.clone()))
+    }
+
+    fn execute_buffers(&mut self, name: &str, inputs: &[&DeviceTensor])
+                       -> Result<Vec<HostTensor>> {
+        let mut refs = Vec::with_capacity(inputs.len());
+        for t in inputs {
+            match t {
+                DeviceTensor::Host(h) => refs.push(h),
+                DeviceTensor::Pjrt(_) => {
+                    bail!("{name}: PJRT buffer handed to the native backend")
+                }
+            }
+        }
+        self.execute(name, &refs)
+    }
+
+    fn compiled_count(&self) -> usize {
+        self.programs.len()
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// kernel dispatch
+// ---------------------------------------------------------------------------
+
+fn run_kernel(prog: &mut NativeProgram, inputs: &[&HostTensor],
+              workers: usize) -> Result<()> {
+    let spec = &prog.spec;
+    let outs = &mut prog.outs;
+    let sc = &mut prog.scratch;
+    match prog.kernel {
+        Kernel::Embed => {
+            let tokens = inputs[0].i32s()?;
+            let wemb = inputs[1].f32s()?;
+            let (v, h) = (inputs[1].shape[0], inputs[1].shape[1]);
+            let x = outs[0].f32s_mut()?;
+            for (bi, &t) in tokens.iter().enumerate() {
+                // jnp.take in jit mode clips out-of-range indices.
+                let t = (t.max(0) as usize).min(v - 1);
+                x[bi * h..(bi + 1) * h]
+                    .copy_from_slice(&wemb[t * h..(t + 1) * h]);
+            }
+        }
+        Kernel::InProj => {
+            // x, pos, wn1, wq, wk, wv -> q [B,Qhl,Hsz], k, v
+            let (b, h) = (inputs[0].shape[0], inputs[0].shape[1]);
+            let pos = inputs[1].i32s()?;
+            let (qhl, hsz) = (spec.outputs[0].shape[1],
+                              spec.outputs[0].shape[2]);
+            let khl = spec.outputs[1].shape[1];
+            resize(&mut sc.xn, b * h);
+            rmsnorm_rows(inputs[0].f32s()?, inputs[2].f32s()?, b, h,
+                         &mut sc.xn);
+            let (q_t, rest) = outs.split_at_mut(1);
+            let (k_t, v_t) = rest.split_at_mut(1);
+            let q = q_t[0].f32s_mut()?;
+            let k = k_t[0].f32s_mut()?;
+            let v = v_t[0].f32s_mut()?;
+            matmul(&sc.xn, inputs[3].f32s()?, b, h, qhl * hsz, q);
+            matmul(&sc.xn, inputs[4].f32s()?, b, h, khl * hsz, k);
+            matmul(&sc.xn, inputs[5].f32s()?, b, h, khl * hsz, v);
+            rope_rows(q, pos, b, qhl, hsz);
+            rope_rows(k, pos, b, khl, hsz);
+        }
+        Kernel::Attn { block_s } => {
+            // q [B,Qhl,Hsz], k/v [B,Khl,Scap,Hsz], lens [B]
+            let (b, khl, scap, hsz) =
+                (inputs[1].shape[0], inputs[1].shape[1],
+                 inputs[1].shape[2], inputs[1].shape[3]);
+            let g = inputs[0].shape[1] / khl;
+            let lens = inputs[3].i32s()?;
+            // Streamed KV elements this call will touch: fan out only
+            // when the read is big enough to amortize thread spawns.
+            let live: usize = lens
+                .iter()
+                .map(|&l| (l.max(0) as usize).min(scap) * khl * hsz)
+                .sum();
+            let w = if live < PAR_THRESHOLD_ELEMS { 1 } else { workers };
+            let (o_t, lse_t) = outs.split_at_mut(1);
+            flash_decode_blocked(
+                inputs[0].f32s()?, inputs[1].f32s()?, inputs[2].f32s()?,
+                lens, b, khl, g, hsz, scap, block_s,
+                o_t[0].f32s_mut()?, lse_t[0].f32s_mut()?,
+                &mut sc.attn, w);
+        }
+        Kernel::Combine => {
+            // o_parts [R,B,Qs,Hsz], lse_parts [R,B,Qs] -> [B, Qs*Hsz]
+            let (r, b, qs, hsz) =
+                (inputs[0].shape[0], inputs[0].shape[1],
+                 inputs[0].shape[2], inputs[0].shape[3]);
+            kvp_combine(inputs[0].f32s()?, inputs[1].f32s()?, r, b, qs, hsz,
+                        outs[0].f32s_mut()?);
+        }
+        Kernel::OutProj => {
+            let (b, hs) = (inputs[0].shape[0], inputs[0].shape[1]);
+            let h = inputs[1].shape[1];
+            matmul(inputs[0].f32s()?, inputs[1].f32s()?, b, hs, h,
+                   outs[0].f32s_mut()?);
+        }
+        Kernel::FfnDense => {
+            // h1, wn2, w1, wg, w2 -> partial [B,H]
+            let (b, h) = (inputs[0].shape[0], inputs[0].shape[1]);
+            let fp = inputs[2].shape[1];
+            resize(&mut sc.xn, b * h);
+            rmsnorm_rows(inputs[0].f32s()?, inputs[1].f32s()?, b, h,
+                         &mut sc.xn);
+            swiglu(&sc.xn, inputs[2].f32s()?, inputs[3].f32s()?,
+                   inputs[4].f32s()?, b, h, fp, &mut sc.t1, &mut sc.t2,
+                   outs[0].f32s_mut()?);
+        }
+        Kernel::Router { top_k } => {
+            // h1, wn2, wr -> gates [B,E], hn [B,H]
+            let (b, h) = (inputs[0].shape[0], inputs[0].shape[1]);
+            let e = inputs[2].shape[1];
+            let (gates_t, hn_t) = outs.split_at_mut(1);
+            let hn = hn_t[0].f32s_mut()?;
+            rmsnorm_rows(inputs[0].f32s()?, inputs[1].f32s()?, b, h, hn);
+            resize(&mut sc.t1, b * e);
+            matmul(hn, inputs[2].f32s()?, b, h, e, &mut sc.t1);
+            let gates = gates_t[0].f32s_mut()?;
+            resize(&mut sc.t2, e);
+            for bi in 0..b {
+                topk_softmax_row(&sc.t1[bi * e..(bi + 1) * e], top_k,
+                                 &mut gates[bi * e..(bi + 1) * e],
+                                 &mut sc.t2);
+            }
+        }
+        Kernel::Expert => {
+            // hn, w1, wg, w2 -> partial [B,H] (no pre-norm)
+            let (b, h) = (inputs[0].shape[0], inputs[0].shape[1]);
+            let fp = inputs[1].shape[1];
+            swiglu(inputs[0].f32s()?, inputs[1].f32s()?, inputs[2].f32s()?,
+                   inputs[3].f32s()?, b, h, fp, &mut sc.t1, &mut sc.t2,
+                   outs[0].f32s_mut()?);
+        }
+        Kernel::Logits => {
+            // x, wnf, wlog -> logits [B,V], next [B] i32
+            let (b, h) = (inputs[0].shape[0], inputs[0].shape[1]);
+            let v = inputs[2].shape[1];
+            resize(&mut sc.xn, b * h);
+            rmsnorm_rows(inputs[0].f32s()?, inputs[1].f32s()?, b, h,
+                         &mut sc.xn);
+            let (lg_t, next_t) = outs.split_at_mut(1);
+            let lg = lg_t[0].f32s_mut()?;
+            matmul(&sc.xn, inputs[2].f32s()?, b, h, v, lg);
+            let next = next_t[0].i32s_mut()?;
+            for bi in 0..b {
+                next[bi] = argmax_first(&lg[bi * v..(bi + 1) * v]) as i32;
+            }
+        }
+        Kernel::RefLayer { moe, top_k } => {
+            ref_layer(spec, inputs, outs, sc, moe, top_k)?;
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// math building blocks (mirroring python/compile/model.py)
+// ---------------------------------------------------------------------------
+
+const EPS: f32 = 1e-5;
+
+fn resize(v: &mut Vec<f32>, n: usize) {
+    if v.len() != n {
+        v.resize(n, 0.0);
+    }
+}
+
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// RMSNorm each row: out = x * rsqrt(mean(x^2) + EPS) * w.
+fn rmsnorm_rows(x: &[f32], w: &[f32], b: usize, h: usize, out: &mut [f32]) {
+    for bi in 0..b {
+        let row = &x[bi * h..(bi + 1) * h];
+        let var = row.iter().map(|v| v * v).sum::<f32>() / h as f32;
+        let r = 1.0 / (var + EPS).sqrt();
+        for (o, (&xv, &wv)) in out[bi * h..(bi + 1) * h]
+            .iter_mut()
+            .zip(row.iter().zip(w))
+        {
+            *o = xv * r * wv;
+        }
+    }
+}
+
+/// Row-major matmul: out [b,n] = x [b,k] @ w [k,n], overwriting out.
+/// Streams `w` row-by-row (cache-friendly for the [in, out] weight
+/// layout every manifest program uses).
+fn matmul(x: &[f32], w: &[f32], b: usize, k: usize, n: usize,
+          out: &mut [f32]) {
+    for bi in 0..b {
+        let orow = &mut out[bi * n..(bi + 1) * n];
+        orow.fill(0.0);
+        for ki in 0..k {
+            let xv = x[bi * k + ki];
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w[ki * n..(ki + 1) * n];
+            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                *o += xv * wv;
+            }
+        }
+    }
+}
+
+/// Rotary embedding over `nh` heads of one batch of rows, in place.
+/// The angle depends only on (row position, frequency index), so the
+/// transcendentals (`powf`, `sin_cos`) are hoisted out of the head
+/// loop: `b * half` evaluations per call instead of `b * nh * half`.
+fn rope_rows(x: &mut [f32], pos: &[i32], b: usize, nh: usize, hsz: usize) {
+    let half = hsz / 2;
+    for bi in 0..b {
+        let p = pos[bi] as f32;
+        for i in 0..half {
+            let freq = 10000f32.powf(-(i as f32) / half as f32);
+            let (sin, cos) = (p * freq).sin_cos();
+            for hi in 0..nh {
+                let base = (bi * nh + hi) * hsz;
+                let x1 = x[base + i];
+                let x2 = x[base + half + i];
+                x[base + i] = x1 * cos - x2 * sin;
+                x[base + half + i] = x1 * sin + x2 * cos;
+            }
+        }
+    }
+}
+
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// SwiGLU partial: out [b,h] = (silu(x@wg) * (x@w1)) @ w2.
+#[allow(clippy::too_many_arguments)]
+fn swiglu(x: &[f32], w1: &[f32], wg: &[f32], w2: &[f32], b: usize, h: usize,
+          fp: usize, t_gate: &mut Vec<f32>, t_up: &mut Vec<f32>,
+          out: &mut [f32]) {
+    resize(t_gate, b * fp);
+    resize(t_up, b * fp);
+    matmul(x, wg, b, h, fp, t_gate);
+    matmul(x, w1, b, h, fp, t_up);
+    for (g, &u) in t_gate.iter_mut().zip(t_up.iter()) {
+        *g = silu(*g) * u;
+    }
+    matmul(t_gate, w2, b, fp, h, out);
+}
+
+/// First index of the maximum (jnp.argmax tie-break).
+fn argmax_first(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate().skip(1) {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Dense top-k softmax gates for one row (mirrors `model._topk_gates`:
+/// k rounds of argmax+mask, then softmax over the selected logits with
+/// zeros elsewhere).
+fn topk_softmax_row(logits: &[f32], k: usize, gates: &mut [f32],
+                    masked: &mut Vec<f32>) {
+    let e = logits.len();
+    masked.clear();
+    masked.extend_from_slice(logits);
+    gates.fill(0.0);
+    let mut m = f32::NEG_INFINITY;
+    for _ in 0..k.min(e) {
+        let idx = argmax_first(masked);
+        gates[idx] = 1.0; // mark selected
+        m = m.max(logits[idx]);
+        masked[idx] = f32::NEG_INFINITY;
+    }
+    let mut den = 0.0;
+    for i in 0..e {
+        if gates[i] > 0.0 {
+            let p = (logits[i] - m).exp();
+            gates[i] = p;
+            den += p;
+        }
+    }
+    for gv in gates.iter_mut() {
+        *gv /= den;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// flash-decode (blocked online softmax) + combine
+// ---------------------------------------------------------------------------
+
+impl AttnScratch {
+    fn ensure(&mut self, g: usize, hsz: usize, block_s: usize) {
+        resize(&mut self.s, g * block_s);
+        resize(&mut self.m, g);
+        resize(&mut self.l, g);
+        resize(&mut self.acc, g * hsz);
+    }
+}
+
+/// One (batch row, KV head) flash-decode task: online softmax over
+/// `block_s`-length KV tiles, exactly as `flash_decode.py` — except
+/// fully-masked trailing blocks are skipped, which is a no-op in the
+/// recurrence (alpha == 1, p == 0) and therefore bit-preserving.
+#[allow(clippy::too_many_arguments)]
+fn flash_task(q: &[f32], k: &[f32], v: &[f32], len: usize, g: usize,
+              hsz: usize, scap: usize, block_s: usize, scale: f32,
+              ws: &mut AttnScratch, o: &mut [f32], lse: &mut [f32]) {
+    ws.ensure(g, hsz, block_s);
+    ws.m.fill(NEG_INF);
+    ws.l.fill(0.0);
+    ws.acc.fill(0.0);
+    let len = len.min(scap);
+    let mut start = 0;
+    while start < len {
+        let bs = block_s.min(len - start);
+        // scores tile [G, bs]
+        for gq in 0..g {
+            let qrow = &q[gq * hsz..(gq + 1) * hsz];
+            for j in 0..bs {
+                let kvec = &k[(start + j) * hsz..(start + j + 1) * hsz];
+                ws.s[gq * block_s + j] = dot(qrow, kvec) * scale;
+            }
+        }
+        for gq in 0..g {
+            let srow = &mut ws.s[gq * block_s..gq * block_s + bs];
+            let mut m_new = ws.m[gq];
+            for &sv in srow.iter() {
+                m_new = m_new.max(sv);
+            }
+            let alpha = (ws.m[gq] - m_new).exp();
+            let mut psum = 0.0;
+            for sv in srow.iter_mut() {
+                *sv = (*sv - m_new).exp();
+                psum += *sv;
+            }
+            ws.l[gq] = ws.l[gq] * alpha + psum;
+            ws.m[gq] = m_new;
+            let acc = &mut ws.acc[gq * hsz..(gq + 1) * hsz];
+            if alpha != 1.0 {
+                for a in acc.iter_mut() {
+                    *a *= alpha;
+                }
+            }
+            for j in 0..bs {
+                let p = ws.s[gq * block_s + j];
+                if p == 0.0 {
+                    continue;
+                }
+                let vvec = &v[(start + j) * hsz..(start + j + 1) * hsz];
+                for (a, &vv) in acc.iter_mut().zip(vvec) {
+                    *a += p * vv;
+                }
+            }
+        }
+        start += bs;
+    }
+    for gq in 0..g {
+        let l = ws.l[gq];
+        let safe = l.max(1e-30);
+        for (ov, &av) in o[gq * hsz..(gq + 1) * hsz]
+            .iter_mut()
+            .zip(&ws.acc[gq * hsz..(gq + 1) * hsz])
+        {
+            *ov = av / safe;
+        }
+        lse[gq] = if l > 0.0 { ws.m[gq] + safe.ln() } else { NEG_INF };
+    }
+}
+
+/// Blocked flash-decode over a whole KV shard.
+///
+/// Layouts: q/o `[B, Kh, G, Hsz]` (a `[B, Qhl, Hsz]` tensor with
+/// `Qhl = Kh*G` has identical memory), k/v `[B, Kh, Scap, Hsz]`,
+/// lens `[B]`, lse `[B, Kh, G]`. Tasks (one per batch-row x KV-head)
+/// are split contiguously over scoped worker threads, each with its own
+/// [`AttnScratch`]; `workers <= 1` runs serially in the caller's
+/// thread. Results are identical at every worker count (each task's
+/// math is self-contained).
+#[allow(clippy::too_many_arguments)]
+pub fn flash_decode_blocked(q: &[f32], k: &[f32], v: &[f32], lens: &[i32],
+                            b: usize, kh: usize, g: usize, hsz: usize,
+                            scap: usize, block_s: usize, o: &mut [f32],
+                            lse: &mut [f32], scratch: &mut [AttnScratch],
+                            workers: usize) {
+    let scale = 1.0 / (hsz as f32).sqrt();
+    let tasks = b * kh;
+    let nw = workers
+        .min(tasks)
+        .min(scratch.len())
+        .max(1);
+    let task = |t: usize, ws: &mut AttnScratch, o_t: &mut [f32],
+                lse_t: &mut [f32]| {
+        let (bi, hi) = (t / kh, t % kh);
+        let len = lens[bi].max(0) as usize;
+        flash_task(&q[(bi * kh + hi) * g * hsz..][..g * hsz],
+                   &k[(bi * kh + hi) * scap * hsz..][..scap * hsz],
+                   &v[(bi * kh + hi) * scap * hsz..][..scap * hsz],
+                   len, g, hsz, scap, block_s, scale, ws, o_t, lse_t);
+    };
+    if nw <= 1 {
+        let ws = &mut scratch[0];
+        for (t, (o_t, lse_t)) in
+            o.chunks_mut(g * hsz).zip(lse.chunks_mut(g)).enumerate()
+        {
+            task(t, ws, o_t, lse_t);
+        }
+        return;
+    }
+    // Contiguous split of the task range over nw workers (the
+    // sim::sweep scoped-thread pattern; outputs are disjoint chunks so
+    // no synchronization is needed).
+    let per = tasks.div_ceil(nw);
+    std::thread::scope(|scope| {
+        let mut o_rest = o;
+        let mut lse_rest = lse;
+        for (w, ws) in scratch.iter_mut().enumerate().take(nw) {
+            let start = w * per;
+            if start >= tasks {
+                break;
+            }
+            let n = per.min(tasks - start);
+            let (o_chunk, o_r) = o_rest.split_at_mut(n * g * hsz);
+            let (lse_chunk, lse_r) = lse_rest.split_at_mut(n * g);
+            o_rest = o_r;
+            lse_rest = lse_r;
+            scope.spawn(move || {
+                for t in 0..n {
+                    task(start + t,
+                         ws,
+                         &mut o_chunk[t * g * hsz..(t + 1) * g * hsz],
+                         &mut lse_chunk[t * g..(t + 1) * g]);
+                }
+            });
+        }
+    });
+}
+
+/// KVP combine (flash-decoding rescale-and-sum), mirroring
+/// `combine.py`: o_parts [R,B,Qs,Hsz], lse_parts [R,B,Qs] ->
+/// out [B, Qs*Hsz]. Empty shards (lse <= NEG_INF/2) get zero weight;
+/// all-empty rows produce zeros.
+pub fn kvp_combine(o_parts: &[f32], lse_parts: &[f32], r: usize, b: usize,
+                   qs: usize, hsz: usize, out: &mut [f32]) {
+    for bi in 0..b {
+        for qi in 0..qs {
+            let mut m = NEG_INF;
+            for ri in 0..r {
+                m = m.max(lse_parts[(ri * b + bi) * qs + qi]);
+            }
+            let orow = &mut out[bi * qs * hsz + qi * hsz..][..hsz];
+            orow.fill(0.0);
+            let mut den = 0.0f32;
+            for ri in 0..r {
+                let lse = lse_parts[(ri * b + bi) * qs + qi];
+                if lse <= NEG_INF / 2.0 {
+                    continue;
+                }
+                let alpha = (lse - m).exp();
+                den += alpha;
+                let part = &o_parts[((ri * b + bi) * qs + qi) * hsz..][..hsz];
+                for (o, &p) in orow.iter_mut().zip(part) {
+                    *o += alpha * p;
+                }
+            }
+            let den = den.max(1e-30);
+            for o in orow.iter_mut() {
+                *o /= den;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// unsharded reference layer (the exactness oracle)
+// ---------------------------------------------------------------------------
+
+/// `model.ref_layer_{dense,moe}`: full in-proj + append-at-`lens` +
+/// attention over `lens+1` entries + out-proj + residual + FFN.
+/// The cache inputs are never mutated: the new token's K/V is
+/// substituted at its append position during the score loop (the jax
+/// version's `dynamic_update_slice` on a functional copy).
+fn ref_layer(spec: &ProgramSpec, inputs: &[&HostTensor],
+             outs: &mut [HostTensor], sc: &mut KernelScratch, moe: bool,
+             top_k: usize) -> Result<()> {
+    let (b, h) = (inputs[0].shape[0], inputs[0].shape[1]);
+    let (kh, cap, hsz) = (inputs[1].shape[1], inputs[1].shape[2],
+                          inputs[1].shape[3]);
+    let qh = spec.inputs[6].shape[1] / hsz; // wq [H, Qh*Hsz]
+    let g = qh / kh;
+    ensure!(g * kh == qh, "ref_layer: Qh {qh} not divisible by Kh {kh}");
+    let x = inputs[0].f32s()?;
+    let k_cache = inputs[1].f32s()?;
+    let v_cache = inputs[2].f32s()?;
+    let lens = inputs[3].i32s()?;
+    let pos = inputs[4].i32s()?;
+    let wn1 = inputs[5].f32s()?;
+
+    // --- in_proj (full heads) -------------------------------------------
+    let (y_t, rest) = outs.split_at_mut(1);
+    let (kn_t, vn_t) = rest.split_at_mut(1);
+    let k_new = kn_t[0].f32s_mut()?; // [B, Kh, Hsz]
+    let v_new = vn_t[0].f32s_mut()?;
+    resize(&mut sc.xn, b * h);
+    rmsnorm_rows(x, wn1, b, h, &mut sc.xn);
+    resize(&mut sc.t1, b * qh * hsz); // q
+    matmul(&sc.xn, inputs[6].f32s()?, b, h, qh * hsz, &mut sc.t1);
+    matmul(&sc.xn, inputs[7].f32s()?, b, h, kh * hsz, k_new);
+    matmul(&sc.xn, inputs[8].f32s()?, b, h, kh * hsz, v_new);
+    rope_rows(&mut sc.t1, pos, b, qh, hsz);
+    rope_rows(k_new, pos, b, kh, hsz);
+
+    // --- attention over lens+1 entries (two-pass softmax) ----------------
+    let scale = 1.0 / (hsz as f32).sqrt();
+    resize(&mut sc.t2, b * qh * hsz); // attention output, grouped layout
+    resize(&mut sc.t3, g * cap);      // scores for one (b, kh) pair
+    for bi in 0..b {
+        let l = lens[bi].max(0) as usize;
+        let valid = (l + 1).min(cap);
+        let upd = l.min(cap - 1); // dynamic_update_slice clamps
+        for hi in 0..kh {
+            let kc = &k_cache[(bi * kh + hi) * cap * hsz..][..cap * hsz];
+            let vc = &v_cache[(bi * kh + hi) * cap * hsz..][..cap * hsz];
+            let knew = &k_new[(bi * kh + hi) * hsz..][..hsz];
+            let vnew = &v_new[(bi * kh + hi) * hsz..][..hsz];
+            for gq in 0..g {
+                let qrow = &sc.t1[((bi * kh + hi) * g + gq) * hsz..][..hsz];
+                let srow = &mut sc.t3[gq * cap..gq * cap + valid];
+                for (p, sv) in srow.iter_mut().enumerate() {
+                    let kvec = if p == upd { knew }
+                               else { &kc[p * hsz..(p + 1) * hsz] };
+                    *sv = dot(qrow, kvec) * scale;
+                }
+                let m = srow.iter().fold(NEG_INF, |a, &s| a.max(s));
+                let mut l_sum = 0.0;
+                for sv in srow.iter_mut() {
+                    *sv = (*sv - m).exp();
+                    l_sum += *sv;
+                }
+                let orow = &mut sc.t2[((bi * kh + hi) * g + gq) * hsz..]
+                    [..hsz];
+                orow.fill(0.0);
+                for p in 0..valid {
+                    let pw = sc.t3[gq * cap + p];
+                    let vvec = if p == upd { vnew }
+                               else { &vc[p * hsz..(p + 1) * hsz] };
+                    for (o, &vv) in orow.iter_mut().zip(vvec) {
+                        *o += pw * vv;
+                    }
+                }
+                let den = l_sum.max(1e-30);
+                for o in orow.iter_mut() {
+                    *o /= den;
+                }
+            }
+        }
+    }
+
+    // --- out-proj + residual --------------------------------------------
+    let y = y_t[0].f32s_mut()?;
+    matmul(&sc.t2, inputs[9].f32s()?, b, qh * hsz, h, y); // o @ wo
+    for (yv, &xv) in y.iter_mut().zip(x) {
+        *yv += xv; // h1 = x + attn
+    }
+
+    // --- FFN -------------------------------------------------------------
+    let wn2 = inputs[10].f32s()?;
+    resize(&mut sc.xn, b * h);
+    if !moe {
+        // w1, wg, w2 at inputs 11..14
+        let fp = inputs[11].shape[1];
+        rmsnorm_rows(y, wn2, b, h, &mut sc.xn);
+        resize(&mut sc.t3, b * h);
+        swiglu(&sc.xn, inputs[11].f32s()?, inputs[12].f32s()?,
+               inputs[13].f32s()?, b, h, fp, &mut sc.t1, &mut sc.t2,
+               &mut sc.t3);
+        for (yv, &f) in y.iter_mut().zip(sc.t3.iter()) {
+            *yv += f;
+        }
+    } else {
+        // wr, we1, weg, we2, ws1, wsg, ws2 at inputs 11..18
+        let e = inputs[11].shape[1];
+        let fe = inputs[12].shape[2];
+        let fs = inputs[15].shape[1];
+        rmsnorm_rows(y, wn2, b, h, &mut sc.xn); // hn
+        let mut gates = vec![0.0f32; b * e];
+        let mut logits_buf = vec![0.0f32; b * e];
+        let mut masked = Vec::new();
+        matmul(&sc.xn, inputs[11].f32s()?, b, h, e, &mut logits_buf);
+        for bi in 0..b {
+            topk_softmax_row(&logits_buf[bi * e..(bi + 1) * e], top_k,
+                             &mut gates[bi * e..(bi + 1) * e], &mut masked);
+        }
+        let we1 = inputs[12].f32s()?;
+        let weg = inputs[13].f32s()?;
+        let we2 = inputs[14].f32s()?;
+        let mut part = vec![0.0f32; b * h];
+        resize(&mut sc.t3, b * h);
+        sc.t3.fill(0.0); // routed accumulator
+        for ei in 0..e {
+            swiglu(&sc.xn, &we1[ei * h * fe..(ei + 1) * h * fe],
+                   &weg[ei * h * fe..(ei + 1) * h * fe],
+                   &we2[ei * fe * h..(ei + 1) * fe * h], b, h, fe,
+                   &mut sc.t1, &mut sc.t2, &mut part);
+            for bi in 0..b {
+                let gv = gates[bi * e + ei];
+                if gv == 0.0 {
+                    continue;
+                }
+                for (acc, &p) in sc.t3[bi * h..(bi + 1) * h]
+                    .iter_mut()
+                    .zip(&part[bi * h..(bi + 1) * h])
+                {
+                    *acc += gv * p;
+                }
+            }
+        }
+        swiglu(&sc.xn, inputs[15].f32s()?, inputs[16].f32s()?,
+               inputs[17].f32s()?, b, h, fs, &mut sc.t1, &mut sc.t2,
+               &mut part); // shared expert
+        for ((yv, &rt), &sh) in y.iter_mut().zip(sc.t3.iter())
+            .zip(part.iter())
+        {
+            *yv += rt + sh;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_size_mirrors_configs() {
+        assert_eq!(attn_block_size(128), 64);
+        assert_eq!(attn_block_size(64), 64);
+        assert_eq!(attn_block_size(96), 32);
+        assert_eq!(attn_block_size(20), 4);
+        assert_eq!(attn_block_size(7), 1);
+    }
+
+    #[test]
+    fn rmsnorm_matches_definition() {
+        let x = [3.0f32, 4.0];
+        let w = [1.0f32, 2.0];
+        let mut out = [0.0f32; 2];
+        rmsnorm_rows(&x, &w, 1, 2, &mut out);
+        let r = 1.0 / ((12.5f32 + EPS).sqrt());
+        assert!((out[0] - 3.0 * r).abs() < 1e-6);
+        assert!((out[1] - 8.0 * r).abs() < 1e-6);
+    }
+
+    #[test]
+    fn matmul_small() {
+        // [1,2]x[2,2]: [1 2] @ [[1 2],[3 4]] = [7 10]
+        let x = [1.0f32, 2.0];
+        let w = [1.0f32, 2.0, 3.0, 4.0];
+        let mut out = [0.0f32; 2];
+        matmul(&x, &w, 1, 2, 2, &mut out);
+        assert_eq!(out, [7.0, 10.0]);
+    }
+
+    /// Unblocked two-pass softmax attention oracle (ref.py's
+    /// flash_decode_ref) for cross-checking the blocked kernel.
+    #[allow(clippy::too_many_arguments)]
+    fn attn_oracle(q: &[f32], k: &[f32], v: &[f32], len: usize, g: usize,
+                   hsz: usize, o: &mut [f32], lse: &mut [f32]) {
+        let scale = 1.0 / (hsz as f32).sqrt();
+        for gq in 0..g {
+            let qrow = &q[gq * hsz..(gq + 1) * hsz];
+            let scores: Vec<f32> = (0..len)
+                .map(|p| dot(qrow, &k[p * hsz..(p + 1) * hsz]) * scale)
+                .collect();
+            let m = scores.iter().fold(NEG_INF, |a, &s| a.max(s));
+            let ps: Vec<f32> = scores.iter().map(|&s| (s - m).exp())
+                .collect();
+            let l: f32 = ps.iter().sum();
+            let orow = &mut o[gq * hsz..(gq + 1) * hsz];
+            orow.fill(0.0);
+            for (p, &pw) in ps.iter().enumerate() {
+                for (ov, &vv) in orow.iter_mut()
+                    .zip(&v[p * hsz..(p + 1) * hsz])
+                {
+                    *ov += pw * vv;
+                }
+            }
+            for ov in orow.iter_mut() {
+                *ov /= l.max(1e-30);
+            }
+            lse[gq] = if len > 0 { m + l.max(1e-30).ln() } else { NEG_INF };
+        }
+    }
+
+    #[test]
+    fn blocked_flash_matches_oracle_ragged_and_boundary() {
+        let (b, kh, g, hsz, scap, block_s) = (3, 2, 2, 8, 32, 8);
+        let mut rng = crate::util::Rng::new(7);
+        let mut fill = |n: usize| -> Vec<f32> {
+            (0..n).map(|_| rng.f32_signed()).collect()
+        };
+        let q = fill(b * kh * g * hsz);
+        let k = fill(b * kh * scap * hsz);
+        let v = fill(b * kh * scap * hsz);
+        // ragged: empty, mid-block, exact block boundary
+        let lens = [0i32, 13, 16];
+        let mut o = vec![0.0f32; b * kh * g * hsz];
+        let mut lse = vec![0.0f32; b * kh * g];
+        let mut scratch = vec![AttnScratch::default(); 2];
+        flash_decode_blocked(&q, &k, &v, &lens, b, kh, g, hsz, scap,
+                             block_s, &mut o, &mut lse, &mut scratch, 2);
+        for bi in 0..b {
+            for hi in 0..kh {
+                let mut oo = vec![0.0f32; g * hsz];
+                let mut ll = vec![0.0f32; g];
+                attn_oracle(&q[(bi * kh + hi) * g * hsz..][..g * hsz],
+                            &k[(bi * kh + hi) * scap * hsz..][..scap * hsz],
+                            &v[(bi * kh + hi) * scap * hsz..][..scap * hsz],
+                            lens[bi] as usize, g, hsz, &mut oo, &mut ll);
+                for (a, e) in o[(bi * kh + hi) * g * hsz..][..g * hsz]
+                    .iter()
+                    .zip(&oo)
+                {
+                    assert!((a - e).abs() < 1e-5, "o {a} vs {e}");
+                }
+                for (a, e) in lse[(bi * kh + hi) * g..][..g].iter().zip(&ll)
+                {
+                    assert!((a - e).abs() < 1e-4, "lse {a} vs {e}");
+                }
+            }
+        }
+        // empty row contract
+        assert!(o[..kh * g * hsz].iter().all(|&x| x == 0.0));
+        assert!(lse[..kh * g].iter().all(|&x| x == NEG_INF));
+    }
+
+    #[test]
+    fn combine_weights_empty_shards_zero() {
+        // r=2, b=1, qs=1, hsz=2: shard 0 empty, shard 1 has the mass.
+        let o_parts = [0.0f32, 0.0, 3.0, 5.0];
+        let lse_parts = [NEG_INF, 0.7];
+        let mut out = [0.0f32; 2];
+        kvp_combine(&o_parts, &lse_parts, 2, 1, 1, 2, &mut out);
+        assert!((out[0] - 3.0).abs() < 1e-6 && (out[1] - 5.0).abs() < 1e-6);
+        // all-empty -> zeros
+        let lse_parts = [NEG_INF, NEG_INF];
+        kvp_combine(&o_parts, &lse_parts, 2, 1, 1, 2, &mut out);
+        assert_eq!(out, [0.0, 0.0]);
+    }
+
+    #[test]
+    fn combine_matches_single_shard_identity() {
+        // One live shard must pass through unchanged.
+        let o_parts = [1.0f32, -2.0, 0.5, 4.0];
+        let lse_parts = [0.3f32, -1.1];
+        let mut out = [0.0f32; 4];
+        kvp_combine(&o_parts, &lse_parts, 1, 2, 1, 2, &mut out);
+        assert_eq!(out, o_parts);
+    }
+
+    #[test]
+    fn topk_gates_select_and_normalize() {
+        let logits = [1.0f32, 3.0, 2.0, -1.0];
+        let mut gates = [0.0f32; 4];
+        let mut masked = Vec::new();
+        topk_softmax_row(&logits, 2, &mut gates, &mut masked);
+        assert_eq!(gates[0], 0.0);
+        assert_eq!(gates[3], 0.0);
+        let e1 = (3.0f32 - 3.0).exp();
+        let e2 = (2.0f32 - 3.0).exp();
+        assert!((gates[1] - e1 / (e1 + e2)).abs() < 1e-6);
+        assert!((gates[2] - e2 / (e1 + e2)).abs() < 1e-6);
+        assert!((gates.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn argmax_first_tie_break() {
+        assert_eq!(argmax_first(&[1.0, 3.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax_first(&[5.0]), 0);
+    }
+}

@@ -31,7 +31,7 @@ fn parse_layout(manifest: &Manifest, model: &str, key: Option<&str>)
 fn cluster_from(args: &Args, verify: bool) -> Result<HelixCluster> {
     let model = args.opt_or("model", "tiny_gqa").to_string();
     let root = Manifest::default_root();
-    let manifest = Manifest::load(&root)?;
+    let manifest = Manifest::load_or_synthetic(&root)?;
     let layout = parse_layout(&manifest, &model, args.opt("layout"))?;
     let mut cc = ClusterConfig::new(&model, layout);
     cc.artifacts = root;
@@ -117,7 +117,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// `helix layouts`: show the built layouts for a model (Fig 2 view).
 fn cmd_layouts(args: &Args) -> Result<()> {
     let root = Manifest::default_root();
-    let manifest = Manifest::load(&root)?;
+    let manifest = Manifest::load_or_synthetic(&root)?;
     let model = args.opt_or("model", "tiny_gqa");
     let entry = manifest.model(model)?;
     let c = &entry.config;

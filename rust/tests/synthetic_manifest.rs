@@ -1,0 +1,68 @@
+//! The three-way synthetic-manifest drift pin, rust leg.
+//!
+//! `tests/golden/synthetic_manifest/manifest.json` is written by
+//! `python/compile/synthetic.py` (via `make golden`), whose agreement
+//! with `aot.py` is pinned by
+//! `test_aot_manifest.py::test_synthetic_manifest_matches_aot`. This
+//! test closes the triangle: the in-memory `Manifest::synthetic()` the
+//! native backend runs on must agree with that fixture on every
+//! program shape, role key, layout, config field and weight ref — so
+//! none of the three manifest producers can drift silently.
+
+use std::path::Path;
+
+use helix::runtime::Manifest;
+
+fn fixture() -> Manifest {
+    let root = format!("{}/tests/golden/synthetic_manifest",
+                       env!("CARGO_MANIFEST_DIR"));
+    Manifest::load(Path::new(&root))
+        .expect("fixture manifest (regenerate with `make golden`)")
+}
+
+#[test]
+fn rust_synthetic_matches_python_synthetic() {
+    let disk = fixture();
+    let mem = Manifest::synthetic();
+    assert!(disk.synthetic && mem.synthetic);
+
+    // Same program set, same specs (hlo paths differ only by root).
+    let disk_names: Vec<&String> = disk.programs.keys().collect();
+    let mem_names: Vec<&String> = mem.programs.keys().collect();
+    assert_eq!(disk_names, mem_names, "program sets differ");
+    for (name, dp) in &disk.programs {
+        let mp = &mem.programs[name];
+        assert_eq!(dp.inputs, mp.inputs, "{name}: input specs differ");
+        assert_eq!(dp.outputs, mp.outputs, "{name}: output specs differ");
+    }
+
+    // Same models: config, layouts, role index, weight refs.
+    assert_eq!(disk.models.keys().collect::<Vec<_>>(),
+               mem.models.keys().collect::<Vec<_>>());
+    for (mname, de) in &disk.models {
+        let me = &mem.models[mname];
+        assert_eq!(de.config, me.config, "{mname}: config differs");
+        assert_eq!(de.layouts, me.layouts, "{mname}: layouts differ");
+        assert_eq!(de.program_index, me.program_index,
+                   "{mname}: role index differs");
+        assert_eq!(de.wemb, me.wemb, "{mname}: wemb ref differs");
+        assert_eq!(de.wnf, me.wnf, "{mname}: wnf ref differs");
+        assert_eq!(de.wlog, me.wlog, "{mname}: wlog ref differs");
+        assert_eq!(de.layers, me.layers, "{mname}: layer weight refs");
+    }
+}
+
+#[test]
+fn synthetic_weights_resolve_for_fixture_manifest() {
+    // A synthetic manifest loaded from disk (no weight files next to
+    // it) must generate weights exactly like the in-memory twin: the
+    // init is keyed by the relative path, not the root.
+    let disk = fixture();
+    let mem = Manifest::synthetic();
+    let de = disk.model("tiny_gqa").unwrap();
+    let me = mem.model("tiny_gqa").unwrap();
+    let a = disk.load_weight(&de.wemb).unwrap();
+    let b = mem.load_weight(&me.wemb).unwrap();
+    assert_eq!(a, b, "disk-rooted and in-memory synthetic weights \
+                      must be identical");
+}

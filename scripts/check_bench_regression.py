@@ -1,0 +1,84 @@
+#!/usr/bin/env python3
+"""Gate BENCH_engine.json against the checked-in baseline.
+
+Usage:
+    python3 scripts/check_bench_regression.py CURRENT BASELINE [--threshold T]
+
+Compares every ``*/tokens_per_s`` metric present in both reports and
+fails (exit 1) if any regresses by more than T (default 0.10 = 10%).
+A missing baseline is not a failure: the first measured run prints its
+numbers and asks for the baseline to be committed — that run *is* the
+baseline. A current report whose status says "skipped" fails: with the
+native backend the engine bench must always execute.
+
+Stdlib only (the CI runner needs nothing installed).
+"""
+
+import argparse
+import json
+import os
+import sys
+
+
+def tokens_metrics(report: dict) -> dict:
+    return {k: v for k, v in report.get("metrics", {}).items()
+            if k.endswith("/tokens_per_s") and isinstance(v, (int, float))}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current")
+    ap.add_argument("baseline")
+    ap.add_argument("--threshold", type=float, default=0.10)
+    args = ap.parse_args()
+
+    with open(args.current) as f:
+        cur = json.load(f)
+    status = cur.get("metrics", {}).get("status", "")
+    if str(status).startswith("skipped"):
+        print(f"FAIL: bench did not execute (status={status!r}); the "
+              f"native backend must always run the engine bench")
+        return 1
+    cur_tok = tokens_metrics(cur)
+    if not cur_tok:
+        print("FAIL: no */tokens_per_s metrics in the current report")
+        return 1
+
+    if not os.path.exists(args.baseline):
+        print(f"no baseline at {args.baseline} — recording run "
+              f"(commit the current report there to start gating):")
+        for k in sorted(cur_tok):
+            print(f"  {k}: {cur_tok[k]:.3f}")
+        return 0
+
+    with open(args.baseline) as f:
+        base = json.load(f)
+    base_tok = tokens_metrics(base)
+
+    failures, lines = [], []
+    for k in sorted(set(cur_tok) & set(base_tok)):
+        c, b = cur_tok[k], base_tok[k]
+        delta = (c - b) / b if b else 0.0
+        mark = "ok"
+        if delta < -args.threshold:
+            mark = "REGRESSION"
+            failures.append(k)
+        lines.append(f"  {k}: {b:.3f} -> {c:.3f} ({delta:+.1%}) {mark}")
+    print(f"tokens/s vs baseline (threshold -{args.threshold:.0%}):")
+    print("\n".join(lines) if lines else "  (no overlapping metrics)")
+
+    only_base = sorted(set(base_tok) - set(cur_tok))
+    if only_base:
+        print("FAIL: baseline metrics missing from the current run "
+              "(bench coverage shrank): " + ", ".join(only_base))
+        return 1
+    if failures:
+        print(f"FAIL: {len(failures)} tokens/s regression(s) > "
+              f"{args.threshold:.0%}")
+        return 1
+    print("bench gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -9,7 +9,7 @@
 ARTIFACTS ?= artifacts
 PY ?= python3
 
-.PHONY: build test bench artifacts artifacts-synthetic golden clean-artifacts
+.PHONY: build test bench pareto artifacts artifacts-synthetic golden clean-artifacts
 
 # Tier-1 gate (ROADMAP.md).
 build:
@@ -23,6 +23,15 @@ test:
 # scripts/check_bench_regression.py.
 bench:
 	cd rust && cargo bench --bench engine_decode
+
+# Fig 5/6-style Pareto frontier: run the planner's sweep (JSON plans +
+# frontiers) and render it (PNG with matplotlib, SVG without).
+# Override the model with `make pareto PARETO_MODEL=llama-405b`.
+PARETO_MODEL ?= deepseek-r1
+pareto:
+	cd rust && cargo run --release -- plan --model $(PARETO_MODEL) \
+		--sweep --out ../pareto_$(PARETO_MODEL).json
+	$(PY) scripts/plot_pareto.py pareto_$(PARETO_MODEL).json
 
 # Full AOT artifacts: HLO text + weight files + manifest (requires jax;
 # this is what the PJRT backend executes).

@@ -1,46 +1,33 @@
 //! Regenerate the paper's Pareto frontiers (Fig 5: DeepSeek-R1, Fig 6:
-//! Llama-405B) from the analytic GB200 simulator and print the headline
-//! ratios the paper reports in S3.2.
+//! Llama-405B) through the `helix::plan` API and print the headline
+//! ratios the paper reports in S3.2, plus the top-ranked executable
+//! plans under a TTL budget — this example doubles as Planner API docs.
 //!
 //!     cargo run --release --example pareto_sweep
 
 use helix::config::{Hardware, ModelSpec};
-use helix::sim::decode::Strategy;
-use helix::sim::sweep::{self, SweepBounds};
-use helix::sim::{pareto, Frontier};
+use helix::plan::Planner;
+use helix::sim::pareto;
 use helix::util::table::{fmt_ratio, Table};
 
-fn frontier(m: &ModelSpec, hw: &Hardware, s: Strategy,
-            b: &SweepBounds) -> Frontier {
-    Frontier::from_points(sweep::sweep_strategy(m, hw, s, b))
-}
-
 fn report(m: &ModelSpec) {
-    let hw = Hardware::gb200_nvl72();
-    let bounds = SweepBounds::default();
+    // One Planner per model: it owns the sweep bounds, runs the
+    // multi-threaded sweep, and hands back both the Pareto frontiers
+    // (for the figures) and the ranked plans (for serving).
+    let planner = Planner::from_spec(*m, Hardware::gb200_nvl72());
     println!("=== {} @ 1M context, <= {} GPUs ({} configurations) ===",
-             m.name, bounds.max_gpus, sweep::config_count(m, &bounds));
+             m.name, planner.bounds_ref().max_gpus, planner.config_count());
 
-    let base = Frontier::from_points(sweep::sweep_baseline(m, &hw, &bounds));
-    let helix = frontier(m, &hw, Strategy::Helix { hopb: true }, &bounds);
-    let medha = frontier(m, &hw, Strategy::MedhaKvp, &bounds);
-
+    // Sweep once; frontiers AND the ranked plans derive from the same
+    // point set.
+    let points = planner.sweep();
+    let (helix, base) = planner.frontiers_from(&points);
     let ni = base.max_interactivity();
     let nt = base.max_throughput();
     let mut t = Table::new(["frontier", "points", "max tok/s/user (norm)",
                             "max tok/s/gpu (norm)"]);
     for (name, f) in [("baseline (best TP/PP/KVP/EP)", &base),
-                      ("medha-style vanilla KVP", &medha),
                       ("helix", &helix)] {
-        if f.is_empty() {
-            // For DeepSeek-R1 this is the expected outcome: MLA forces
-            // Medha's tied TP to 1, which cannot hold the 671B MoE on a
-            // single GPU — the paper likewise notes a direct Medha
-            // comparison "is not applicable" for R1 (S3.2).
-            t.row([name.to_string(), "0 (infeasible)".into(), "-".into(),
-                   "-".into()]);
-            continue;
-        }
         t.row([name.to_string(), format!("{}", f.points.len()),
                format!("{:.3}", f.max_interactivity() / ni),
                format!("{:.3}", f.max_throughput() / nt)]);
@@ -49,9 +36,28 @@ fn report(m: &ModelSpec) {
 
     let h = pareto::headline(&helix, &base);
     println!("helix vs baseline: interactivity {} | throughput {} | \
-              batch capacity {}\n",
+              batch capacity {}",
              fmt_ratio(h.interactivity_gain), fmt_ratio(h.throughput_gain),
              fmt_ratio(h.batch_gain));
+
+    // The planner's actual product: ranked executable plans under a TTL
+    // budget (here: the TTL of the baseline's most interactive point,
+    // doubled — a realistic "interactive but not extreme" budget).
+    let ttl_ms = 2e3 / ni.max(1e-30);
+    let plans = planner.clone().ttl_budget_ms(ttl_ms).plans_from(&points);
+    println!("top plans under a {ttl_ms:.2} ms TTL budget \
+              ({} feasible):", plans.len());
+    let mut t = Table::new(["rank", "layout", "batch", "gpus", "ttl ms",
+                            "tok/s/gpu", "kv budget (tokens)", "strategy"]);
+    for (i, p) in plans.iter().take(5).enumerate() {
+        t.row([format!("{i}"), p.layout.key(), format!("{}", p.batch),
+               format!("{}", p.gpus), format!("{:.3}", p.predicted.ttl_ms),
+               format!("{:.4}", p.predicted.tokens_per_gpu_s),
+               format!("{}", p.kv_budget), p.strategy.clone()]);
+    }
+    print!("{}", t.render());
+    println!("(pipe the same thing into a live cluster: `helix plan --model \
+              <m> --ttl {ttl_ms:.1} | helix serve --plan -`)\n");
 }
 
 fn main() {

@@ -1,32 +1,43 @@
-//! Quickstart: load the AOT artifacts, stand up a 4-rank Helix cluster,
-//! decode a few tokens, and verify exactness against the unsharded
-//! reference executable.
+//! Quickstart: let the planner pick a layout for the tiny GQA model,
+//! boot a Helix cluster from that plan, decode a few tokens, and verify
+//! exactness against the unsharded reference executable.
 //!
-//! Run after `make artifacts`:
+//! Runs anywhere (the native backend synthesizes artifacts); after
+//! `make artifacts` the same flow executes the AOT HLO via PJRT.
 //!     cargo run --release --example quickstart
 
 use anyhow::Result;
 
+use helix::config::Hardware;
 use helix::engine::{ClusterConfig, HelixCluster};
-use helix::runtime::artifacts::EngineLayout;
+use helix::plan::Planner;
 
 fn main() -> Result<()> {
-    // Helix layout for the tiny GQA model: KV cache sharded 2-way along
-    // the sequence (KVP), attention heads 2-way (TPA <= K), and the FFN
-    // re-provisioned across all 4 ranks (TPF = N).
-    let layout = EngineLayout { kvp: 2, tpa: 2, tpf: 4, ep: 1 };
-    let mut cc = ClusterConfig::new("tiny_gqa", layout);
-    cc.verify = true; // mirror every step through the reference program
+    // The planner runs the paper's sweep for this model; engine models
+    // are automatically restricted to the layouts their artifacts were
+    // built for, so `best()` is always bootable.
+    let plan = Planner::new("tiny_gqa", Hardware::gb200_nvl72())?.best()?;
+    println!("planned {} [{}]: predicted {:.4} ms/token, {:.4} tok/s/gpu",
+             plan.model, plan.layout.key(), plan.predicted.ttl_ms,
+             plan.predicted.tokens_per_gpu_s);
 
-    println!("spawning {} ranks (each owns a PJRT CPU client + KV shard)...",
-             layout.n());
+    // `HelixCluster::from_plan(&plan)?` is the one-liner; going through
+    // ClusterConfig lets us also mirror every step through the
+    // unsharded reference program.
+    let mut cc = ClusterConfig::from_plan(&plan);
+    cc.verify = true;
+
+    println!("spawning {} ranks (each owns a backend + KV shard)...",
+             plan.layout.n());
     let mut cluster = HelixCluster::new(cc)?;
     for slot in 0..cluster.batch() {
         cluster.open_slot(slot)?;
     }
 
-    // Greedy-decode a short continuation for a batch of 4 prompts.
-    let mut tokens = vec![11i32, 42, 77, 123];
+    // Greedy-decode a short continuation for a batch of prompts.
+    let mut tokens: Vec<i32> = (0..cluster.batch() as i32)
+        .map(|i| 11 + 31 * i)
+        .collect();
     println!("prompt tokens: {tokens:?}");
     for step in 0..8 {
         let (next, m) = cluster.decode_step(&tokens)?;

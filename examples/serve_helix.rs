@@ -1,8 +1,13 @@
 //! End-to-end driver (DESIGN.md S4 "S3 headline"): serve batched decode
-//! requests through the full stack — router -> dynamic batcher -> Helix
-//! cluster -> PJRT-executed AOT programs — and report latency/throughput
-//! for Helix vs the tied-TP baseline layouts, with and without HOP-B
-//! under an emulated NVLink.
+//! requests through the full stack — planner -> router -> dynamic
+//! batcher -> Helix cluster -> backend-executed programs — and report
+//! latency/throughput for Helix vs the tied-TP baseline layouts, with
+//! and without HOP-B under an emulated NVLink.
+//!
+//! The first scenario is fully planned: `Planner::best()` picks the
+//! layout and `Server::from_plan` boots it (the `helix plan | helix
+//! serve --plan -` path as a library call). The remaining scenarios pin
+//! specific layouts on purpose — they are the paper's comparison grid.
 //!
 //! Results from this driver are recorded in EXPERIMENTS.md.
 //!
@@ -10,8 +15,9 @@
 
 use anyhow::Result;
 
+use helix::config::{Hardware, Layout};
 use helix::engine::{ClusterConfig, CommModel, HelixCluster};
-use helix::runtime::artifacts::EngineLayout;
+use helix::plan::Planner;
 use helix::serve::{Server, Workload};
 use helix::util::cli::Args;
 use helix::util::table::Table;
@@ -19,9 +25,27 @@ use helix::util::table::Table;
 struct Scenario {
     name: &'static str,
     model: &'static str,
-    layout: EngineLayout,
+    layout: Layout,
     hopb: bool,
     comm_scale: f64,
+}
+
+fn report_row(name: &str, server: &mut Server, workload: &Workload,
+              expect_exact: bool) -> Result<String> {
+    let report = server.run(workload, 1_000_000)?;
+    let m = &report.metrics;
+    assert_eq!(report.completed, workload.num_requests,
+               "{name}: not all requests completed");
+    if expect_exact {
+        let d = report.max_ref_diff.expect("verify mode records the diff");
+        assert!(d < 1e-3, "{name}: diverged from reference ({d:.2e})");
+    }
+    Ok(format!(
+        "{}\t{:.1}\t{:.1}\t{:.1}\t{:.1}\t{:.3}\t{:.2e}",
+        name, m.ttl_mean() * 1e3, m.ttl_p99() * 1e3, m.tokens_per_sec(),
+        m.tokens_per_sec() / report.gpus as f64, m.comm,
+        report.max_ref_diff.unwrap_or(f32::NAN),
+    ))
 }
 
 fn run_scenario(s: &Scenario, workload: &Workload) -> Result<String> {
@@ -33,19 +57,7 @@ fn run_scenario(s: &Scenario, workload: &Workload) -> Result<String> {
     }
     let cluster = HelixCluster::new(cc)?;
     let mut server = Server::new(cluster);
-    let report = server.run(workload, 1_000_000)?;
-    let m = &report.metrics;
-    assert_eq!(report.completed, workload.num_requests,
-               "{}: not all requests completed", s.name);
-    if let Some(d) = report.max_ref_diff {
-        assert!(d < 1e-3, "{}: diverged from reference ({d:.2e})", s.name);
-    }
-    Ok(format!(
-        "{}\t{:.1}\t{:.1}\t{:.1}\t{:.1}\t{:.3}\t{:.2e}",
-        s.name, m.ttl_mean() * 1e3, m.ttl_p99() * 1e3, m.tokens_per_sec(),
-        m.tokens_per_sec() / report.gpus as f64, m.comm,
-        report.max_ref_diff.unwrap_or(f32::NAN),
-    ))
+    report_row(s.name, &mut server, workload, true)
 }
 
 fn main() -> Result<()> {
@@ -65,25 +77,25 @@ fn main() -> Result<()> {
     let scale = args.opt_f64("comm-scale", 2000.0)?;
     let scenarios = [
         Scenario { name: "helix kvp2xtpa2", model: "tiny_gqa",
-                   layout: EngineLayout { kvp: 2, tpa: 2, tpf: 4, ep: 1 },
+                   layout: Layout::helix(2, 2, 4, 1),
                    hopb: false, comm_scale: 0.0 },
         Scenario { name: "pure-kvp kvp4", model: "tiny_gqa",
-                   layout: EngineLayout { kvp: 4, tpa: 1, tpf: 4, ep: 1 },
+                   layout: Layout::helix(4, 1, 4, 1),
                    hopb: false, comm_scale: 0.0 },
         Scenario { name: "tp4 (tp=K)", model: "tiny_gqa",
-                   layout: EngineLayout { kvp: 1, tpa: 4, tpf: 4, ep: 1 },
+                   layout: Layout::helix(1, 4, 4, 1),
                    hopb: false, comm_scale: 0.0 },
         Scenario { name: "helix+nvlink hopb=off", model: "tiny_gqa",
-                   layout: EngineLayout { kvp: 2, tpa: 2, tpf: 4, ep: 1 },
+                   layout: Layout::helix(2, 2, 4, 1),
                    hopb: false, comm_scale: scale },
         Scenario { name: "helix+nvlink hopb=on", model: "tiny_gqa",
-                   layout: EngineLayout { kvp: 2, tpa: 2, tpf: 4, ep: 1 },
+                   layout: Layout::helix(2, 2, 4, 1),
                    hopb: true, comm_scale: scale },
         Scenario { name: "moe helix tpf2xep2", model: "tiny_moe",
-                   layout: EngineLayout { kvp: 2, tpa: 2, tpf: 2, ep: 2 },
+                   layout: Layout::helix(2, 2, 2, 2),
                    hopb: false, comm_scale: 0.0 },
         Scenario { name: "mla pure-kvp kvp4", model: "tiny_mla",
-                   layout: EngineLayout { kvp: 4, tpa: 1, tpf: 4, ep: 1 },
+                   layout: Layout::helix(4, 1, 4, 1),
                    hopb: false, comm_scale: 0.0 },
     ];
 
@@ -91,6 +103,17 @@ fn main() -> Result<()> {
              workload.num_requests, workload.prompt_len, workload.gen_len);
     let mut table = Table::new(["scenario", "TTL ms", "p99 ms", "tok/s",
                                 "tok/s/gpu", "comm s", "max|Δref|"]);
+
+    // Scenario 0: end-to-end planned. The planner ranks the artifact
+    // layouts under the sweep and Server::from_plan boots the winner
+    // with the plan's KV budget as the admission budget.
+    let plan = Planner::new("tiny_gqa", Hardware::gb200_nvl72())?.best()?;
+    eprintln!("  planned: tiny_gqa [{}] (predicted {:.4} ms/token)",
+              plan.layout.key(), plan.predicted.ttl_ms);
+    let mut planned = Server::from_plan(&plan)?;
+    let row = report_row("planned (auto)", &mut planned, &workload, false)?;
+    table.row(row.split('\t').collect::<Vec<_>>());
+
     for s in &scenarios {
         let row = run_scenario(s, &workload)?;
         let cells: Vec<&str> = row.split('\t').collect();
@@ -98,8 +121,8 @@ fn main() -> Result<()> {
         eprintln!("  done: {}", s.name);
     }
     println!("{}", table.render());
-    println!("All scenarios completed every request and stayed within \
-              1e-3 of the\nunsharded reference — the serving path is \
-              exact end to end.");
+    println!("All pinned scenarios completed every request and stayed \
+              within 1e-3 of the\nunsharded reference — the serving path \
+              is exact end to end.");
     Ok(())
 }

@@ -16,7 +16,7 @@
 //! diffs across PRs (see scripts/check_bench_regression.py).
 
 use helix::engine::{ClusterConfig, CommModel, HelixCluster};
-use helix::runtime::artifacts::EngineLayout;
+use helix::config::Layout;
 use helix::runtime::Manifest;
 use helix::util::bench::{alloc_count, bench, CountingAlloc, JsonReport};
 
@@ -24,7 +24,7 @@ use helix::util::bench::{alloc_count, bench, CountingAlloc, JsonReport};
 static ALLOC: CountingAlloc = CountingAlloc;
 
 fn step_bench(report: &mut JsonReport, name: &str, model: &str,
-              layout: EngineLayout, hopb: bool, a2a_bw: f64) {
+              layout: Layout, hopb: bool, a2a_bw: f64) {
     let mut cc = ClusterConfig::new(model, layout);
     cc.hopb = hopb;
     if a2a_bw > 0.0 {
@@ -104,7 +104,7 @@ fn write_report(report: &JsonReport) {
 /// attention-dominated, with attn ns growing ~linearly in the KV length
 /// (the paper's DeepSeek/Llama Fig 1 argument, measured for real).
 fn context_scaling(report: &mut JsonReport, model: &str,
-                   layout: EngineLayout) {
+                   layout: Layout) {
     let cc = ClusterConfig::new(model, layout);
     let mut cluster = match HelixCluster::new(cc) {
         Ok(c) => c,
@@ -169,26 +169,26 @@ fn main() {
     }
     println!("## engine decode-step latency (backend: {backend})");
     step_bench(&mut report, "engine/tiny_gqa/helix_kvp2_tpa2", "tiny_gqa",
-               EngineLayout { kvp: 2, tpa: 2, tpf: 4, ep: 1 }, false, 0.0);
+               Layout::helix(2, 2, 4, 1), false, 0.0);
     step_bench(&mut report, "engine/tiny_gqa/pure_kvp4", "tiny_gqa",
-               EngineLayout { kvp: 4, tpa: 1, tpf: 4, ep: 1 }, false, 0.0);
+               Layout::helix(4, 1, 4, 1), false, 0.0);
     step_bench(&mut report, "engine/tiny_gqa/tp4", "tiny_gqa",
-               EngineLayout { kvp: 1, tpa: 4, tpf: 4, ep: 1 }, false, 0.0);
+               Layout::helix(1, 4, 4, 1), false, 0.0);
     step_bench(&mut report, "engine/tiny_gqa/single_rank", "tiny_gqa",
-               EngineLayout { kvp: 1, tpa: 1, tpf: 1, ep: 1 }, false, 0.0);
+               Layout::helix(1, 1, 1, 1), false, 0.0);
     step_bench(&mut report, "engine/tiny_mla/pure_kvp4", "tiny_mla",
-               EngineLayout { kvp: 4, tpa: 1, tpf: 4, ep: 1 }, false, 0.0);
+               Layout::helix(4, 1, 4, 1), false, 0.0);
     step_bench(&mut report, "engine/tiny_moe/tpf2_ep2", "tiny_moe",
-               EngineLayout { kvp: 2, tpa: 2, tpf: 2, ep: 2 }, false, 0.0);
+               Layout::helix(2, 2, 2, 2), false, 0.0);
 
     println!("\n## HOP-B under an emulated slow All-to-All link");
     step_bench(&mut report, "engine/tiny_gqa/a2a_hopb_off", "tiny_gqa",
-               EngineLayout { kvp: 2, tpa: 2, tpf: 4, ep: 1 }, false, 2.0e4);
+               Layout::helix(2, 2, 4, 1), false, 2.0e4);
     step_bench(&mut report, "engine/tiny_gqa/a2a_hopb_on", "tiny_gqa",
-               EngineLayout { kvp: 2, tpa: 2, tpf: 4, ep: 1 }, true, 2.0e4);
+               Layout::helix(2, 2, 4, 1), true, 2.0e4);
 
     context_scaling(&mut report, "tiny_gqa",
-                    EngineLayout { kvp: 2, tpa: 2, tpf: 4, ep: 1 });
+                    Layout::helix(2, 2, 4, 1));
     report.note("status", "ok");
     write_report(&report);
 }

@@ -1,16 +1,27 @@
 //! Execution layouts: how a pool of N GPUs is provisioned across the
 //! attention and FFN phases (paper S2, Fig 4).
+//!
+//! This is the ONE layout type in the repo. The analytic simulator, the
+//! planner, the artifact manifest, the live engine and the serve CLI
+//! all consume this exact struct — there is no separate "engine layout"
+//! any more, so a layout the sweep ranks is, by construction, a layout
+//! the engine can be asked to boot (`HelixCluster::from_plan`).
 
-use anyhow::{bail, Result};
+use std::collections::BTreeMap;
 
-use super::model::ModelSpec;
+use anyhow::{bail, Context, Result};
+
+use crate::util::Json;
+
+use super::model::{EngineModelConfig, ModelSpec};
 
 /// A complete sharding configuration for one model replica.
 ///
 /// Attention phase: `kvp x tpa` grid (sequence-dim x head-dim).
 /// FFN phase:       `tpf x ep` grid (tensor x expert).
 /// `pp` pipeline stages partition layers; each stage owns its own
-/// `kvp*tpa` pool, so the replica uses `kvp*tpa*pp` GPUs.
+/// `kvp*tpa` pool, so the replica uses `kvp*tpa*pp` GPUs. The live
+/// engine executes single-stage layouts only (`pp == 1`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct Layout {
     pub kvp: usize,
@@ -39,6 +50,81 @@ impl Layout {
     /// Helix: decoupled attention (kvp x tpa) and FFN (tpf x ep) grids.
     pub fn helix(kvp: usize, tpa: usize, tpf: usize, ep: usize) -> Layout {
         Layout { kvp, tpa, tpf, ep, pp: 1 }
+    }
+
+    /// Helix over a MoE FFN: the expert grid is given as `ep` and the
+    /// FFN TP width follows from the pool (`tpf = kvp*tpa / ep`).
+    pub fn moe(kvp: usize, tpa: usize, ep: usize) -> Layout {
+        let n = kvp * tpa;
+        Layout { kvp, tpa, tpf: n / ep.max(1), ep, pp: 1 }
+    }
+
+    /// Stable string key (`kvp2_tpa2_tpf4_ep1[_pp2]`) — the identifier
+    /// used by the artifact manifest, `--layout` flags and plan files.
+    pub fn key(&self) -> String {
+        let mut s = format!("kvp{}_tpa{}_tpf{}_ep{}", self.kvp, self.tpa,
+                            self.tpf, self.ep);
+        if self.pp > 1 {
+            s.push_str(&format!("_pp{}", self.pp));
+        }
+        s
+    }
+
+    /// Parse a [`Layout::key`]-formatted string. All four grid
+    /// dimensions are required; `pp` defaults to 1.
+    pub fn parse_key(s: &str) -> Result<Layout> {
+        let mut dims: BTreeMap<&str, usize> = BTreeMap::new();
+        for seg in s.split('_').filter(|seg| !seg.is_empty()) {
+            let split = seg.find(|c: char| c.is_ascii_digit())
+                .with_context(|| format!("layout key segment {seg:?} has \
+                                          no value (in {s:?})"))?;
+            let (name, val) = seg.split_at(split);
+            let val: usize = val.parse()
+                .with_context(|| format!("bad value in segment {seg:?}"))?;
+            if !matches!(name, "kvp" | "tpa" | "tpf" | "ep" | "pp") {
+                bail!("unknown layout dimension {name:?} in {s:?}");
+            }
+            if dims.insert(name, val).is_some() {
+                bail!("duplicate dimension {name:?} in {s:?}");
+            }
+        }
+        let req = |name: &str| {
+            dims.get(name).copied()
+                .with_context(|| format!("layout key {s:?} missing {name}"))
+        };
+        Ok(Layout {
+            kvp: req("kvp")?,
+            tpa: req("tpa")?,
+            tpf: req("tpf")?,
+            ep: req("ep")?,
+            pp: dims.get("pp").copied().unwrap_or(1),
+        })
+    }
+
+    /// Serialize to the manifest/plan JSON object form.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("kvp".to_string(), Json::Num(self.kvp as f64));
+        m.insert("tpa".to_string(), Json::Num(self.tpa as f64));
+        m.insert("tpf".to_string(), Json::Num(self.tpf as f64));
+        m.insert("ep".to_string(), Json::Num(self.ep as f64));
+        m.insert("pp".to_string(), Json::Num(self.pp as f64));
+        Json::Obj(m)
+    }
+
+    /// Parse the manifest/plan JSON object form (`pp` optional: the
+    /// AOT manifest predates pipeline support and omits it).
+    pub fn from_json(j: &Json) -> Result<Layout> {
+        Ok(Layout {
+            kvp: j.get("kvp")?.as_usize()?,
+            tpa: j.get("tpa")?.as_usize()?,
+            tpf: j.get("tpf")?.as_usize()?,
+            ep: j.get("ep")?.as_usize()?,
+            pp: match j.opt("pp") {
+                Some(v) => v.as_usize()?,
+                None => 1,
+            },
+        })
     }
 
     /// KV-duplication factor during attention: GPUs holding each KV
@@ -84,6 +170,57 @@ impl Layout {
             }
         } else if self.ep != 1 {
             bail!("ep > 1 on a dense model");
+        }
+        Ok(())
+    }
+
+    /// Validate against an engine model: everything rank init and the
+    /// compiled/resolved program shapes require. Stricter than
+    /// [`Layout::validate`] — the engine shards K/V heads exactly (no
+    /// duplication), splits the KV cache `seq_cap / kvp` evenly, and
+    /// has no pipeline stages.
+    pub fn validate_engine(&self, c: &EngineModelConfig) -> Result<()> {
+        if self.kvp == 0 || self.tpa == 0 || self.tpf == 0 || self.ep == 0
+            || self.pp == 0
+        {
+            bail!("zero-width dimension in {self:?}");
+        }
+        if self.pp != 1 {
+            bail!("engine layouts are single-stage (pp {} != 1)", self.pp);
+        }
+        let n = self.n();
+        if self.tpf * self.ep != n {
+            bail!("FFN grid {}x{} != attention pool {n}", self.tpf, self.ep);
+        }
+        if c.q_heads % self.tpa != 0 || c.q_heads % n != 0 {
+            bail!("layout {self} does not partition q_heads {}", c.q_heads);
+        }
+        if c.kv_heads % self.tpa != 0 {
+            bail!("tpa {} does not divide kv_heads {} (the engine shards \
+                   K/V heads exactly; duplication is unsupported)",
+                  self.tpa, c.kv_heads);
+        }
+        if c.hidden % n != 0 {
+            bail!("pool {n} does not divide hidden {}", c.hidden);
+        }
+        if c.seq_cap % self.kvp != 0 {
+            bail!("kvp {} does not divide seq_cap {}", self.kvp, c.seq_cap);
+        }
+        if c.is_moe() {
+            if c.experts % self.ep != 0 {
+                bail!("ep {} does not divide experts {}", self.ep, c.experts);
+            }
+            if c.expert_ffn % self.tpf != 0 || c.shared_ffn % n != 0 {
+                bail!("layout {self} does not partition expert_ffn {} / \
+                       shared_ffn {}", c.expert_ffn, c.shared_ffn);
+            }
+        } else {
+            if self.ep != 1 {
+                bail!("ep > 1 on a dense model");
+            }
+            if c.ffn % self.tpf != 0 {
+                bail!("tpf {} does not divide ffn {}", self.tpf, c.ffn);
+            }
         }
         Ok(())
     }
@@ -155,5 +292,73 @@ mod tests {
         lo.validate(&m, true).unwrap();
         lo.pp = 4;
         assert!(lo.validate(&m, true).is_err());
+    }
+
+    #[test]
+    fn zero_width_dimensions_rejected() {
+        let m = ModelSpec::llama_405b();
+        for lo in [Layout { kvp: 0, tpa: 8, tpf: 8, ep: 1, pp: 1 },
+                   Layout { kvp: 1, tpa: 0, tpf: 0, ep: 1, pp: 1 },
+                   Layout { kvp: 1, tpa: 8, tpf: 8, ep: 0, pp: 1 },
+                   Layout { kvp: 1, tpa: 8, tpf: 8, ep: 1, pp: 0 }] {
+            assert!(lo.validate(&m, true).is_err(), "{lo:?}");
+        }
+    }
+
+    #[test]
+    fn moe_builder_completes_the_grid() {
+        let lo = Layout::moe(8, 1, 4);
+        assert_eq!(lo, Layout { kvp: 8, tpa: 1, tpf: 2, ep: 4, pp: 1 });
+        assert_eq!(lo.tpf * lo.ep, lo.n());
+    }
+
+    #[test]
+    fn key_roundtrip() {
+        for lo in [Layout::helix(2, 2, 4, 1), Layout::moe(2, 2, 2),
+                   Layout::tp(8), Layout { kvp: 1, tpa: 8, tpf: 8, ep: 1,
+                                           pp: 7 }] {
+            assert_eq!(Layout::parse_key(&lo.key()).unwrap(), lo,
+                       "key {:?}", lo.key());
+        }
+        assert_eq!(Layout::parse_key("kvp2_tpa2_tpf4_ep1").unwrap(),
+                   Layout::helix(2, 2, 4, 1));
+        assert!(Layout::parse_key("kvp2_tpa2").is_err(), "missing dims");
+        assert!(Layout::parse_key("kvp2_tpa2_tpf4_ep1_zz3").is_err());
+        assert!(Layout::parse_key("kvp2_kvp2_tpa2_tpf4_ep1").is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let lo = Layout { kvp: 2, tpa: 2, tpf: 2, ep: 2, pp: 3 };
+        let j = Json::parse(&lo.to_json().to_string()).unwrap();
+        assert_eq!(Layout::from_json(&j).unwrap(), lo);
+        // Manifest form: no pp key -> defaults to 1.
+        let j = Json::parse(r#"{"kvp":4,"tpa":1,"tpf":4,"ep":1,"key":"x"}"#)
+            .unwrap();
+        assert_eq!(Layout::from_json(&j).unwrap(), Layout::helix(4, 1, 4, 1));
+    }
+
+    #[test]
+    fn engine_validation_matches_rank_init_requirements() {
+        let c = EngineModelConfig {
+            hidden: 256, q_heads: 8, kv_heads: 4, head_size: 32,
+            layers: 4, vocab: 512, seq_cap: 256, batch: 4, kv_block: 16,
+            ffn: 1024, experts: 0, top_k: 0, expert_ffn: 0, shared_ffn: 0,
+        };
+        Layout::helix(2, 2, 4, 1).validate_engine(&c).unwrap();
+        Layout::helix(4, 1, 4, 1).validate_engine(&c).unwrap();
+        // tpa must divide kv_heads exactly: the engine never duplicates.
+        assert!(Layout::tp(8).validate_engine(&c).is_err());
+        // ep > 1 needs a MoE model.
+        assert!(Layout::helix(2, 2, 2, 2).validate_engine(&c).is_err());
+        // FFN grid must cover the pool.
+        assert!(Layout { kvp: 2, tpa: 2, tpf: 2, ep: 1, pp: 1 }
+            .validate_engine(&c).is_err());
+        // The engine has no pipeline stages.
+        assert!(Layout { kvp: 2, tpa: 2, tpf: 4, ep: 1, pp: 2 }
+            .validate_engine(&c).is_err());
+        // Zero-width dims rejected.
+        assert!(Layout { kvp: 0, tpa: 2, tpf: 4, ep: 1, pp: 1 }
+            .validate_engine(&c).is_err());
     }
 }

@@ -1,18 +1,24 @@
-//! Configuration: hardware constants, model specifications, and
-//! execution layouts.
+//! Configuration: hardware constants, model specifications, execution
+//! layouts, and the model registry.
 //!
-//! Two families of models live here:
+//! Two families of models live here, behind one registry
+//! ([`registry::lookup`]):
 //! * full-size specs ([`model::ModelSpec`]) — Llama-405B and DeepSeek-R1
-//!   as evaluated by the paper; consumed *only* by the analytic
-//!   simulator ([`crate::sim`]).
-//! * tiny engine models — described by the artifact manifest
-//!   ([`crate::runtime::artifacts::EngineModelConfig`]) and actually
-//!   executed by [`crate::engine`].
+//!   as evaluated by the paper; consumed by the analytic simulator
+//!   ([`crate::sim`]) and the planner ([`crate::plan`]).
+//! * engine models ([`model::EngineModelConfig`]) — described by the
+//!   artifact manifest and actually executed by [`crate::engine`];
+//!   their simulator spec is derived via [`model::ModelSpec::from_engine`].
+//!
+//! There is exactly ONE layout type ([`layout::Layout`]) — the sim, the
+//! planner, the manifest, the engine and the serve CLI all share it.
 
 pub mod hardware;
 pub mod layout;
 pub mod model;
+pub mod registry;
 
 pub use hardware::Hardware;
 pub use layout::Layout;
-pub use model::{Attention, Ffn, ModelSpec};
+pub use model::{Attention, EngineModelConfig, Ffn, ModelSpec};
+pub use registry::ModelHandle;

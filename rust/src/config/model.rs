@@ -1,8 +1,16 @@
-//! Full-size model specifications for the analytic simulator.
+//! Model specifications — both families, one module.
 //!
-//! Mirrors the paper's two evaluation networks (S3.1): Llama-405B
-//! (dense, GQA) and DeepSeek-R1 (MoE, MLA), plus the hypothetical dense
-//! configuration used by Figure 1's roofline.
+//! * [`ModelSpec`] — full-size models as the analytic simulator sees
+//!   them, mirroring the paper's two evaluation networks (S3.1):
+//!   Llama-405B (dense, GQA) and DeepSeek-R1 (MoE, MLA), plus the
+//!   hypothetical dense configuration used by Figure 1's roofline.
+//! * [`EngineModelConfig`] — the tiny executable models described by
+//!   the artifact manifest (mirrors `python/compile/configs.py`).
+//!
+//! [`ModelSpec::from_engine`] bridges the two: any engine model gets a
+//! simulator spec derived from the *same* numbers, so the planner can
+//! rank layouts for a model the engine can then actually boot
+//! (see [`super::registry`]).
 
 /// Attention variant, with the parameters that drive KV-cache and
 /// weight-read costs.
@@ -214,6 +222,85 @@ impl ModelSpec {
         self.layers as f64 * self.attention.kv_elems_per_token()
             * bytes_per_elem
     }
+
+    /// Derive a simulator spec from an engine model, so the planner's
+    /// sweep and the engine provably describe the same network. The
+    /// engine always executes GQA-style attention (MLA-like models are
+    /// expressed with `kv_heads == 1`), so the mapping is direct; MoE
+    /// engine models have no interleaved dense layers.
+    pub fn from_engine(name: &str, c: &EngineModelConfig) -> ModelSpec {
+        ModelSpec {
+            name: intern_name(name),
+            layers: c.layers,
+            hidden: c.hidden,
+            attention: Attention::Gqa {
+                q_heads: c.q_heads,
+                kv_heads: c.kv_heads,
+                head_size: c.head_size,
+            },
+            ffn: if c.is_moe() {
+                Ffn::Moe {
+                    experts: c.experts,
+                    top_k: c.top_k,
+                    expert_inter: c.expert_ffn,
+                    shared_inter: c.shared_ffn,
+                    dense_layers: 0,
+                    dense_inter: 0,
+                }
+            } else {
+                Ffn::Dense { inter: c.ffn }
+            },
+            kv_read_fraction: 1.0,
+        }
+    }
+}
+
+/// Intern a model name as `&'static str`: `ModelSpec` stays `Copy`
+/// with a static name while engine names are dynamic (manifest keys).
+/// One leak per *distinct* name for the process lifetime — repeated
+/// registry lookups / planner constructions never re-leak.
+fn intern_name(name: &str) -> &'static str {
+    use std::collections::BTreeMap;
+    use std::sync::{Mutex, OnceLock};
+    static NAMES: OnceLock<Mutex<BTreeMap<String, &'static str>>> =
+        OnceLock::new();
+    let mut map = NAMES.get_or_init(|| Mutex::new(BTreeMap::new()))
+        .lock()
+        .expect("name intern table poisoned");
+    if let Some(s) = map.get(name) {
+        return s;
+    }
+    let leaked: &'static str = Box::leak(name.to_string().into_boxed_str());
+    map.insert(name.to_string(), leaked);
+    leaked
+}
+
+/// Engine-model configuration (mirrors python/compile/configs.py):
+/// the tiny models the engine executes for real over AOT/synthetic
+/// artifacts. Lives next to [`ModelSpec`] so the two descriptions of a
+/// model share one home (and one registry — [`super::registry`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EngineModelConfig {
+    pub hidden: usize,
+    pub q_heads: usize,
+    pub kv_heads: usize,
+    pub head_size: usize,
+    pub layers: usize,
+    pub vocab: usize,
+    pub seq_cap: usize,
+    pub batch: usize,
+    pub kv_block: usize,
+    pub ffn: usize,
+    pub experts: usize,
+    pub top_k: usize,
+    pub expert_ffn: usize,
+    pub shared_ffn: usize,
+}
+
+impl EngineModelConfig {
+    pub fn is_moe(&self) -> bool {
+        self.experts > 0
+    }
 }
 
 #[cfg(test)]
@@ -253,5 +340,32 @@ mod tests {
         let d = ModelSpec::deepseek_r1();
         let dgb = d.kv_bytes_per_token(0.5) * 1.0e6 / 1e9;
         assert!(dgb > 14.0 && dgb < 22.0, "dsr1 kv at 1M = {dgb} GB");
+    }
+
+    #[test]
+    fn from_engine_mirrors_the_config() {
+        let c = EngineModelConfig {
+            hidden: 256, q_heads: 8, kv_heads: 4, head_size: 32,
+            layers: 4, vocab: 512, seq_cap: 256, batch: 4, kv_block: 16,
+            ffn: 1024, experts: 0, top_k: 0, expert_ffn: 0, shared_ffn: 0,
+        };
+        let m = ModelSpec::from_engine("tiny_gqa", &c);
+        assert_eq!(m.name, "tiny_gqa");
+        assert_eq!(m.layers, 4);
+        assert_eq!(m.hidden, 256);
+        assert_eq!(m.attention.q_heads(), 8);
+        assert_eq!(m.attention.kv_heads(), 4);
+        assert!(matches!(m.ffn, Ffn::Dense { inter: 1024 }));
+
+        let moe = EngineModelConfig {
+            hidden: 128, q_heads: 4, kv_heads: 2, head_size: 32,
+            layers: 2, vocab: 256, seq_cap: 128, batch: 4, kv_block: 16,
+            ffn: 0, experts: 4, top_k: 2, expert_ffn: 256, shared_ffn: 256,
+        };
+        let m = ModelSpec::from_engine("tiny_moe", &moe);
+        assert!(matches!(m.ffn, Ffn::Moe { experts: 4, top_k: 2,
+                                           expert_inter: 256,
+                                           dense_layers: 0, .. }));
+        assert!(m.total_params() > 0.0);
     }
 }

@@ -1,0 +1,127 @@
+//! One model registry for the whole stack.
+//!
+//! Every command, example and test resolves model names here — the
+//! full-size simulator presets (`llama-405b`, `deepseek-r1`, `fig1`)
+//! and the engine models of the artifact manifest (`tiny_gqa`, ...) —
+//! so the sim, the planner and the engine provably describe the same
+//! model: an engine model's [`ModelSpec`] is *derived* from its
+//! [`EngineModelConfig`] ([`ModelSpec::from_engine`]), never written
+//! twice.
+
+use anyhow::{Context, Result};
+
+use crate::runtime::Manifest;
+
+use super::layout::Layout;
+use super::model::{EngineModelConfig, ModelSpec};
+
+/// A resolved model: always a simulator spec; engine models carry the
+/// executable config and the layouts baked into the artifact manifest.
+#[derive(Debug, Clone)]
+pub struct ModelHandle {
+    pub name: String,
+    pub spec: ModelSpec,
+    /// `Some` iff this model is executable by the engine.
+    pub engine: Option<EngineModelConfig>,
+    /// Layouts built into the artifact manifest (empty for pure
+    /// simulator models, which accept any valid layout).
+    pub layouts: Vec<Layout>,
+}
+
+impl ModelHandle {
+    pub fn is_engine(&self) -> bool {
+        self.engine.is_some()
+    }
+}
+
+/// Full-size simulator presets (with historical aliases).
+pub fn sim_preset(name: &str) -> Option<ModelSpec> {
+    match name {
+        "llama-405b" | "llama" => Some(ModelSpec::llama_405b()),
+        "deepseek-r1" | "dsr1" => Some(ModelSpec::deepseek_r1()),
+        "fig1" => Some(ModelSpec::fig1_dense()),
+        _ => None,
+    }
+}
+
+/// Resolve a model name against the presets and an already-loaded
+/// manifest (pass `None` to skip engine models).
+pub fn lookup_in(manifest: Option<&Manifest>, name: &str)
+                 -> Result<ModelHandle> {
+    if let Some(spec) = sim_preset(name) {
+        return Ok(ModelHandle {
+            name: spec.name.to_string(),
+            spec,
+            engine: None,
+            layouts: Vec::new(),
+        });
+    }
+    let known = || {
+        let mut names = vec!["llama-405b".to_string(),
+                             "deepseek-r1".to_string(), "fig1".to_string()];
+        if let Some(m) = manifest {
+            names.extend(m.models.keys().cloned());
+        }
+        names.join(" | ")
+    };
+    let manifest = manifest
+        .with_context(|| format!("unknown model {name:?} ({})", known()))?;
+    let entry = manifest.models.get(name)
+        .with_context(|| format!("unknown model {name:?} ({})", known()))?;
+    Ok(ModelHandle {
+        name: name.to_string(),
+        spec: ModelSpec::from_engine(name, &entry.config),
+        engine: Some(entry.config.clone()),
+        layouts: entry.layouts.clone(),
+    })
+}
+
+/// Resolve a model name, loading the default artifact manifest for
+/// engine models (`$HELIX_ARTIFACTS` or the synthetic fallback).
+pub fn lookup(name: &str) -> Result<ModelHandle> {
+    if let Some(spec) = sim_preset(name) {
+        return lookup_in(None, spec.name);
+    }
+    let manifest = Manifest::load_or_synthetic(&Manifest::default_root())?;
+    lookup_in(Some(&manifest), name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve_with_aliases() {
+        assert_eq!(sim_preset("llama").unwrap().name, "llama-405b");
+        assert_eq!(sim_preset("dsr1").unwrap().name, "deepseek-r1");
+        assert!(sim_preset("nope").is_none());
+        let h = lookup_in(None, "deepseek-r1").unwrap();
+        assert!(!h.is_engine());
+        assert!(h.layouts.is_empty());
+    }
+
+    #[test]
+    fn engine_models_resolve_through_the_manifest() {
+        let manifest = Manifest::synthetic();
+        let h = lookup_in(Some(&manifest), "tiny_gqa").unwrap();
+        assert!(h.is_engine());
+        assert_eq!(h.spec.attention.kv_heads(), 4);
+        assert!(!h.layouts.is_empty());
+        // Every manifest layout validates against BOTH descriptions —
+        // the one-model invariant the registry exists to enforce.
+        let cfg = h.engine.as_ref().unwrap();
+        for lo in &h.layouts {
+            lo.validate(&h.spec, false).unwrap();
+            lo.validate_engine(cfg).unwrap();
+        }
+    }
+
+    #[test]
+    fn unknown_model_names_the_candidates() {
+        let manifest = Manifest::synthetic();
+        let e = lookup_in(Some(&manifest), "tiny_nope").unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(msg.contains("tiny_gqa") && msg.contains("deepseek-r1"),
+                "unhelpful error: {msg}");
+    }
+}

@@ -12,7 +12,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
-use crate::runtime::artifacts::{EngineLayout, EngineModelConfig};
+use crate::config::{EngineModelConfig, Layout};
+use crate::plan::Plan;
 use crate::runtime::{HostTensor, Manifest, Runtime};
 
 use super::comm_model::CommModel;
@@ -25,7 +26,7 @@ use super::shard;
 pub struct ClusterConfig {
     pub artifacts: PathBuf,
     pub model: String,
-    pub layout: EngineLayout,
+    pub layout: Layout,
     pub comm: CommModel,
     /// Separate link model for the KVP All-to-All (the collective HOP-B
     /// pipelines); defaults to `comm`. Lets the ablation slow down just
@@ -38,7 +39,7 @@ pub struct ClusterConfig {
 }
 
 impl ClusterConfig {
-    pub fn new(model: &str, layout: EngineLayout) -> ClusterConfig {
+    pub fn new(model: &str, layout: Layout) -> ClusterConfig {
         ClusterConfig {
             artifacts: Manifest::default_root(),
             model: model.to_string(),
@@ -48,6 +49,15 @@ impl ClusterConfig {
             hopb: false,
             verify: false,
         }
+    }
+
+    /// Cluster configuration from a planner [`Plan`]: the planned model
+    /// and layout, with HOP-B on iff the plan's predictions assumed the
+    /// overlap (`strategy == "helix"`).
+    pub fn from_plan(plan: &Plan) -> ClusterConfig {
+        let mut cc = ClusterConfig::new(&plan.model, plan.layout);
+        cc.hopb = plan.strategy == "helix";
+        cc
     }
 }
 
@@ -72,7 +82,7 @@ struct VerifyState {
 /// The coordinator.
 pub struct HelixCluster {
     pub cfg: EngineModelConfig,
-    pub layout: EngineLayout,
+    pub layout: Layout,
     model: String,
     comm: CommModel,
     a2a_comm: CommModel,
@@ -102,6 +112,9 @@ impl HelixCluster {
         let entry = manifest.model(&cc.model)?.clone();
         let cfg = entry.config.clone();
         let lo = cc.layout;
+        lo.validate_engine(&cfg)
+            .with_context(|| format!("layout {} is invalid for {}", lo.key(),
+                                     cc.model))?;
         ensure!(entry.layouts.contains(&lo),
                 "layout {} not in artifacts for {} (have: {})", lo.key(),
                 cc.model,
@@ -212,6 +225,14 @@ impl HelixCluster {
             verify,
             comm_total: Duration::ZERO,
         })
+    }
+
+    /// Boot a cluster straight from a planner [`Plan`] — the bridge
+    /// from "the sweep ranked this layout best under the TTL budget" to
+    /// a live rank pool. Fails if the plan's layout is not built into
+    /// the model's artifacts.
+    pub fn from_plan(plan: &Plan) -> Result<HelixCluster> {
+        HelixCluster::new(ClusterConfig::from_plan(plan))
     }
 
     pub fn n(&self) -> usize {

@@ -11,7 +11,7 @@ use std::sync::mpsc::{Receiver, Sender};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::runtime::artifacts::{EngineLayout, EngineModelConfig};
+use crate::config::{EngineModelConfig, Layout};
 use crate::runtime::{DeviceTensor, HostTensor, Manifest, Runtime};
 
 use super::proto::{Cmd, Payload, Resp};
@@ -98,7 +98,7 @@ pub struct RankInit {
     /// Manifest model name (program-index key).
     pub model: String,
     pub cfg: EngineModelConfig,
-    pub layout: EngineLayout,
+    pub layout: Layout,
     pub manifest: Manifest,
     /// Per-layer weight shards.
     pub layers: Vec<LayerShard>,

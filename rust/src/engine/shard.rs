@@ -17,7 +17,7 @@ use std::collections::BTreeMap;
 
 use anyhow::{Context, Result};
 
-use crate::runtime::artifacts::{EngineLayout, EngineModelConfig};
+use crate::config::{EngineModelConfig, Layout};
 use crate::runtime::HostTensor;
 
 /// One rank's slice of one layer's weights.
@@ -52,17 +52,17 @@ pub enum FfnShard {
 }
 
 /// Attention-phase coordinates of rank `n`.
-pub fn attn_coords(lo: &EngineLayout, n: usize) -> (usize, usize) {
+pub fn attn_coords(lo: &Layout, n: usize) -> (usize, usize) {
     (n / lo.kvp, n % lo.kvp)
 }
 
 /// FFN-phase coordinates of rank `n`.
-pub fn ffn_coords(lo: &EngineLayout, n: usize) -> (usize, usize) {
+pub fn ffn_coords(lo: &Layout, n: usize) -> (usize, usize) {
     (n / lo.ep, n % lo.ep)
 }
 
 /// Global query-head offset of rank `n`'s post-combine slice.
-pub fn head_offset(cfg: &EngineModelConfig, lo: &EngineLayout, n: usize)
+pub fn head_offset(cfg: &EngineModelConfig, lo: &Layout, n: usize)
                    -> usize {
     let (j, k) = attn_coords(lo, n);
     let qhl = cfg.q_heads / lo.tpa;
@@ -71,7 +71,7 @@ pub fn head_offset(cfg: &EngineModelConfig, lo: &EngineLayout, n: usize)
 }
 
 /// Slice one layer's full weights for rank `n` under `lo`.
-pub fn slice_layer(cfg: &EngineModelConfig, lo: &EngineLayout, n: usize,
+pub fn slice_layer(cfg: &EngineModelConfig, lo: &Layout, n: usize,
                    full: &BTreeMap<String, HostTensor>) -> Result<LayerShard> {
     let get = |name: &str| -> Result<&HostTensor> {
         full.get(name).with_context(|| format!("missing weight {name}"))
@@ -168,7 +168,7 @@ mod tests {
 
     #[test]
     fn rank_grid_coordinates() {
-        let lo = EngineLayout { kvp: 2, tpa: 2, tpf: 4, ep: 1 };
+        let lo = Layout::helix(2, 2, 4, 1);
         assert_eq!(attn_coords(&lo, 0), (0, 0));
         assert_eq!(attn_coords(&lo, 1), (0, 1));
         assert_eq!(attn_coords(&lo, 2), (1, 0));
@@ -179,7 +179,7 @@ mod tests {
     #[test]
     fn head_offsets_partition_q_heads() {
         let c = cfg();
-        let lo = EngineLayout { kvp: 2, tpa: 2, tpf: 4, ep: 1 };
+        let lo = Layout::helix(2, 2, 4, 1);
         let offs: Vec<usize> =
             (0..4).map(|n| head_offset(&c, &lo, n)).collect();
         // qhl = 2, qs = 1: ranks cover heads 0,1 (tpa 0) and 2,3 (tpa 1).
@@ -189,7 +189,7 @@ mod tests {
     #[test]
     fn qkv_slices_are_disjoint_and_cover() {
         let c = cfg();
-        let lo = EngineLayout { kvp: 1, tpa: 2, tpf: 2, ep: 1 };
+        let lo = Layout::helix(1, 2, 2, 1);
         let full = full_dense(&c);
         let s0 = slice_layer(&c, &lo, 0, &full).unwrap();
         let s1 = slice_layer(&c, &lo, 1, &full).unwrap();
@@ -200,7 +200,7 @@ mod tests {
     #[test]
     fn wo_rows_reassemble() {
         let c = cfg();
-        let lo = EngineLayout { kvp: 2, tpa: 2, tpf: 4, ep: 1 };
+        let lo = Layout::helix(2, 2, 4, 1);
         let full = full_dense(&c);
         let parts: Vec<HostTensor> = (0..4)
             .map(|n| slice_layer(&c, &lo, n, &full).unwrap().wo_slice)
@@ -233,7 +233,7 @@ mod tests {
         full.insert("wsg".into(), HostTensor::zeros(&[h, 8]));
         full.insert("ws2".into(), HostTensor::zeros(&[8, h]));
 
-        let lo = EngineLayout { kvp: 2, tpa: 2, tpf: 2, ep: 2 };
+        let lo = Layout::helix(2, 2, 2, 2);
         let mut seen: Vec<Vec<usize>> = Vec::new();
         for n in 0..4 {
             let s = slice_layer(&c, &lo, n, &full).unwrap();

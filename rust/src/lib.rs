@@ -21,10 +21,14 @@
 //! * [`util`] — offline-friendly substrates (mini-JSON, PRNG,
 //!   property-test driver, CLI parsing, stats, tables, timelines).
 //! * [`runtime`] — PJRT client wrapper + artifact manifest loading.
-//! * [`config`] — model presets (Llama-405B, DeepSeek-R1, tiny engine
-//!   models), GB200 hardware constants, Helix layouts + validity.
+//! * [`config`] — the model registry (Llama-405B, DeepSeek-R1, tiny
+//!   engine models), GB200 hardware constants, and the ONE [`config::Layout`]
+//!   type shared by sim, planner, manifest, engine and serve.
 //! * [`sim`] — the paper's evaluation apparatus: roofline memory model,
 //!   phase timing, HOP-B overlap, strategy sweep, Pareto frontiers.
+//! * [`plan`] — the TTL-budget [`plan::Planner`]: runs the sweep and
+//!   returns ranked [`plan::Plan`]s that boot directly
+//!   (`HelixCluster::from_plan`, `Server::from_plan`, `helix plan`).
 //! * [`engine`] — functional distributed decode: N rank threads, each
 //!   with its own PJRT client, exchanging host tensors through in-memory
 //!   collectives with an NVLink-delay emulation layer.
@@ -33,6 +37,7 @@
 
 pub mod config;
 pub mod engine;
+pub mod plan;
 pub mod runtime;
 pub mod serve;
 pub mod sim;

@@ -7,28 +7,32 @@
 //!   helix ablate --model <m>            Fig 7 HOP-B ON/OFF
 //!   helix sweep --model <m>             raw sweep dump
 //!
+//! Planning (sweep -> ranked executable plans, JSON on stdout):
+//!   helix plan --model <m> --ttl <ms>   rank layouts under a TTL budget
+//!
 //! Engine commands (real execution over AOT artifacts):
 //!   helix verify --model tiny_gqa       sharded-vs-reference exactness
+//!   helix serve --plan plan.json|-      serve the top-ranked plan
+//!   helix serve --auto --model tiny_gqa plan inline, then serve
 //!   helix serve --model tiny_gqa        end-to-end batched serving
 //!   helix layouts --model tiny_gqa      show layouts (Fig 2)
+//!
+//! `helix plan --model tiny_gqa | helix serve --plan -` pipes the
+//! search straight into a live cluster.
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
-use helix::config::{Hardware, ModelSpec};
+use helix::config::{registry, Hardware, ModelSpec};
 use helix::sim::decode::Strategy;
 use helix::sim::sweep::{self, SweepBounds};
 use helix::sim::{hopb, memory, pareto, Frontier};
 use helix::util::cli::Args;
 use helix::util::table::{fmt_ratio, Table};
 
+/// Simulator models resolve through the shared registry (engine models
+/// included: their spec is derived from the manifest config).
 fn model_by_name(name: &str) -> Result<ModelSpec> {
-    Ok(match name {
-        "llama-405b" | "llama" => ModelSpec::llama_405b(),
-        "deepseek-r1" | "dsr1" => ModelSpec::deepseek_r1(),
-        "fig1" => ModelSpec::fig1_dense(),
-        _ => bail!("unknown simulator model {name:?} \
-                    (llama-405b | deepseek-r1 | fig1)"),
-    })
+    Ok(registry::lookup(name)?.spec)
 }
 
 fn bounds_from(args: &Args) -> Result<SweepBounds> {
@@ -195,6 +199,7 @@ fn main() -> Result<()> {
         Some("pareto") => cmd_pareto(&args),
         Some("ablate") => cmd_ablate(&args),
         Some("sweep") => cmd_sweep(&args),
+        Some("plan") => helix::plan::cli::run(&args),
         Some("verify") | Some("serve") | Some("layouts") => {
             helix::serve::cli::run(&args)
         }
@@ -203,7 +208,7 @@ fn main() -> Result<()> {
                 eprintln!("unknown subcommand {o:?}\n");
             }
             eprintln!("usage: helix <roofline|timeline|pareto|ablate|sweep|\
-                       verify|serve|layouts> [--options]");
+                       plan|verify|serve|layouts> [--options]");
             std::process::exit(2);
         }
     }

@@ -1,0 +1,95 @@
+//! `helix plan` — run the planner and emit ranked plans as JSON.
+//!
+//! The JSON document goes to stdout (or `--out FILE`) so it pipes
+//! straight into `helix serve --plan -`; the human-readable summary
+//! goes to stderr.
+//!
+//!     helix plan --model tiny_gqa --ttl 50
+//!     helix plan --model deepseek-r1 --ttl 5 --gpus 64 --sweep --out plan.json
+//!
+//! Options: `--model M` (registry name), `--ttl MS` (TTL budget),
+//! `--batch B` (pin the microbatch), `--gpus N`, `--max-batch B`,
+//! `--seq-len S`, `--top K` (plans to emit, default 10), `--out FILE`,
+//! and the `--sweep` flag (include the Helix + baseline Pareto
+//! frontiers for `scripts/plot_pareto.py`).
+
+use anyhow::{Context, Result};
+
+use crate::config::Hardware;
+use crate::util::cli::Args;
+use crate::util::table::Table;
+
+use super::{plans_to_doc, Planner};
+
+/// Build a planner from CLI options (shared with `helix serve --auto`).
+pub fn planner_from_args(args: &Args, default_model: &str)
+                         -> Result<(Planner, Option<f64>)> {
+    let model = args.opt_or("model", default_model);
+    let mut planner = Planner::new(model, Hardware::gb200_nvl72())?;
+    let mut ttl = None;
+    if let Some(v) = args.opt("ttl") {
+        let ms: f64 = v.parse().context("parsing --ttl (milliseconds)")?;
+        planner = planner.ttl_budget_ms(ms);
+        ttl = Some(ms);
+    }
+    if let Some(v) = args.opt("batch") {
+        planner = planner.batch(v.parse().context("parsing --batch")?);
+    }
+    if let Some(v) = args.opt("gpus") {
+        planner = planner.max_gpus(v.parse().context("parsing --gpus")?);
+    }
+    if let Some(v) = args.opt("max-batch") {
+        planner = planner.max_batch(v.parse()
+            .context("parsing --max-batch")?);
+    }
+    if let Some(v) = args.opt("seq-len") {
+        planner = planner.seq_len(v.parse().context("parsing --seq-len")?);
+    }
+    Ok((planner, ttl))
+}
+
+/// Entry point from main.rs.
+pub fn run(args: &Args) -> Result<()> {
+    let (planner, ttl) = planner_from_args(args, "deepseek-r1")?;
+    let top = args.opt_usize("top", 10)?;
+
+    // One sweep feeds both the ranking and the --sweep frontiers.
+    let points = planner.sweep();
+    let plans = planner.plans_from(&points);
+    if plans.is_empty() {
+        // Surface the same diagnostic `best()` gives.
+        planner.best()?;
+    }
+    let shown = &plans[..plans.len().min(top)];
+
+    // Human summary on stderr — stdout stays pipeable JSON.
+    let b = planner.bounds_ref();
+    eprintln!("model {} | S = {:.0} tokens | <= {} GPUs | {} configs \
+               examined | {} feasible plans (showing {})",
+              planner.model_name(), b.seq_len, b.max_gpus,
+              planner.config_count(), plans.len(), shown.len());
+    let mut t = Table::new(["rank", "layout", "batch", "gpus", "ttl ms",
+                            "tok/s/user", "tok/s/gpu", "kv budget",
+                            "strategy"]);
+    for (i, p) in shown.iter().enumerate() {
+        t.row([format!("{i}"), p.layout.key(), format!("{}", p.batch),
+               format!("{}", p.gpus), format!("{:.4}", p.predicted.ttl_ms),
+               format!("{:.1}", p.predicted.interactivity),
+               format!("{:.4}", p.predicted.tokens_per_gpu_s),
+               format!("{}", p.kv_budget), p.strategy.clone()]);
+    }
+    eprint!("{}", t.render());
+
+    let frontiers = args.flag("sweep").then(|| planner.frontiers_from(&points));
+    let doc = plans_to_doc(planner.model_name(), ttl, shown,
+                           frontiers.as_ref().map(|(h, b)| (h, b)));
+    match args.opt("out") {
+        Some(path) => {
+            std::fs::write(path, format!("{doc}\n"))
+                .with_context(|| format!("writing {path}"))?;
+            eprintln!("wrote {path}");
+        }
+        None => println!("{doc}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,482 @@
+//! Planning: from a model + hardware + TTL budget to a ranked list of
+//! executable sharding configurations.
+//!
+//! The paper's core claim is that the *right* `(kvp, tpa, tpf, ep)`
+//! depends on the model, the hardware and the latency budget (Fig 5/6
+//! Pareto search). This module is the bridge from that search to the
+//! live system: [`Planner`] runs the existing multi-threaded sweep
+//! ([`crate::sim::sweep`]) and returns ranked [`Plan`]s whose layout
+//! boots directly (`HelixCluster::from_plan` / `Server::from_plan`)
+//! and whose `kv_budget` feeds [`crate::serve::KvBudget`] admission.
+//!
+//! ```text
+//! Planner::new("tiny_gqa", Hardware::gb200_nvl72())?
+//!     .ttl_budget_ms(50.0)
+//!     .batch(4)
+//!     .plan()?            // ranked Vec<Plan>, best first
+//! ```
+//!
+//! Engine models (manifest entries like `tiny_gqa`) are automatically
+//! restricted to the layouts their artifacts were built for, so the
+//! top-ranked plan is always bootable; full-size simulator models
+//! (`llama-405b`, `deepseek-r1`) plan over the whole search space.
+//!
+//! Plans serialize to JSON (`helix plan` emits them; `helix serve
+//! --plan file|-` consumes them) — see docs/PLANNING.md for the schema.
+
+pub mod cli;
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{registry, Hardware, Layout, ModelHandle, ModelSpec};
+use crate::sim::decode::DecodePoint;
+use crate::sim::sweep::{self, SweepBounds};
+use crate::sim::{memory, Frontier, Strategy};
+use crate::util::Json;
+
+/// Predicted decode metrics for a plan (from the analytic simulator;
+/// for tiny engine models these rank layouts rather than forecast
+/// wall-clock).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Predicted {
+    /// Token-to-token latency, milliseconds.
+    pub ttl_ms: f64,
+    /// Tokens/s/user (= 1000 / ttl_ms).
+    pub interactivity: f64,
+    /// Tokens/s/GPU across the replica.
+    pub tokens_per_gpu_s: f64,
+}
+
+/// One executable sharding decision: the planner's output, the
+/// engine's and server's input.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Plan {
+    /// Model name as the registry (and the artifact manifest) knows it.
+    pub model: String,
+    /// Strategy that produced this point (`helix`, `tp`, ...).
+    pub strategy: String,
+    pub layout: Layout,
+    /// Per-microbatch batch size the prediction assumed.
+    pub batch: usize,
+    pub gpus: usize,
+    /// KV history length (tokens) the prediction assumed.
+    pub seq_len: f64,
+    pub predicted: Predicted,
+    /// Aggregate logical-KV-token admission budget under this layout —
+    /// feeds [`crate::serve::KvBudget`] / `Server::with_kv_budget`
+    /// directly. For engine models this is the physical pool
+    /// (`batch * (seq_cap - kv_block*kvp)`); for full-size models it is
+    /// the HBM envelope net of weights.
+    pub kv_budget: usize,
+}
+
+impl Plan {
+    pub fn to_json(&self) -> Json {
+        let num = |x: f64| Json::Num(x);
+        let mut pred = BTreeMap::new();
+        pred.insert("ttl_ms".into(), num(self.predicted.ttl_ms));
+        pred.insert("interactivity".into(), num(self.predicted.interactivity));
+        pred.insert("tokens_per_gpu_s".into(),
+                    num(self.predicted.tokens_per_gpu_s));
+        let mut m = BTreeMap::new();
+        m.insert("model".into(), Json::Str(self.model.clone()));
+        m.insert("strategy".into(), Json::Str(self.strategy.clone()));
+        m.insert("layout".into(), self.layout.to_json());
+        m.insert("batch".into(), num(self.batch as f64));
+        m.insert("gpus".into(), num(self.gpus as f64));
+        m.insert("seq_len".into(), num(self.seq_len));
+        m.insert("predicted".into(), Json::Obj(pred));
+        m.insert("kv_budget".into(), num(self.kv_budget as f64));
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Plan> {
+        let pred = j.get("predicted")?;
+        Ok(Plan {
+            model: j.get("model")?.as_str()?.to_string(),
+            strategy: j.get("strategy")?.as_str()?.to_string(),
+            layout: Layout::from_json(j.get("layout")?)?,
+            batch: j.get("batch")?.as_usize()?,
+            gpus: j.get("gpus")?.as_usize()?,
+            seq_len: j.get("seq_len")?.as_f64()?,
+            predicted: Predicted {
+                ttl_ms: pred.get("ttl_ms")?.as_f64()?,
+                interactivity: pred.get("interactivity")?.as_f64()?,
+                tokens_per_gpu_s: pred.get("tokens_per_gpu_s")?.as_f64()?,
+            },
+            kv_budget: j.get("kv_budget")?.as_usize()?,
+        })
+    }
+
+    /// Accept either a bare plan object or a `helix plan` document
+    /// (`{"plans": [...]}`), taking the top-ranked entry.
+    pub fn from_json_doc(j: &Json) -> Result<Plan> {
+        if let Some(plans) = j.opt("plans") {
+            let arr = plans.as_arr()?;
+            let first = arr.first()
+                .context("plan document has an empty \"plans\" list")?;
+            return Plan::from_json(first);
+        }
+        Plan::from_json(j).context("expected a plan object or a \
+                                    {\"plans\": [...]} document")
+    }
+}
+
+/// Serialize a ranked plan list as the `helix plan` document, with
+/// optional Pareto frontiers for plotting (`scripts/plot_pareto.py`).
+pub fn plans_to_doc(model: &str, ttl_budget_ms: Option<f64>, plans: &[Plan],
+                    frontiers: Option<(&Frontier, &Frontier)>) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("version".into(), Json::Num(1.0));
+    m.insert("model".into(), Json::Str(model.to_string()));
+    m.insert("ttl_budget_ms".into(), match ttl_budget_ms {
+        Some(x) => Json::Num(x),
+        None => Json::Null,
+    });
+    m.insert("plans".into(),
+             Json::Arr(plans.iter().map(Plan::to_json).collect()));
+    if let Some((helix, baseline)) = frontiers {
+        let pts = |f: &Frontier| {
+            Json::Arr(f.points.iter().map(point_to_json).collect())
+        };
+        let mut fr = BTreeMap::new();
+        fr.insert("helix".into(), pts(helix));
+        fr.insert("baseline".into(), pts(baseline));
+        m.insert("frontiers".into(), Json::Obj(fr));
+    }
+    Json::Obj(m)
+}
+
+fn point_to_json(p: &DecodePoint) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("strategy".into(), Json::Str(p.strategy.name().to_string()));
+    m.insert("layout".into(), Json::Str(p.layout.key()));
+    m.insert("batch".into(), Json::Num((p.batch * p.layout.pp) as f64));
+    m.insert("gpus".into(), Json::Num(p.gpus as f64));
+    m.insert("ttl_ms".into(), Json::Num(p.ttl * 1e3));
+    m.insert("tok_s_user".into(), Json::Num(p.interactivity));
+    m.insert("tok_s_gpu".into(), Json::Num(p.throughput_per_gpu));
+    Json::Obj(m)
+}
+
+/// Aggregate logical-KV-token capacity of a layout for a full-size
+/// model: the per-GPU HBM envelope net of stored weights, divided by
+/// the per-token KV cost — the same arithmetic as
+/// [`memory::fits_capacity`], solved for tokens.
+pub fn sim_kv_budget_tokens(m: &ModelSpec, hw: &Hardware, lo: &Layout)
+                            -> usize {
+    let weights = memory::weights_stored_bytes_per_gpu(m, hw, lo);
+    let avail = (hw.hbm_capacity - weights).max(0.0);
+    let per_token =
+        memory::kv_stored_bytes_per_gpu(m, hw, 1, 1.0, lo.tpa, lo.kvp)
+        / lo.pp as f64;
+    if per_token <= 0.0 {
+        return 0;
+    }
+    (avail / per_token) as usize
+}
+
+/// TTL-budget layout planner over the multi-threaded sweep.
+#[derive(Debug, Clone)]
+pub struct Planner {
+    handle: ModelHandle,
+    hw: Hardware,
+    bounds: SweepBounds,
+    ttl_budget_ms: Option<f64>,
+    batch: Option<usize>,
+    /// Only rank layouts from this set (engine models: the manifest's
+    /// built layouts). `None` = the whole search space.
+    restrict: Option<Vec<Layout>>,
+    strategies: Vec<Strategy>,
+}
+
+impl Planner {
+    /// Plan for any registry model. Engine models are restricted to
+    /// their artifact layouts and default to engine-scale bounds
+    /// (their compiled batch width and KV capacity); full-size models
+    /// default to the paper's bounds (64 GPUs, batch 1024, 1M tokens).
+    pub fn new(model: &str, hw: Hardware) -> Result<Planner> {
+        Ok(Planner::from_handle(registry::lookup(model)?, hw))
+    }
+
+    /// Plan for an already-resolved model handle.
+    pub fn from_handle(handle: ModelHandle, hw: Hardware) -> Planner {
+        let mut bounds = SweepBounds::default();
+        let mut restrict = None;
+        if let Some(cfg) = &handle.engine {
+            bounds.max_batch = cfg.batch;
+            bounds.seq_len = cfg.seq_cap as f64;
+            bounds.max_gpus = handle.layouts.iter().map(Layout::n).max()
+                .unwrap_or(bounds.max_gpus);
+            restrict = Some(handle.layouts.clone());
+        }
+        let mut strategies = vec![Strategy::Helix { hopb: true }];
+        strategies.extend(sweep::baseline_strategies(&handle.spec));
+        Planner { handle, hw, bounds, ttl_budget_ms: None, batch: None,
+                  restrict, strategies }
+    }
+
+    /// Plan for a bare simulator spec (no engine restriction).
+    pub fn from_spec(spec: ModelSpec, hw: Hardware) -> Planner {
+        Planner::from_handle(ModelHandle {
+            name: spec.name.to_string(),
+            spec,
+            engine: None,
+            layouts: Vec::new(),
+        }, hw)
+    }
+
+    /// Keep only configurations predicted to meet this token-to-token
+    /// latency budget.
+    pub fn ttl_budget_ms(mut self, ms: f64) -> Planner {
+        self.ttl_budget_ms = Some(ms);
+        self
+    }
+
+    /// Pin the per-microbatch batch size.
+    pub fn batch(mut self, b: usize) -> Planner {
+        self.batch = Some(b);
+        self
+    }
+
+    /// Cap the GPU pool.
+    pub fn max_gpus(mut self, n: usize) -> Planner {
+        self.bounds.max_gpus = n;
+        self
+    }
+
+    /// Cap the batch search.
+    pub fn max_batch(mut self, b: usize) -> Planner {
+        self.bounds.max_batch = b;
+        self
+    }
+
+    /// KV history length the predictions assume.
+    pub fn seq_len(mut self, s: f64) -> Planner {
+        self.bounds.seq_len = s;
+        self
+    }
+
+    /// Replace the search bounds wholesale.
+    pub fn bounds(mut self, b: SweepBounds) -> Planner {
+        self.bounds = b;
+        self
+    }
+
+    /// Only rank layouts from this set.
+    pub fn restrict_layouts(mut self, layouts: Vec<Layout>) -> Planner {
+        self.restrict = Some(layouts);
+        self
+    }
+
+    /// Replace the strategy set (default: Helix + every baseline).
+    pub fn strategies(mut self, s: Vec<Strategy>) -> Planner {
+        self.strategies = s;
+        self
+    }
+
+    pub fn model_name(&self) -> &str {
+        &self.handle.name
+    }
+
+    pub fn spec(&self) -> &ModelSpec {
+        &self.handle.spec
+    }
+
+    pub fn bounds_ref(&self) -> &SweepBounds {
+        &self.bounds
+    }
+
+    /// Total configurations the sweep examines (the paper's "100k
+    /// configs" accounting).
+    pub fn config_count(&self) -> usize {
+        sweep::config_count(&self.handle.spec, &self.bounds)
+    }
+
+    /// Run the sweep ONCE: every strategy's points over the bounds,
+    /// restricted to the allowed layouts. Both [`Planner::plans_from`]
+    /// and [`Planner::frontiers_from`] derive from this set — callers
+    /// wanting plans *and* frontiers (e.g. `helix plan --sweep`) should
+    /// sweep once and pass the points to both.
+    pub fn sweep(&self) -> Vec<DecodePoint> {
+        let mut points = Vec::new();
+        for &s in &self.strategies {
+            points.extend(sweep::sweep_strategy(&self.handle.spec, &self.hw,
+                                                s, &self.bounds));
+        }
+        if let Some(rs) = &self.restrict {
+            points.retain(|p| rs.contains(&p.layout));
+        }
+        points
+    }
+
+    /// Helix and best-baseline Pareto frontiers of an already-swept
+    /// point set (the Fig 5/6 axes).
+    pub fn frontiers_from(&self, points: &[DecodePoint])
+                          -> (Frontier, Frontier) {
+        let (helix, base): (Vec<_>, Vec<_>) = points.iter().cloned()
+            .partition(|p| matches!(p.strategy, Strategy::Helix { .. }));
+        (Frontier::from_points(helix), Frontier::from_points(base))
+    }
+
+    /// Convenience: sweep + [`Planner::frontiers_from`].
+    pub fn frontiers(&self) -> (Frontier, Frontier) {
+        self.frontiers_from(&self.sweep())
+    }
+
+    /// Rank an already-swept point set: best throughput/GPU first among
+    /// those meeting the TTL budget (ties: lower TTL, then fewer GPUs),
+    /// fully deterministic.
+    pub fn plans_from(&self, points: &[DecodePoint]) -> Vec<Plan> {
+        let mut points = points.to_vec();
+        if let Some(b) = self.batch {
+            points.retain(|p| p.batch == b);
+        }
+        if let Some(ttl) = self.ttl_budget_ms {
+            points.retain(|p| p.ttl * 1e3 <= ttl);
+        }
+        points.sort_by(|a, b| {
+            b.throughput_per_gpu.total_cmp(&a.throughput_per_gpu)
+                .then(a.ttl.total_cmp(&b.ttl))
+                .then(a.gpus.cmp(&b.gpus))
+                .then(a.batch.cmp(&b.batch))
+                .then_with(|| a.layout.key().cmp(&b.layout.key()))
+                .then_with(|| a.strategy.name().cmp(b.strategy.name()))
+        });
+        points.iter().map(|p| self.to_plan(p)).collect()
+    }
+
+    /// Convenience: sweep + [`Planner::plans_from`].
+    pub fn plan(&self) -> Result<Vec<Plan>> {
+        Ok(self.plans_from(&self.sweep()))
+    }
+
+    /// The top-ranked plan; errors if nothing satisfies the filters.
+    pub fn best(&self) -> Result<Plan> {
+        let plans = self.plan()?;
+        match plans.into_iter().next() {
+            Some(p) => Ok(p),
+            None => bail!(
+                "no configuration for {} satisfies the constraints \
+                 (ttl_budget_ms={:?}, batch={:?}, max_gpus={}, \
+                 seq_len={:.0}{})",
+                self.handle.name, self.ttl_budget_ms, self.batch,
+                self.bounds.max_gpus, self.bounds.seq_len,
+                if self.restrict.is_some() {
+                    ", restricted to the artifact layouts"
+                } else {
+                    ""
+                }),
+        }
+    }
+
+    fn to_plan(&self, p: &DecodePoint) -> Plan {
+        Plan {
+            model: self.handle.name.clone(),
+            strategy: p.strategy.name().to_string(),
+            layout: p.layout,
+            batch: p.batch,
+            gpus: p.gpus,
+            seq_len: self.bounds.seq_len,
+            predicted: Predicted {
+                ttl_ms: p.ttl * 1e3,
+                interactivity: p.interactivity,
+                tokens_per_gpu_s: p.throughput_per_gpu,
+            },
+            kv_budget: self.kv_budget_for(&p.layout),
+        }
+    }
+
+    fn kv_budget_for(&self, lo: &Layout) -> usize {
+        match &self.handle.engine {
+            Some(cfg) => cfg.batch
+                * cfg.seq_cap.saturating_sub(cfg.kv_block * lo.kvp),
+            None => sim_kv_budget_tokens(&self.handle.spec, &self.hw, lo),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hw() -> Hardware {
+        Hardware::gb200_nvl72()
+    }
+
+    #[test]
+    fn sim_planner_ranks_by_throughput_under_ttl() {
+        let planner = Planner::from_spec(ModelSpec::llama_405b(), hw())
+            .max_batch(64);
+        let plans = planner.plan().unwrap();
+        assert!(plans.len() > 10, "only {} plans", plans.len());
+        for w in plans.windows(2) {
+            assert!(w[0].predicted.tokens_per_gpu_s
+                    >= w[1].predicted.tokens_per_gpu_s);
+        }
+        // A TTL budget prunes, never reorders the survivors.
+        let ttl = plans[plans.len() / 2].predicted.ttl_ms;
+        let budgeted = planner.clone().ttl_budget_ms(ttl).plan().unwrap();
+        assert!(!budgeted.is_empty());
+        assert!(budgeted.len() <= plans.len());
+        for p in &budgeted {
+            assert!(p.predicted.ttl_ms <= ttl);
+        }
+        let unbudgeted_best_under_ttl = plans.iter()
+            .find(|p| p.predicted.ttl_ms <= ttl).unwrap();
+        assert_eq!(&budgeted[0], unbudgeted_best_under_ttl);
+    }
+
+    #[test]
+    fn impossible_ttl_budget_errors_helpfully() {
+        let planner = Planner::from_spec(ModelSpec::llama_405b(), hw())
+            .max_batch(8)
+            .ttl_budget_ms(1e-9);
+        let e = planner.best().unwrap_err();
+        assert!(format!("{e:#}").contains("ttl_budget_ms"));
+    }
+
+    #[test]
+    fn kv_budget_matches_capacity_check() {
+        let m = ModelSpec::llama_405b();
+        let lo = Layout::helix(8, 8, 64, 1);
+        let budget = sim_kv_budget_tokens(&m, &hw(), &lo);
+        assert!(budget > 0);
+        // The budget is exactly the fits_capacity frontier: one batch
+        // of `budget` tokens fits, 1% more does not.
+        assert!(memory::fits_capacity(&m, &hw(), &lo, 1,
+                                      budget as f64 * 0.99));
+        assert!(!memory::fits_capacity(&m, &hw(), &lo, 1,
+                                       budget as f64 * 1.01));
+    }
+
+    #[test]
+    fn plan_json_roundtrip_is_identical() {
+        let planner = Planner::from_spec(ModelSpec::deepseek_r1(), hw())
+            .max_batch(64);
+        let plans = planner.plan().unwrap();
+        let plan = &plans[0];
+        let j = Json::parse(&plan.to_json().to_string()).unwrap();
+        assert_eq!(&Plan::from_json(&j).unwrap(), plan);
+        // Document form: from_json_doc picks the top-ranked plan.
+        let doc = plans_to_doc("deepseek-r1", Some(5.0), &plans[..3], None);
+        let j = Json::parse(&doc.to_string()).unwrap();
+        assert_eq!(&Plan::from_json_doc(&j).unwrap(), plan);
+    }
+
+    #[test]
+    fn restricted_planner_only_emits_allowed_layouts() {
+        let allowed = vec![Layout::helix(8, 8, 64, 1), Layout::tp(8)];
+        let plans = Planner::from_spec(ModelSpec::llama_405b(), hw())
+            .max_batch(64)
+            .restrict_layouts(allowed.clone())
+            .plan()
+            .unwrap();
+        assert!(!plans.is_empty());
+        for p in &plans {
+            assert!(allowed.contains(&p.layout), "{:?}", p.layout);
+        }
+    }
+}

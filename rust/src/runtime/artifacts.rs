@@ -11,6 +11,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{ensure, Context, Result};
 
+use crate::config::{EngineModelConfig, Layout};
 use crate::util::Json;
 
 use super::tensor::{DType, HostTensor};
@@ -39,56 +40,13 @@ pub struct WeightRef {
     pub shape: Vec<usize>,
 }
 
-/// Engine-model configuration (mirrors python/compile/configs.py).
-#[derive(Debug, Clone, PartialEq, Eq)]
-pub struct EngineModelConfig {
-    pub hidden: usize,
-    pub q_heads: usize,
-    pub kv_heads: usize,
-    pub head_size: usize,
-    pub layers: usize,
-    pub vocab: usize,
-    pub seq_cap: usize,
-    pub batch: usize,
-    pub kv_block: usize,
-    pub ffn: usize,
-    pub experts: usize,
-    pub top_k: usize,
-    pub expert_ffn: usize,
-    pub shared_ffn: usize,
-}
-
-impl EngineModelConfig {
-    pub fn is_moe(&self) -> bool {
-        self.experts > 0
-    }
-}
-
-/// An execution layout as emitted by aot.py.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct EngineLayout {
-    pub kvp: usize,
-    pub tpa: usize,
-    pub tpf: usize,
-    pub ep: usize,
-}
-
-impl EngineLayout {
-    pub fn n(&self) -> usize {
-        self.kvp * self.tpa
-    }
-
-    pub fn key(&self) -> String {
-        format!("kvp{}_tpa{}_tpf{}_ep{}", self.kvp, self.tpa, self.tpf,
-                self.ep)
-    }
-}
-
-/// Per-model manifest entry.
+/// Per-model manifest entry. The model config and the layouts are the
+/// unified [`crate::config`] types — the manifest is just one *source*
+/// of layouts, not a parallel type system.
 #[derive(Debug, Clone)]
 pub struct ModelEntry {
     pub config: EngineModelConfig,
-    pub layouts: Vec<EngineLayout>,
+    pub layouts: Vec<Layout>,
     /// role key (e.g. `in_proj_tpa2`) -> program name.
     pub program_index: BTreeMap<String, String>,
     pub wemb: WeightRef,
@@ -169,12 +127,11 @@ impl Manifest {
             };
             let mut layouts = Vec::new();
             for lj in mj.get("layouts")?.as_arr()? {
-                layouts.push(EngineLayout {
-                    kvp: lj.get("kvp")?.as_usize()?,
-                    tpa: lj.get("tpa")?.as_usize()?,
-                    tpf: lj.get("tpf")?.as_usize()?,
-                    ep: lj.get("ep")?.as_usize()?,
-                });
+                let lo = Layout::from_json(lj)?;
+                lo.validate_engine(&cfg).with_context(|| {
+                    format!("model {name}: manifest layout {}", lo.key())
+                })?;
+                layouts.push(lo);
             }
             let mut program_index = BTreeMap::new();
             for (role, pj) in mj.get("program_index")?.as_obj()? {
@@ -311,8 +268,8 @@ fn f32s(name: &str, shape: &[usize]) -> TensorSpec {
 /// (tiny_gqa ~ Llama-405B, tiny_mla ~ DeepSeek-R1 attention,
 /// tiny_moe ~ DeepSeek-R1 FFN) with the same layout sets.
 fn synthetic_models()
-    -> Vec<(&'static str, EngineModelConfig, Vec<EngineLayout>)> {
-    let lo = |kvp, tpa, tpf, ep| EngineLayout { kvp, tpa, tpf, ep };
+    -> Vec<(&'static str, EngineModelConfig, Vec<Layout>)> {
+    let lo = Layout::helix;
     vec![
         ("tiny_gqa",
          EngineModelConfig {
@@ -368,7 +325,7 @@ impl Manifest {
 /// later `make artifacts` drop-in changes nothing above the runtime).
 fn synthetic_model(programs: &mut BTreeMap<String, ProgramSpec>,
                    name: &str, cfg: EngineModelConfig,
-                   layouts: Vec<EngineLayout>) -> ModelEntry {
+                   layouts: Vec<Layout>) -> ModelEntry {
     let (h, hsz, qh, kh, bsz) =
         (cfg.hidden, cfg.head_size, cfg.q_heads, cfg.kv_heads, cfg.batch);
     let mut idx: BTreeMap<String, String> = BTreeMap::new();

@@ -1,62 +1,104 @@
 //! Engine-facing CLI subcommands: verify / serve / layouts.
+//!
+//! Layout selection is plan-first: `--plan FILE` (or `-` for stdin)
+//! boots the top-ranked plan from a `helix plan` document, `--auto`
+//! runs the planner inline (same knobs as `helix plan`: `--ttl`,
+//! `--gpus`, ...), and the legacy `--layout kvp2_tpa2_tpf4_ep1` key
+//! parses through the unified [`Layout`] type — there is no
+//! serve-private layout grammar any more.
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
+use crate::config::Layout;
 use crate::engine::{ClusterConfig, CommModel, HelixCluster};
-use crate::runtime::artifacts::EngineLayout;
+use crate::plan::{self, Plan};
 use crate::runtime::Manifest;
 use crate::util::cli::Args;
 use crate::util::table::Table;
-use crate::util::Rng;
+use crate::util::{Json, Rng};
 
 use super::server::{Server, Workload};
 
-fn parse_layout(manifest: &Manifest, model: &str, key: Option<&str>)
-                -> Result<EngineLayout> {
-    let entry = manifest.model(model)?;
-    match key {
-        None => Ok(entry.layouts[0]),
-        Some(k) => entry
-            .layouts
-            .iter()
-            .copied()
-            .find(|l| l.key() == k)
-            .ok_or_else(|| anyhow::anyhow!(
-                "layout {k:?} not built for {model}; available: {}",
-                entry.layouts.iter().map(|l| l.key())
-                    .collect::<Vec<_>>().join(", "))),
+/// Resolve what to boot: an explicit plan, an inline planner run, or
+/// the legacy model + layout-key flags.
+fn resolve_target(args: &Args) -> Result<(String, Layout, Option<Plan>)> {
+    if let Some(src) = args.opt("plan") {
+        if let Some(m) = args.opt("model") {
+            bail!("--model {m} conflicts with --plan (the plan pins the \
+                   model)");
+        }
+        if let Some(k) = args.opt("layout") {
+            bail!("--layout {k} conflicts with --plan (the plan pins the \
+                   layout)");
+        }
+        if args.flag("auto") {
+            bail!("--auto conflicts with --plan (pick one source of truth)");
+        }
+        let text = if src == "-" {
+            std::io::read_to_string(std::io::stdin())
+                .context("reading plan document from stdin")?
+        } else {
+            std::fs::read_to_string(src)
+                .with_context(|| format!("reading plan file {src}"))?
+        };
+        let plan = Plan::from_json_doc(&Json::parse(&text)?)
+            .context("parsing plan document")?;
+        return Ok((plan.model.clone(), plan.layout, Some(plan)));
     }
+    if args.flag("auto") {
+        if let Some(k) = args.opt("layout") {
+            bail!("--layout {k} conflicts with --auto (the planner picks \
+                   the layout)");
+        }
+        let (planner, _) = plan::cli::planner_from_args(args, "tiny_gqa")?;
+        let plan = planner.best()?;
+        eprintln!("auto-plan: {} [{}] batch {} — predicted ttl {:.4} ms, \
+                   {:.4} tok/s/gpu", plan.model, plan.layout.key(),
+                  plan.batch, plan.predicted.ttl_ms,
+                  plan.predicted.tokens_per_gpu_s);
+        return Ok((plan.model.clone(), plan.layout, Some(plan)));
+    }
+    let model = args.opt_or("model", "tiny_gqa").to_string();
+    let layout = match args.opt("layout") {
+        // Membership in the built artifacts is checked (with a
+        // list-the-alternatives error) by `HelixCluster::new`.
+        Some(k) => Layout::parse_key(k)?,
+        None => {
+            let manifest =
+                Manifest::load_or_synthetic(&Manifest::default_root())?;
+            manifest.model(&model)?.layouts[0]
+        }
+    };
+    Ok((model, layout, None))
 }
 
-fn cluster_from(args: &Args, verify: bool) -> Result<HelixCluster> {
-    let model = args.opt_or("model", "tiny_gqa").to_string();
-    let root = Manifest::default_root();
-    let manifest = Manifest::load_or_synthetic(&root)?;
-    let layout = parse_layout(&manifest, &model, args.opt("layout"))?;
+fn cluster_from(args: &Args, verify: bool)
+                -> Result<(HelixCluster, String, Option<Plan>)> {
+    let (model, layout, plan) = resolve_target(args)?;
     let mut cc = ClusterConfig::new(&model, layout);
-    cc.artifacts = root;
     cc.verify = verify || args.flag("verify");
-    cc.hopb = args.flag("hopb");
+    // A helix plan's predictions assume the HOP-B overlap is on.
+    cc.hopb = args.flag("hopb")
+        || plan.as_ref().is_some_and(|p| p.strategy == "helix");
     let scale = args.opt_f64("comm-scale", 0.0)?;
     if scale > 0.0 {
         cc.comm = CommModel { scale, ..CommModel::nvlink() };
     }
-    HelixCluster::new(cc)
+    Ok((HelixCluster::new(cc)?, model, plan))
 }
 
 /// `helix verify`: run random decode steps, compare vs reference.
 fn cmd_verify(args: &Args) -> Result<()> {
     let steps = args.opt_usize("steps", 24)?;
-    let mut cluster = cluster_from(args, true)?;
+    let (mut cluster, model, _) = cluster_from(args, true)?;
     let b = cluster.batch();
     for row in 0..b {
         cluster.open_slot(row)?;
     }
     let mut rng = Rng::new(args.opt_usize("seed", 7)? as u64);
     let vocab = cluster.cfg.vocab;
-    println!("model {} layout {} | {} ranks | verifying {} steps",
-             args.opt_or("model", "tiny_gqa"), cluster.layout.key(),
-             cluster.n(), steps);
+    println!("model {model} layout {} | {} ranks | verifying {} steps",
+             cluster.layout.key(), cluster.n(), steps);
     let mut worst = 0.0f32;
     for step in 0..steps {
         let tokens: Vec<i32> =
@@ -77,14 +119,16 @@ fn cmd_verify(args: &Args) -> Result<()> {
 
 /// `helix serve`: end-to-end batched serving on synthetic requests.
 ///
-/// Continuous-batching knobs: `--arrival-rate R` (requests per engine
-/// step; 0 queues everything up front), `--burst K` (arrivals land K at
-/// a time), `--kv-budget T` (aggregate KV-token admission budget; 0 uses
-/// the cluster's full physical pool).
+/// Layout selection: `--plan FILE|-` (a `helix plan` document; its KV
+/// budget becomes the admission budget), `--auto` (plan inline), or
+/// `--layout KEY`. Continuous-batching knobs: `--arrival-rate R`
+/// (requests per engine step; 0 queues everything up front), `--burst K`
+/// (arrivals land K at a time), `--kv-budget T` (override the aggregate
+/// KV-token admission budget; 0 uses the plan's budget or the cluster's
+/// full physical pool).
 fn cmd_serve(args: &Args) -> Result<()> {
-    let cluster = cluster_from(args, args.flag("verify"))?;
+    let (cluster, model, plan) = cluster_from(args, args.flag("verify"))?;
     let gpus = cluster.n();
-    let model = args.opt_or("model", "tiny_gqa").to_string();
     let layout = cluster.layout.key();
     let workload = Workload {
         num_requests: args.opt_usize("requests", 16)?,
@@ -96,18 +140,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
         arrival_rate: args.opt_f64("arrival-rate", 0.0)?,
         burst: args.opt_usize("burst", 1)?,
     };
-    let kv_budget = args.opt_usize("kv-budget", 0)?;
-    let mut server = if kv_budget > 0 {
-        Server::with_kv_budget(cluster, kv_budget)
-    } else {
-        Server::new(cluster)
+    let kv_budget = match args.opt_usize("kv-budget", 0)? {
+        0 => plan.as_ref()
+            .map(|p| p.kv_budget.min(cluster.kv_budget_tokens())),
+        explicit => Some(explicit),
+    };
+    let mut server = match kv_budget {
+        Some(b) => Server::with_kv_budget(cluster, b),
+        None => Server::new(cluster),
     };
     println!("serving {} requests on {model} [{layout}] over {gpus} ranks \
               (hopb={}, comm-scale={}, arrival-rate={}, burst={}, \
-              kv-budget={})",
+              kv-budget={}{})",
              workload.num_requests, args.flag("hopb"),
              args.opt_or("comm-scale", "0"), workload.arrival_rate,
-             workload.burst, server.router.budget().budget_tokens);
+             workload.burst, server.router.budget().budget_tokens,
+             if plan.is_some() { ", planned" } else { "" });
     let report = server.run(&workload, args.opt_usize("max-steps", 100_000)?
                             as u64)?;
     println!("{}", report.render());

@@ -8,6 +8,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::engine::HelixCluster;
+use crate::plan::Plan;
 use crate::util::Rng;
 
 use super::batcher;
@@ -139,6 +140,16 @@ impl Server {
             reserve_tokens: reserve,
         };
         Server { cluster, router: Router::new(slots, budget) }
+    }
+
+    /// Boot a server straight from a planner [`Plan`]: the planned
+    /// layout becomes the cluster, and the plan's KV budget becomes the
+    /// admission budget (clamped to the cluster's physical pool — the
+    /// planner's envelope can never oversubscribe the real caches).
+    pub fn from_plan(plan: &Plan) -> Result<Server> {
+        let cluster = HelixCluster::from_plan(plan)?;
+        let budget = plan.kv_budget.min(cluster.kv_budget_tokens());
+        Ok(Server::with_kv_budget(cluster, budget))
     }
 
     /// Run a synthetic workload to completion (or `max_steps`).

@@ -286,6 +286,30 @@ mod tests {
         assert!(config_count(&m, &bounds()) > 500);
     }
 
+    /// Drift guard: the advertised config count and the enumerator the
+    /// sweep (and the planner) actually iterate must agree — an edit to
+    /// `layouts()` that forgets `config_count` (or vice versa) fails
+    /// here. The batch axis is recomputed independently on purpose.
+    #[test]
+    fn config_count_matches_enumerator() {
+        for m in [ModelSpec::llama_405b(), ModelSpec::deepseek_r1(),
+                  ModelSpec::fig1_dense()] {
+            let b = bounds();
+            let mut batches = 1usize; // independent pow2 count
+            let mut x = 1usize;
+            while x * 2 <= b.max_batch {
+                x *= 2;
+                batches += 1;
+            }
+            let total: usize = [Strategy::Helix { hopb: true }, Strategy::Tp,
+                                Strategy::MedhaKvp, Strategy::DpEp]
+                .into_iter()
+                .map(|s| layouts(&m, s, &b).len() * batches)
+                .sum();
+            assert_eq!(config_count(&m, &b), total, "model {}", m.name);
+        }
+    }
+
     #[test]
     fn parallel_sweep_matches_serial() {
         let m = ModelSpec::deepseek_r1();

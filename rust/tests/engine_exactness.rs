@@ -10,13 +10,13 @@
 mod common;
 
 use helix::engine::{ClusterConfig, CommModel, HelixCluster};
-use helix::runtime::artifacts::EngineLayout;
+use helix::config::Layout;
 
 use crate::common::{cluster_or_skip as cluster, manifest_or_skip as manifest};
 
 const TOL: f32 = 1e-3;
 
-fn run_steps(model: &str, layout: EngineLayout, hopb: bool, steps: usize)
+fn run_steps(model: &str, layout: Layout, hopb: bool, steps: usize)
              -> Option<f32> {
     let mut cc = ClusterConfig::new(model, layout);
     cc.verify = true;
@@ -59,8 +59,7 @@ fn hopb_pipeline_is_equally_exact() {
     // The per-request pipelined attention path must produce identical
     // results to lockstep (same programs, different schedule).
     let Some(worst) = run_steps("tiny_gqa",
-                                EngineLayout { kvp: 2, tpa: 2, tpf: 4,
-                                               ep: 1 },
+                                Layout::helix(2, 2, 4, 1),
                                 true, 12)
     else { return };
     assert!(worst < TOL, "HOP-B path diverged: {worst:.3e}");
@@ -69,7 +68,7 @@ fn hopb_pipeline_is_equally_exact() {
 #[test]
 fn comm_emulation_does_not_change_numerics() {
     let mut cc = ClusterConfig::new(
-        "tiny_gqa", EngineLayout { kvp: 2, tpa: 2, tpf: 4, ep: 1 });
+        "tiny_gqa", Layout::helix(2, 2, 4, 1));
     cc.verify = true;
     cc.comm = CommModel { scale: 50.0, ..CommModel::nvlink() };
     let Some(mut cluster) = cluster(cc) else { return };
@@ -86,7 +85,7 @@ fn comm_emulation_does_not_change_numerics() {
 #[test]
 fn partial_batch_and_slot_reuse() {
     let mut cc = ClusterConfig::new(
-        "tiny_gqa", EngineLayout { kvp: 2, tpa: 2, tpf: 4, ep: 1 });
+        "tiny_gqa", Layout::helix(2, 2, 4, 1));
     cc.verify = true;
     let Some(mut cluster) = cluster(cc) else { return };
     // Only slots 0 and 2 live.
@@ -115,8 +114,7 @@ fn partial_batch_and_slot_reuse() {
 fn long_decode_crosses_many_kv_blocks() {
     // 3+ full round-robin cycles on the kvp=4 layout.
     let Some(worst) = run_steps("tiny_gqa",
-                                EngineLayout { kvp: 4, tpa: 1, tpf: 4,
-                                               ep: 1 },
+                                Layout::helix(4, 1, 4, 1),
                                 false, 3 * 16 * 4 / 4)
     else { return };
     assert!(worst < TOL, "long decode diverged: {worst:.3e}");
@@ -125,7 +123,7 @@ fn long_decode_crosses_many_kv_blocks() {
 #[test]
 fn fault_injection_surfaces_rank_errors() {
     let cc = ClusterConfig::new(
-        "tiny_gqa", EngineLayout { kvp: 2, tpa: 2, tpf: 4, ep: 1 });
+        "tiny_gqa", Layout::helix(2, 2, 4, 1));
     let Some(mut cluster) = cluster(cc) else { return };
     let err = cluster.inject_fault(1, "simulated XID").unwrap();
     assert!(err.contains("simulated XID"), "got {err:?}");
@@ -142,7 +140,7 @@ fn unknown_layout_is_rejected() {
         return;
     }
     let cc = ClusterConfig::new(
-        "tiny_gqa", EngineLayout { kvp: 8, tpa: 1, tpf: 8, ep: 1 });
+        "tiny_gqa", Layout::helix(8, 1, 8, 1));
     let err = HelixCluster::new(cc).err().expect("must fail");
     assert!(format!("{err:#}").contains("not in artifacts"));
 }
@@ -150,7 +148,7 @@ fn unknown_layout_is_rejected() {
 #[test]
 fn kv_overflow_is_an_error_not_corruption() {
     let mut cc = ClusterConfig::new(
-        "tiny_gqa", EngineLayout { kvp: 1, tpa: 1, tpf: 1, ep: 1 });
+        "tiny_gqa", Layout::helix(1, 1, 1, 1));
     cc.verify = false;
     let Some(mut cluster) = cluster(cc) else { return };
     cluster.open_slot(0).unwrap();

@@ -1,0 +1,173 @@
+//! Planner -> engine integration: the PR 4 acceptance pin.
+//!
+//! * `helix plan --model <m> | helix serve --plan -` (the real binary,
+//!   a real pipe) boots a cluster whose layout equals the sweep's
+//!   top-ranked point.
+//! * A `Plan` JSON round-trip yields an *identical* cluster
+//!   configuration (model config + layout), and `Server::from_plan`
+//!   never oversubscribes the physical KV pool.
+//! * Every engine model's manifest layouts validate under BOTH model
+//!   descriptions (the one-registry invariant), and every plan the
+//!   planner emits for an engine model is bootable.
+
+mod common;
+
+use std::io::Write;
+use std::process::{Command, Stdio};
+
+use helix::config::{registry, Hardware};
+use helix::engine::HelixCluster;
+use helix::plan::{Plan, Planner};
+use helix::serve::{Server, Workload};
+use helix::util::Json;
+
+fn planner(model: &str) -> Planner {
+    Planner::new(model, Hardware::gb200_nvl72()).unwrap()
+}
+
+/// The acceptance test, through the library API: top-ranked plan ->
+/// JSON -> parsed plan -> live cluster, layout pinned to the sweep's
+/// winner and numerics equal to a directly-constructed cluster.
+#[test]
+fn top_plan_roundtrips_to_an_identical_cluster() {
+    let Some(_probe) = common::manifest_or_skip() else { return };
+    let best = planner("tiny_gqa").best().unwrap();
+
+    // serialize -> parse -> identical plan ...
+    let j = Json::parse(&best.to_json().to_string()).unwrap();
+    let parsed = Plan::from_json(&j).unwrap();
+    assert_eq!(parsed, best);
+
+    // ... -> identical cluster configuration.
+    let Some(a) = common::cluster_or_skip(
+        helix::engine::ClusterConfig::from_plan(&best)) else { return };
+    let b = HelixCluster::from_plan(&parsed).unwrap();
+    assert_eq!(a.layout, best.layout, "cluster layout != planned layout");
+    assert_eq!(a.layout, b.layout);
+    assert_eq!(a.cfg, b.cfg, "round-trip changed the model config");
+
+    // The plan's KV budget never oversubscribes the physical pool.
+    let server = Server::from_plan(&best).unwrap();
+    assert!(server.router.budget().budget_tokens
+            <= server.cluster.kv_budget_tokens());
+    assert_eq!(server.cluster.layout, best.layout);
+}
+
+/// `helix plan --model tiny_gqa | helix serve --plan -` — the actual
+/// binary, stdout piped to stdin — boots the sweep's top-ranked layout.
+#[test]
+fn plan_pipes_into_serve() {
+    let Some(_probe) = common::cluster_or_skip(
+        helix::engine::ClusterConfig::new(
+            "tiny_gqa", helix::config::Layout::helix(1, 1, 1, 1)))
+    else { return };
+    let expected = planner("tiny_gqa").best().unwrap();
+
+    let bin = env!("CARGO_BIN_EXE_helix");
+    let plan_out = Command::new(bin)
+        .args(["plan", "--model", "tiny_gqa", "--top", "3"])
+        .output()
+        .expect("running `helix plan`");
+    assert!(plan_out.status.success(), "helix plan failed: {}",
+            String::from_utf8_lossy(&plan_out.stderr));
+    // stdout is pure JSON (the human summary goes to stderr).
+    let doc = Json::parse(std::str::from_utf8(&plan_out.stdout).unwrap())
+        .expect("helix plan stdout must be valid JSON");
+    let top = Plan::from_json_doc(&doc).unwrap();
+    assert_eq!(top.layout, expected.layout,
+               "CLI top plan != library top plan");
+
+    let mut serve = Command::new(bin)
+        .args(["serve", "--plan", "-", "--requests", "3", "--prompt-min",
+               "2", "--prompt-max", "4", "--gen-min", "2", "--gen-max", "4"])
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawning `helix serve --plan -`");
+    serve.stdin.take().unwrap()
+        .write_all(&plan_out.stdout)
+        .expect("writing plan document to serve stdin");
+    let out = serve.wait_with_output().expect("waiting for serve");
+    assert!(out.status.success(), "helix serve --plan - failed: {}",
+            String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains(&format!("[{}]", expected.layout.key())),
+            "serve did not boot the planned layout {}:\n{stdout}",
+            expected.layout.key());
+    assert!(stdout.contains("requests completed : 3"),
+            "planned serve did not complete the trace:\n{stdout}");
+}
+
+/// One registry, one truth: every manifest layout of every engine model
+/// validates under both the engine config and the derived simulator
+/// spec, and every plan the planner emits is in the manifest set.
+#[test]
+fn every_engine_plan_is_bootable() {
+    let Some(manifest) = common::manifest_or_skip() else { return };
+    for name in manifest.models.keys() {
+        let handle = registry::lookup_in(Some(&manifest), name).unwrap();
+        let cfg = handle.engine.as_ref().unwrap();
+        for lo in &handle.layouts {
+            lo.validate_engine(cfg).unwrap_or_else(|e| {
+                panic!("{name}: manifest layout {} fails engine \
+                        validation: {e:#}", lo.key())
+            });
+            lo.validate(&handle.spec, false).unwrap_or_else(|e| {
+                panic!("{name}: manifest layout {} fails sim validation \
+                        against the derived spec: {e:#}", lo.key())
+            });
+        }
+        let plans = planner(name).plan().unwrap();
+        assert!(!plans.is_empty(), "{name}: planner found no plans");
+        for p in &plans {
+            assert!(handle.layouts.contains(&p.layout),
+                    "{name}: planner emitted unbootable layout {}",
+                    p.layout.key());
+            assert!(p.kv_budget > 0, "{name}: zero KV budget");
+        }
+    }
+}
+
+/// Serving through a plan produces the same tokens as serving through
+/// the hand-built path — planning changes provisioning, not numerics.
+#[test]
+fn planned_serving_matches_direct_serving() {
+    let Some(_probe) = common::manifest_or_skip() else { return };
+    let best = planner("tiny_gqa").best().unwrap();
+    let workload = Workload { num_requests: 4, prompt_len: (2, 4),
+                              gen_len: (3, 5), seed: 123,
+                              arrival_rate: 0.0, burst: 1 };
+
+    let mut planned = match Server::from_plan(&best) {
+        Ok(s) => s,
+        Err(_) => return, // backend unavailable (pjrt pinned, no closure)
+    };
+    planned.run(&workload, 10_000).unwrap();
+    let mut a: Vec<(u64, Vec<i32>)> = planned.router.completed.iter()
+        .map(|st| (st.req.id, st.generated.clone()))
+        .collect();
+    a.sort();
+
+    let mut cc = helix::engine::ClusterConfig::new("tiny_gqa", best.layout);
+    cc.hopb = best.strategy == "helix";
+    let Some(c) = common::cluster_or_skip(cc) else { return };
+    let mut direct = Server::new(c);
+    direct.run(&workload, 10_000).unwrap();
+    let mut b: Vec<(u64, Vec<i32>)> = direct.router.completed.iter()
+        .map(|st| (st.req.id, st.generated.clone()))
+        .collect();
+    b.sort();
+    assert_eq!(a, b, "planned vs direct serving diverged");
+}
+
+/// Unknown model names fail loudly with the candidate list — the
+/// classic operational footgun is planning against a different
+/// artifact root than serving; the error must name the problem.
+#[test]
+fn plans_for_unknown_models_fail_loudly() {
+    let Some(_m) = common::manifest_or_skip() else { return };
+    let e = Planner::new("no_such_model", Hardware::gb200_nvl72())
+        .unwrap_err();
+    assert!(format!("{e:#}").contains("unknown model"));
+}

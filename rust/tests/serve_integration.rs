@@ -10,15 +10,15 @@ mod common;
 use std::collections::BTreeMap;
 
 use helix::engine::{ClusterConfig, HelixCluster};
-use helix::runtime::artifacts::EngineLayout;
+use helix::config::Layout;
 use helix::serve::{Request, Server, Workload};
 
-fn cluster(model: &str, layout: EngineLayout, verify: bool)
+fn cluster(model: &str, layout: Layout, verify: bool)
            -> Option<HelixCluster> {
     cluster_cfg(model, layout, verify, false)
 }
 
-fn cluster_cfg(model: &str, layout: EngineLayout, verify: bool, hopb: bool)
+fn cluster_cfg(model: &str, layout: Layout, verify: bool, hopb: bool)
                -> Option<HelixCluster> {
     let mut cc = ClusterConfig::new(model, layout);
     cc.verify = verify;
@@ -34,7 +34,7 @@ fn cluster_cfg(model: &str, layout: EngineLayout, verify: bool, hopb: bool)
 /// change numerics.
 #[test]
 fn bursty_trace_respects_kv_budget_and_matches_solo_decode() {
-    let layout = EngineLayout { kvp: 2, tpa: 2, tpf: 4, ep: 1 };
+    let layout = Layout::helix(2, 2, 4, 1);
     let Some(c) = cluster("tiny_gqa", layout, false) else { return };
     let vocab = c.cfg.vocab;
 
@@ -99,8 +99,7 @@ fn bursty_trace_respects_kv_budget_and_matches_solo_decode() {
 fn completes_more_requests_than_slots() {
     // 10 requests through 4 slots: exercises admission, retirement and
     // slot reuse (continuous batching).
-    let Some(c) = cluster("tiny_gqa", EngineLayout { kvp: 2, tpa: 2, tpf: 4,
-                                                     ep: 1 }, true)
+    let Some(c) = cluster("tiny_gqa", Layout::helix(2, 2, 4, 1), true)
     else { return };
     let mut server = Server::new(c);
     let workload = Workload { num_requests: 10, prompt_len: (2, 5),
@@ -124,7 +123,7 @@ fn completes_more_requests_than_slots() {
 #[test]
 fn hopb_partial_batch_serving_is_exact() {
     let Some(c) = cluster_cfg("tiny_gqa",
-                              EngineLayout { kvp: 2, tpa: 2, tpf: 4, ep: 1 },
+                              Layout::helix(2, 2, 4, 1),
                               true, true)
     else { return };
     // Squeeze admission to 2-3 concurrent requests so HOP-B steps run
@@ -142,8 +141,7 @@ fn hopb_partial_batch_serving_is_exact() {
 
 #[test]
 fn every_request_generates_requested_tokens() {
-    let Some(c) = cluster("tiny_gqa", EngineLayout { kvp: 4, tpa: 1, tpf: 4,
-                                                     ep: 1 }, false)
+    let Some(c) = cluster("tiny_gqa", Layout::helix(4, 1, 4, 1), false)
     else { return };
     let mut server = Server::new(c);
     let workload = Workload { num_requests: 6, prompt_len: (3, 3),
@@ -167,8 +165,7 @@ fn every_request_generates_requested_tokens() {
 
 #[test]
 fn oversized_requests_are_rejected_not_wedged() {
-    let Some(c) = cluster("tiny_gqa", EngineLayout { kvp: 2, tpa: 2, tpf: 4,
-                                                     ep: 1 }, false)
+    let Some(c) = cluster("tiny_gqa", Layout::helix(2, 2, 4, 1), false)
     else { return };
     let cap = c.cfg.seq_cap;
     let mut server = Server::new(c);
@@ -183,8 +180,7 @@ fn oversized_requests_are_rejected_not_wedged() {
 
 #[test]
 fn degenerate_requests_never_reach_the_engine() {
-    let Some(c) = cluster("tiny_gqa", EngineLayout { kvp: 2, tpa: 2, tpf: 4,
-                                                     ep: 1 }, false)
+    let Some(c) = cluster("tiny_gqa", Layout::helix(2, 2, 4, 1), false)
     else { return };
     let mut server = Server::new(c);
     // Zero-generation requests fast-path to completion at submit...
@@ -207,8 +203,7 @@ fn degenerate_requests_never_reach_the_engine() {
 #[test]
 fn deterministic_given_seed() {
     let run = || {
-        let c = cluster("tiny_gqa", EngineLayout { kvp: 2, tpa: 2, tpf: 4,
-                                                   ep: 1 }, false)?;
+        let c = cluster("tiny_gqa", Layout::helix(2, 2, 4, 1), false)?;
         let mut server = Server::new(c);
         let workload = Workload { num_requests: 4, prompt_len: (2, 4),
                                   gen_len: (4, 6), seed: 99,
@@ -229,8 +224,7 @@ fn deterministic_given_seed() {
 
 #[test]
 fn moe_serving_works() {
-    let Some(c) = cluster("tiny_moe", EngineLayout { kvp: 2, tpa: 2, tpf: 2,
-                                                     ep: 2 }, true)
+    let Some(c) = cluster("tiny_moe", Layout::helix(2, 2, 2, 2), true)
     else { return };
     let mut server = Server::new(c);
     let workload = Workload { num_requests: 5, prompt_len: (2, 4),
@@ -243,8 +237,7 @@ fn moe_serving_works() {
 
 #[test]
 fn mla_serving_works() {
-    let Some(c) = cluster("tiny_mla", EngineLayout { kvp: 4, tpa: 1, tpf: 4,
-                                                     ep: 1 }, true)
+    let Some(c) = cluster("tiny_mla", Layout::helix(4, 1, 4, 1), true)
     else { return };
     let mut server = Server::new(c);
     let workload = Workload { num_requests: 5, prompt_len: (2, 4),

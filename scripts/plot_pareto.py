@@ -1,0 +1,175 @@
+#!/usr/bin/env python3
+"""Render the Fig 5/6-style throughput-vs-interactivity frontier from a
+``helix plan --sweep`` JSON document.
+
+Usage:
+    cargo run --release -- plan --model deepseek-r1 --sweep --out plan.json
+    python3 scripts/plot_pareto.py plan.json [-o pareto.png]
+
+With matplotlib installed this writes whatever ``-o``'s suffix says
+(default ``<input>.png``); without it, a dependency-free SVG is written
+instead (``<input>.svg``). Both axes are normalized to the baseline
+frontier's maxima, exactly as the paper reports its results (S3.1).
+
+Stdlib-only by design — matplotlib is optional.
+"""
+
+import argparse
+import json
+import math
+import os
+import sys
+
+SERIES = [
+    # (key in doc["frontiers"], label, color)
+    ("baseline", "baseline (best TP/PP/KVP/EP)", "#888888"),
+    ("helix", "helix", "#1f6feb"),
+]
+
+
+def load(path):
+    with open(path) as f:
+        doc = json.load(f)
+    frontiers = doc.get("frontiers")
+    if not frontiers:
+        sys.exit(f"{path}: no \"frontiers\" section — regenerate with "
+                 f"`helix plan --sweep`")
+    return doc, frontiers
+
+
+def normalized_series(frontiers):
+    base = frontiers.get("baseline") or []
+    ni = max((p["tok_s_user"] for p in base), default=1.0) or 1.0
+    nt = max((p["tok_s_gpu"] for p in base), default=1.0) or 1.0
+    out = []
+    for key, label, color in SERIES:
+        pts = [(p["tok_s_user"] / ni, p["tok_s_gpu"] / nt)
+               for p in frontiers.get(key, [])]
+        pts.sort()
+        if pts:
+            out.append((label, color, pts))
+    if not out:
+        sys.exit("frontiers are empty — nothing to plot")
+    return out
+
+
+def plot_matplotlib(doc, series, out):
+    import matplotlib
+    matplotlib.use("Agg")
+    import matplotlib.pyplot as plt
+
+    fig, ax = plt.subplots(figsize=(7, 5))
+    for label, color, pts in series:
+        xs, ys = zip(*pts)
+        ax.plot(xs, ys, marker="o", markersize=3.5, drawstyle="steps-post",
+                label=label, color=color)
+    ax.set_xscale("log")
+    ax.set_yscale("log")
+    ax.set_xlabel("tokens/s/user (normalized to baseline max)")
+    ax.set_ylabel("tokens/s/GPU (normalized to baseline max)")
+    ttl = doc.get("ttl_budget_ms")
+    ax.set_title(f"Pareto frontier — {doc.get('model', '?')}"
+                 + (f" (TTL budget {ttl} ms)" if ttl else ""))
+    ax.grid(True, which="both", alpha=0.3)
+    ax.legend()
+    fig.tight_layout()
+    fig.savefig(out, dpi=150)
+    print(f"wrote {out}")
+
+
+def plot_svg(doc, series, out):
+    """Dependency-free fallback: log-log step plot as hand-rolled SVG."""
+    w, h, margin = 720, 520, 60
+    all_pts = [p for _, _, pts in series for p in pts]
+    lx = [math.log10(max(x, 1e-12)) for x, _ in all_pts]
+    ly = [math.log10(max(y, 1e-12)) for _, y in all_pts]
+    x0, x1 = min(lx), max(lx)
+    y0, y1 = min(ly), max(ly)
+    x1, y1 = x1 + 0.05, y1 + 0.05
+    x0, y0 = x0 - 0.05, y0 - 0.05
+
+    def sx(v):
+        return margin + (math.log10(max(v, 1e-12)) - x0) / (x1 - x0) \
+            * (w - 2 * margin)
+
+    def sy(v):
+        return h - margin - (math.log10(max(v, 1e-12)) - y0) / (y1 - y0) \
+            * (h - 2 * margin)
+
+    el = [f'<svg xmlns="http://www.w3.org/2000/svg" width="{w}" '
+          f'height="{h}" font-family="monospace" font-size="12">',
+          f'<rect width="{w}" height="{h}" fill="white"/>',
+          f'<rect x="{margin}" y="{margin}" width="{w - 2 * margin}" '
+          f'height="{h - 2 * margin}" fill="none" stroke="#ccc"/>']
+    # Decade gridlines + labels.
+    for d in range(math.floor(x0), math.ceil(x1) + 1):
+        px = margin + (d - x0) / (x1 - x0) * (w - 2 * margin)
+        if margin <= px <= w - margin:
+            el.append(f'<line x1="{px:.1f}" y1="{margin}" x2="{px:.1f}" '
+                      f'y2="{h - margin}" stroke="#eee"/>')
+            el.append(f'<text x="{px:.1f}" y="{h - margin + 16}" '
+                      f'text-anchor="middle">1e{d}</text>')
+    for d in range(math.floor(y0), math.ceil(y1) + 1):
+        py = h - margin - (d - y0) / (y1 - y0) * (h - 2 * margin)
+        if margin <= py <= h - margin:
+            el.append(f'<line x1="{margin}" y1="{py:.1f}" '
+                      f'x2="{w - margin}" y2="{py:.1f}" stroke="#eee"/>')
+            el.append(f'<text x="{margin - 6}" y="{py + 4:.1f}" '
+                      f'text-anchor="end">1e{d}</text>')
+    # Step polylines per series.
+    for i, (label, color, pts) in enumerate(series):
+        path = []
+        prev = None
+        for x, y in pts:
+            if prev is not None:
+                path.append(f'{sx(x):.1f},{sy(prev[1]):.1f}')
+            path.append(f'{sx(x):.1f},{sy(y):.1f}')
+            prev = (x, y)
+        el.append(f'<polyline points="{" ".join(path)}" fill="none" '
+                  f'stroke="{color}" stroke-width="1.5"/>')
+        for x, y in pts:
+            el.append(f'<circle cx="{sx(x):.1f}" cy="{sy(y):.1f}" r="2.5" '
+                      f'fill="{color}"/>')
+        el.append(f'<text x="{margin + 10}" y="{margin + 18 + 16 * i}" '
+                  f'fill="{color}">{label}</text>')
+    el.append(f'<text x="{w / 2}" y="{h - 12}" text-anchor="middle">'
+              f'tokens/s/user (normalized)</text>')
+    el.append(f'<text x="16" y="{h / 2}" text-anchor="middle" '
+              f'transform="rotate(-90 16 {h / 2})">tokens/s/GPU '
+              f'(normalized)</text>')
+    el.append(f'<text x="{w / 2}" y="24" text-anchor="middle">Pareto '
+              f'frontier — {doc.get("model", "?")}</text>')
+    el.append('</svg>')
+    with open(out, "w") as f:
+        f.write("\n".join(el) + "\n")
+    print(f"wrote {out} (matplotlib unavailable; SVG fallback)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("plan", help="JSON from `helix plan --sweep`")
+    ap.add_argument("-o", "--out", default=None)
+    args = ap.parse_args()
+    doc, frontiers = load(args.plan)
+    series = normalized_series(frontiers)
+    stem = os.path.splitext(args.plan)[0]
+    try:
+        import matplotlib  # noqa: F401
+        have_mpl = True
+    except ImportError:
+        have_mpl = False
+    if have_mpl:
+        out = args.out or stem + ".png"
+        if os.path.splitext(out)[1].lstrip(".").lower() not in (
+                "png", "svg", "pdf", "jpg", "jpeg", "webp"):
+            out += ".png"
+        plot_matplotlib(doc, series, out)
+    else:
+        out = args.out or stem + ".svg"
+        if not out.endswith(".svg"):
+            out = os.path.splitext(out)[0] + ".svg"
+        plot_svg(doc, series, out)
+
+
+if __name__ == "__main__":
+    main()

@@ -9,7 +9,7 @@
 ARTIFACTS ?= artifacts
 PY ?= python3
 
-.PHONY: build test bench pareto artifacts artifacts-synthetic golden clean-artifacts
+.PHONY: build test bench pareto pareto-measured eval-smoke artifacts artifacts-synthetic golden clean-artifacts
 
 # Tier-1 gate (ROADMAP.md).
 build:
@@ -32,6 +32,29 @@ pareto:
 	cd rust && cargo run --release -- plan --model $(PARETO_MODEL) \
 		--sweep --out ../pareto_$(PARETO_MODEL).json
 	$(PY) scripts/plot_pareto.py pareto_$(PARETO_MODEL).json
+
+# Measured Fig 5/6 overlay: `helix eval` serves every ranked plan
+# across the scenario matrix (native backend, synthetic manifest),
+# emits benchmarks/BENCH_pareto.json (predicted + measured points +
+# calibration per plan) and renders the predicted-vs-measured overlay.
+# Override the models with `make pareto-measured EVAL_MODELS=tiny_gqa`.
+EVAL_MODELS ?= tiny_gqa,tiny_moe
+pareto-measured:
+	cd rust && cargo run --release -- eval --models $(EVAL_MODELS) \
+		--out ../benchmarks/BENCH_pareto.json
+	for m in $$(echo $(EVAL_MODELS) | tr ',' ' '); do \
+		$(PY) scripts/plot_pareto.py benchmarks/BENCH_pareto.json \
+			--model $$m -o benchmarks/BENCH_pareto_overlay_$$m.svg; \
+	done
+
+# The CI smoke slice of the same harness (2 plans x 1 short workload)
+# plus the stdlib python tests over the measured/overlay JSON schema.
+eval-smoke:
+	cd rust && cargo run --release -- eval \
+		--out ../benchmarks/BENCH_pareto.json --smoke
+	$(PY) scripts/test_plot_pareto.py
+	$(PY) scripts/plot_pareto.py benchmarks/BENCH_pareto.json \
+		-o benchmarks/BENCH_pareto_overlay.svg
 
 # Full AOT artifacts: HLO text + weight files + manifest (requires jax;
 # this is what the PJRT backend executes).

@@ -1,0 +1,145 @@
+//! `helix eval` — serve ranked plans for real and emit the measured
+//! Pareto document (`benchmarks/BENCH_pareto.json`).
+//!
+//!     helix eval --smoke                         # CI: 2 plans x 1 workload
+//!     helix eval --models tiny_gqa,tiny_moe \
+//!                --out benchmarks/BENCH_pareto.json
+//!     helix plan --model tiny_gqa | helix eval --plan - --smoke
+//!
+//! Options: `--models A,B` (or `--model M`; default `tiny_gqa,tiny_moe`
+//! — a dense and a MoE engine model), `--plans N` (ranked plans per
+//! model, distinct layouts; default 3, smoke 2), `--plan FILE|-` (eval
+//! the plans of a `helix plan` document instead of planning inline),
+//! `--smoke` (one short steady workload instead of the full matrix),
+//! `--rank-by steps|wall` (measured ranking key; default `steps`, the
+//! deterministic tokens/step/GPU), `--max-steps N`, `--out FILE`
+//! (default: stdout, so it pipes into the plot script).
+//!
+//! The JSON document goes to stdout or `--out`; the human-readable
+//! calibration summary goes to stderr.
+
+use anyhow::{bail, Context, Result};
+
+use crate::plan::Plan;
+use crate::util::cli::Args;
+use crate::util::table::Table;
+use crate::util::Json;
+
+use super::runner::{self, EvalOptions};
+use super::{EvalOutcome, ModelEval};
+
+fn parse_models(args: &Args, smoke: bool) -> Vec<String> {
+    let spec = args.opt("models").or_else(|| args.opt("model"));
+    match spec {
+        Some(s) => s.split(',')
+            .map(str::trim)
+            .filter(|m| !m.is_empty())
+            .map(String::from)
+            .collect(),
+        // Smoke stays cheap (one model); the default full run covers a
+        // dense and a MoE model, per the scenario-matrix contract.
+        None if smoke => vec!["tiny_gqa".to_string()],
+        None => vec!["tiny_gqa".to_string(), "tiny_moe".to_string()],
+    }
+}
+
+fn options_from(args: &Args, smoke: bool) -> Result<EvalOptions> {
+    let mut opts = EvalOptions { smoke, ..EvalOptions::default() };
+    opts.plans_per_model =
+        args.opt_usize("plans", if smoke { 2 } else { 3 })?;
+    opts.max_steps =
+        args.opt_usize("max-steps", opts.max_steps as usize)? as u64;
+    opts.rank_by_steps = match args.opt("rank-by") {
+        None | Some("steps") => true,
+        Some("wall") => false,
+        Some(o) => bail!("--rank-by {o:?}: expected `steps` or `wall`"),
+    };
+    Ok(opts)
+}
+
+/// Eval the plans of a `helix plan` document (`--plan FILE|-`).
+fn eval_plan_doc(src: &str, opts: &EvalOptions) -> Result<EvalOutcome> {
+    let text = if src == "-" {
+        std::io::read_to_string(std::io::stdin())
+            .context("reading plan document from stdin")?
+    } else {
+        std::fs::read_to_string(src)
+            .with_context(|| format!("reading plan file {src}"))?
+    };
+    let doc = Json::parse(&text)?;
+    let entries = match doc.opt("plans") {
+        Some(p) => p.as_arr()?.to_vec(),
+        None => vec![doc.clone()], // a bare plan object
+    };
+    let plans = entries.iter().map(Plan::from_json)
+        .collect::<Result<Vec<_>>>()
+        .context("parsing plan document")?;
+    let Some(first) = plans.first() else {
+        bail!("plan document has an empty \"plans\" list");
+    };
+    let model = first.model.clone();
+    let plans = runner::top_distinct_layouts(plans, opts.plans_per_model);
+    let scenarios = runner::scenarios_for(&model, opts.smoke)?;
+    Ok(EvalOutcome {
+        rank_by: opts.rank_by_name().to_string(),
+        models: vec![runner::eval_plans(&model, &plans, &scenarios, opts)?],
+    })
+}
+
+fn summarize(me: &ModelEval) {
+    eprintln!("model {} | {} plans x {} scenarios | measured frontier: \
+               {} points",
+              me.model, me.plans.len(), me.scenarios.len(),
+              me.measured_frontier().points.len());
+    let mut t = Table::new(["rank", "layout", "strategy",
+                            "pred ttl ms", "meas ttl p50 ms",
+                            "pred tok/s/gpu", "meas tok/s/gpu",
+                            "tok/step/gpu", "cal x"]);
+    for (i, pe) in me.plans.iter().enumerate() {
+        let p = &pe.plan;
+        let m = p.measured.as_ref().expect("eval fills measured");
+        t.row([format!("{i}"), p.layout.key(), p.strategy.clone(),
+               format!("{:.4}", p.predicted.ttl_ms),
+               format!("{:.3}", m.ttl_p50_ms),
+               format!("{:.4}", p.predicted.tokens_per_gpu_s),
+               format!("{:.1}", m.tokens_per_gpu_s),
+               format!("{:.4}", m.tokens_per_step_per_gpu),
+               match &pe.calibration {
+                   Some(c) => format!("{:.2e}", c.throughput_ratio),
+                   None => "-".to_string(),
+               }]);
+    }
+    eprint!("{}", t.render());
+}
+
+/// Entry point from main.rs.
+pub fn run(args: &Args) -> Result<()> {
+    let smoke = args.flag("smoke");
+    let opts = options_from(args, smoke)?;
+
+    let outcome = match args.opt("plan") {
+        Some(src) => eval_plan_doc(src, &opts)?,
+        None => runner::run_eval(&parse_models(args, smoke), &opts)?,
+    };
+    for me in &outcome.models {
+        summarize(me);
+    }
+
+    let doc = outcome.to_doc();
+    match args.opt("out") {
+        Some(path) => {
+            if let Some(dir) = std::path::Path::new(path).parent() {
+                if !dir.as_os_str().is_empty() {
+                    std::fs::create_dir_all(dir)
+                        .with_context(|| format!("creating {}",
+                                                 dir.display()))?;
+                }
+            }
+            std::fs::write(path, format!("{doc}\n"))
+                .with_context(|| format!("writing {path}"))?;
+            eprintln!("wrote {path}");
+        }
+        None => println!("{doc}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,607 @@
+//! eval — the measured-Pareto harness: run ranked plans for real and
+//! pin them against the simulator's predictions.
+//!
+//! The paper's headline numbers (Fig 5/6: up to 1.5x TTL reduction,
+//! 32x larger batches on the throughput-latency Pareto) come out of the
+//! analytic sweep; this module is the layer that *checks the model
+//! against the system it models*. [`runner`] takes a [`crate::plan`]
+//! sweep, boots every ranked [`Plan`] in-process via
+//! [`crate::serve::Server::from_plan`], drives a scenario matrix of
+//! workloads (steady/bursty arrivals × short/long KV contexts, dense
+//! and MoE engine models, native backend, synthetic manifest), and
+//! folds each run's [`crate::serve::ServeReport`] into the plan's
+//! [`Measured`] slot. The outcome serializes as
+//! `benchmarks/BENCH_pareto.json`: per-plan predicted AND measured
+//! numbers, per-plan calibration ratios, and predicted + measured
+//! Pareto frontiers for `scripts/plot_pareto.py` to overlay
+//! (`make pareto-measured`).
+//!
+//! Context lengths scale to each model's `seq_cap`: the tiny engine
+//! models stand in for the paper's multi-million-token regime the same
+//! way they do for `helix verify` — the *code paths* (KVP round-robin,
+//! admission, HOP-B chunking) are the real ones, only the magnitudes
+//! shrink. Absolute wall-clock numbers on a CPU backend are therefore
+//! not comparable to GB200 predictions; what eval pins is the
+//! *calibration ratio* (measured/predicted) staying consistent across
+//! plans — see docs/EVAL.md.
+
+pub mod cli;
+pub mod runner;
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::plan::Plan;
+use crate::serve::Workload;
+use crate::sim::pareto::pareto_indices;
+use crate::util::Json;
+
+/// One workload cell of the scenario matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    pub name: String,
+    pub requests: usize,
+    /// Prompt length range, inclusive.
+    pub prompt: (usize, usize),
+    /// Generation length range, inclusive.
+    pub gen: (usize, usize),
+    /// Mean arrivals per engine step (0 = offline: all queued up front).
+    pub arrival_rate: f64,
+    /// Arrivals land `burst` at a time (agentic fan-out); `<=1` =
+    /// independent Poisson arrivals.
+    pub burst: usize,
+    pub seed: u64,
+}
+
+impl Scenario {
+    pub fn workload(&self) -> Workload {
+        Workload {
+            num_requests: self.requests,
+            prompt_len: self.prompt,
+            gen_len: self.gen,
+            seed: self.seed,
+            arrival_rate: self.arrival_rate,
+            burst: self.burst,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("name".into(), Json::Str(self.name.clone()));
+        m.insert("requests".into(), Json::Num(self.requests as f64));
+        m.insert("prompt_min".into(), Json::Num(self.prompt.0 as f64));
+        m.insert("prompt_max".into(), Json::Num(self.prompt.1 as f64));
+        m.insert("gen_min".into(), Json::Num(self.gen.0 as f64));
+        m.insert("gen_max".into(), Json::Num(self.gen.1 as f64));
+        m.insert("arrival_rate".into(), Json::Num(self.arrival_rate));
+        m.insert("burst".into(), Json::Num(self.burst as f64));
+        m.insert("seed".into(), Json::Num(self.seed as f64));
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Scenario> {
+        Ok(Scenario {
+            name: j.get("name")?.as_str()?.to_string(),
+            requests: j.get("requests")?.as_usize()?,
+            prompt: (j.get("prompt_min")?.as_usize()?,
+                     j.get("prompt_max")?.as_usize()?),
+            gen: (j.get("gen_min")?.as_usize()?,
+                  j.get("gen_max")?.as_usize()?),
+            arrival_rate: j.get("arrival_rate")?.as_f64()?,
+            burst: j.get("burst")?.as_usize()?,
+            seed: j.get("seed")?.as_usize()? as u64,
+        })
+    }
+}
+
+/// The full scenario matrix for a model with KV capacity `seq_cap`:
+/// {steady, Poisson-burst} arrivals × {short, long} KV contexts. "Long"
+/// sizes against `seq_cap` so prompt+generation always fit a slot even
+/// under the widest KVP split a manifest layout uses (the round-robin
+/// headroom is `kv_block * kvp`; `seq_cap/3 + seq_cap/8` stays under
+/// every built layout's `slot_kv_tokens`).
+pub fn scenario_matrix(seq_cap: usize) -> Vec<Scenario> {
+    let long_prompt = ((seq_cap / 4).max(2), (seq_cap / 3).max(3));
+    let long_gen = ((seq_cap / 16).max(2), (seq_cap / 8).max(3));
+    vec![
+        Scenario { name: "steady_short".into(), requests: 8,
+                   prompt: (2, 6), gen: (4, 8),
+                   arrival_rate: 0.5, burst: 1, seed: 11 },
+        Scenario { name: "burst_short".into(), requests: 8,
+                   prompt: (2, 6), gen: (4, 8),
+                   arrival_rate: 0.25, burst: 4, seed: 13 },
+        Scenario { name: "steady_long".into(), requests: 6,
+                   prompt: long_prompt, gen: long_gen,
+                   arrival_rate: 0.2, burst: 1, seed: 17 },
+        Scenario { name: "burst_long".into(), requests: 6,
+                   prompt: long_prompt, gen: long_gen,
+                   arrival_rate: 0.1, burst: 3, seed: 19 },
+    ]
+}
+
+/// The CI smoke matrix: one short steady workload.
+pub fn smoke_matrix(_seq_cap: usize) -> Vec<Scenario> {
+    vec![Scenario { name: "steady_short".into(), requests: 6,
+                    prompt: (2, 6), gen: (4, 8),
+                    arrival_rate: 0.5, burst: 1, seed: 11 }]
+}
+
+/// One (plan, scenario) serve run, summarized.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunRecord {
+    pub scenario: String,
+    pub completed: usize,
+    pub rejected: usize,
+    pub steps: u64,
+    pub generated_tokens: usize,
+    pub wall_s: f64,
+    pub comm_s: f64,
+    pub ttl_p50_ms: f64,
+    pub ttl_p95_ms: f64,
+    pub ttl_p99_ms: f64,
+    pub ttft_p99_ms: f64,
+    pub tokens_per_s: f64,
+    pub peak_kv_tokens: usize,
+    pub peak_active: usize,
+    /// FNV-1a over every completed request's (id, generated tokens) —
+    /// bit-identical across reruns on the native backend, the anchor
+    /// for the determinism regression tests.
+    pub token_digest: u64,
+}
+
+impl RunRecord {
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("scenario".into(), Json::Str(self.scenario.clone()));
+        m.insert("completed".into(), Json::Num(self.completed as f64));
+        m.insert("rejected".into(), Json::Num(self.rejected as f64));
+        m.insert("steps".into(), Json::Num(self.steps as f64));
+        m.insert("generated_tokens".into(),
+                 Json::Num(self.generated_tokens as f64));
+        m.insert("wall_s".into(), Json::Num(self.wall_s));
+        m.insert("comm_s".into(), Json::Num(self.comm_s));
+        m.insert("ttl_p50_ms".into(), Json::Num(self.ttl_p50_ms));
+        m.insert("ttl_p95_ms".into(), Json::Num(self.ttl_p95_ms));
+        m.insert("ttl_p99_ms".into(), Json::Num(self.ttl_p99_ms));
+        m.insert("ttft_p99_ms".into(), Json::Num(self.ttft_p99_ms));
+        m.insert("tokens_per_s".into(), Json::Num(self.tokens_per_s));
+        m.insert("peak_kv_tokens".into(),
+                 Json::Num(self.peak_kv_tokens as f64));
+        m.insert("peak_active".into(), Json::Num(self.peak_active as f64));
+        // u64 digests do not fit an f64 JSON number losslessly.
+        m.insert("token_digest".into(),
+                 Json::Str(format!("{:016x}", self.token_digest)));
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<RunRecord> {
+        let digest = j.get("token_digest")?.as_str()?;
+        Ok(RunRecord {
+            scenario: j.get("scenario")?.as_str()?.to_string(),
+            completed: j.get("completed")?.as_usize()?,
+            rejected: j.get("rejected")?.as_usize()?,
+            steps: j.get("steps")?.as_usize()? as u64,
+            generated_tokens: j.get("generated_tokens")?.as_usize()?,
+            wall_s: j.get("wall_s")?.as_f64()?,
+            comm_s: j.get("comm_s")?.as_f64()?,
+            ttl_p50_ms: j.get("ttl_p50_ms")?.as_f64()?,
+            ttl_p95_ms: j.get("ttl_p95_ms")?.as_f64()?,
+            ttl_p99_ms: j.get("ttl_p99_ms")?.as_f64()?,
+            ttft_p99_ms: j.get("ttft_p99_ms")?.as_f64()?,
+            tokens_per_s: j.get("tokens_per_s")?.as_f64()?,
+            peak_kv_tokens: j.get("peak_kv_tokens")?.as_usize()?,
+            peak_active: j.get("peak_active")?.as_usize()?,
+            token_digest: u64::from_str_radix(digest, 16)
+                .with_context(|| format!("bad token_digest {digest:?}"))?,
+        })
+    }
+}
+
+/// Per-plan calibration: measured / predicted. On the tiny models the
+/// predictions target GB200 hardware while the measurement runs the
+/// native CPU backend, so the *absolute* ratio is expected to be far
+/// from 1; what must hold is the ratio staying finite, positive, and
+/// consistent across plans (predictor and engine drifting apart shows
+/// up as per-plan ratios fanning out — see docs/EVAL.md for the band).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Calibration {
+    /// measured TTL p50 / predicted TTL (both ms).
+    pub ttl_ratio: f64,
+    /// measured tokens/s/GPU / predicted tokens/s/GPU.
+    pub throughput_ratio: f64,
+}
+
+impl Calibration {
+    /// From a plan whose measured slot is filled; `None` otherwise or
+    /// when the prediction is degenerate (zero/non-finite).
+    pub fn from_plan(plan: &Plan) -> Option<Calibration> {
+        let m = plan.measured.as_ref()?;
+        let p = &plan.predicted;
+        if !(p.ttl_ms > 0.0) || !(p.tokens_per_gpu_s > 0.0) {
+            return None;
+        }
+        Some(Calibration {
+            ttl_ratio: m.ttl_p50_ms / p.ttl_ms,
+            throughput_ratio: m.tokens_per_gpu_s / p.tokens_per_gpu_s,
+        })
+    }
+
+    /// Orders of magnitude between measurement and prediction.
+    pub fn log10_throughput(&self) -> f64 {
+        self.throughput_ratio.log10()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("ttl_ratio".into(), Json::Num(self.ttl_ratio));
+        m.insert("throughput_ratio".into(),
+                 Json::Num(self.throughput_ratio));
+        m.insert("log10_throughput_ratio".into(),
+                 Json::Num(self.log10_throughput()));
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Calibration> {
+        Ok(Calibration {
+            ttl_ratio: j.get("ttl_ratio")?.as_f64()?,
+            throughput_ratio: j.get("throughput_ratio")?.as_f64()?,
+        })
+    }
+}
+
+/// The one plot-series point shape (`scripts/plot_pareto.py` and the
+/// fixture tests assume predicted and measured series are identical):
+/// `ttl_ms`/`tok_s_user`/`tok_s_gpu` are predicted OR measured values
+/// depending on the series.
+fn series_point_json(strategy: &str, layout_key: &str, batch: usize,
+                     gpus: usize, ttl_ms: f64, tok_s_user: f64,
+                     tok_s_gpu: f64) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("strategy".into(), Json::Str(strategy.to_string()));
+    m.insert("layout".into(), Json::Str(layout_key.to_string()));
+    m.insert("batch".into(), Json::Num(batch as f64));
+    m.insert("gpus".into(), Json::Num(gpus as f64));
+    m.insert("ttl_ms".into(), Json::Num(ttl_ms));
+    m.insert("tok_s_user".into(), Json::Num(tok_s_user));
+    m.insert("tok_s_gpu".into(), Json::Num(tok_s_gpu));
+    Json::Obj(m)
+}
+
+/// A point of the measured throughput-vs-interactivity plane.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MeasuredPoint {
+    pub strategy: String,
+    pub layout_key: String,
+    pub batch: usize,
+    pub gpus: usize,
+    pub ttl_p50_ms: f64,
+    /// Measured tokens/s/user (1 / mean TTL).
+    pub interactivity: f64,
+    /// Measured wall-clock tokens/s/GPU.
+    pub tokens_per_gpu_s: f64,
+}
+
+impl MeasuredPoint {
+    fn from_plan(plan: &Plan) -> Option<MeasuredPoint> {
+        let m = plan.measured.as_ref()?;
+        Some(MeasuredPoint {
+            strategy: plan.strategy.clone(),
+            layout_key: plan.layout.key(),
+            batch: plan.batch,
+            gpus: plan.gpus,
+            ttl_p50_ms: m.ttl_p50_ms,
+            interactivity: m.interactivity,
+            tokens_per_gpu_s: m.tokens_per_gpu_s,
+        })
+    }
+
+    /// Strict Pareto dominance (larger is better on both axes).
+    pub fn dominates(&self, other: &MeasuredPoint) -> bool {
+        self.interactivity >= other.interactivity
+            && self.tokens_per_gpu_s >= other.tokens_per_gpu_s
+            && (self.interactivity > other.interactivity
+                || self.tokens_per_gpu_s > other.tokens_per_gpu_s)
+    }
+
+    fn to_series_json(&self) -> Json {
+        series_point_json(&self.strategy, &self.layout_key, self.batch,
+                          self.gpus, self.ttl_p50_ms, self.interactivity,
+                          self.tokens_per_gpu_s)
+    }
+}
+
+/// The *measured* Pareto frontier over a set of evaluated plans — the
+/// served-trace twin of the simulator's [`crate::sim::Frontier`], and
+/// the thing the ROADMAP's "measured Fig 5/6 frontier" item asked for.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MeasuredFrontier {
+    /// Non-dominated points, interactivity ascending.
+    pub points: Vec<MeasuredPoint>,
+}
+
+impl MeasuredFrontier {
+    /// Extract the frontier from every plan that has measurements.
+    pub fn from_plans(plans: &[Plan]) -> MeasuredFrontier {
+        let all: Vec<MeasuredPoint> =
+            plans.iter().filter_map(MeasuredPoint::from_plan).collect();
+        let pairs: Vec<(f64, f64)> = all.iter()
+            .map(|p| (p.interactivity, p.tokens_per_gpu_s))
+            .collect();
+        let points = pareto_indices(&pairs)
+            .into_iter()
+            .map(|i| all[i].clone())
+            .collect();
+        MeasuredFrontier { points }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+}
+
+/// One plan's evaluation: the plan (measured slot filled), its
+/// calibration against the prediction, and every scenario run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanEval {
+    pub plan: Plan,
+    pub calibration: Option<Calibration>,
+    pub runs: Vec<RunRecord>,
+}
+
+impl PlanEval {
+    pub fn to_json(&self) -> Json {
+        // Flat: the plan object itself, with calibration + runs merged
+        // in (so a PlanEval parses anywhere a Plan does).
+        let mut m = match self.plan.to_json() {
+            Json::Obj(m) => m,
+            _ => unreachable!("Plan::to_json is an object"),
+        };
+        if let Some(c) = &self.calibration {
+            m.insert("calibration".into(), c.to_json());
+        }
+        m.insert("runs".into(),
+                 Json::Arr(self.runs.iter().map(RunRecord::to_json)
+                           .collect()));
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<PlanEval> {
+        Ok(PlanEval {
+            plan: Plan::from_json(j)?,
+            calibration: match j.opt("calibration") {
+                Some(c) => Some(Calibration::from_json(c)?),
+                None => None,
+            },
+            runs: j.get("runs")?.as_arr()?.iter()
+                .map(RunRecord::from_json)
+                .collect::<Result<_>>()?,
+        })
+    }
+}
+
+/// Every evaluated plan of one model, ranked by *measured* throughput.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelEval {
+    pub model: String,
+    pub scenarios: Vec<Scenario>,
+    pub plans: Vec<PlanEval>,
+}
+
+impl ModelEval {
+    pub fn measured_frontier(&self) -> MeasuredFrontier {
+        let plans: Vec<Plan> =
+            self.plans.iter().map(|p| p.plan.clone()).collect();
+        MeasuredFrontier::from_plans(&plans)
+    }
+
+    /// Predicted points of the evaluated plans, frontier-filtered, in
+    /// the plot-series shape (`tok_s_user` / `tok_s_gpu`).
+    fn predicted_frontier_json(&self) -> Json {
+        let pairs: Vec<(f64, f64)> = self.plans.iter()
+            .map(|p| (p.plan.predicted.interactivity,
+                      p.plan.predicted.tokens_per_gpu_s))
+            .collect();
+        let pts = pareto_indices(&pairs).into_iter().map(|i| {
+            let p = &self.plans[i].plan;
+            series_point_json(&p.strategy, &p.layout.key(), p.batch,
+                              p.gpus, p.predicted.ttl_ms,
+                              p.predicted.interactivity,
+                              p.predicted.tokens_per_gpu_s)
+        }).collect();
+        Json::Arr(pts)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("model".into(), Json::Str(self.model.clone()));
+        m.insert("scenarios".into(),
+                 Json::Arr(self.scenarios.iter().map(Scenario::to_json)
+                           .collect()));
+        m.insert("plans".into(),
+                 Json::Arr(self.plans.iter().map(PlanEval::to_json)
+                           .collect()));
+        // Derived plot series: predicted + measured frontiers over the
+        // evaluated plans (scripts/plot_pareto.py overlays these).
+        let mut fr = BTreeMap::new();
+        fr.insert("predicted".into(), self.predicted_frontier_json());
+        fr.insert("measured".into(),
+                  Json::Arr(self.measured_frontier().points.iter()
+                            .map(MeasuredPoint::to_series_json)
+                            .collect()));
+        m.insert("frontiers".into(), Json::Obj(fr));
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<ModelEval> {
+        // "frontiers" is derived from the plans; not parsed back.
+        Ok(ModelEval {
+            model: j.get("model")?.as_str()?.to_string(),
+            scenarios: j.get("scenarios")?.as_arr()?.iter()
+                .map(Scenario::from_json)
+                .collect::<Result<_>>()?,
+            plans: j.get("plans")?.as_arr()?.iter()
+                .map(PlanEval::from_json)
+                .collect::<Result<_>>()?,
+        })
+    }
+}
+
+/// The whole eval run: the `benchmarks/BENCH_pareto.json` document.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EvalOutcome {
+    /// `"steps"` (deterministic tokens/step/GPU ranking, the CI mode)
+    /// or `"wall"` (wall-clock tokens/s/GPU ranking).
+    pub rank_by: String,
+    pub models: Vec<ModelEval>,
+}
+
+impl EvalOutcome {
+    pub fn to_doc(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("version".into(), Json::Num(1.0));
+        m.insert("kind".into(), Json::Str("helix-eval".into()));
+        m.insert("rank_by".into(), Json::Str(self.rank_by.clone()));
+        m.insert("models".into(),
+                 Json::Arr(self.models.iter().map(ModelEval::to_json)
+                           .collect()));
+        Json::Obj(m)
+    }
+
+    pub fn from_doc(j: &Json) -> Result<EvalOutcome> {
+        match j.opt("kind").and_then(|k| k.as_str().ok()) {
+            Some("helix-eval") => {}
+            other => bail!("not a helix-eval document (kind={other:?})"),
+        }
+        Ok(EvalOutcome {
+            rank_by: j.get("rank_by")?.as_str()?.to_string(),
+            models: j.get("models")?.as_arr()?.iter()
+                .map(ModelEval::from_json)
+                .collect::<Result<_>>()?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Layout;
+    use crate::plan::{Measured, Predicted};
+
+    fn plan_with(inter: f64, thpt: f64) -> Plan {
+        Plan {
+            model: "tiny_gqa".into(),
+            strategy: "helix".into(),
+            layout: Layout::helix(2, 2, 4, 1),
+            batch: 4,
+            gpus: 4,
+            seq_len: 256.0,
+            predicted: Predicted { ttl_ms: 1.0, interactivity: 1000.0,
+                                   tokens_per_gpu_s: 100.0 },
+            kv_budget: 512,
+            measured: Some(Measured {
+                ttl_p50_ms: 1e3 / inter,
+                ttl_p95_ms: 1.5e3 / inter,
+                ttl_p99_ms: 2e3 / inter,
+                interactivity: inter,
+                tokens_per_s: thpt * 4.0,
+                tokens_per_gpu_s: thpt,
+                tokens_per_step_per_gpu: thpt / 100.0,
+                peak_kv_tokens: 64,
+                completed: 8,
+                rejected: 0,
+                steps: 120,
+                generated_tokens: 48,
+                wall_s: 0.25,
+            }),
+        }
+    }
+
+    #[test]
+    fn measured_frontier_drops_dominated_points() {
+        let plans = vec![plan_with(10.0, 1.0), plan_with(5.0, 2.0),
+                         plan_with(7.0, 0.5), plan_with(5.0, 1.5)];
+        let f = MeasuredFrontier::from_plans(&plans);
+        assert_eq!(f.points.len(), 2);
+        for a in &f.points {
+            for b in &f.points {
+                assert!(!a.dominates(b) || a == b);
+            }
+        }
+        // Ascending interactivity.
+        assert!(f.points[0].interactivity < f.points[1].interactivity);
+        // Unmeasured plans contribute nothing.
+        let mut bare = plan_with(1.0, 1.0);
+        bare.measured = None;
+        assert!(MeasuredFrontier::from_plans(&[bare]).is_empty());
+    }
+
+    #[test]
+    fn scenario_matrix_fits_the_kv_envelope() {
+        for cap in [128usize, 256, 4096] {
+            for sc in scenario_matrix(cap) {
+                assert!(sc.prompt.0 <= sc.prompt.1, "{}", sc.name);
+                assert!(sc.gen.0 <= sc.gen.1, "{}", sc.name);
+                // Worst case fits a slot under the widest built KVP
+                // split (kv_block 16, kvp 4 for the tiny models).
+                assert!(sc.prompt.1 + sc.gen.1 <= cap - cap.min(64),
+                        "{} overflows seq_cap {cap}", sc.name);
+                assert!(sc.requests >= 2);
+            }
+            assert!(scenario_matrix(cap).len() >= 4);
+            assert_eq!(smoke_matrix(cap).len(), 1);
+        }
+    }
+
+    #[test]
+    fn calibration_ratios_and_degenerate_predictions() {
+        let p = plan_with(10.0, 1.0);
+        let c = Calibration::from_plan(&p).unwrap();
+        assert!((c.ttl_ratio - 100.0).abs() < 1e-9);
+        assert!((c.throughput_ratio - 0.01).abs() < 1e-12);
+        assert!((c.log10_throughput() + 2.0).abs() < 1e-9);
+        let mut degenerate = p.clone();
+        degenerate.predicted.ttl_ms = 0.0;
+        assert!(Calibration::from_plan(&degenerate).is_none());
+        let mut bare = p;
+        bare.measured = None;
+        assert!(Calibration::from_plan(&bare).is_none());
+    }
+
+    #[test]
+    fn outcome_doc_roundtrips_identically() {
+        let outcome = EvalOutcome {
+            rank_by: "steps".into(),
+            models: vec![ModelEval {
+                model: "tiny_gqa".into(),
+                scenarios: smoke_matrix(256),
+                plans: vec![PlanEval {
+                    plan: plan_with(8.0, 2.0),
+                    calibration: Calibration::from_plan(&plan_with(8.0, 2.0)),
+                    runs: vec![RunRecord {
+                        scenario: "steady_short".into(),
+                        completed: 6, rejected: 0, steps: 97,
+                        generated_tokens: 36, wall_s: 0.125,
+                        comm_s: 0.0, ttl_p50_ms: 1.25, ttl_p95_ms: 2.5,
+                        ttl_p99_ms: 3.0, ttft_p99_ms: 9.75,
+                        tokens_per_s: 288.0, peak_kv_tokens: 60,
+                        peak_active: 4,
+                        token_digest: 0xdead_beef_cafe_f00d,
+                    }],
+                }],
+            }],
+        };
+        let text = outcome.to_doc().to_string();
+        let parsed = EvalOutcome::from_doc(&Json::parse(&text).unwrap())
+            .unwrap();
+        assert_eq!(parsed, outcome);
+        // The doc carries both frontier series for the plot overlay.
+        let j = Json::parse(&text).unwrap();
+        let fr = j.get("models").unwrap().as_arr().unwrap()[0]
+            .get("frontiers").unwrap().clone();
+        assert_eq!(fr.get("predicted").unwrap().as_arr().unwrap().len(), 1);
+        assert_eq!(fr.get("measured").unwrap().as_arr().unwrap().len(), 1);
+        // Non-eval docs are rejected loudly.
+        assert!(EvalOutcome::from_doc(&Json::parse("{}").unwrap()).is_err());
+    }
+}

@@ -1,0 +1,263 @@
+//! Eval runner: boot each ranked plan, drive the scenario matrix,
+//! measure, calibrate, re-rank.
+//!
+//! Every (plan, scenario) pair gets a *fresh* [`Server::from_plan`]
+//! boot — a scenario can never inherit slots, KV state or router
+//! accounting from the previous one, so runs are independent and the
+//! generated tokens are a pure function of (plan, scenario) on the
+//! native backend. That is what makes the determinism tests possible:
+//! reruns produce bit-identical token digests, and the `steps` ranking
+//! mode orders plans by quantities with no wall clock in them.
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::config::{registry, Hardware};
+use crate::plan::{self, Measured, Plan, Planner};
+use crate::serve::{RequestState, ServeReport, Server};
+use crate::util::stats;
+
+use super::{scenario_matrix, smoke_matrix, Calibration, EvalOutcome,
+            ModelEval, PlanEval, RunRecord, Scenario};
+
+/// Harness knobs (CLI flags map 1:1 — see [`super::cli`]).
+#[derive(Debug, Clone)]
+pub struct EvalOptions {
+    /// Ranked plans to evaluate per model (distinct layouts).
+    pub plans_per_model: usize,
+    /// Per-scenario engine-step cap; a scenario that fails to drain
+    /// under it is an error, not a truncated measurement.
+    pub max_steps: u64,
+    /// Rank by deterministic tokens/step/GPU (CI) instead of
+    /// wall-clock tokens/s/GPU.
+    pub rank_by_steps: bool,
+    /// Use the one-cell smoke matrix instead of the full one.
+    pub smoke: bool,
+}
+
+impl Default for EvalOptions {
+    fn default() -> EvalOptions {
+        EvalOptions {
+            plans_per_model: 3,
+            max_steps: 200_000,
+            rank_by_steps: true,
+            smoke: false,
+        }
+    }
+}
+
+impl EvalOptions {
+    pub fn rank_by_name(&self) -> &'static str {
+        if self.rank_by_steps { "steps" } else { "wall" }
+    }
+}
+
+/// FNV-1a over every completed request's id and generated tokens,
+/// id-sorted so the digest is independent of retirement order.
+pub fn token_digest(completed: &[RequestState]) -> u64 {
+    let mut reqs: Vec<(u64, &[i32])> = completed.iter()
+        .map(|st| (st.req.id, st.generated.as_slice()))
+        .collect();
+    reqs.sort();
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    };
+    for (id, toks) in reqs {
+        eat(&id.to_le_bytes());
+        for &t in toks {
+            eat(&t.to_le_bytes());
+        }
+    }
+    h
+}
+
+/// Keep the top `n` plans with distinct layouts, preserving rank order
+/// (the sweep emits several batch widths per layout; the engine boots
+/// the manifest batch regardless, so duplicates would measure the same
+/// cluster twice).
+pub fn top_distinct_layouts(plans: Vec<Plan>, n: usize) -> Vec<Plan> {
+    let mut seen: Vec<String> = Vec::new();
+    let mut out = Vec::new();
+    for p in plans {
+        let key = p.layout.key();
+        if seen.contains(&key) {
+            continue;
+        }
+        seen.push(key);
+        out.push(p);
+        if out.len() == n {
+            break;
+        }
+    }
+    out
+}
+
+fn run_record(sc: &Scenario, report: &ServeReport, digest: u64)
+              -> RunRecord {
+    let m = &report.metrics;
+    RunRecord {
+        scenario: sc.name.clone(),
+        completed: report.completed,
+        rejected: report.rejected,
+        steps: m.steps,
+        generated_tokens: m.generated_tokens,
+        wall_s: m.wall,
+        comm_s: m.comm,
+        ttl_p50_ms: m.ttl_p50() * 1e3,
+        ttl_p95_ms: m.ttl_p95() * 1e3,
+        ttl_p99_ms: m.ttl_p99() * 1e3,
+        ttft_p99_ms: m.ttft_p99() * 1e3,
+        tokens_per_s: m.tokens_per_sec(),
+        peak_kv_tokens: m.peak_kv_tokens,
+        peak_active: m.peak_active,
+        token_digest: digest,
+    }
+}
+
+/// Run one plan through every scenario; returns the plan with its
+/// measured slot filled, the calibration, and the per-run records.
+pub fn eval_plan(plan: &Plan, scenarios: &[Scenario], opts: &EvalOptions)
+                 -> Result<PlanEval> {
+    let mut runs = Vec::new();
+    // TTL samples pooled across scenarios (each scenario's request mix
+    // contributes its inter-token gaps; percentile over the pool).
+    let mut ttl_pool: Vec<f64> = Vec::new();
+    let (mut gen_total, mut steps_total) = (0usize, 0u64);
+    let (mut wall_total, mut peak_kv) = (0.0f64, 0usize);
+    let (mut completed, mut rejected) = (0usize, 0usize);
+    let mut gpus = plan.gpus;
+
+    for sc in scenarios {
+        let mut server = Server::from_plan(plan)
+            .with_context(|| format!("booting plan [{}] for {}",
+                                     plan.layout.key(), plan.model))?;
+        let report = server.run(&sc.workload(), opts.max_steps)
+            .with_context(|| format!("scenario {} on [{}]", sc.name,
+                                     plan.layout.key()))?;
+        ensure!(report.completed + report.rejected == sc.requests,
+                "scenario {} on [{}] did not drain: {} of {} requests \
+                 finished under max_steps={} — raise --max-steps",
+                sc.name, plan.layout.key(),
+                report.completed + report.rejected, sc.requests,
+                opts.max_steps);
+        let m = &report.metrics;
+        ttl_pool.extend_from_slice(m.ttl_samples());
+        gen_total += m.generated_tokens;
+        steps_total += m.steps;
+        wall_total += m.wall;
+        peak_kv = peak_kv.max(m.peak_kv_tokens);
+        completed += report.completed;
+        rejected += report.rejected;
+        gpus = report.gpus;
+        let digest = token_digest(&server.router.completed);
+        runs.push(run_record(sc, &report, digest));
+    }
+
+    let pct = |p: f64| if ttl_pool.is_empty() { 0.0 }
+              else { stats::percentile(&ttl_pool, p) };
+    let ttl_mean = stats::mean(&ttl_pool);
+    let measured = Measured {
+        ttl_p50_ms: pct(50.0) * 1e3,
+        ttl_p95_ms: pct(95.0) * 1e3,
+        ttl_p99_ms: pct(99.0) * 1e3,
+        interactivity: if ttl_mean > 0.0 { 1.0 / ttl_mean } else { 0.0 },
+        tokens_per_s: if wall_total > 0.0 {
+            gen_total as f64 / wall_total
+        } else {
+            0.0
+        },
+        tokens_per_gpu_s: if wall_total > 0.0 {
+            gen_total as f64 / wall_total / gpus as f64
+        } else {
+            0.0
+        },
+        tokens_per_step_per_gpu: if steps_total > 0 {
+            gen_total as f64 / steps_total as f64 / gpus as f64
+        } else {
+            0.0
+        },
+        peak_kv_tokens: peak_kv,
+        completed,
+        rejected,
+        steps: steps_total,
+        generated_tokens: gen_total,
+        wall_s: wall_total,
+    };
+    let plan = plan.clone().with_measured(measured);
+    let calibration = Calibration::from_plan(&plan);
+    Ok(PlanEval { plan, calibration, runs })
+}
+
+/// Evaluate an explicit plan list (all for one model) over `scenarios`,
+/// ranking the result by measured numbers.
+pub fn eval_plans(model: &str, plans: &[Plan], scenarios: &[Scenario],
+                  opts: &EvalOptions) -> Result<ModelEval> {
+    ensure!(!plans.is_empty(), "no plans to evaluate for {model}");
+    let mut evals = Vec::new();
+    for p in plans {
+        ensure!(p.model == model,
+                "plan [{}] is for {:?}, not {model:?}", p.layout.key(),
+                p.model);
+        evals.push(eval_plan(p, scenarios, opts)?);
+    }
+    // Rank by measured numbers, then reorder the PlanEvals to match.
+    let ranked = plan::rank_by_measured(
+        &evals.iter().map(|e| e.plan.clone()).collect::<Vec<_>>(),
+        opts.rank_by_steps);
+    let mut pool = evals;
+    let mut ordered = Vec::with_capacity(pool.len());
+    for rp in &ranked {
+        let i = pool.iter().position(|e| &e.plan == rp)
+            .expect("ranked plan came from this pool");
+        ordered.push(pool.swap_remove(i));
+    }
+    Ok(ModelEval {
+        model: model.to_string(),
+        scenarios: scenarios.to_vec(),
+        plans: ordered,
+    })
+}
+
+/// Scenario matrix for a registry model, scaled to its KV capacity.
+/// Eval only makes sense for engine models — a plan for a full-size
+/// simulator model has nothing to boot.
+pub fn scenarios_for(model: &str, smoke: bool) -> Result<Vec<Scenario>> {
+    let handle = registry::lookup(model)?;
+    let Some(cfg) = &handle.engine else {
+        bail!("{model} is a simulator-only model: `helix eval` needs an \
+               engine model with built artifacts (try tiny_gqa, tiny_mla \
+               or tiny_moe)");
+    };
+    Ok(if smoke {
+        smoke_matrix(cfg.seq_cap)
+    } else {
+        scenario_matrix(cfg.seq_cap)
+    })
+}
+
+/// Plan (via the TTL-less planner over the manifest layouts) and
+/// evaluate one model.
+pub fn eval_model(model: &str, opts: &EvalOptions) -> Result<ModelEval> {
+    let scenarios = scenarios_for(model, opts.smoke)?;
+    let planner = Planner::new(model, Hardware::gb200_nvl72())?;
+    let plans = top_distinct_layouts(planner.plan()?, opts.plans_per_model);
+    ensure!(!plans.is_empty(), "planner found no plans for {model}");
+    eval_plans(model, &plans, &scenarios, opts)
+}
+
+/// The whole harness: every model, planned, served, measured, ranked.
+pub fn run_eval(models: &[String], opts: &EvalOptions)
+                -> Result<EvalOutcome> {
+    ensure!(!models.is_empty(), "no models to evaluate");
+    let mut evals = Vec::new();
+    for m in models {
+        evals.push(eval_model(m, opts)?);
+    }
+    Ok(EvalOutcome {
+        rank_by: opts.rank_by_name().to_string(),
+        models: evals,
+    })
+}

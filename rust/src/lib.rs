@@ -29,6 +29,11 @@
 //! * [`plan`] — the TTL-budget [`plan::Planner`]: runs the sweep and
 //!   returns ranked [`plan::Plan`]s that boot directly
 //!   (`HelixCluster::from_plan`, `Server::from_plan`, `helix plan`).
+//! * [`eval`] — the measured-Pareto harness: `helix eval` serves every
+//!   ranked plan across a scenario matrix, fills each plan's
+//!   [`plan::Measured`] slot, calibrates measurement against
+//!   prediction, and emits `benchmarks/BENCH_pareto.json` for the
+//!   predicted+measured overlay plot.
 //! * [`engine`] — functional distributed decode: N rank threads, each
 //!   with its own PJRT client, exchanging host tensors through in-memory
 //!   collectives with an NVLink-delay emulation layer.
@@ -37,6 +42,7 @@
 
 pub mod config;
 pub mod engine;
+pub mod eval;
 pub mod plan;
 pub mod runtime;
 pub mod serve;

@@ -10,6 +10,10 @@
 //! Planning (sweep -> ranked executable plans, JSON on stdout):
 //!   helix plan --model <m> --ttl <ms>   rank layouts under a TTL budget
 //!
+//! Measured-Pareto eval (serve ranked plans, calibrate vs prediction):
+//!   helix eval --smoke                  CI smoke: 2 plans x 1 workload
+//!   helix eval --models tiny_gqa,tiny_moe --out BENCH_pareto.json
+//!
 //! Engine commands (real execution over AOT artifacts):
 //!   helix verify --model tiny_gqa       sharded-vs-reference exactness
 //!   helix serve --plan plan.json|-      serve the top-ranked plan
@@ -200,6 +204,7 @@ fn main() -> Result<()> {
         Some("ablate") => cmd_ablate(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("plan") => helix::plan::cli::run(&args),
+        Some("eval") => helix::eval::cli::run(&args),
         Some("verify") | Some("serve") | Some("layouts") => {
             helix::serve::cli::run(&args)
         }
@@ -208,7 +213,7 @@ fn main() -> Result<()> {
                 eprintln!("unknown subcommand {o:?}\n");
             }
             eprintln!("usage: helix <roofline|timeline|pareto|ablate|sweep|\
-                       plan|verify|serve|layouts> [--options]");
+                       plan|eval|verify|serve|layouts> [--options]");
             std::process::exit(2);
         }
     }

@@ -49,6 +49,82 @@ pub struct Predicted {
     pub tokens_per_gpu_s: f64,
 }
 
+/// Measured decode metrics for a plan, filled in by the eval harness
+/// ([`crate::eval`]) from served [`crate::serve::ServeReport`]s. Two
+/// throughput views coexist on purpose: wall-clock tokens/s (what an
+/// operator cares about, but noisy on shared CI machines) and the
+/// step-normalized tokens/step/GPU (bit-deterministic on the native
+/// backend, what the regression tests rank by).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Measured {
+    /// Token-to-token latency percentiles, milliseconds (wall clock).
+    pub ttl_p50_ms: f64,
+    pub ttl_p95_ms: f64,
+    pub ttl_p99_ms: f64,
+    /// Tokens/s/user (1 / mean measured TTL).
+    pub interactivity: f64,
+    /// System throughput, generated tokens per second of wall time.
+    pub tokens_per_s: f64,
+    /// Wall-clock throughput normalized per GPU.
+    pub tokens_per_gpu_s: f64,
+    /// Deterministic throughput: generated tokens per engine step per
+    /// GPU (independent of the wall clock — identical across reruns).
+    pub tokens_per_step_per_gpu: f64,
+    /// Peak live KV tokens across every run.
+    pub peak_kv_tokens: usize,
+    /// Requests completed / rejected across every run.
+    pub completed: usize,
+    pub rejected: usize,
+    /// Total engine steps / generated tokens across every run.
+    pub steps: u64,
+    pub generated_tokens: usize,
+    /// Total serving wall time, seconds.
+    pub wall_s: f64,
+}
+
+impl Measured {
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("ttl_p50_ms".into(), Json::Num(self.ttl_p50_ms));
+        m.insert("ttl_p95_ms".into(), Json::Num(self.ttl_p95_ms));
+        m.insert("ttl_p99_ms".into(), Json::Num(self.ttl_p99_ms));
+        m.insert("interactivity".into(), Json::Num(self.interactivity));
+        m.insert("tokens_per_s".into(), Json::Num(self.tokens_per_s));
+        m.insert("tokens_per_gpu_s".into(),
+                 Json::Num(self.tokens_per_gpu_s));
+        m.insert("tokens_per_step_per_gpu".into(),
+                 Json::Num(self.tokens_per_step_per_gpu));
+        m.insert("peak_kv_tokens".into(),
+                 Json::Num(self.peak_kv_tokens as f64));
+        m.insert("completed".into(), Json::Num(self.completed as f64));
+        m.insert("rejected".into(), Json::Num(self.rejected as f64));
+        m.insert("steps".into(), Json::Num(self.steps as f64));
+        m.insert("generated_tokens".into(),
+                 Json::Num(self.generated_tokens as f64));
+        m.insert("wall_s".into(), Json::Num(self.wall_s));
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Measured> {
+        Ok(Measured {
+            ttl_p50_ms: j.get("ttl_p50_ms")?.as_f64()?,
+            ttl_p95_ms: j.get("ttl_p95_ms")?.as_f64()?,
+            ttl_p99_ms: j.get("ttl_p99_ms")?.as_f64()?,
+            interactivity: j.get("interactivity")?.as_f64()?,
+            tokens_per_s: j.get("tokens_per_s")?.as_f64()?,
+            tokens_per_gpu_s: j.get("tokens_per_gpu_s")?.as_f64()?,
+            tokens_per_step_per_gpu:
+                j.get("tokens_per_step_per_gpu")?.as_f64()?,
+            peak_kv_tokens: j.get("peak_kv_tokens")?.as_usize()?,
+            completed: j.get("completed")?.as_usize()?,
+            rejected: j.get("rejected")?.as_usize()?,
+            steps: j.get("steps")?.as_usize()? as u64,
+            generated_tokens: j.get("generated_tokens")?.as_usize()?,
+            wall_s: j.get("wall_s")?.as_f64()?,
+        })
+    }
+}
+
 /// One executable sharding decision: the planner's output, the
 /// engine's and server's input.
 #[derive(Debug, Clone, PartialEq)]
@@ -70,6 +146,9 @@ pub struct Plan {
     /// (`batch * (seq_cap - kv_block*kvp)`); for full-size models it is
     /// the HBM envelope net of weights.
     pub kv_budget: usize,
+    /// Measured metrics from actually serving this plan (`helix eval`);
+    /// `None` until the eval harness has run it.
+    pub measured: Option<Measured>,
 }
 
 impl Plan {
@@ -89,6 +168,9 @@ impl Plan {
         m.insert("seq_len".into(), num(self.seq_len));
         m.insert("predicted".into(), Json::Obj(pred));
         m.insert("kv_budget".into(), num(self.kv_budget as f64));
+        if let Some(meas) = &self.measured {
+            m.insert("measured".into(), meas.to_json());
+        }
         Json::Obj(m)
     }
 
@@ -107,7 +189,17 @@ impl Plan {
                 tokens_per_gpu_s: pred.get("tokens_per_gpu_s")?.as_f64()?,
             },
             kv_budget: j.get("kv_budget")?.as_usize()?,
+            measured: match j.opt("measured") {
+                Some(m) => Some(Measured::from_json(m)?),
+                None => None,
+            },
         })
+    }
+
+    /// The same plan with the measured slot filled in.
+    pub fn with_measured(mut self, m: Measured) -> Plan {
+        self.measured = Some(m);
+        self
     }
 
     /// Accept either a bare plan object or a `helix plan` document
@@ -122,6 +214,39 @@ impl Plan {
         Plan::from_json(j).context("expected a plan object or a \
                                     {\"plans\": [...]} document")
     }
+}
+
+/// Re-rank a plan list by *measured* numbers: best measured throughput
+/// per GPU first. `deterministic` ranks by the step-normalized
+/// tokens/step/GPU and breaks ties only on rerun-stable keys (fewer
+/// GPUs, layout key, strategy) — exact throughput ties are common on
+/// the tiny models (same workload, same GPU count => same step counts),
+/// and a wall-clock tie-breaker would reorder identical eval runs.
+/// Non-deterministic mode ranks by wall-clock tokens/s/GPU with
+/// measured TTL p50 as the first tie-breaker. Plans without
+/// measurements sink to the tail in their incoming (predicted) order.
+pub fn rank_by_measured(plans: &[Plan], deterministic: bool) -> Vec<Plan> {
+    let mut ranked = plans.to_vec();
+    ranked.sort_by(|a, b| {
+        match (&a.measured, &b.measured) {
+            (None, None) => std::cmp::Ordering::Equal, // stable sort
+            (Some(_), None) => std::cmp::Ordering::Less,
+            (None, Some(_)) => std::cmp::Ordering::Greater,
+            (Some(ma), Some(mb)) => {
+                let key = if deterministic {
+                    mb.tokens_per_step_per_gpu
+                        .total_cmp(&ma.tokens_per_step_per_gpu)
+                } else {
+                    mb.tokens_per_gpu_s.total_cmp(&ma.tokens_per_gpu_s)
+                        .then(ma.ttl_p50_ms.total_cmp(&mb.ttl_p50_ms))
+                };
+                key.then(a.gpus.cmp(&b.gpus))
+                    .then_with(|| a.layout.key().cmp(&b.layout.key()))
+                    .then_with(|| a.strategy.cmp(&b.strategy))
+            }
+        }
+    });
+    ranked
 }
 
 /// Serialize a ranked plan list as the `helix plan` document, with
@@ -386,6 +511,7 @@ impl Planner {
                 tokens_per_gpu_s: p.throughput_per_gpu,
             },
             kv_budget: self.kv_budget_for(&p.layout),
+            measured: None,
         }
     }
 
@@ -464,6 +590,65 @@ mod tests {
         let doc = plans_to_doc("deepseek-r1", Some(5.0), &plans[..3], None);
         let j = Json::parse(&doc.to_string()).unwrap();
         assert_eq!(&Plan::from_json_doc(&j).unwrap(), plan);
+    }
+
+    fn measured_fixture(thpt: f64, steps_thpt: f64, ttl: f64) -> Measured {
+        Measured {
+            ttl_p50_ms: ttl,
+            ttl_p95_ms: ttl * 1.5,
+            ttl_p99_ms: ttl * 2.0,
+            interactivity: 1e3 / ttl,
+            tokens_per_s: thpt * 8.0,
+            tokens_per_gpu_s: thpt,
+            tokens_per_step_per_gpu: steps_thpt,
+            peak_kv_tokens: 128,
+            completed: 8,
+            rejected: 0,
+            steps: 100,
+            generated_tokens: 64,
+            wall_s: 0.5,
+        }
+    }
+
+    #[test]
+    fn measured_plan_json_roundtrip_is_identical() {
+        let planner = Planner::from_spec(ModelSpec::llama_405b(), hw())
+            .max_batch(64);
+        let plan = planner.plan().unwrap().remove(0)
+            .with_measured(measured_fixture(3.25, 0.125, 12.5));
+        let j = Json::parse(&plan.to_json().to_string()).unwrap();
+        assert_eq!(Plan::from_json(&j).unwrap(), plan);
+        // A plan without measurements omits the key entirely.
+        let bare = planner.plan().unwrap().remove(0);
+        assert!(bare.measured.is_none());
+        assert!(!bare.to_json().to_string().contains("measured"));
+    }
+
+    #[test]
+    fn rank_by_measured_orders_on_measured_not_predicted() {
+        let planner = Planner::from_spec(ModelSpec::llama_405b(), hw())
+            .max_batch(64);
+        let plans = planner.plan().unwrap();
+        // Invert the predicted order with measured numbers: the
+        // predicted-worst of the three gets the best measurement.
+        let seeded: Vec<Plan> = plans[..3].iter().enumerate()
+            .map(|(i, p)| p.clone().with_measured(
+                measured_fixture((i + 1) as f64, (i + 1) as f64 * 0.1,
+                                 10.0 / (i + 1) as f64)))
+            .collect();
+        for deterministic in [false, true] {
+            let ranked = rank_by_measured(&seeded, deterministic);
+            assert_eq!(ranked[0], seeded[2]);
+            assert_eq!(ranked[2], seeded[0]);
+        }
+        // Unmeasured plans sink below measured ones, original order kept.
+        let mut mixed = seeded.clone();
+        mixed.push(plans[3].clone());
+        mixed.insert(0, plans[4].clone());
+        let ranked = rank_by_measured(&mixed, true);
+        assert!(ranked[0].measured.is_some());
+        assert_eq!(ranked[3], plans[4]);
+        assert_eq!(ranked[4], plans[3]);
     }
 
     #[test]

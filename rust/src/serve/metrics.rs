@@ -13,8 +13,10 @@
 //! * **TPOT** (time per output token): a request's mean inter-token gap.
 //! * **queue delay**: submission → slot admission.
 
+use std::collections::BTreeMap;
+
 use crate::serve::router::RequestState;
-use crate::util::stats;
+use crate::util::{stats, Json};
 
 fn pct(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
@@ -77,7 +79,9 @@ impl ServeMetrics {
 
     /// TTL sample set; falls back to raw step times when no request
     /// produced two tokens (every decode step is then one TTL sample).
-    fn ttl_samples(&self) -> &[f64] {
+    /// Public so the eval harness pools the *same* sample definition
+    /// across scenario runs instead of re-deriving it.
+    pub fn ttl_samples(&self) -> &[f64] {
         if self.ttl.is_empty() {
             &self.step_times
         } else {
@@ -153,6 +157,40 @@ impl ServeMetrics {
         } else {
             1.0 / m
         }
+    }
+
+    /// Serializable summary: the derived percentiles and counters (not
+    /// the raw sample vectors — those stay in-process). Latencies are
+    /// reported in milliseconds, matching the planner's `Predicted`
+    /// units so eval-layer calibration is a straight ratio.
+    pub fn summary_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        let ms = |x: f64| Json::Num(x * 1e3);
+        m.insert("ttl_mean_ms".into(), ms(self.ttl_mean()));
+        m.insert("ttl_p50_ms".into(), ms(self.ttl_p50()));
+        m.insert("ttl_p95_ms".into(), ms(self.ttl_p95()));
+        m.insert("ttl_p99_ms".into(), ms(self.ttl_p99()));
+        m.insert("ttft_mean_ms".into(), ms(self.ttft_mean()));
+        m.insert("ttft_p99_ms".into(), ms(self.ttft_p99()));
+        m.insert("tpot_mean_ms".into(), ms(self.tpot_mean()));
+        m.insert("tpot_p95_ms".into(), ms(self.tpot_p95()));
+        m.insert("queue_delay_mean_ms".into(), ms(self.queue_delay_mean()));
+        m.insert("step_p50_ms".into(), ms(self.step_p50()));
+        m.insert("step_p99_ms".into(), ms(self.step_p99()));
+        m.insert("wall_s".into(), Json::Num(self.wall));
+        m.insert("comm_s".into(), Json::Num(self.comm));
+        m.insert("steps".into(), Json::Num(self.steps as f64));
+        m.insert("generated_tokens".into(),
+                 Json::Num(self.generated_tokens as f64));
+        m.insert("tokens_per_s".into(), Json::Num(self.tokens_per_sec()));
+        m.insert("tokens_per_s_per_user".into(),
+                 Json::Num(self.tokens_per_sec_per_user()));
+        m.insert("peak_kv_tokens".into(),
+                 Json::Num(self.peak_kv_tokens as f64));
+        m.insert("peak_committed_tokens".into(),
+                 Json::Num(self.peak_committed_tokens as f64));
+        m.insert("peak_active".into(), Json::Num(self.peak_active as f64));
+        Json::Obj(m)
     }
 }
 

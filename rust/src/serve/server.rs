@@ -74,6 +74,29 @@ pub struct ServeReport {
 }
 
 impl ServeReport {
+    /// Machine-readable summary (the eval harness's run records and
+    /// `benchmarks/BENCH_pareto.json` build on this).
+    pub fn to_json(&self) -> crate::util::Json {
+        use crate::util::Json;
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("completed".into(), Json::Num(self.completed as f64));
+        m.insert("rejected".into(), Json::Num(self.rejected as f64));
+        m.insert("gpus".into(), Json::Num(self.gpus as f64));
+        let mut kb = std::collections::BTreeMap::new();
+        kb.insert("slot_tokens".into(),
+                  Json::Num(self.kv_budget.slot_tokens as f64));
+        kb.insert("budget_tokens".into(),
+                  Json::Num(self.kv_budget.budget_tokens as f64));
+        kb.insert("reserve_tokens".into(),
+                  Json::Num(self.kv_budget.reserve_tokens as f64));
+        m.insert("kv_budget".into(), Json::Obj(kb));
+        if let Some(d) = self.max_ref_diff {
+            m.insert("max_ref_diff".into(), Json::Num(d as f64));
+        }
+        m.insert("metrics".into(), self.metrics.summary_json());
+        Json::Obj(m)
+    }
+
     pub fn render(&self) -> String {
         let m = &self.metrics;
         format!(

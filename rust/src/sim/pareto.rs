@@ -6,6 +6,32 @@
 
 use super::decode::DecodePoint;
 
+/// Generic Pareto extraction over `(x, y)` pairs where larger is better
+/// on both axes: returns the indices of the non-dominated points,
+/// sorted by `x` ascending. Non-finite coordinates are dropped (they
+/// cannot sit on a frontier), duplicates keep one representative, and
+/// ordering uses `total_cmp`, so pathological inputs never panic. Both
+/// the predicted [`Frontier`] and the eval harness's measured frontier
+/// ([`crate::eval::MeasuredFrontier`]) extract through this.
+pub fn pareto_indices(pts: &[(f64, f64)]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..pts.len())
+        .filter(|&i| pts[i].0.is_finite() && pts[i].1.is_finite())
+        .collect();
+    idx.sort_by(|&a, &b| {
+        pts[b].0.total_cmp(&pts[a].0).then(pts[b].1.total_cmp(&pts[a].1))
+    });
+    let mut best = f64::NEG_INFINITY;
+    let mut keep = Vec::new();
+    for i in idx {
+        if pts[i].1 > best {
+            best = pts[i].1;
+            keep.push(i);
+        }
+    }
+    keep.reverse(); // ascending x
+    keep
+}
+
 /// A throughput-vs-interactivity Pareto frontier.
 #[derive(Debug, Clone)]
 pub struct Frontier {
@@ -20,24 +46,14 @@ impl Frontier {
     /// configs) are dropped up front — they can't sit on a frontier —
     /// and the sort uses `total_cmp`, so a pathological point can never
     /// panic the extraction.
-    pub fn from_points(mut points: Vec<DecodePoint>) -> Frontier {
-        points.retain(|p| p.interactivity.is_finite()
-                      && p.throughput_per_gpu.is_finite());
-        points.sort_by(|a, b| {
-            b.interactivity
-                .total_cmp(&a.interactivity)
-                .then(b.throughput_per_gpu
-                    .total_cmp(&a.throughput_per_gpu))
-        });
-        let mut best = f64::NEG_INFINITY;
-        let mut keep = Vec::new();
-        for p in points {
-            if p.throughput_per_gpu > best {
-                best = p.throughput_per_gpu;
-                keep.push(p);
-            }
-        }
-        keep.reverse(); // ascending interactivity
+    pub fn from_points(points: Vec<DecodePoint>) -> Frontier {
+        let pairs: Vec<(f64, f64)> = points.iter()
+            .map(|p| (p.interactivity, p.throughput_per_gpu))
+            .collect();
+        let keep = pareto_indices(&pairs)
+            .into_iter()
+            .map(|i| points[i].clone())
+            .collect();
         Frontier { points: keep }
     }
 
@@ -194,6 +210,26 @@ mod tests {
         let f = Frontier::from_points(vec![pt(f64::NAN, f64::NAN)]);
         assert!(f.is_empty());
         assert_eq!(f.throughput_at(1.0), 0.0);
+    }
+
+    #[test]
+    fn pareto_indices_match_brute_force() {
+        let pts = vec![(10.0, 1.0), (5.0, 2.0), (7.0, 0.5), (5.0, 1.5),
+                       (f64::NAN, 9.0), (2.0, f64::INFINITY), (1.0, 0.1)];
+        let keep = pareto_indices(&pts);
+        assert_eq!(keep, vec![1, 0]); // ascending x: (5,2) then (10,1)
+        // Brute force: a kept point is dominated by no finite point.
+        for &i in &keep {
+            for (j, q) in pts.iter().enumerate() {
+                if i == j || !q.0.is_finite() || !q.1.is_finite() {
+                    continue;
+                }
+                let p = pts[i];
+                assert!(!(q.0 >= p.0 && q.1 >= p.1
+                          && (q.0 > p.0 || q.1 > p.1)),
+                        "kept {i} dominated by {j}");
+            }
+        }
     }
 
     #[test]

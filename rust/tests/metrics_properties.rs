@@ -1,0 +1,218 @@
+//! Property tests for the eval-adjacent math: `serve::metrics`
+//! percentile/stat edge cases (empty series, single sample, all-equal
+//! values, p99 on n < 100) and Pareto dominance of the measured
+//! frontier (no frontier point is ever dominated by another).
+
+use helix::config::Layout;
+use helix::eval::MeasuredFrontier;
+use helix::plan::{Measured, Plan, Predicted};
+use helix::serve::ServeMetrics;
+use helix::sim::pareto::pareto_indices;
+use helix::util::prop::forall;
+use helix::util::Rng;
+
+#[test]
+fn empty_series_report_zero_everywhere() {
+    let m = ServeMetrics::default();
+    assert_eq!(m.ttl_mean(), 0.0);
+    assert_eq!(m.ttl_p50(), 0.0);
+    assert_eq!(m.ttl_p95(), 0.0);
+    assert_eq!(m.ttl_p99(), 0.0);
+    assert_eq!(m.ttft_mean(), 0.0);
+    assert_eq!(m.ttft_p99(), 0.0);
+    assert_eq!(m.tpot_mean(), 0.0);
+    assert_eq!(m.tpot_p50(), 0.0);
+    assert_eq!(m.tpot_p95(), 0.0);
+    assert_eq!(m.tpot_p99(), 0.0);
+    assert_eq!(m.queue_delay_mean(), 0.0);
+    assert_eq!(m.step_p50(), 0.0);
+    assert_eq!(m.step_p99(), 0.0);
+    assert_eq!(m.tokens_per_sec(), 0.0);
+    assert_eq!(m.tokens_per_sec_per_user(), 0.0);
+    // The serializable summary of an empty run is still a full object.
+    let j = m.summary_json();
+    assert_eq!(j.get("ttl_p99_ms").unwrap().as_f64().unwrap(), 0.0);
+    assert_eq!(j.get("tokens_per_s").unwrap().as_f64().unwrap(), 0.0);
+}
+
+#[test]
+fn single_sample_is_every_percentile() {
+    forall("single sample", 200, |rng| {
+        let x = rng.f64() * 10.0 + 1e-6;
+        let m = ServeMetrics { ttl: vec![x], ttft: vec![x],
+                               tpot: vec![x], step_times: vec![x],
+                               ..Default::default() };
+        for v in [m.ttl_p50(), m.ttl_p95(), m.ttl_p99(), m.ttl_mean(),
+                  m.ttft_p99(), m.tpot_p50(), m.tpot_p95(), m.tpot_p99(),
+                  m.step_p50(), m.step_p99()] {
+            assert_eq!(v, x);
+        }
+        assert!((m.tokens_per_sec_per_user() - 1.0 / x).abs()
+                <= 1e-9 * (1.0 / x));
+    });
+}
+
+#[test]
+fn all_equal_series_collapse_to_the_value() {
+    forall("all-equal series", 200, |rng| {
+        let n = rng.range(1, 300);
+        let v = rng.f64() * 5.0 + 1e-9;
+        let m = ServeMetrics { ttl: vec![v; n], ..Default::default() };
+        assert_eq!(m.ttl_p50(), v);
+        assert_eq!(m.ttl_p95(), v);
+        assert_eq!(m.ttl_p99(), v);
+        assert!((m.ttl_mean() - v).abs() <= 1e-12 + 1e-9 * v);
+    });
+}
+
+/// p99 with fewer than 100 samples: nearest-rank must stay inside the
+/// sample range, be >= every lower percentile, and for tiny n land on
+/// the max (there is no 1% tail to cut off).
+#[test]
+fn p99_on_small_samples_is_sane() {
+    forall("p99 n<100", 300, |rng| {
+        let n = rng.range(1, 100);
+        let ttl: Vec<f64> = (0..n).map(|_| rng.f64() * 3.0).collect();
+        let m = ServeMetrics { ttl: ttl.clone(), ..Default::default() };
+        let (p50, p95, p99) = (m.ttl_p50(), m.ttl_p95(), m.ttl_p99());
+        let max = ttl.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let min = ttl.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
+        assert!(min <= p99 && p99 <= max);
+        if n <= 50 {
+            // round(0.99 * (n-1)) == n-1 for n <= 50: p99 is the max.
+            assert_eq!(p99, max);
+        }
+    });
+}
+
+#[test]
+fn percentiles_are_monotone_in_p() {
+    forall("percentile monotonicity", 200, |rng| {
+        let n = rng.range(1, 64);
+        let ttl: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+        let m = ServeMetrics { ttl, ..Default::default() };
+        let mut prev = f64::NEG_INFINITY;
+        for p in [m.ttl_p50(), m.ttl_p95(), m.ttl_p99()] {
+            assert!(p >= prev);
+            prev = p;
+        }
+    });
+}
+
+fn random_measured_plan(rng: &mut Rng) -> Plan {
+    // Occasionally degenerate coordinates: the frontier must filter
+    // them, never panic on them.
+    let coord = |rng: &mut Rng| match rng.range(0, 12) {
+        0 => f64::NAN,
+        1 => f64::INFINITY,
+        _ => rng.f64() * 100.0 + 1e-3,
+    };
+    let (inter, thpt) = (coord(rng), coord(rng));
+    let layouts = [Layout::helix(1, 1, 1, 1), Layout::helix(2, 2, 4, 1),
+                   Layout::helix(4, 1, 4, 1), Layout::helix(1, 4, 4, 1)];
+    Plan {
+        model: "prop".into(),
+        strategy: if rng.bool(0.5) { "helix" } else { "tp" }.into(),
+        layout: *rng.choose(&layouts),
+        batch: 1 << rng.range(0, 3),
+        gpus: 1 << rng.range(0, 4),
+        seq_len: 256.0,
+        predicted: Predicted { ttl_ms: 1.0, interactivity: 1000.0,
+                               tokens_per_gpu_s: 10.0 },
+        kv_budget: 1024,
+        measured: Some(Measured {
+            ttl_p50_ms: if inter > 0.0 { 1e3 / inter } else { 0.0 },
+            ttl_p95_ms: 0.0,
+            ttl_p99_ms: 0.0,
+            interactivity: inter,
+            tokens_per_s: thpt,
+            tokens_per_gpu_s: thpt,
+            tokens_per_step_per_gpu: thpt / 100.0,
+            peak_kv_tokens: 0,
+            completed: 1,
+            rejected: 0,
+            steps: 1,
+            generated_tokens: 1,
+            wall_s: 1.0,
+        }),
+    }
+}
+
+/// The measured-frontier dominance invariant: no point on the frontier
+/// is (weakly) dominated by any *other* finite measured point — on the
+/// frontier or off it — and the frontier is sorted by interactivity.
+#[test]
+fn measured_frontier_points_are_never_dominated() {
+    forall("measured frontier dominance", 300, |rng| {
+        let n = rng.range(1, 24);
+        let mut plans: Vec<Plan> =
+            (0..n).map(|_| random_measured_plan(rng)).collect();
+        if rng.bool(0.2) {
+            plans[0].measured = None; // unmeasured plans are ignored
+        }
+        let f = MeasuredFrontier::from_plans(&plans);
+        for w in f.points.windows(2) {
+            assert!(w[0].interactivity <= w[1].interactivity);
+        }
+        for kept in &f.points {
+            assert!(kept.interactivity.is_finite()
+                    && kept.tokens_per_gpu_s.is_finite());
+            for p in &plans {
+                let Some(m) = &p.measured else { continue };
+                if !m.interactivity.is_finite()
+                    || !m.tokens_per_gpu_s.is_finite() {
+                    continue;
+                }
+                let strictly_better =
+                    m.interactivity >= kept.interactivity
+                    && m.tokens_per_gpu_s >= kept.tokens_per_gpu_s
+                    && (m.interactivity > kept.interactivity
+                        || m.tokens_per_gpu_s > kept.tokens_per_gpu_s);
+                assert!(!strictly_better,
+                        "frontier point ({}, {}) dominated by ({}, {})",
+                        kept.interactivity, kept.tokens_per_gpu_s,
+                        m.interactivity, m.tokens_per_gpu_s);
+            }
+        }
+    });
+}
+
+/// The generic extractor both frontiers build on: indices are a subset,
+/// sorted ascending in x, mutually non-dominating, and every dropped
+/// finite point is dominated-or-duplicated by some kept point.
+#[test]
+fn pareto_indices_properties() {
+    forall("pareto_indices", 300, |rng| {
+        let n = rng.range(0, 32);
+        let pts: Vec<(f64, f64)> = (0..n)
+            .map(|_| {
+                let v = |rng: &mut Rng| match rng.range(0, 16) {
+                    0 => f64::NAN,
+                    _ => (rng.range(0, 8) as f64) * 0.5, // force ties too
+                };
+                (v(rng), v(rng))
+            })
+            .collect();
+        let keep = pareto_indices(&pts);
+        for w in keep.windows(2) {
+            assert!(pts[w[0]].0 < pts[w[1]].0,
+                    "kept x not strictly ascending");
+            assert!(pts[w[0]].1 > pts[w[1]].1,
+                    "kept y not strictly descending");
+        }
+        for (i, p) in pts.iter().enumerate() {
+            if !p.0.is_finite() || !p.1.is_finite() {
+                assert!(!keep.contains(&i), "non-finite point kept");
+                continue;
+            }
+            if keep.contains(&i) {
+                continue;
+            }
+            // Dropped: some kept point weakly dominates it.
+            assert!(keep.iter().any(|&k| pts[k].0 >= p.0
+                                    && pts[k].1 >= p.1),
+                    "dropped point {p:?} not covered by the frontier");
+        }
+    });
+}

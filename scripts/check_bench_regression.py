@@ -1,15 +1,26 @@
 #!/usr/bin/env python3
-"""Gate BENCH_engine.json against the checked-in baseline.
+"""Gate a measured-throughput report against a checked-in baseline.
 
 Usage:
     python3 scripts/check_bench_regression.py CURRENT BASELINE [--threshold T]
 
-Compares every ``*/tokens_per_s`` metric present in both reports and
-fails (exit 1) if any regresses by more than T (default 0.10 = 10%).
-A missing baseline is not a failure: the first measured run prints its
-numbers and asks for the baseline to be committed — that run *is* the
-baseline. A current report whose status says "skipped" fails: with the
-native backend the engine bench must always execute.
+Two report schemas are understood:
+
+* ``BENCH_engine.json`` (``cargo bench --bench engine_decode``): every
+  ``*/tokens_per_s`` entry under ``metrics``.
+* ``BENCH_pareto.json`` (``helix eval``, ``kind: "helix-eval"``): one
+  ``pareto/<model>/<layout>/tokens_per_step_per_gpu`` metric per
+  evaluated plan. The *step-normalized* throughput is gated on purpose:
+  it is bit-deterministic on the native backend, so any regression it
+  reports is a real scheduling/admission change, not CI wall-clock
+  noise.
+
+Fails (exit 1) if any metric present in both reports regresses by more
+than T (default 0.10 = 10%), or if baseline metrics vanished from the
+current run. A missing baseline is not a failure: the first measured
+run prints its numbers and asks for the baseline to be committed — that
+run *is* the baseline. A current report whose status says "skipped"
+fails: with the native backend the bench must always execute.
 
 Stdlib only (the CI runner needs nothing installed).
 """
@@ -20,17 +31,41 @@ import os
 import sys
 
 
+def layout_key(layout: dict) -> str:
+    key = "kvp{kvp}_tpa{tpa}_tpf{tpf}_ep{ep}".format(
+        **{k: layout.get(k, "?") for k in ("kvp", "tpa", "tpf", "ep")})
+    if layout.get("pp", 1) > 1:
+        key += f"_pp{layout['pp']}"
+    return key
+
+
+def eval_metrics(report: dict) -> dict:
+    """``helix eval`` documents: the deterministic per-plan throughput."""
+    out = {}
+    for entry in report.get("models") or []:
+        model = entry.get("model", "?")
+        for plan in entry.get("plans") or []:
+            measured = plan.get("measured") or {}
+            v = measured.get("tokens_per_step_per_gpu")
+            if isinstance(v, (int, float)):
+                key = f"pareto/{model}/{layout_key(plan.get('layout', {}))}"
+                out[f"{key}/tokens_per_step_per_gpu"] = v
+    return out
+
+
 def tokens_metrics(report: dict) -> dict:
+    if report.get("kind") == "helix-eval" or "models" in report:
+        return eval_metrics(report)
     return {k: v for k, v in report.get("metrics", {}).items()
             if k.endswith("/tokens_per_s") and isinstance(v, (int, float))}
 
 
-def main() -> int:
+def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("current")
     ap.add_argument("baseline")
     ap.add_argument("--threshold", type=float, default=0.10)
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     with open(args.current) as f:
         cur = json.load(f)
@@ -41,7 +76,7 @@ def main() -> int:
         return 1
     cur_tok = tokens_metrics(cur)
     if not cur_tok:
-        print("FAIL: no */tokens_per_s metrics in the current report")
+        print("FAIL: no throughput metrics in the current report")
         return 1
 
     if not os.path.exists(args.baseline):

@@ -1,15 +1,29 @@
 #!/usr/bin/env python3
-"""Render the Fig 5/6-style throughput-vs-interactivity frontier from a
-``helix plan --sweep`` JSON document.
+"""Render the Fig 5/6-style throughput-vs-interactivity frontier.
 
-Usage:
-    cargo run --release -- plan --model deepseek-r1 --sweep --out plan.json
-    python3 scripts/plot_pareto.py plan.json [-o pareto.png]
+Two input schemas are understood:
+
+* ``helix plan --sweep`` documents — predicted ``frontiers.helix`` and
+  ``frontiers.baseline`` series (the historical behaviour)::
+
+      cargo run --release -- plan --model deepseek-r1 --sweep --out plan.json
+      python3 scripts/plot_pareto.py plan.json [-o pareto.png]
+
+* ``helix eval`` documents (``kind: "helix-eval"``, e.g.
+  ``benchmarks/BENCH_pareto.json``) — per-model ``frontiers.predicted``
+  and ``frontiers.measured`` series, overlaid on one plot so the
+  planner's prediction and the served measurement sit on the same axes
+  (``make pareto-measured``)::
+
+      cargo run --release -- eval --out BENCH_pareto.json --smoke
+      python3 scripts/plot_pareto.py BENCH_pareto.json [--model tiny_gqa]
 
 With matplotlib installed this writes whatever ``-o``'s suffix says
 (default ``<input>.png``); without it, a dependency-free SVG is written
-instead (``<input>.svg``). Both axes are normalized to the baseline
-frontier's maxima, exactly as the paper reports its results (S3.1).
+instead (``<input>.svg``). Axes are normalized to the baseline
+frontier's maxima when a baseline series exists (exactly as the paper
+reports its results, S3.1); eval documents have no baseline sweep, so
+they normalize to the predicted series instead.
 
 Stdlib-only by design — matplotlib is optional.
 """
@@ -20,34 +34,64 @@ import math
 import os
 import sys
 
+# key -> (label, color, style). "steps" draws the frontier staircase;
+# "scatter" draws unconnected measured points (a measurement is a
+# sample, not a continuous tradeoff curve).
 SERIES = [
-    # (key in doc["frontiers"], label, color)
-    ("baseline", "baseline (best TP/PP/KVP/EP)", "#888888"),
-    ("helix", "helix", "#1f6feb"),
+    ("baseline", "baseline (best TP/PP/KVP/EP)", "#888888", "steps"),
+    ("helix", "helix", "#1f6feb", "steps"),
+    ("predicted", "predicted (planner sweep)", "#1f6feb", "steps"),
+    ("measured", "measured (served traces)", "#d62728", "scatter"),
 ]
 
 
-def load(path):
+def load(path, model=None):
+    """Return ``(doc_meta, frontiers)`` for either input schema."""
     with open(path) as f:
         doc = json.load(f)
+    if doc.get("kind") == "helix-eval" or "models" in doc:
+        entries = doc.get("models") or []
+        if not entries:
+            sys.exit(f"{path}: eval document has no models")
+        names = [e.get("model", "?") for e in entries]
+        if model is None:
+            entry = entries[0]
+        else:
+            matches = [e for e in entries if e.get("model") == model]
+            if not matches:
+                sys.exit(f"{path}: no model {model!r} (have: "
+                         f"{', '.join(names)})")
+            entry = matches[0]
+        frontiers = entry.get("frontiers")
+        if not frontiers:
+            sys.exit(f"{path}: model {entry.get('model')!r} has no "
+                     f"\"frontiers\" section")
+        meta = {"model": entry.get("model", "?"),
+                "ttl_budget_ms": None,
+                "kind": "helix-eval"}
+        return meta, frontiers
     frontiers = doc.get("frontiers")
     if not frontiers:
         sys.exit(f"{path}: no \"frontiers\" section — regenerate with "
-                 f"`helix plan --sweep`")
+                 f"`helix plan --sweep` or `helix eval`")
     return doc, frontiers
 
 
 def normalized_series(frontiers):
-    base = frontiers.get("baseline") or []
-    ni = max((p["tok_s_user"] for p in base), default=1.0) or 1.0
-    nt = max((p["tok_s_gpu"] for p in base), default=1.0) or 1.0
+    """Normalize all series to one reference: baseline when present
+    (plan docs), else predicted (eval docs), else the global maxima."""
+    ref = frontiers.get("baseline") or frontiers.get("predicted")
+    if not ref:
+        ref = [p for pts in frontiers.values() for p in (pts or [])]
+    ni = max((p["tok_s_user"] for p in ref), default=1.0) or 1.0
+    nt = max((p["tok_s_gpu"] for p in ref), default=1.0) or 1.0
     out = []
-    for key, label, color in SERIES:
+    for key, label, color, style in SERIES:
         pts = [(p["tok_s_user"] / ni, p["tok_s_gpu"] / nt)
-               for p in frontiers.get(key, [])]
+               for p in frontiers.get(key) or []]
         pts.sort()
         if pts:
-            out.append((label, color, pts))
+            out.append((label, color, style, pts))
     if not out:
         sys.exit("frontiers are empty — nothing to plot")
     return out
@@ -59,16 +103,22 @@ def plot_matplotlib(doc, series, out):
     import matplotlib.pyplot as plt
 
     fig, ax = plt.subplots(figsize=(7, 5))
-    for label, color, pts in series:
+    for label, color, style, pts in series:
         xs, ys = zip(*pts)
-        ax.plot(xs, ys, marker="o", markersize=3.5, drawstyle="steps-post",
-                label=label, color=color)
+        if style == "scatter":
+            ax.plot(xs, ys, marker="s", markersize=5, linestyle="--",
+                    linewidth=1.0, alpha=0.9, label=label, color=color)
+        else:
+            ax.plot(xs, ys, marker="o", markersize=3.5,
+                    drawstyle="steps-post", label=label, color=color)
     ax.set_xscale("log")
     ax.set_yscale("log")
-    ax.set_xlabel("tokens/s/user (normalized to baseline max)")
-    ax.set_ylabel("tokens/s/GPU (normalized to baseline max)")
+    ax.set_xlabel("tokens/s/user (normalized)")
+    ax.set_ylabel("tokens/s/GPU (normalized)")
     ttl = doc.get("ttl_budget_ms")
-    ax.set_title(f"Pareto frontier — {doc.get('model', '?')}"
+    kind = " — predicted vs measured" if doc.get("kind") == "helix-eval" \
+        else ""
+    ax.set_title(f"Pareto frontier{kind} — {doc.get('model', '?')}"
                  + (f" (TTL budget {ttl} ms)" if ttl else ""))
     ax.grid(True, which="both", alpha=0.3)
     ax.legend()
@@ -78,13 +128,20 @@ def plot_matplotlib(doc, series, out):
 
 
 def plot_svg(doc, series, out):
-    """Dependency-free fallback: log-log step plot as hand-rolled SVG."""
+    """Dependency-free fallback: log-log plot as hand-rolled SVG.
+    Step series draw the frontier staircase; measured series draw
+    square markers joined by a dashed guide line."""
     w, h, margin = 720, 520, 60
-    all_pts = [p for _, _, pts in series for p in pts]
+    all_pts = [p for _, _, _, pts in series for p in pts]
     lx = [math.log10(max(x, 1e-12)) for x, _ in all_pts]
     ly = [math.log10(max(y, 1e-12)) for _, y in all_pts]
     x0, x1 = min(lx), max(lx)
     y0, y1 = min(ly), max(ly)
+    # Degenerate spans (a single point) still need a finite scale.
+    if x1 - x0 < 1e-9:
+        x0, x1 = x0 - 0.5, x1 + 0.5
+    if y1 - y0 < 1e-9:
+        y0, y1 = y0 - 0.5, y1 + 0.5
     x1, y1 = x1 + 0.05, y1 + 0.05
     x0, y0 = x0 - 0.05, y0 - 0.05
 
@@ -116,20 +173,31 @@ def plot_svg(doc, series, out):
                       f'x2="{w - margin}" y2="{py:.1f}" stroke="#eee"/>')
             el.append(f'<text x="{margin - 6}" y="{py + 4:.1f}" '
                       f'text-anchor="end">1e{d}</text>')
-    # Step polylines per series.
-    for i, (label, color, pts) in enumerate(series):
-        path = []
-        prev = None
-        for x, y in pts:
-            if prev is not None:
-                path.append(f'{sx(x):.1f},{sy(prev[1]):.1f}')
-            path.append(f'{sx(x):.1f},{sy(y):.1f}')
-            prev = (x, y)
-        el.append(f'<polyline points="{" ".join(path)}" fill="none" '
-                  f'stroke="{color}" stroke-width="1.5"/>')
-        for x, y in pts:
-            el.append(f'<circle cx="{sx(x):.1f}" cy="{sy(y):.1f}" r="2.5" '
-                      f'fill="{color}"/>')
+    for i, (label, color, style, pts) in enumerate(series):
+        if style == "scatter":
+            if len(pts) > 1:
+                path = " ".join(f'{sx(x):.1f},{sy(y):.1f}'
+                                for x, y in pts)
+                el.append(f'<polyline points="{path}" fill="none" '
+                          f'stroke="{color}" stroke-width="1.0" '
+                          f'stroke-dasharray="5,4"/>')
+            for x, y in pts:
+                el.append(f'<rect x="{sx(x) - 3:.1f}" '
+                          f'y="{sy(y) - 3:.1f}" width="6" height="6" '
+                          f'fill="{color}"/>')
+        else:
+            path = []
+            prev = None
+            for x, y in pts:
+                if prev is not None:
+                    path.append(f'{sx(x):.1f},{sy(prev[1]):.1f}')
+                path.append(f'{sx(x):.1f},{sy(y):.1f}')
+                prev = (x, y)
+            el.append(f'<polyline points="{" ".join(path)}" fill="none" '
+                      f'stroke="{color}" stroke-width="1.5"/>')
+            for x, y in pts:
+                el.append(f'<circle cx="{sx(x):.1f}" cy="{sy(y):.1f}" '
+                          f'r="2.5" fill="{color}"/>')
         el.append(f'<text x="{margin + 10}" y="{margin + 18 + 16 * i}" '
                   f'fill="{color}">{label}</text>')
     el.append(f'<text x="{w / 2}" y="{h - 12}" text-anchor="middle">'
@@ -145,12 +213,16 @@ def plot_svg(doc, series, out):
     print(f"wrote {out} (matplotlib unavailable; SVG fallback)")
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("plan", help="JSON from `helix plan --sweep`")
+    ap.add_argument("plan",
+                    help="JSON from `helix plan --sweep` or `helix eval`")
     ap.add_argument("-o", "--out", default=None)
-    args = ap.parse_args()
-    doc, frontiers = load(args.plan)
+    ap.add_argument("--model", default=None,
+                    help="model to plot from a multi-model eval document "
+                         "(default: the first)")
+    args = ap.parse_args(argv)
+    doc, frontiers = load(args.plan, args.model)
     series = normalized_series(frontiers)
     stem = os.path.splitext(args.plan)[0]
     try:

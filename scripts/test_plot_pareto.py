@@ -1,0 +1,171 @@
+#!/usr/bin/env python3
+"""Smoke tests for the measured/overlay JSON schema in
+``plot_pareto.py`` and ``check_bench_regression.py``, driven by the
+checked-in fixture ``benchmarks/BENCH_pareto.fixture.json``.
+
+Stdlib-only (unittest), matching the scripts under test:
+
+    python3 scripts/test_plot_pareto.py
+"""
+
+import copy
+import json
+import os
+import sys
+import tempfile
+import unittest
+
+SCRIPTS = os.path.dirname(os.path.abspath(__file__))
+ROOT = os.path.dirname(SCRIPTS)
+FIXTURE = os.path.join(ROOT, "benchmarks", "BENCH_pareto.fixture.json")
+sys.path.insert(0, SCRIPTS)
+
+import check_bench_regression  # noqa: E402
+import plot_pareto  # noqa: E402
+
+
+class LoadTest(unittest.TestCase):
+    def test_eval_doc_selects_first_model_by_default(self):
+        meta, frontiers = plot_pareto.load(FIXTURE)
+        self.assertEqual(meta["model"], "tiny_gqa")
+        self.assertEqual(meta["kind"], "helix-eval")
+        self.assertEqual(len(frontiers["predicted"]), 1)
+        self.assertEqual(len(frontiers["measured"]), 2)
+
+    def test_eval_doc_model_selection(self):
+        meta, frontiers = plot_pareto.load(FIXTURE, model="tiny_moe")
+        self.assertEqual(meta["model"], "tiny_moe")
+        self.assertEqual(len(frontiers["measured"]), 1)
+        with self.assertRaises(SystemExit):
+            plot_pareto.load(FIXTURE, model="no_such_model")
+
+    def test_legacy_plan_doc_still_loads(self):
+        doc = {"model": "deepseek-r1", "ttl_budget_ms": 5.0,
+               "frontiers": {
+                   "baseline": [{"tok_s_user": 10.0, "tok_s_gpu": 1.0}],
+                   "helix": [{"tok_s_user": 15.0, "tok_s_gpu": 2.0}]}}
+        with tempfile.NamedTemporaryFile("w", suffix=".json",
+                                         delete=False) as f:
+            json.dump(doc, f)
+            path = f.name
+        try:
+            meta, frontiers = plot_pareto.load(path)
+            self.assertEqual(meta["model"], "deepseek-r1")
+            self.assertIn("helix", frontiers)
+        finally:
+            os.unlink(path)
+
+
+class SeriesTest(unittest.TestCase):
+    def test_overlay_series_and_predicted_normalization(self):
+        _, frontiers = plot_pareto.load(FIXTURE)
+        series = plot_pareto.normalized_series(frontiers)
+        labels = [label for label, _, _, _ in series]
+        self.assertIn("predicted (planner sweep)", labels)
+        self.assertIn("measured (served traces)", labels)
+        # No baseline in eval docs: normalized to the predicted maxima,
+        # so the predicted series touches 1.0 on both axes.
+        pred = next(s for s in series if s[0].startswith("predicted"))
+        xs = [x for x, _ in pred[3]]
+        ys = [y for _, y in pred[3]]
+        self.assertAlmostEqual(max(xs), 1.0)
+        self.assertAlmostEqual(max(ys), 1.0)
+        # Measured points normalize on the same scale (far below 1).
+        meas = next(s for s in series if s[0].startswith("measured"))
+        self.assertTrue(all(x < 1.0 and y < 1.0 for x, y in meas[3]))
+
+    def test_baseline_normalization_when_present(self):
+        frontiers = {"baseline": [{"tok_s_user": 10.0, "tok_s_gpu": 2.0}],
+                     "helix": [{"tok_s_user": 20.0, "tok_s_gpu": 4.0}]}
+        series = plot_pareto.normalized_series(frontiers)
+        helix = next(s for s in series if s[0] == "helix")
+        self.assertEqual(helix[3], [(2.0, 2.0)])
+
+
+class SvgRenderTest(unittest.TestCase):
+    def render(self, meta, frontiers):
+        series = plot_pareto.normalized_series(frontiers)
+        with tempfile.NamedTemporaryFile("r", suffix=".svg",
+                                         delete=False) as f:
+            path = f.name
+        try:
+            plot_pareto.plot_svg(meta, series, path)
+            with open(path) as f:
+                return f.read()
+        finally:
+            os.unlink(path)
+
+    def test_svg_fallback_renders_the_overlay(self):
+        meta, frontiers = plot_pareto.load(FIXTURE)
+        svg = self.render(meta, frontiers)
+        self.assertIn("<svg", svg)
+        self.assertIn("measured (served traces)", svg)
+        self.assertIn("predicted (planner sweep)", svg)
+        self.assertIn("stroke-dasharray", svg)  # measured guide line
+        self.assertIn("tiny_gqa", svg)
+
+    def test_svg_fallback_handles_single_point_series(self):
+        # A one-plan eval (degenerate axis span) must still render.
+        meta, frontiers = plot_pareto.load(FIXTURE, model="tiny_moe")
+        svg = self.render(meta, frontiers)
+        self.assertIn("<svg", svg)
+        self.assertIn("tiny_moe", svg)
+
+
+class RegressionGateTest(unittest.TestCase):
+    def setUp(self):
+        with open(FIXTURE) as f:
+            self.doc = json.load(f)
+
+    def write(self, doc):
+        f = tempfile.NamedTemporaryFile("w", suffix=".json", delete=False)
+        json.dump(doc, f)
+        f.close()
+        self.addCleanup(os.unlink, f.name)
+        return f.name
+
+    def test_eval_metrics_extraction(self):
+        metrics = check_bench_regression.tokens_metrics(self.doc)
+        self.assertEqual(metrics, {
+            "pareto/tiny_gqa/kvp2_tpa2_tpf4_ep1/tokens_per_step_per_gpu":
+                0.2,
+            "pareto/tiny_gqa/kvp1_tpa1_tpf1_ep1/tokens_per_step_per_gpu":
+                0.15,
+            "pareto/tiny_moe/kvp2_tpa2_tpf2_ep2/tokens_per_step_per_gpu":
+                0.18,
+        })
+
+    def test_engine_schema_still_extracts(self):
+        report = {"metrics": {"decode/tokens_per_s": 123.0,
+                              "decode/phase_ns": 9.0, "status": "ok"}}
+        self.assertEqual(check_bench_regression.tokens_metrics(report),
+                         {"decode/tokens_per_s": 123.0})
+
+    def test_identical_reports_pass(self):
+        path = self.write(self.doc)
+        self.assertEqual(check_bench_regression.main([path, path]), 0)
+
+    def test_missing_baseline_records_not_fails(self):
+        path = self.write(self.doc)
+        self.assertEqual(
+            check_bench_regression.main([path, path + ".does_not_exist"]),
+            0)
+
+    def test_regression_fails_the_gate(self):
+        worse = copy.deepcopy(self.doc)
+        m = worse["models"][0]["plans"][0]["measured"]
+        m["tokens_per_step_per_gpu"] *= 0.5  # -50% < -10% threshold
+        cur = self.write(worse)
+        base = self.write(self.doc)
+        self.assertEqual(check_bench_regression.main([cur, base]), 1)
+
+    def test_vanished_plan_fails_the_gate(self):
+        shrunk = copy.deepcopy(self.doc)
+        shrunk["models"][0]["plans"].pop()
+        cur = self.write(shrunk)
+        base = self.write(self.doc)
+        self.assertEqual(check_bench_regression.main([cur, base]), 1)
+
+
+if __name__ == "__main__":
+    unittest.main(verbosity=2)

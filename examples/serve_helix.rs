@@ -41,10 +41,10 @@ fn report_row(name: &str, server: &mut Server, workload: &Workload,
         assert!(d < 1e-3, "{name}: diverged from reference ({d:.2e})");
     }
     Ok(format!(
-        "{}\t{:.1}\t{:.1}\t{:.1}\t{:.1}\t{:.3}\t{:.2e}",
+        "{}\t{:.1}\t{:.1}\t{:.1}\t{:.1}\t{:.3}\t{:.3}\t{:.2e}",
         name, m.ttl_mean() * 1e3, m.ttl_p99() * 1e3, m.tokens_per_sec(),
-        m.tokens_per_sec() / report.gpus as f64, m.comm,
-        report.max_ref_diff.unwrap_or(f32::NAN),
+        m.tokens_per_sec() / report.gpus as f64, m.comm_exposed,
+        m.comm_total, report.max_ref_diff.unwrap_or(f32::NAN),
     ))
 }
 
@@ -102,7 +102,8 @@ fn main() -> Result<()> {
     println!("end-to-end serving: {} requests, prompts {:?}, gens {:?}\n",
              workload.num_requests, workload.prompt_len, workload.gen_len);
     let mut table = Table::new(["scenario", "TTL ms", "p99 ms", "tok/s",
-                                "tok/s/gpu", "comm s", "max|Δref|"]);
+                                "tok/s/gpu", "exposed s", "comm s",
+                                "max|Δref|"]);
 
     // Scenario 0: end-to-end planned. The planner ranks the artifact
     // layouts under the sweep and Server::from_plan boots the winner

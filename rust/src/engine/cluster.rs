@@ -16,7 +16,7 @@ use crate::config::{EngineModelConfig, Layout};
 use crate::plan::Plan;
 use crate::runtime::{HostTensor, Manifest, Runtime};
 
-use super::comm_model::CommModel;
+use super::comm_model::{CommModel, Link};
 use super::proto::{Cmd, Payload, Resp};
 use super::rank::{self, append_rank, RankInit};
 use super::shard;
@@ -36,6 +36,10 @@ pub struct ClusterConfig {
     pub hopb: bool,
     /// Maintain the unsharded reference mirror and report max |diff|.
     pub verify: bool,
+    /// How long the coordinator waits on the shared response channel
+    /// before declaring a rank dead instead of hanging forever
+    /// (fault-injection tests shrink this).
+    pub recv_timeout: Duration,
 }
 
 impl ClusterConfig {
@@ -48,6 +52,7 @@ impl ClusterConfig {
             a2a_comm: None,
             hopb: false,
             verify: false,
+            recv_timeout: Duration::from_secs(30),
         }
     }
 
@@ -64,12 +69,48 @@ impl ClusterConfig {
 /// Per-step timing + verification metrics.
 #[derive(Debug, Clone, Default)]
 pub struct StepMetrics {
+    /// Attention-phase wall time (includes any unhidden link waits).
     pub attn: Duration,
-    pub comm: Duration,
+    /// Modeled link time left on the step's critical path: what the
+    /// ranks actually waited after their queued compute hid the rest.
+    pub comm_exposed: Duration,
+    /// Summed modeled link time of every transfer the step charged,
+    /// overlap ignored — the denominator of the overlap ratio.
+    pub comm_total: Duration,
     pub ffn: Duration,
     pub total: Duration,
     /// Max |engine - reference| over the final hidden state (verify mode).
     pub max_ref_diff: Option<f32>,
+}
+
+impl StepMetrics {
+    /// Fraction of modeled link time exposed on the critical path:
+    /// 1.0 = fully serialized, 0.0 = fully hidden (or no comm at all).
+    pub fn exposed_frac(&self) -> f64 {
+        let t = self.comm_total.as_secs_f64();
+        if t <= 0.0 {
+            0.0
+        } else {
+            self.comm_exposed.as_secs_f64() / t
+        }
+    }
+}
+
+/// A decode step in flight between [`HelixCluster::decode_step_begin`]
+/// and [`HelixCluster::decode_step_finish`]: the logits command is
+/// queued on rank 0, and the coordinator thread is free until `finish`
+/// collects it.
+pub struct PendingStep {
+    t0: Instant,
+    metrics: StepMetrics,
+    /// (comm_exposed, comm_total) snapshot at step begin — per-step
+    /// values are cumulative deltas.
+    comm0: (Duration, Duration),
+    /// Final hidden state (input of the logits head), kept for the
+    /// verification mirror.
+    x: HostTensor,
+    /// Embedding output (reference replay input) in verify mode.
+    x0: Option<HostTensor>,
 }
 
 struct VerifyState {
@@ -84,8 +125,11 @@ pub struct HelixCluster {
     pub cfg: EngineModelConfig,
     pub layout: Layout,
     model: String,
-    comm: CommModel,
-    a2a_comm: CommModel,
+    /// Broadcast/All-Reduce wire (charged per transfer, never slept on
+    /// the coordinator).
+    link: Link,
+    /// The KVP All-to-All wire HOP-B pipelines (possibly distinct).
+    a2a_link: Link,
     hopb: bool,
     txs: Vec<Sender<Cmd>>,
     rx: Receiver<Resp>,
@@ -96,8 +140,19 @@ pub struct HelixCluster {
     pub active: Vec<bool>,
     full_weights: Vec<BTreeMap<String, HostTensor>>,
     verify: Option<VerifyState>,
-    /// Cumulative emulated-communication wall time.
+    /// Cumulative modeled link time, every transfer summed (overlap
+    /// ignored).
     pub comm_total: Duration,
+    /// Cumulative link time the ranks actually waited for (critical
+    /// path: compute overlap already deducted).
+    pub comm_exposed: Duration,
+    /// An All-Reduce completion deadline not yet attached to a command
+    /// (consumed by the next fan-out that reads the reduced tensor).
+    pending_delay: Option<Instant>,
+    /// Hang-proofing deadline for the shared response channel.
+    recv_timeout: Duration,
+    /// A `decode_step_begin` awaiting its `decode_step_finish`.
+    in_flight: bool,
     /// Step arena: reusable [B] i32 scratch tensors, refilled in place
     /// once per decode step. Broadcast clones are Arc refcount bumps;
     /// COW detaches automatically if a rank still holds last step's
@@ -181,13 +236,20 @@ impl HelixCluster {
             }
         }
         for _ in 0..n {
-            match rx.recv() {
+            use std::sync::mpsc::RecvTimeoutError;
+            match rx.recv_timeout(cc.recv_timeout) {
                 Ok(resp) => {
                     if let Payload::Err(e) = resp.payload {
                         bail!("rank {} failed to initialise: {e}", resp.rank);
                     }
                 }
-                Err(_) => bail!("rank pool hung up during init"),
+                Err(RecvTimeoutError::Timeout) => {
+                    bail!("rank pool did not initialise within {:?}",
+                          cc.recv_timeout)
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    bail!("rank pool hung up during init")
+                }
             }
         }
 
@@ -215,8 +277,8 @@ impl HelixCluster {
             cfg,
             layout: lo,
             model: cc.model,
-            comm: cc.comm,
-            a2a_comm: cc.a2a_comm.unwrap_or(cc.comm),
+            link: Link::new(cc.comm),
+            a2a_link: Link::new(cc.a2a_comm.unwrap_or(cc.comm)),
             hopb: cc.hopb,
             txs,
             rx,
@@ -224,6 +286,10 @@ impl HelixCluster {
             full_weights,
             verify,
             comm_total: Duration::ZERO,
+            comm_exposed: Duration::ZERO,
+            pending_delay: None,
+            recv_timeout: cc.recv_timeout,
+            in_flight: false,
         })
     }
 
@@ -249,32 +315,79 @@ impl HelixCluster {
         })
     }
 
+    /// Receive one response within the hang-proofing deadline. A rank
+    /// thread that died mid-collective turns into an error here instead
+    /// of blocking the coordinator forever.
+    fn recv_resp(&mut self) -> Result<Resp> {
+        use std::sync::mpsc::RecvTimeoutError;
+        match self.rx.recv_timeout(self.recv_timeout) {
+            Ok(resp) => Ok(resp),
+            Err(RecvTimeoutError::Timeout) => bail!(
+                "rank pool unresponsive: no response within {:?} — a rank \
+                 thread likely died mid-collective", self.recv_timeout),
+            Err(RecvTimeoutError::Disconnected) => {
+                bail!("rank pool hung up")
+            }
+        }
+    }
+
     /// Collect exactly `n` responses, indexed by rank. Errors propagate.
-    fn collect(&self, n: usize) -> Result<Vec<Payload>> {
+    /// The longest rank-side link wait in the round is charged to
+    /// exposed communication: the barrier means nothing else could have
+    /// hidden it.
+    fn collect(&mut self, n: usize) -> Result<Vec<Payload>> {
         let mut out: Vec<Option<Payload>> = (0..self.n()).map(|_| None)
             .collect();
+        let mut exposed = Duration::ZERO;
         for _ in 0..n {
-            let resp = self.rx.recv().context("rank pool hung up")?;
+            let resp = self.recv_resp()?;
+            exposed = exposed.max(resp.waited);
             if let Payload::Err(e) = &resp.payload {
                 bail!("rank {}: {e}", resp.rank);
             }
             out[resp.rank] = Some(resp.payload);
         }
+        self.comm_exposed += exposed;
         Ok(out.into_iter().flatten().collect())
     }
 
-    fn emulate(&mut self, bytes: usize) {
-        let t = Instant::now();
-        self.comm.emulate(bytes);
-        self.comm_total += t.elapsed();
+    /// Charge one transfer on the broadcast/All-Reduce wire. The
+    /// returned deadline (None when emulation is off) must be delivered
+    /// to each receiving rank via [`Self::send_delay`] *before* the
+    /// command that consumes the transferred data.
+    fn charge_main(&mut self, bytes: usize) -> Option<Instant> {
+        let (deadline, d) = self.link.charge(bytes)?;
+        self.comm_total += d;
+        Some(deadline)
     }
 
-    /// Emulate the KVP All-to-All link (possibly distinct — see
+    /// Charge the KVP All-to-All wire (possibly distinct — see
     /// `ClusterConfig::a2a_comm`).
-    fn emulate_a2a(&mut self, bytes: usize) {
-        let t = Instant::now();
-        self.a2a_comm.emulate(bytes);
-        self.comm_total += t.elapsed();
+    fn charge_a2a(&mut self, bytes: usize) -> Option<Instant> {
+        let (deadline, d) = self.a2a_link.charge(bytes)?;
+        self.comm_total += d;
+        Some(deadline)
+    }
+
+    /// Queue the modeled-arrival barrier on one rank (no-op without a
+    /// deadline, keeping the disabled-comm hot path free of traffic).
+    fn send_delay(&self, rank: usize, deadline: Option<Instant>)
+                  -> Result<()> {
+        if let Some(deadline) = deadline {
+            self.send(rank, Cmd::NetDelay { deadline })?;
+        }
+        Ok(())
+    }
+
+    /// Hold an All-Reduce completion deadline for the next fan-out (the
+    /// reduced tensor is what that fan-out's command consumes).
+    fn defer_delay(&mut self, deadline: Option<Instant>) {
+        if let Some(d) = deadline {
+            self.pending_delay = Some(match self.pending_delay {
+                Some(p) if p > d => p,
+                _ => d,
+            });
+        }
     }
 
     fn pos_tensor(&self) -> HostTensor {
@@ -285,6 +398,7 @@ impl HelixCluster {
     /// Admit a request into batch slot `row` (clears any previous state).
     pub fn open_slot(&mut self, row: usize) -> Result<()> {
         ensure!(row < self.cfg.batch, "slot {row} out of range");
+        ensure!(!self.in_flight, "cannot open a slot mid-step");
         for tx in &self.txs {
             tx.send(Cmd::ResetRow { row })
                 .map_err(|_| anyhow!("rank down"))?;
@@ -341,8 +455,21 @@ impl HelixCluster {
     /// token per slot plus step metrics.
     pub fn decode_step(&mut self, tokens: &[i32])
                        -> Result<(Vec<i32>, StepMetrics)> {
+        let pending = self.decode_step_begin(tokens)?;
+        self.decode_step_finish(pending)
+    }
+
+    /// Issue a decode step up to (and including) the logits dispatch,
+    /// without collecting the result: rank 0 runs the LM head while the
+    /// coordinator's caller does other work (the serve layer ingests
+    /// arrivals and prepares the next admission wave in that window).
+    /// Must be paired with [`Self::decode_step_finish`].
+    pub fn decode_step_begin(&mut self, tokens: &[i32])
+                             -> Result<PendingStep> {
         ensure!(tokens.len() == self.cfg.batch, "token arity");
+        ensure!(!self.in_flight, "decode step already in flight");
         let t0 = Instant::now();
+        let comm0 = (self.comm_exposed, self.comm_total);
         let mut metrics = StepMetrics::default();
 
         // Refill the step arena in place: positions are constant for the
@@ -370,8 +497,21 @@ impl HelixCluster {
             x = self.layer_step(layer, x, &mut metrics)?;
         }
 
-        // Logits + greedy next token on rank 0.
+        // Logits dispatch only — the final layer's All-Reduce deadline
+        // rides along; the reply is collected in `finish`.
+        let gate = self.pending_delay.take();
+        self.send_delay(0, gate)?;
         self.send(0, Cmd::Logits { x: x.clone() })?;
+        self.in_flight = true;
+        Ok(PendingStep { t0, metrics, comm0, x, x0 })
+    }
+
+    /// Collect the logits of an in-flight step, run the verification
+    /// mirror, advance slot lengths and finalize the step metrics.
+    pub fn decode_step_finish(&mut self, pending: PendingStep)
+                              -> Result<(Vec<i32>, StepMetrics)> {
+        self.in_flight = false;
+        let PendingStep { t0, mut metrics, comm0, x, x0 } = pending;
         let next = match self.collect(1)?.remove(0) {
             Payload::Logits { next, .. } => next.i32s()?.to_vec(),
             p => bail!("expected logits, got {}", p.name()),
@@ -386,6 +526,8 @@ impl HelixCluster {
                 self.lens[b] += 1;
             }
         }
+        metrics.comm_exposed = self.comm_exposed - comm0.0;
+        metrics.comm_total = self.comm_total - comm0.1;
         metrics.total = t0.elapsed();
         Ok((next, metrics))
     }
@@ -399,9 +541,15 @@ impl HelixCluster {
 
         // --- in-projection (every rank; redundant across KVP) ----------
         // Broadcasts are Arc refcount bumps: N ranks share one buffer.
+        // The activation broadcast (S2.3) is charged on the link, and
+        // any previous layer's FFN All-Reduce deadline rides along —
+        // both must land before InProj reads the data.
         let t_attn = Instant::now();
-        self.emulate(x.size_bytes()); // token broadcast (S2.3)
+        let bcast = self.charge_main(x.size_bytes());
+        self.defer_delay(bcast);
+        let gate = self.pending_delay.take();
         for r in 0..n {
+            self.send_delay(r, gate)?;
             self.send(r, Cmd::InProj { layer, x: x.clone(),
                                        pos: self.scratch_pos.clone() })?;
         }
@@ -424,9 +572,9 @@ impl HelixCluster {
         // width: pipelining over idle slots would add dead compute and
         // dead All-to-All chunks for rows nobody is decoding.
         let o_slices = if self.hopb && lo.kvp > 1 && self.active_count() > 1 {
-            self.attention_hopb(layer, metrics)?
+            self.attention_hopb(layer)?
         } else {
-            self.attention_lockstep(layer, metrics)?
+            self.attention_lockstep(layer)?
         };
         metrics.attn += t_attn.elapsed();
 
@@ -436,14 +584,18 @@ impl HelixCluster {
             self.send(r, Cmd::OutProj { layer, o_slice })?;
         }
         let attn_out = self.reduce_partials(n)?;
-        self.emulate(2 * b * h * 4); // All-Reduce over N
+        // All-Reduce over N: charged now, consumed by the FFN dispatch.
+        let ar = self.charge_main(2 * b * h * 4);
+        self.defer_delay(ar);
         let mut h1 = x;
         h1.add_assign(&attn_out)?;
         metrics.attn += t.elapsed();
 
         // --- FFN phase: re-provision the pool as tpf x ep ---------------
         let t_ffn = Instant::now();
+        let gate = self.pending_delay.take();
         for r in 0..n {
+            self.send_delay(r, gate)?;
             let cmd = if self.cfg.is_moe() {
                 Cmd::FfnMoe { layer, h1: h1.clone() }
             } else {
@@ -452,7 +604,10 @@ impl HelixCluster {
             self.send(r, cmd)?;
         }
         let ffn_out = self.reduce_partials(n)?;
-        self.emulate(2 * b * h * 4); // All-Reduce over N
+        // FFN All-Reduce: deferred to the next layer's broadcast (or the
+        // logits dispatch after the last layer).
+        let ar = self.charge_main(2 * b * h * 4);
+        self.defer_delay(ar);
         let mut y = h1;
         y.add_assign(&ffn_out)?;
         metrics.ffn += t_ffn.elapsed();
@@ -505,8 +660,11 @@ impl HelixCluster {
     }
 
     /// Lockstep attention: full-batch flash-decode, one All-to-All, one
-    /// combine (HOP-B OFF, Fig 3 top).
-    fn attention_lockstep(&mut self, layer: usize, metrics: &mut StepMetrics)
+    /// combine (HOP-B OFF, Fig 3 top). The whole A2A deadline lands in
+    /// front of the Combine with no compute queued behind it — the
+    /// ranks sit exposed for the full link time, which is exactly what
+    /// the overlap ablation measures against.
+    fn attention_lockstep(&mut self, layer: usize)
                           -> Result<Vec<HostTensor>> {
         let lo = self.layout;
         let n = lo.n();
@@ -517,21 +675,13 @@ impl HelixCluster {
         for r in 0..n {
             self.send(r, Cmd::Attn { layer })?;
         }
-        let mut partials: Vec<Option<(HostTensor, HostTensor)>> =
-            (0..n).map(|_| None).collect();
-        for _ in 0..n {
-            let resp = self.rx.recv().context("rank pool hung up")?;
-            match resp.payload {
-                Payload::Attn { o, lse, .. } => {
-                    partials[resp.rank] = Some((o, lse));
-                }
-                Payload::Err(e) => bail!("rank {}: {e}", resp.rank),
-                p => bail!("expected attn, got {}", p.name()),
-            }
-        }
-        let partials: Vec<(HostTensor, HostTensor)> = partials
+        let partials: Vec<(HostTensor, HostTensor)> = self
+            .collect(n)?
             .into_iter()
-            .map(|p| p.context("missing attention partial"))
+            .map(|p| match p {
+                Payload::Attn { o, lse, .. } => Ok((o, lse)),
+                p => bail!("expected attn, got {}", p.name()),
+            })
             .collect::<Result<_>>()?;
         if lo.kvp == 1 {
             // No All-to-All needed: each rank already owns its N-slice
@@ -540,14 +690,13 @@ impl HelixCluster {
                 .map(|(o, _)| o.reshape(&[b, qhl * hsz]))
                 .collect();
         }
-        let t = Instant::now();
         // Per-rank send volume: (kvp-1)/kvp of [B, qhl, hsz] + LSE.
         let bytes = b * qhl * hsz * 4 * (lo.kvp - 1) / lo.kvp;
-        self.emulate_a2a(bytes);
-        metrics.comm += t.elapsed();
+        let gate = self.charge_a2a(bytes);
 
         let stacks = self.a2a_stacks(&partials, qs)?;
         for (r, (o_parts, lse_parts)) in stacks.into_iter().enumerate() {
+            self.send_delay(r, gate)?;
             self.send(r, Cmd::Combine { o_parts, lse_parts, row: None })?;
         }
         self.collect(n)?
@@ -559,14 +708,19 @@ impl HelixCluster {
             .collect()
     }
 
-    /// HOP-B attention (Fig 3 bottom): request i's All-to-All overlaps
-    /// request i+1's flash-decode. The coordinator sleeps the emulated
-    /// link delay *after* dispatching the next row's compute.
+    /// HOP-B attention (Fig 3 bottom), executed as a double-buffered
+    /// pipeline: when chunk i's partials land, chunk i+1's flash-decode
+    /// is dispatched *first*, then chunk i's A2A deadline + Combine —
+    /// each rank's queue reads [AttnRow i+1, NetDelay i, Combine i], so
+    /// the next chunk's compute genuinely runs while the modeled
+    /// transfer is in flight and only the unhidden remainder is waited.
+    /// The coordinator is a pure event loop over the shared response
+    /// channel; it never sleeps.
     ///
     /// The pipeline runs over the *live* rows only (continuous batching
     /// leaves holes in the compiled batch); idle slots contribute a zero
     /// slice at reassembly and cost neither compute nor All-to-All.
-    fn attention_hopb(&mut self, layer: usize, metrics: &mut StepMetrics)
+    fn attention_hopb(&mut self, layer: usize)
                       -> Result<Vec<HostTensor>> {
         let lo = self.layout;
         let n = lo.n();
@@ -585,6 +739,11 @@ impl HelixCluster {
         let mut combined: Vec<Vec<Option<HostTensor>>> = vec![vec![None; n]; b];
         let mut attn_seen = vec![0usize; b];
         let mut comb_seen = 0usize;
+        // Per-chunk exposed wait: a chunk's Combine replies arrive while
+        // later chunks compute, so each A2A's unhidden remainder is the
+        // max wait its Combine round reports (summed over chunks — the
+        // chunks' waits happen at disjoint times).
+        let mut row_wait = vec![Duration::ZERO; b];
 
         for r in 0..n {
             self.send(r, Cmd::AttnRow { layer, row: live[0] })?;
@@ -593,13 +752,14 @@ impl HelixCluster {
             let row = live[li];
             // Wait for this row's partials (absorbing combine replies).
             while attn_seen[row] < n {
-                let resp = self.rx.recv().context("rank pool hung up")?;
+                let resp = self.recv_resp()?;
                 match resp.payload {
                     Payload::Attn { o, lse, row: Some(rr) } => {
                         partials[rr][resp.rank] = Some((o, lse));
                         attn_seen[rr] += 1;
                     }
                     Payload::Combined { o_slice, row: Some(rr) } => {
+                        row_wait[rr] = row_wait[rr].max(resp.waited);
                         combined[rr][resp.rank] = Some(o_slice);
                         comb_seen += 1;
                     }
@@ -607,38 +767,41 @@ impl HelixCluster {
                     p => bail!("unexpected {}", p.name()),
                 }
             }
-            // Kick off the next live row's compute before communicating.
+            // Double-buffer: the next chunk's flash-decode goes out
+            // *before* this chunk's transfer barrier, so it queues ahead
+            // of the NetDelay on every rank and shrinks the wait.
             if li + 1 < live.len() {
                 for r in 0..n {
                     self.send(r, Cmd::AttnRow { layer, row: live[li + 1] })?;
                 }
             }
-            // Emulated All-to-All for this row, overlapped with the
-            // ranks' next-row attention.
-            let t = Instant::now();
-            self.emulate_a2a(row_bytes);
-            metrics.comm += t.elapsed();
+            let gate = self.charge_a2a(row_bytes);
             let row_parts: Vec<(HostTensor, HostTensor)> = partials[row]
                 .iter_mut()
                 .map(|p| p.take().expect("row partials incomplete"))
                 .collect();
             let stacks = self.a2a_stacks(&row_parts, qs)?;
             for (r, (o_parts, lse_parts)) in stacks.into_iter().enumerate() {
+                self.send_delay(r, gate)?;
                 self.send(r, Cmd::Combine { o_parts, lse_parts,
                                             row: Some(row) })?;
             }
         }
         // Drain outstanding combines.
         while comb_seen < live.len() * n {
-            let resp = self.rx.recv().context("rank pool hung up")?;
+            let resp = self.recv_resp()?;
             match resp.payload {
                 Payload::Combined { o_slice, row: Some(rr) } => {
+                    row_wait[rr] = row_wait[rr].max(resp.waited);
                     combined[rr][resp.rank] = Some(o_slice);
                     comb_seen += 1;
                 }
                 Payload::Err(e) => bail!("rank {}: {e}", resp.rank),
                 p => bail!("unexpected {}", p.name()),
             }
+        }
+        for w in row_wait {
+            self.comm_exposed += w;
         }
         // Reassemble per-rank [B, qs*hsz] slices from the row pieces
         // (moves, not clones — each piece is consumed exactly once);
@@ -719,13 +882,23 @@ impl HelixCluster {
         }
     }
 
-    /// Inject a fault into one rank (tests).
+    /// Inject a fault into one rank (tests): the rank survives and
+    /// replies with an error.
     pub fn inject_fault(&mut self, rank: usize, msg: &str) -> Result<String> {
+        ensure!(!self.in_flight, "cannot inject a fault mid-step");
         self.send(rank, Cmd::Fail { msg: msg.to_string() })?;
-        match self.rx.recv().context("pool hung up")?.payload {
+        match self.recv_resp()?.payload {
             Payload::Err(e) => Ok(e),
             p => bail!("expected error, got {}", p.name()),
         }
+    }
+
+    /// Kill one rank thread outright (tests): the next collective must
+    /// surface "rank down" / a recv timeout instead of hanging the
+    /// coordinator forever.
+    pub fn inject_crash(&mut self, rank: usize) -> Result<()> {
+        ensure!(!self.in_flight, "cannot crash a rank mid-step");
+        self.send(rank, Cmd::Crash)
     }
 }
 

@@ -8,7 +8,7 @@
 //! disables emulation entirely (pure-functional mode for exactness
 //! tests).
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 #[derive(Debug, Clone, Copy)]
 pub struct CommModel {
@@ -50,6 +50,39 @@ impl CommModel {
     }
 }
 
+/// One modeled wire with a busy horizon. `charge` never sleeps — it
+/// hands out a *completion deadline* the coordinator forwards to the
+/// receiving ranks as a `Cmd::NetDelay` barrier, so the wait lands on
+/// the rank threads where queued compute can hide it (executed HOP-B
+/// overlap, not a coordinator-serialized sleep). Back-to-back charges
+/// queue behind each other like transfers on a real link.
+#[derive(Debug, Clone, Copy)]
+pub struct Link {
+    pub model: CommModel,
+    free: Instant,
+}
+
+impl Link {
+    pub fn new(model: CommModel) -> Link {
+        Link { model, free: Instant::now() }
+    }
+
+    /// Charge one `bytes`-sized transfer: advance the busy horizon and
+    /// return (completion deadline, modeled link time). `None` when the
+    /// model is disabled — the hot path then sends no barrier at all.
+    pub fn charge(&mut self, bytes: usize) -> Option<(Instant, Duration)> {
+        let d = self.model.delay(bytes);
+        if d.is_zero() {
+            return None;
+        }
+        let now = Instant::now();
+        let start = if self.free > now { self.free } else { now };
+        let deadline = start + d;
+        self.free = deadline;
+        Some((deadline, d))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -71,5 +104,25 @@ mod tests {
     fn latency_floor() {
         let m = CommModel::nvlink();
         assert!(m.delay(0) >= Duration::from_nanos(1900));
+    }
+
+    #[test]
+    fn link_serializes_back_to_back_transfers() {
+        let m = CommModel { latency_s: 0.0, bw_bytes_per_s: 1e6,
+                            scale: 1.0 };
+        let mut l = Link::new(m);
+        let (d1, t1) = l.charge(10_000).unwrap(); // 10 ms
+        let (d2, t2) = l.charge(10_000).unwrap();
+        assert_eq!(t1, Duration::from_millis(10));
+        assert_eq!(t2, Duration::from_millis(10));
+        // The second transfer starts when the first one ends.
+        assert_eq!(d2 - d1, Duration::from_millis(10));
+        assert!(d1 >= Instant::now() - Duration::from_millis(10));
+    }
+
+    #[test]
+    fn disabled_link_never_charges() {
+        let mut l = Link::new(CommModel::disabled());
+        assert!(l.charge(1 << 30).is_none());
     }
 }

@@ -25,5 +25,5 @@ pub mod proto;
 pub mod rank;
 pub mod shard;
 
-pub use cluster::{ClusterConfig, HelixCluster, StepMetrics};
-pub use comm_model::CommModel;
+pub use cluster::{ClusterConfig, HelixCluster, PendingStep, StepMetrics};
+pub use comm_model::{CommModel, Link};

@@ -8,6 +8,8 @@
 //! carries the rank id so the coordinator can reassemble collective
 //! inputs in rank order.
 
+use std::time::{Duration, Instant};
+
 use crate::runtime::HostTensor;
 
 /// Commands the coordinator issues to a rank thread.
@@ -40,8 +42,18 @@ pub enum Cmd {
     Embed { tokens: HostTensor },
     /// Final norm + LM head + greedy argmax (executed on rank 0).
     Logits { x: HostTensor },
+    /// A modeled transfer feeding this rank's *next* command completes
+    /// at `deadline`: the rank blocks for whatever part of the link
+    /// time its already-queued compute did not hide, and attaches the
+    /// measured wait to its next response. No reply of its own — the
+    /// coordinator never sleeps, which is what makes comm/compute
+    /// overlap executable instead of simulated.
+    NetDelay { deadline: Instant },
     /// Fault injection for tests: the rank replies with an error.
     Fail { msg: String },
+    /// Fault injection for tests: the rank thread panics (dies without
+    /// replying), exercising the coordinator's hang-proofing.
+    Crash,
     Shutdown,
 }
 
@@ -49,6 +61,10 @@ pub enum Cmd {
 #[derive(Debug)]
 pub struct Resp {
     pub rank: usize,
+    /// Link-wait time ([`Cmd::NetDelay`]) accumulated since this rank's
+    /// previous response — the raw material for exposed-comm accounting
+    /// (waits the ranks actually served, compute overlap deducted).
+    pub waited: Duration,
     pub payload: Payload,
 }
 

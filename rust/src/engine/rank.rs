@@ -8,6 +8,7 @@
 //! the attention programs were compiled/resolved for.
 
 use std::sync::mpsc::{Receiver, Sender};
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -190,21 +191,52 @@ pub fn run(init: RankInit, rx: Receiver<Cmd>, tx: Sender<Resp>) {
     let mut st = match RankState::new(init) {
         Ok(s) => s,
         Err(e) => {
-            let _ = tx.send(Resp { rank: id,
+            let _ = tx.send(Resp { rank: id, waited: Duration::ZERO,
                                    payload: Payload::Err(format!("{e:#}")) });
             return;
         }
     };
+    // Link waits served since the last response; attached to the next
+    // response so the coordinator can account exposed communication.
+    let mut waited = Duration::ZERO;
     while let Ok(cmd) = rx.recv() {
-        if matches!(cmd, Cmd::Shutdown) {
-            break;
-        }
-        let payload = match st.handle(cmd) {
-            Ok(p) => p,
-            Err(e) => Payload::Err(format!("{e:#}")),
-        };
-        if tx.send(Resp { rank: id, payload }).is_err() {
-            break; // coordinator gone
+        match cmd {
+            Cmd::Shutdown => break,
+            Cmd::Crash => panic!("helix-rank-{id}: injected crash"),
+            Cmd::NetDelay { deadline } => {
+                // Block until the modeled transfer lands. Any compute
+                // the coordinator queued *before* this barrier already
+                // ran, so only the unhidden remainder is slept — the
+                // executed form of the paper's Fig 3 overlap.
+                let now = Instant::now();
+                if deadline > now {
+                    let w = deadline - now;
+                    // Coarse sleep, then spin the tail: OS sleep
+                    // overshoot (~50-100us) would otherwise dilate
+                    // every modeled transfer and skew the overlap
+                    // measurements the tests assert on.
+                    const SPIN: Duration = Duration::from_micros(120);
+                    if w > SPIN {
+                        std::thread::sleep(w - SPIN);
+                    }
+                    while Instant::now() < deadline {
+                        std::hint::spin_loop();
+                    }
+                    waited += w;
+                }
+            }
+            cmd => {
+                let payload = match st.handle(cmd) {
+                    Ok(p) => p,
+                    Err(e) => Payload::Err(format!("{e:#}")),
+                };
+                let resp = Resp { rank: id,
+                                  waited: std::mem::take(&mut waited),
+                                  payload };
+                if tx.send(resp).is_err() {
+                    break; // coordinator gone
+                }
+            }
         }
     }
 }
@@ -381,7 +413,9 @@ impl RankState {
                                      next: it.next().unwrap() })
             }
             Cmd::Fail { msg } => Err(anyhow!("injected fault: {msg}")),
-            Cmd::Shutdown => unreachable!("handled by run()"),
+            Cmd::NetDelay { .. } | Cmd::Crash | Cmd::Shutdown => {
+                unreachable!("handled by run()")
+            }
         }
     }
 

@@ -105,7 +105,9 @@ fn run_record(sc: &Scenario, report: &ServeReport, digest: u64)
         steps: m.steps,
         generated_tokens: m.generated_tokens,
         wall_s: m.wall,
-        comm_s: m.comm,
+        // Exposed (critical-path) semantics — the key predates the
+        // exposed/total split and always meant "comm the step paid for".
+        comm_s: m.comm_exposed,
         ttl_p50_ms: m.ttl_p50() * 1e3,
         ttl_p95_ms: m.ttl_p95() * 1e3,
         ttl_p99_ms: m.ttl_p99() * 1e3,

@@ -44,8 +44,13 @@ pub struct ServeMetrics {
     pub steps: u64,
     /// Total serving wall time, seconds.
     pub wall: f64,
-    /// Emulated communication time, seconds.
-    pub comm: f64,
+    /// Modeled link time left exposed on the critical path (what the
+    /// ranks actually waited for transfers), seconds.
+    pub comm_exposed: f64,
+    /// Summed modeled link time of every transfer, overlap ignored,
+    /// seconds. `comm_exposed / comm_total` is the serve-level overlap
+    /// ratio (1.0 = fully serialized comm, 0.0 = fully hidden).
+    pub comm_total: f64,
     /// Peak live KV tokens across steps (sum of slot lens).
     pub peak_kv_tokens: usize,
     /// Peak aggregate KV commitment across steps (router accounting).
@@ -178,7 +183,12 @@ impl ServeMetrics {
         m.insert("step_p50_ms".into(), ms(self.step_p50()));
         m.insert("step_p99_ms".into(), ms(self.step_p99()));
         m.insert("wall_s".into(), Json::Num(self.wall));
-        m.insert("comm_s".into(), Json::Num(self.comm));
+        // `comm_s` keeps its historical key with exposed (critical-path)
+        // semantics — what downstream consumers always wanted it to
+        // mean; the explicit pair spells both sides out.
+        m.insert("comm_s".into(), Json::Num(self.comm_exposed));
+        m.insert("comm_exposed_s".into(), Json::Num(self.comm_exposed));
+        m.insert("comm_total_s".into(), Json::Num(self.comm_total));
         m.insert("steps".into(), Json::Num(self.steps as f64));
         m.insert("generated_tokens".into(),
                  Json::Num(self.generated_tokens as f64));

@@ -1,0 +1,78 @@
+//! Determinism under concurrency: the decoded token stream must be a
+//! pure function of (model, layout) — invariant to the native worker
+//! count, to modeled link delays, and to the lockstep/HOP-B schedule,
+//! in every combination. This is the exactness contract the concurrent
+//! runtime has to keep: injected comm waits and pipelined dispatch may
+//! reorder wall-clock events, never arithmetic.
+//!
+//! One #[test] on purpose: the matrix mutates `HELIX_NATIVE_THREADS`,
+//! which is process-global state — parallel tests in this binary would
+//! race it.
+
+mod common;
+
+use helix::config::Layout;
+use helix::engine::{ClusterConfig, CommModel};
+
+use crate::common::cluster_or_skip;
+
+const STEPS: usize = 8;
+
+fn decode_tokens(model: &str, layout: Layout, hopb: bool,
+                 comm: Option<CommModel>) -> Option<Vec<Vec<i32>>> {
+    let mut cc = ClusterConfig::new(model, layout);
+    cc.hopb = hopb;
+    if let Some(c) = comm {
+        cc.comm = c;
+        cc.a2a_comm = Some(c);
+    }
+    let mut cluster = cluster_or_skip(cc)?;
+    for s in 0..cluster.batch() {
+        cluster.open_slot(s).unwrap();
+    }
+    let mut tokens: Vec<i32> = (0..cluster.batch() as i32).map(|i| i + 5)
+        .collect();
+    let mut stream = Vec::with_capacity(STEPS);
+    for _ in 0..STEPS {
+        let (next, _) = cluster.decode_step(&tokens).expect("step");
+        stream.push(next.clone());
+        tokens = next;
+    }
+    cluster.shutdown();
+    Some(stream)
+}
+
+#[test]
+fn tokens_invariant_to_threads_comm_and_schedule() {
+    // Bandwidth-only link, fast enough to keep the matrix quick but
+    // real enough that every collective actually charges and waits.
+    let link = CommModel { latency_s: 0.0, bw_bytes_per_s: 2.0e7,
+                           scale: 1.0 };
+    let cases = [("tiny_gqa", Layout::helix(2, 2, 4, 1)),
+                 ("tiny_moe", Layout::helix(2, 2, 2, 2))];
+    for (model, layout) in cases {
+        let mut reference: Option<Vec<Vec<i32>>> = None;
+        for threads in ["1", "4"] {
+            std::env::set_var("HELIX_NATIVE_THREADS", threads);
+            for comm in [None, Some(link)] {
+                for hopb in [false, true] {
+                    let Some(stream) =
+                        decode_tokens(model, layout, hopb, comm)
+                    else {
+                        std::env::remove_var("HELIX_NATIVE_THREADS");
+                        return; // pjrt-without-artifacts environment
+                    };
+                    match &reference {
+                        None => reference = Some(stream),
+                        Some(want) => assert_eq!(
+                            want, &stream,
+                            "{model} {} diverged: threads={threads} \
+                             comm={} hopb={hopb}", layout.key(),
+                            comm.is_some()),
+                    }
+                }
+            }
+        }
+    }
+    std::env::remove_var("HELIX_NATIVE_THREADS");
+}

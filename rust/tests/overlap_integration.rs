@@ -1,0 +1,188 @@
+//! Concurrent-runtime integration: the overlapped HOP-B pipeline must
+//! beat lockstep wall-clock under a modeled All-to-All link while
+//! generating bit-identical tokens, and a dead rank must surface as an
+//! error instead of hanging the coordinator.
+//!
+//! The link is calibrated against this machine's measured per-row
+//! attention time: overlap can only hide `min(compute, link)` per
+//! chunk, so the modeled per-row transfer is set to ~1.5x the per-row
+//! compute — slow enough that lockstep exposes it, fast enough that
+//! the pipeline hides a large fraction behind the next row's compute.
+
+mod common;
+
+use std::time::Duration;
+
+use helix::config::Layout;
+use helix::engine::{ClusterConfig, CommModel};
+
+use crate::common::cluster_or_skip;
+
+const MODEL: &str = "tiny_gqa";
+const WARMUP: usize = 2;
+const STEPS: usize = 14;
+
+fn layout() -> Layout {
+    Layout::helix(2, 2, 4, 1)
+}
+
+/// Per-row A2A payload for `tiny_gqa` under kvp2 x tpa2:
+/// (q_heads/tpa) * head_size * 4 bytes * (kvp-1)/kvp = 4*32*4/2.
+const ROW_BYTES: f64 = 256.0;
+
+struct Run {
+    /// Every step's sampled next-token vector (greedy, so this is the
+    /// full decode trajectory).
+    tokens: Vec<Vec<i32>>,
+    /// Summed step wall time over the post-warmup window.
+    wall: Duration,
+    /// Link time the ranks actually waited for (post-warmup).
+    exposed: Duration,
+    /// Summed modeled link time, overlap ignored (post-warmup).
+    total: Duration,
+    /// Attention-phase time (post-warmup) — calibration input.
+    attn: Duration,
+}
+
+fn decode_run(hopb: bool, a2a: Option<CommModel>) -> Option<Run> {
+    let mut cc = ClusterConfig::new(MODEL, layout());
+    cc.hopb = hopb;
+    cc.a2a_comm = a2a;
+    let mut cluster = cluster_or_skip(cc)?;
+    for s in 0..cluster.batch() {
+        cluster.open_slot(s).unwrap();
+    }
+    let mut tokens: Vec<i32> = (0..cluster.batch() as i32).map(|i| i + 5)
+        .collect();
+    let mut run = Run {
+        tokens: Vec::new(),
+        wall: Duration::ZERO,
+        exposed: Duration::ZERO,
+        total: Duration::ZERO,
+        attn: Duration::ZERO,
+    };
+    for step in 0..WARMUP + STEPS {
+        let (next, sm) = cluster.decode_step(&tokens).expect("step");
+        if step >= WARMUP {
+            run.wall += sm.total;
+            run.exposed += sm.comm_exposed;
+            run.total += sm.comm_total;
+            run.attn += sm.attn;
+        }
+        run.tokens.push(next.clone());
+        tokens = next;
+    }
+    cluster.shutdown();
+    Some(run)
+}
+
+/// The tentpole assertion: same tokens, same modeled bytes, less wall
+/// clock and a lower exposed-comm fraction with the pipeline on.
+#[test]
+fn overlapped_hopb_beats_lockstep_with_identical_tokens() {
+    // Calibration pass: HOP-B with no modeled comm measures the real
+    // per-row attention time (4 layers x 4 batch rows per step).
+    let Some(free) = decode_run(true, None) else { return };
+    assert_eq!(free.total, Duration::ZERO,
+               "no comm model, yet link time was charged");
+    assert_eq!(free.exposed, Duration::ZERO,
+               "no comm model, yet ranks waited on transfers");
+    let chunks = (STEPS * 4 * 4) as f64;
+    let chunk_s = (free.attn.as_secs_f64() / chunks).clamp(60e-6, 5e-3);
+    let link = CommModel {
+        latency_s: 0.0,
+        bw_bytes_per_s: ROW_BYTES / (1.5 * chunk_s),
+        scale: 1.0,
+    };
+
+    let off = decode_run(false, Some(link)).unwrap();
+    let on = decode_run(true, Some(link)).unwrap();
+
+    // Exactness: the schedule (lockstep vs pipelined, modeled link vs
+    // none) must never change the numerics.
+    assert_eq!(free.tokens, off.tokens,
+               "modeled comm changed lockstep tokens");
+    assert_eq!(off.tokens, on.tokens,
+               "HOP-B pipelining changed the decoded tokens");
+
+    // Same layout, same bytes: the charged link time is schedule-
+    // independent (one B-row transfer vs B row transfers per layer).
+    let (t_off, t_on) = (off.total.as_secs_f64(), on.total.as_secs_f64());
+    assert!(t_off > 0.0, "scaled link charged no time");
+    assert!((t_off - t_on).abs() < 0.01 * t_off,
+            "modeled link totals diverged: off {t_off:.6}s vs on {t_on:.6}s");
+
+    // Accounting sanity: a step cannot wait longer than the link was
+    // busy (small slop for per-chunk rounding).
+    assert!(off.exposed.as_secs_f64() <= t_off * 1.05 + 1e-3,
+            "exposed {:?} exceeds modeled total {:?}", off.exposed,
+            off.total);
+
+    // The point of the PR: the pipeline hides link time behind the next
+    // row's attention, so the exposed fraction drops and the step gets
+    // faster. Lockstep exposes ~everything (ranks idle during the
+    // transfer); the pipeline must hide >10% of it.
+    let (e_off, e_on) = (off.exposed.as_secs_f64(), on.exposed.as_secs_f64());
+    assert!(e_off > 0.5 * t_off,
+            "lockstep should expose most of the link time: exposed \
+             {e_off:.6}s of {t_off:.6}s");
+    assert!(e_on < 0.9 * e_off,
+            "HOP-B overlap hid too little: exposed {e_on:.6}s (on) vs \
+             {e_off:.6}s (off), link {:.1}us/row", 1.5 * chunk_s * 1e6);
+    assert!(on.wall < off.wall,
+            "overlapped step not faster: {:?} (on) vs {:?} (off)",
+            on.wall, off.wall);
+    println!("overlap: exposed {:.3}ms -> {:.3}ms (total {:.3}ms), wall \
+              {:.3}ms -> {:.3}ms over {STEPS} steps",
+             e_off * 1e3, e_on * 1e3, t_off * 1e3,
+             off.wall.as_secs_f64() * 1e3, on.wall.as_secs_f64() * 1e3);
+}
+
+/// Satellite: hang-proofing. A rank thread that dies mid-run must turn
+/// into a coordinator error within the recv timeout, not a deadlock.
+#[test]
+fn crashed_rank_errors_instead_of_hanging() {
+    let mut cc = ClusterConfig::new(MODEL, layout());
+    cc.recv_timeout = Duration::from_millis(500);
+    let Some(mut cluster) = cluster_or_skip(cc) else { return };
+    for s in 0..cluster.batch() {
+        cluster.open_slot(s).unwrap();
+    }
+    let tokens: Vec<i32> = (0..cluster.batch() as i32).map(|i| i + 5)
+        .collect();
+    cluster.decode_step(&tokens).expect("healthy pool decodes");
+
+    cluster.inject_crash(1).expect("crash command delivered");
+    let start = std::time::Instant::now();
+    let err = cluster.decode_step(&tokens)
+        .expect_err("decode through a dead rank must fail");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("rank"),
+            "error should point at the rank pool: {msg}");
+    assert!(start.elapsed() < Duration::from_secs(10),
+            "dead-rank detection took {:?} — hang-proofing failed",
+            start.elapsed());
+
+    // The pool is unusable but must stay shut-downable.
+    cluster.shutdown();
+}
+
+/// Satellite: the survivable fault path still works alongside the new
+/// timeout plumbing — a rank that *reports* failure keeps serving.
+#[test]
+fn injected_fault_is_survivable() {
+    let mut cc = ClusterConfig::new(MODEL, layout());
+    cc.recv_timeout = Duration::from_millis(2_000);
+    let Some(mut cluster) = cluster_or_skip(cc) else { return };
+    for s in 0..cluster.batch() {
+        cluster.open_slot(s).unwrap();
+    }
+    let tokens: Vec<i32> = (0..cluster.batch() as i32).map(|i| i + 5)
+        .collect();
+    let a = cluster.decode_step(&tokens).expect("step").0;
+    let e = cluster.inject_fault(2, "synthetic").expect("fault round-trip");
+    assert!(e.contains("synthetic"), "fault message lost: {e}");
+    let b = cluster.decode_step(&tokens).expect("pool survives a fault").0;
+    assert_eq!(a.len(), b.len());
+    cluster.shutdown();
+}

@@ -22,6 +22,13 @@ run prints its numbers and asks for the baseline to be committed — that
 run *is* the baseline. A current report whose status says "skipped"
 fails: with the native backend the bench must always execute.
 
+The engine report's HOP-B overlap ablation is gated on its *exposed
+communication fractions* (``overlap/a2a/exposed_frac_{off,on}``): the
+pipelined schedule must expose measurably less of the modeled link time
+than lockstep does. The fraction is built from modeled link charges and
+requested rank waits, so it is far less wall-clock-noisy than the raw
+step speedup (which is printed for information only, never gated).
+
 Stdlib only (the CI runner needs nothing installed).
 """
 
@@ -60,6 +67,40 @@ def tokens_metrics(report: dict) -> dict:
             if k.endswith("/tokens_per_s") and isinstance(v, (int, float))}
 
 
+# The pipeline must hide at least this much of the link time relative
+# to lockstep (absolute drop in exposed fraction)...
+OVERLAP_MIN_DROP = 0.05
+# ...and may not drift this far above its own committed baseline.
+OVERLAP_DRIFT = 0.15
+
+
+def overlap_failures(cur, base):
+    """Engine-report overlap gate; no-op for reports without the
+    ablation (eval reports, older baselines)."""
+    metrics = cur.get("metrics", {})
+    off = metrics.get("overlap/a2a/exposed_frac_off")
+    on = metrics.get("overlap/a2a/exposed_frac_on")
+    if not isinstance(off, (int, float)) or not isinstance(on, (int, float)):
+        return []
+    failures = []
+    speedup = metrics.get("overlap/a2a/step_speedup")
+    extra = (f", step speedup x{speedup:.2f} (informational)"
+             if isinstance(speedup, (int, float)) else "")
+    print(f"overlap: exposed comm fraction {off:.3f} (lockstep) -> "
+          f"{on:.3f} (HOP-B){extra}")
+    if on >= off - OVERLAP_MIN_DROP:
+        failures.append(
+            f"HOP-B overlap gone: exposed_frac_on={on:.3f} is not at "
+            f"least {OVERLAP_MIN_DROP} below exposed_frac_off={off:.3f}")
+    base_on = (base or {}).get("metrics", {}).get(
+        "overlap/a2a/exposed_frac_on")
+    if isinstance(base_on, (int, float)) and on > base_on + OVERLAP_DRIFT:
+        failures.append(
+            f"exposed_frac_on drifted: {base_on:.3f} (baseline) -> "
+            f"{on:.3f} (now), tolerance +{OVERLAP_DRIFT}")
+    return failures
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("current")
@@ -84,6 +125,11 @@ def main(argv=None) -> int:
               f"(commit the current report there to start gating):")
         for k in sorted(cur_tok):
             print(f"  {k}: {cur_tok[k]:.3f}")
+        # The within-report overlap contract holds even on a first run.
+        overlap = overlap_failures(cur, None)
+        if overlap:
+            print("FAIL: " + "; ".join(overlap))
+            return 1
         return 0
 
     with open(args.baseline) as f:
@@ -110,6 +156,10 @@ def main(argv=None) -> int:
     if failures:
         print(f"FAIL: {len(failures)} tokens/s regression(s) > "
               f"{args.threshold:.0%}")
+        return 1
+    overlap = overlap_failures(cur, base)
+    if overlap:
+        print("FAIL: " + "; ".join(overlap))
         return 1
     print("bench gate passed")
     return 0

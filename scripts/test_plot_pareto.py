@@ -167,5 +167,54 @@ class RegressionGateTest(unittest.TestCase):
         self.assertEqual(check_bench_regression.main([cur, base]), 1)
 
 
+class OverlapGateTest(unittest.TestCase):
+    """The engine report's HOP-B exposed-comm-fraction contract."""
+
+    def engine_report(self, off=0.95, on=0.40):
+        return {"metrics": {"engine/tiny/tokens_per_s": 100.0,
+                            "overlap/a2a/exposed_frac_off": off,
+                            "overlap/a2a/exposed_frac_on": on,
+                            "overlap/a2a/step_speedup": 1.5,
+                            "status": "ok"}}
+
+    def write(self, doc):
+        f = tempfile.NamedTemporaryFile("w", suffix=".json", delete=False)
+        json.dump(doc, f)
+        f.close()
+        self.addCleanup(os.unlink, f.name)
+        return f.name
+
+    def test_healthy_overlap_passes(self):
+        self.assertEqual(
+            check_bench_regression.overlap_failures(self.engine_report(),
+                                                    None), [])
+        path = self.write(self.engine_report())
+        self.assertEqual(check_bench_regression.main([path, path]), 0)
+
+    def test_lost_overlap_fails_even_without_baseline(self):
+        # on ~ off: the pipeline hid nothing.
+        broken = self.engine_report(off=0.95, on=0.93)
+        self.assertTrue(
+            check_bench_regression.overlap_failures(broken, None))
+        cur = self.write(broken)
+        self.assertEqual(
+            check_bench_regression.main([cur, cur + ".missing"]), 1)
+
+    def test_exposed_fraction_drift_vs_baseline_fails(self):
+        base = self.engine_report(on=0.30)
+        cur = self.engine_report(on=0.30 + check_bench_regression
+                                 .OVERLAP_DRIFT + 0.05)
+        self.assertTrue(
+            check_bench_regression.overlap_failures(cur, base))
+        self.assertEqual(
+            check_bench_regression.main([self.write(cur),
+                                         self.write(base)]), 1)
+
+    def test_reports_without_ablation_are_not_gated(self):
+        report = {"metrics": {"decode/tokens_per_s": 1.0, "status": "ok"}}
+        self.assertEqual(
+            check_bench_regression.overlap_failures(report, None), [])
+
+
 if __name__ == "__main__":
     unittest.main(verbosity=2)

@@ -69,6 +69,8 @@ fn main() -> Result<()> {
         seed: 7,
         arrival_rate: args.opt_f64("arrival-rate", 0.0)?,
         burst: args.opt_usize("burst", 1)?,
+        turns: args.opt_usize("turns", 1)?,
+        idle_steps: args.opt_usize("idle-steps", 0)?,
     };
 
     // The same 4-rank pool under different sharding regimes, plus the

@@ -27,6 +27,7 @@ static ALLOC: CountingAlloc = CountingAlloc;
 /// (the HOP-B on/off overlap ablation).
 struct StepStats {
     median_s: f64,
+    tokens_per_s: f64,
     attn_ns: f64,
     comm_exposed_ns: f64,
     comm_total_ns: f64,
@@ -45,10 +46,11 @@ impl StepStats {
 }
 
 fn step_bench(report: &mut JsonReport, name: &str, model: &str,
-              layout: Layout, hopb: bool, a2a_bw: f64)
+              layout: Layout, hopb: bool, paged: bool, a2a_bw: f64)
               -> Option<StepStats> {
     let mut cc = ClusterConfig::new(model, layout);
     cc.hopb = hopb;
+    cc.paged = paged;
     if a2a_bw > 0.0 {
         // Slow down only the KVP All-to-All (the collective HOP-B
         // pipelines), bandwidth-dominated so overlap is observable.
@@ -117,6 +119,7 @@ fn step_bench(report: &mut JsonReport, name: &str, model: &str,
     cluster.shutdown();
     Some(StepStats {
         median_s: m.median(),
+        tokens_per_s: batch / m.median(),
         attn_ns: phases[0] / steps as f64 * 1e9,
         comm_exposed_ns: phases[1] / steps as f64 * 1e9,
         comm_total_ns: phases[2] / steps as f64 * 1e9,
@@ -187,6 +190,47 @@ fn context_scaling(report: &mut JsonReport, model: &str,
     cluster.shutdown();
 }
 
+/// Session offload round-trip bandwidth: decode a slot to a realistic
+/// context length, then time evict -> restore trips through the
+/// host-tier store. Reported per rank because the streams are per-KVP-
+/// rank blobs — restore bandwidth is what scales with the layout.
+fn restore_bandwidth(report: &mut JsonReport, model: &str,
+                     layout: Layout) {
+    let cc = ClusterConfig::new(model, layout);
+    let mut cluster = match HelixCluster::new(cc) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("skipping restore bandwidth: {e:#}");
+            return;
+        }
+    };
+    for s in 0..cluster.batch() {
+        cluster.open_slot(s).unwrap();
+    }
+    let tokens: Vec<i32> = (0..cluster.batch() as i32).map(|i| i + 3)
+        .collect();
+    let fill = cluster.slot_kv_tokens() / 2;
+    for _ in 0..fill {
+        cluster.decode_step(&tokens).unwrap();
+    }
+    const TRIPS: usize = 8;
+    let n = cluster.n() as f64;
+    let (mut restore_s, mut bytes) = (0.0f64, 0usize);
+    for trip in 0..TRIPS {
+        let snap = cluster.evict_slot(0, trip as u64).unwrap();
+        let before = cluster.store_stats().bytes_out;
+        let t = std::time::Instant::now();
+        cluster.restore_slot(0, &snap).unwrap();
+        restore_s += t.elapsed().as_secs_f64();
+        bytes += cluster.store_stats().bytes_out - before;
+    }
+    let gb_s_per_rank = bytes as f64 / n / restore_s / 1e9;
+    println!("restore: {} trips x {} tokens, {:.3} GB/s per rank",
+             TRIPS, fill, gb_s_per_rank);
+    report.metric("kv/page/restore_gb_s_per_rank", gb_s_per_rank);
+    cluster.shutdown();
+}
+
 fn main() {
     let mut report = JsonReport::new("engine");
     let backend = std::env::var("HELIX_BACKEND")
@@ -202,17 +246,17 @@ fn main() {
     }
     println!("## engine decode-step latency (backend: {backend})");
     let base = step_bench(&mut report, "engine/tiny_gqa/helix_kvp2_tpa2", "tiny_gqa",
-               Layout::helix(2, 2, 4, 1), false, 0.0);
+               Layout::helix(2, 2, 4, 1), false, true, 0.0);
     let _ = step_bench(&mut report, "engine/tiny_gqa/pure_kvp4", "tiny_gqa",
-               Layout::helix(4, 1, 4, 1), false, 0.0);
+               Layout::helix(4, 1, 4, 1), false, true, 0.0);
     let _ = step_bench(&mut report, "engine/tiny_gqa/tp4", "tiny_gqa",
-               Layout::helix(1, 4, 4, 1), false, 0.0);
+               Layout::helix(1, 4, 4, 1), false, true, 0.0);
     let _ = step_bench(&mut report, "engine/tiny_gqa/single_rank", "tiny_gqa",
-               Layout::helix(1, 1, 1, 1), false, 0.0);
+               Layout::helix(1, 1, 1, 1), false, true, 0.0);
     let _ = step_bench(&mut report, "engine/tiny_mla/pure_kvp4", "tiny_mla",
-               Layout::helix(4, 1, 4, 1), false, 0.0);
+               Layout::helix(4, 1, 4, 1), false, true, 0.0);
     let _ = step_bench(&mut report, "engine/tiny_moe/tpf2_ep2", "tiny_moe",
-               Layout::helix(2, 2, 2, 2), false, 0.0);
+               Layout::helix(2, 2, 2, 2), false, true, 0.0);
 
     println!("\n## HOP-B under an emulated slow All-to-All link");
     // Calibrate the emulated link so each row's transfer takes about as
@@ -228,9 +272,9 @@ fn main() {
         .unwrap_or(200_000.0);
     let a2a_bw = 256.0 / (1.5 * chunk_ns * 1e-9);
     let off = step_bench(&mut report, "engine/tiny_gqa/a2a_hopb_off",
-                         "tiny_gqa", Layout::helix(2, 2, 4, 1), false, a2a_bw);
+                         "tiny_gqa", Layout::helix(2, 2, 4, 1), false, true, a2a_bw);
     let on = step_bench(&mut report, "engine/tiny_gqa/a2a_hopb_on",
-                        "tiny_gqa", Layout::helix(2, 2, 4, 1), true, a2a_bw);
+                        "tiny_gqa", Layout::helix(2, 2, 4, 1), true, true, a2a_bw);
     if let (Some(off), Some(on)) = (off, on) {
         // The measured Fig 7: same modeled bytes either way (bandwidth-
         // dominated link), so the exposed fraction isolates how much of
@@ -244,6 +288,30 @@ fn main() {
         report.metric("overlap/a2a/exposed_frac_on", on.exposed_frac());
         report.metric("overlap/a2a/step_speedup", speedup);
     }
+
+    println!("\n## paged KV cache: page-table indirection vs flat arenas");
+    // Same model, same layout, same step count: the only difference is
+    // whether flash-decode walks the KV through page tables (serving
+    // default) or the dense per-slot arenas. With the bit-exact default
+    // page size the tile schedule is identical, so the gap is pure
+    // indirection overhead — gated at <= 5% by
+    // scripts/check_bench_regression.py.
+    let paged = step_bench(&mut report, "engine/tiny_gqa/kv_paged",
+                           "tiny_gqa", Layout::helix(2, 2, 4, 1), false,
+                           true, 0.0);
+    let flat = step_bench(&mut report, "engine/tiny_gqa/kv_flat",
+                          "tiny_gqa", Layout::helix(2, 2, 4, 1), false,
+                          false, 0.0);
+    if let (Some(paged), Some(flat)) = (paged, flat) {
+        let overhead = (paged.median_s - flat.median_s) / flat.median_s;
+        println!("paged {:.1} tok/s vs flat {:.1} tok/s \
+                  (overhead {:+.1}%)", paged.tokens_per_s,
+                 flat.tokens_per_s, overhead * 100.0);
+        report.metric("kv/page/paged_tokens_per_s", paged.tokens_per_s);
+        report.metric("kv/page/flat_tokens_per_s", flat.tokens_per_s);
+        report.metric("kv/page/overhead_frac", overhead);
+    }
+    restore_bandwidth(&mut report, "tiny_gqa", Layout::helix(2, 2, 4, 1));
 
     context_scaling(&mut report, "tiny_gqa",
                     Layout::helix(2, 2, 4, 1));

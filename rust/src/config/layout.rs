@@ -29,6 +29,11 @@ pub struct Layout {
     pub tpf: usize,
     pub ep: usize,
     pub pp: usize,
+    /// KV page size in tokens for the paged cache (0 = backend default:
+    /// the engine picks `max(kv_block, flash tile)` so paged decode
+    /// walks the exact tile sequence the flat arena did). Non-zero
+    /// values pin the page explicitly; both validators check them.
+    pub page: usize,
 }
 
 impl Layout {
@@ -44,28 +49,39 @@ impl Layout {
 
     /// Plain tensor parallelism (the Megatron baseline): one knob.
     pub fn tp(tp: usize) -> Layout {
-        Layout { kvp: 1, tpa: tp, tpf: tp, ep: 1, pp: 1 }
+        Layout { kvp: 1, tpa: tp, tpf: tp, ep: 1, pp: 1, page: 0 }
     }
 
     /// Helix: decoupled attention (kvp x tpa) and FFN (tpf x ep) grids.
     pub fn helix(kvp: usize, tpa: usize, tpf: usize, ep: usize) -> Layout {
-        Layout { kvp, tpa, tpf, ep, pp: 1 }
+        Layout { kvp, tpa, tpf, ep, pp: 1, page: 0 }
     }
 
     /// Helix over a MoE FFN: the expert grid is given as `ep` and the
     /// FFN TP width follows from the pool (`tpf = kvp*tpa / ep`).
     pub fn moe(kvp: usize, tpa: usize, ep: usize) -> Layout {
         let n = kvp * tpa;
-        Layout { kvp, tpa, tpf: n / ep.max(1), ep, pp: 1 }
+        Layout { kvp, tpa, tpf: n / ep.max(1), ep, pp: 1, page: 0 }
     }
 
-    /// Stable string key (`kvp2_tpa2_tpf4_ep1[_pp2]`) — the identifier
-    /// used by the artifact manifest, `--layout` flags and plan files.
+    /// The sharding grid alone, page knob stripped — the identity the
+    /// artifact manifest speaks (compiled programs depend on the grid,
+    /// never on how KV rows are stored).
+    pub fn grid(&self) -> Layout {
+        Layout { page: 0, ..*self }
+    }
+
+    /// Stable string key (`kvp2_tpa2_tpf4_ep1[_pp2][_page64]`) — the
+    /// identifier used by the artifact manifest, `--layout` flags and
+    /// plan files.
     pub fn key(&self) -> String {
         let mut s = format!("kvp{}_tpa{}_tpf{}_ep{}", self.kvp, self.tpa,
                             self.tpf, self.ep);
         if self.pp > 1 {
             s.push_str(&format!("_pp{}", self.pp));
+        }
+        if self.page != 0 {
+            s.push_str(&format!("_page{}", self.page));
         }
         s
     }
@@ -81,7 +97,7 @@ impl Layout {
             let (name, val) = seg.split_at(split);
             let val: usize = val.parse()
                 .with_context(|| format!("bad value in segment {seg:?}"))?;
-            if !matches!(name, "kvp" | "tpa" | "tpf" | "ep" | "pp") {
+            if !matches!(name, "kvp" | "tpa" | "tpf" | "ep" | "pp" | "page") {
                 bail!("unknown layout dimension {name:?} in {s:?}");
             }
             if dims.insert(name, val).is_some() {
@@ -98,10 +114,13 @@ impl Layout {
             tpf: req("tpf")?,
             ep: req("ep")?,
             pp: dims.get("pp").copied().unwrap_or(1),
+            page: dims.get("page").copied().unwrap_or(0),
         })
     }
 
-    /// Serialize to the manifest/plan JSON object form.
+    /// Serialize to the manifest/plan JSON object form. `page` is
+    /// emitted only when pinned, so documents from page-unaware
+    /// producers (and to page-unaware consumers) stay byte-compatible.
     pub fn to_json(&self) -> Json {
         let mut m = BTreeMap::new();
         m.insert("kvp".to_string(), Json::Num(self.kvp as f64));
@@ -109,11 +128,14 @@ impl Layout {
         m.insert("tpf".to_string(), Json::Num(self.tpf as f64));
         m.insert("ep".to_string(), Json::Num(self.ep as f64));
         m.insert("pp".to_string(), Json::Num(self.pp as f64));
+        if self.page != 0 {
+            m.insert("page".to_string(), Json::Num(self.page as f64));
+        }
         Json::Obj(m)
     }
 
-    /// Parse the manifest/plan JSON object form (`pp` optional: the
-    /// AOT manifest predates pipeline support and omits it).
+    /// Parse the manifest/plan JSON object form (`pp` and `page`
+    /// optional: the AOT manifest predates both knobs and omits them).
     pub fn from_json(j: &Json) -> Result<Layout> {
         Ok(Layout {
             kvp: j.get("kvp")?.as_usize()?,
@@ -123,6 +145,10 @@ impl Layout {
             pp: match j.opt("pp") {
                 Some(v) => v.as_usize()?,
                 None => 1,
+            },
+            page: match j.opt("page") {
+                Some(v) => v.as_usize()?,
+                None => 0,
             },
         })
     }
@@ -170,6 +196,9 @@ impl Layout {
             }
         } else if self.ep != 1 {
             bail!("ep > 1 on a dense model");
+        }
+        if self.page != 0 && !self.page.is_power_of_two() {
+            bail!("page size {} is not a power of two", self.page);
         }
         Ok(())
     }
@@ -222,6 +251,20 @@ impl Layout {
                 bail!("tpf {} does not divide ffn {}", self.tpf, c.ffn);
             }
         }
+        if self.page != 0 {
+            if !self.page.is_power_of_two() {
+                bail!("page size {} is not a power of two", self.page);
+            }
+            if self.page % c.kv_block != 0 {
+                bail!("page size {} is not a multiple of kv_block {}",
+                      self.page, c.kv_block);
+            }
+            if (c.seq_cap / self.kvp) % self.page != 0 {
+                bail!("page size {} does not divide the per-shard cache \
+                       {} (seq_cap {} / kvp {})", self.page,
+                      c.seq_cap / self.kvp, c.seq_cap, self.kvp);
+            }
+        }
         Ok(())
     }
 }
@@ -232,6 +275,9 @@ impl std::fmt::Display for Layout {
                self.ep)?;
         if self.pp > 1 {
             write!(f, "·pp{}", self.pp)?;
+        }
+        if self.page != 0 {
+            write!(f, "·page{}", self.page)?;
         }
         Ok(())
     }
@@ -271,7 +317,7 @@ mod tests {
     #[test]
     fn ffn_grid_must_match_pool() {
         let m = ModelSpec::llama_405b();
-        assert!(Layout { kvp: 4, tpa: 2, tpf: 4, ep: 1, pp: 1 }
+        assert!(Layout { kvp: 4, tpa: 2, tpf: 4, ep: 1, pp: 1, page: 0 }
             .validate(&m, false)
             .is_err());
     }
@@ -297,10 +343,10 @@ mod tests {
     #[test]
     fn zero_width_dimensions_rejected() {
         let m = ModelSpec::llama_405b();
-        for lo in [Layout { kvp: 0, tpa: 8, tpf: 8, ep: 1, pp: 1 },
-                   Layout { kvp: 1, tpa: 0, tpf: 0, ep: 1, pp: 1 },
-                   Layout { kvp: 1, tpa: 8, tpf: 8, ep: 0, pp: 1 },
-                   Layout { kvp: 1, tpa: 8, tpf: 8, ep: 1, pp: 0 }] {
+        for lo in [Layout { kvp: 0, tpa: 8, tpf: 8, ep: 1, pp: 1, page: 0 },
+                   Layout { kvp: 1, tpa: 0, tpf: 0, ep: 1, pp: 1, page: 0 },
+                   Layout { kvp: 1, tpa: 8, tpf: 8, ep: 0, pp: 1, page: 0 },
+                   Layout { kvp: 1, tpa: 8, tpf: 8, ep: 1, pp: 0, page: 0 }] {
             assert!(lo.validate(&m, true).is_err(), "{lo:?}");
         }
     }
@@ -308,7 +354,7 @@ mod tests {
     #[test]
     fn moe_builder_completes_the_grid() {
         let lo = Layout::moe(8, 1, 4);
-        assert_eq!(lo, Layout { kvp: 8, tpa: 1, tpf: 2, ep: 4, pp: 1 });
+        assert_eq!(lo, Layout { kvp: 8, tpa: 1, tpf: 2, ep: 4, pp: 1, page: 0 });
         assert_eq!(lo.tpf * lo.ep, lo.n());
     }
 
@@ -316,7 +362,7 @@ mod tests {
     fn key_roundtrip() {
         for lo in [Layout::helix(2, 2, 4, 1), Layout::moe(2, 2, 2),
                    Layout::tp(8), Layout { kvp: 1, tpa: 8, tpf: 8, ep: 1,
-                                           pp: 7 }] {
+                                           pp: 7, page: 0 }] {
             assert_eq!(Layout::parse_key(&lo.key()).unwrap(), lo,
                        "key {:?}", lo.key());
         }
@@ -325,17 +371,30 @@ mod tests {
         assert!(Layout::parse_key("kvp2_tpa2").is_err(), "missing dims");
         assert!(Layout::parse_key("kvp2_tpa2_tpf4_ep1_zz3").is_err());
         assert!(Layout::parse_key("kvp2_kvp2_tpa2_tpf4_ep1").is_err());
+        // page: printed only when pinned, roundtrips when it is.
+        let mut lo = Layout::helix(2, 2, 4, 1);
+        lo.page = 64;
+        assert_eq!(lo.key(), "kvp2_tpa2_tpf4_ep1_page64");
+        assert_eq!(Layout::parse_key(&lo.key()).unwrap(), lo);
+        assert_eq!(lo.grid(), Layout::helix(2, 2, 4, 1));
     }
 
     #[test]
     fn json_roundtrip() {
-        let lo = Layout { kvp: 2, tpa: 2, tpf: 2, ep: 2, pp: 3 };
+        let lo = Layout { kvp: 2, tpa: 2, tpf: 2, ep: 2, pp: 3, page: 0 };
         let j = Json::parse(&lo.to_json().to_string()).unwrap();
         assert_eq!(Layout::from_json(&j).unwrap(), lo);
         // Manifest form: no pp key -> defaults to 1.
         let j = Json::parse(r#"{"kvp":4,"tpa":1,"tpf":4,"ep":1,"key":"x"}"#)
             .unwrap();
         assert_eq!(Layout::from_json(&j).unwrap(), Layout::helix(4, 1, 4, 1));
+        // Pinned page size roundtrips; default page is omitted.
+        let mut lo = Layout::helix(2, 2, 4, 1);
+        lo.page = 32;
+        let j = Json::parse(&lo.to_json().to_string()).unwrap();
+        assert_eq!(Layout::from_json(&j).unwrap(), lo);
+        assert!(!Layout::helix(2, 2, 4, 1).to_json().to_string()
+            .contains("page"));
     }
 
     #[test]
@@ -352,13 +411,24 @@ mod tests {
         // ep > 1 needs a MoE model.
         assert!(Layout::helix(2, 2, 2, 2).validate_engine(&c).is_err());
         // FFN grid must cover the pool.
-        assert!(Layout { kvp: 2, tpa: 2, tpf: 2, ep: 1, pp: 1 }
+        assert!(Layout { kvp: 2, tpa: 2, tpf: 2, ep: 1, pp: 1, page: 0 }
             .validate_engine(&c).is_err());
         // The engine has no pipeline stages.
-        assert!(Layout { kvp: 2, tpa: 2, tpf: 4, ep: 1, pp: 2 }
+        assert!(Layout { kvp: 2, tpa: 2, tpf: 4, ep: 1, pp: 2, page: 0 }
             .validate_engine(&c).is_err());
         // Zero-width dims rejected.
-        assert!(Layout { kvp: 0, tpa: 2, tpf: 4, ep: 1, pp: 1 }
+        assert!(Layout { kvp: 0, tpa: 2, tpf: 4, ep: 1, pp: 1, page: 0 }
             .validate_engine(&c).is_err());
+        // Page size: must be a power of two, a multiple of kv_block and
+        // a divisor of the per-shard cache seq_cap / kvp.
+        let mut lo = Layout::helix(2, 2, 4, 1);
+        lo.page = 32;
+        lo.validate_engine(&c).unwrap();
+        lo.page = 24; // not a power of two
+        assert!(lo.validate_engine(&c).is_err());
+        lo.page = 8; // < kv_block 16
+        assert!(lo.validate_engine(&c).is_err());
+        lo.page = 256; // > per-shard cache 128
+        assert!(lo.validate_engine(&c).is_err());
     }
 }

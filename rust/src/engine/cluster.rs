@@ -14,12 +14,13 @@ use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::config::{EngineModelConfig, Layout};
 use crate::plan::Plan;
-use crate::runtime::{HostTensor, Manifest, Runtime};
+use crate::runtime::{BackendKind, HostTensor, Manifest, Runtime};
 
 use super::comm_model::{CommModel, Link};
 use super::proto::{Cmd, Payload, Resp};
-use super::rank::{self, append_rank, RankInit};
+use super::rank::{self, append_rank, local_len, RankInit};
 use super::shard;
+use super::store::{SessionStore, StoreStats};
 
 /// Cluster construction parameters.
 #[derive(Debug, Clone)]
@@ -40,6 +41,15 @@ pub struct ClusterConfig {
     /// before declaring a rank dead instead of hanging forever
     /// (fault-injection tests shrink this).
     pub recv_timeout: Duration,
+    /// Paged KV cache (native backend only; silently falls back to flat
+    /// dense arenas when `HELIX_BACKEND=pjrt` is pinned, since the
+    /// compiled attention programs expect dense shapes). Page size
+    /// comes from `layout.page`, or the bit-exact default
+    /// ([`rank::default_page_toks`]) when that is 0.
+    pub paged: bool,
+    /// Host-tier session-store budget in bytes (0 = unlimited): caps
+    /// how much offloaded KV the evict path may park.
+    pub host_kv_bytes: usize,
 }
 
 impl ClusterConfig {
@@ -53,6 +63,8 @@ impl ClusterConfig {
             hopb: false,
             verify: false,
             recv_timeout: Duration::from_secs(30),
+            paged: true,
+            host_kv_bytes: 0,
         }
     }
 
@@ -113,6 +125,30 @@ pub struct PendingStep {
     x0: Option<HostTensor>,
 }
 
+/// Coordinator-side record of an offloaded session: identity and
+/// logical length only. The KV bytes themselves live in the
+/// [`SessionStore`] as per-rank blobs — they never pass through here,
+/// which [`SessionSnapshot::coordinator_kv_bytes`] lets tests assert.
+pub struct SessionSnapshot {
+    pub session: u64,
+    /// Logical KV length at eviction; restore resumes decoding here.
+    pub len: usize,
+    /// Verify-mode only: the reference mirror's rows for this session
+    /// (a test oracle, not transport — `None` in serving configurations).
+    mirror: Option<Vec<(Vec<f32>, Vec<f32>)>>,
+}
+
+impl SessionSnapshot {
+    /// KV bytes this snapshot routed through the coordinator. Zero
+    /// unless the exactness mirror is on — the acceptance criterion for
+    /// per-rank offload streaming.
+    pub fn coordinator_kv_bytes(&self) -> usize {
+        self.mirror.as_ref().map_or(0, |m| {
+            m.iter().map(|(k, v)| 4 * (k.len() + v.len())).sum()
+        })
+    }
+}
+
 struct VerifyState {
     rt: Runtime,
     /// Full (logical-order) KV mirror per layer: [B, Kh, Scap, Hsz].
@@ -153,6 +189,10 @@ pub struct HelixCluster {
     recv_timeout: Duration,
     /// A `decode_step_begin` awaiting its `decode_step_finish`.
     in_flight: bool,
+    /// KV page size in tokens (0 = flat dense arenas).
+    page_toks: usize,
+    /// Host-tier store the ranks stream evicted sessions into.
+    store: SessionStore,
     /// Step arena: reusable [B] i32 scratch tensors, refilled in place
     /// once per decode step. Broadcast clones are Arc refcount bumps;
     /// COW detaches automatically if a rank still holds last step's
@@ -170,7 +210,9 @@ impl HelixCluster {
         lo.validate_engine(&cfg)
             .with_context(|| format!("layout {} is invalid for {}", lo.key(),
                                      cc.model))?;
-        ensure!(entry.layouts.contains(&lo),
+        // Artifacts are keyed by the compile-relevant grid: page size is
+        // a runtime storage knob, so containment checks strip it.
+        ensure!(entry.layouts.contains(&lo.grid()),
                 "layout {} not in artifacts for {} (have: {})", lo.key(),
                 cc.model,
                 entry.layouts.iter().map(|l| l.key())
@@ -190,6 +232,15 @@ impl HelixCluster {
         let wlog = manifest.load_weight(&entry.wlog)?;
 
         let n = lo.n();
+        // Paged KV only where the native kernel can serve it; a pinned
+        // PJRT backend keeps the flat arenas its programs were compiled
+        // for.
+        let page_toks = if cc.paged && BackendKind::native_available() {
+            rank::default_page_toks(&cfg, &lo)
+        } else {
+            0
+        };
+        let store = SessionStore::with_budget(cc.host_kv_bytes);
         let (resp_tx, rx) = channel::<Resp>();
         let mut txs = Vec::with_capacity(n);
         let mut handles = Vec::with_capacity(n);
@@ -207,6 +258,8 @@ impl HelixCluster {
                 layers,
                 embed_weights: (id == 0)
                     .then(|| (wemb.clone(), wnf.clone(), wlog.clone())),
+                page_toks,
+                store: Some(store.clone()),
             };
             let (tx, cmd_rx) = channel::<Cmd>();
             let resp = resp_tx.clone();
@@ -290,6 +343,8 @@ impl HelixCluster {
             pending_delay: None,
             recv_timeout: cc.recv_timeout,
             in_flight: false,
+            page_toks,
+            store,
         })
     }
 
@@ -419,6 +474,117 @@ impl HelixCluster {
 
     pub fn close_slot(&mut self, row: usize) {
         self.active[row] = false;
+    }
+
+    /// Re-activate a slot whose KV was left resident by
+    /// [`Self::close_slot`] (a session sleeping between turns). Unlike
+    /// [`Self::open_slot`] this does *not* reset the row — the cached
+    /// context is exactly what the waking session needs.
+    pub fn reopen_slot(&mut self, row: usize) -> Result<()> {
+        ensure!(row < self.cfg.batch, "slot {row} out of range");
+        ensure!(!self.in_flight, "cannot reopen a slot mid-step");
+        self.active[row] = true;
+        Ok(())
+    }
+
+    /// KV page size in tokens (0 = flat dense arenas).
+    pub fn page_toks(&self) -> usize {
+        self.page_toks
+    }
+
+    /// Host-tier store traffic counters (evict/restore byte streams).
+    pub fn store_stats(&self) -> StoreStats {
+        self.store.stats()
+    }
+
+    /// Suspend the session in batch slot `row`: every rank streams its
+    /// shard of the row's KV to the host-tier store (per-rank blobs —
+    /// no gather through the coordinator), frees the pages, and the
+    /// slot goes idle. Returns the snapshot [`Self::restore_slot`]
+    /// needs to bring the session back.
+    pub fn evict_slot(&mut self, row: usize, session: u64)
+                      -> Result<SessionSnapshot> {
+        ensure!(row < self.cfg.batch, "slot {row} out of range");
+        ensure!(!self.in_flight, "cannot evict a slot mid-step");
+        // Not `active`: the usual victim is a session asleep between
+        // turns, whose slot sits out steps with its KV still resident.
+        ensure!(self.lens[row] > 0, "evicting empty slot {row}");
+        let len = self.lens[row];
+        for r in 0..self.n() {
+            self.send(r, Cmd::Evict { row, session })?;
+        }
+        self.collect(self.n())?;
+        self.active[row] = false;
+        self.lens[row] = 0;
+        let mirror = match &mut self.verify {
+            Some(v) => {
+                let mut rows = Vec::with_capacity(self.cfg.layers);
+                for layer in 0..self.cfg.layers {
+                    let k = copy_batch_row(&v.k_full[layer], row)?;
+                    let vv = copy_batch_row(&v.v_full[layer], row)?;
+                    zero_batch_row(&mut v.k_full[layer], row)?;
+                    zero_batch_row(&mut v.v_full[layer], row)?;
+                    rows.push((k, vv));
+                }
+                Some(rows)
+            }
+            None => None,
+        };
+        Ok(SessionSnapshot { session, len, mirror })
+    }
+
+    /// Resume an offloaded session into batch slot `row` (not
+    /// necessarily the slot it left): each rank pulls its own blob back
+    /// from the store and rebuilds its page tables; the coordinator
+    /// only restores the logical length.
+    pub fn restore_slot(&mut self, row: usize, snap: &SessionSnapshot)
+                        -> Result<()> {
+        ensure!(row < self.cfg.batch, "slot {row} out of range");
+        ensure!(!self.in_flight, "cannot restore a slot mid-step");
+        ensure!(!self.active[row], "restoring into live slot {row}");
+        for r in 0..self.n() {
+            self.send(r, Cmd::Restore { row, session: snap.session,
+                                        len: snap.len })?;
+        }
+        self.collect(self.n())?;
+        self.lens[row] = snap.len;
+        self.active[row] = true;
+        if let Some(v) = &mut self.verify {
+            let rows = snap.mirror.as_ref()
+                .context("verify mode needs the snapshot mirror")?;
+            for layer in 0..self.cfg.layers {
+                write_batch_row(&mut v.k_full[layer], row,
+                                &rows[layer].0)?;
+                write_batch_row(&mut v.v_full[layer], row,
+                                &rows[layer].1)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// `(live logical tokens, allocated token capacity)` across
+    /// resident slots — active, or asleep with KV still cached — the
+    /// serve layer's page-fragmentation gauge. Paged mode allocates in
+    /// page granularity per KVP shard; flat mode reserves the full
+    /// per-slot arena, which is exactly the headroom paging claws back.
+    pub fn kv_page_stats(&self) -> (usize, usize) {
+        let (kvp, kb) = (self.layout.kvp, self.cfg.kv_block);
+        let (mut live, mut alloc) = (0, 0);
+        for (row, &a) in self.active.iter().enumerate() {
+            if !a && self.lens[row] == 0 {
+                continue;
+            }
+            live += self.lens[row];
+            if self.page_toks == 0 {
+                alloc += self.cfg.seq_cap;
+            } else {
+                for k in 0..kvp {
+                    alloc += local_len(self.lens[row], kb, kvp, k)
+                        .div_ceil(self.page_toks) * self.page_toks;
+                }
+            }
+        }
+        (live, alloc)
     }
 
     /// Number of batch slots holding live requests.
@@ -927,6 +1093,21 @@ fn zero_batch_row(t: &mut HostTensor, row: usize) -> Result<()> {
     let stride: usize = t.shape[1..].iter().product();
     let d = t.f32s_mut()?;
     d[row * stride..(row + 1) * stride].fill(0.0);
+    Ok(())
+}
+
+/// Copy batch row `row` of a [B, ...] tensor out (verify-mirror evict).
+fn copy_batch_row(t: &HostTensor, row: usize) -> Result<Vec<f32>> {
+    let stride: usize = t.shape[1..].iter().product();
+    Ok(t.f32s()?[row * stride..(row + 1) * stride].to_vec())
+}
+
+/// Write a [`copy_batch_row`] row back (verify-mirror restore).
+fn write_batch_row(t: &mut HostTensor, row: usize, data: &[f32])
+                   -> Result<()> {
+    let stride: usize = t.shape[1..].iter().product();
+    ensure!(data.len() == stride, "mirror row size mismatch");
+    t.f32s_mut()?[row * stride..(row + 1) * stride].copy_from_slice(data);
     Ok(())
 }
 

@@ -24,6 +24,9 @@ pub mod comm_model;
 pub mod proto;
 pub mod rank;
 pub mod shard;
+pub mod store;
 
-pub use cluster::{ClusterConfig, HelixCluster, PendingStep, StepMetrics};
+pub use cluster::{ClusterConfig, HelixCluster, PendingStep, SessionSnapshot,
+                  StepMetrics};
 pub use comm_model::{CommModel, Link};
+pub use store::{SessionStore, StoreStats};

@@ -31,6 +31,15 @@ pub enum Cmd {
               row: Option<usize> },
     /// Clear the KV shard for one batch slot (request eviction).
     ResetRow { row: usize },
+    /// Offload batch slot `row`'s KV shard to the host-tier
+    /// [`super::store::SessionStore`] under `session`, then free its
+    /// pages. Each rank serializes only its own shard — the KV bytes
+    /// never touch the coordinator (CacheFlow-style per-rank streams).
+    Evict { row: usize, session: u64 },
+    /// Load session `session`'s shard (logical length `len`) from the
+    /// host tier back into batch slot `row` — not necessarily the slot
+    /// it was evicted from.
+    Restore { row: usize, session: u64, len: usize },
     /// TP=N output projection of this rank's combined slice.
     OutProj { layer: usize, o_slice: HostTensor },
     /// Dense SwiGLU FFN partial (TPF shard) for `layer`.

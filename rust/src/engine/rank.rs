@@ -10,15 +10,26 @@
 use std::sync::mpsc::{Receiver, Sender};
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::config::{EngineModelConfig, Layout};
+use crate::runtime::native::{self, AttnScratch};
 use crate::runtime::{DeviceTensor, HostTensor, Manifest, Runtime};
 
 use super::proto::{Cmd, Payload, Resp};
-use super::shard::{FfnShard, LayerShard};
+use super::shard::{FfnShard, LayerShard, PageAllocator};
+use super::store::SessionStore;
 
-/// One layer's KV shard: [B, Kh_local, S_shard, Hsz] + per-row lengths.
+/// One layer's KV shard + per-row lengths. Two storage modes:
+///
+/// * **Flat** (`page_toks == 0`): the dense arena `[B, Kh_local,
+///   S_shard, Hsz]` the attention programs were compiled for.
+/// * **Paged** (`page_toks > 0`): k/v are a shared page *pool*
+///   `[P, Kh_local, page_toks, Hsz]` reached through per-slot page
+///   tables (`(slot, logical_block) → page`), backed by a
+///   [`PageAllocator`]. The native paged flash-decode kernel walks the
+///   table in logical order, so it sees the same ragged tiles the flat
+///   kernel does — with the default page size, bit-identically.
 pub struct KvShard {
     pub k: HostTensor,
     pub v: HostTensor,
@@ -29,9 +40,18 @@ pub struct KvShard {
     /// Single-row twin of `lens_t` for the HOP-B per-row path.
     row_len_t: HostTensor,
     cap: usize,
+    /// Page size in tokens; 0 = flat dense arena.
+    page_toks: usize,
+    /// Paged mode: slot -> pages in logical order (empty when flat).
+    tables: Vec<Vec<u32>>,
+    alloc: Option<PageAllocator>,
+    /// Which layer this shard serves (error context only).
+    layer: usize,
 }
 
 impl KvShard {
+    /// Flat dense arena (the pre-paging layout; the bench ablation and
+    /// the PJRT-compiled attention programs still use it).
     pub fn new(b: usize, kh_local: usize, cap: usize, hsz: usize) -> KvShard {
         KvShard {
             k: HostTensor::zeros(&[b, kh_local, cap, hsz]),
@@ -40,6 +60,55 @@ impl KvShard {
             lens_t: HostTensor::from_i32(vec![0; b], &[b]).unwrap(),
             row_len_t: HostTensor::from_i32(vec![0], &[1]).unwrap(),
             cap,
+            page_toks: 0,
+            tables: Vec::new(),
+            alloc: None,
+            layer: 0,
+        }
+    }
+
+    /// Paged pool with the same aggregate capacity as the flat arena
+    /// (`b * ceil(cap / page_toks)` pages), so a full batch of
+    /// full-length rows still fits — paging changes *where* rows live,
+    /// never how many tokens the shard holds.
+    pub fn new_paged(b: usize, kh_local: usize, cap: usize, hsz: usize,
+                     page_toks: usize, layer: usize) -> KvShard {
+        let pages = b * cap.div_ceil(page_toks);
+        KvShard {
+            k: HostTensor::zeros(&[pages, kh_local, page_toks, hsz]),
+            v: HostTensor::zeros(&[pages, kh_local, page_toks, hsz]),
+            lens: vec![0; b],
+            lens_t: HostTensor::from_i32(vec![0; b], &[b]).unwrap(),
+            row_len_t: HostTensor::from_i32(vec![0], &[1]).unwrap(),
+            cap,
+            page_toks,
+            tables: vec![Vec::new(); b],
+            alloc: Some(PageAllocator::new(pages)),
+            layer,
+        }
+    }
+
+    pub fn is_paged(&self) -> bool {
+        self.page_toks != 0
+    }
+
+    pub fn page_toks(&self) -> usize {
+        self.page_toks
+    }
+
+    pub fn tables(&self) -> &[Vec<u32>] {
+        &self.tables
+    }
+
+    /// Flat offset of `(slot, head, logical position)` in the k/v
+    /// storage, resolved through the page table in paged mode.
+    fn data_index(&self, b_idx: usize, h: usize, pos: usize) -> usize {
+        let (kh, hsz) = (self.k.shape[1], self.k.shape[3]);
+        if self.page_toks == 0 {
+            ((b_idx * kh + h) * self.cap + pos) * hsz
+        } else {
+            let page = self.tables[b_idx][pos / self.page_toks] as usize;
+            ((page * kh + h) * self.page_toks + pos % self.page_toks) * hsz
         }
     }
 
@@ -50,14 +119,41 @@ impl KvShard {
         let (kh, hsz) = (self.k.shape[1], self.k.shape[3]);
         let pos = self.lens[b_idx] as usize;
         if pos >= self.cap {
-            bail!("KV shard overflow: row {b_idx} at {pos}/{}", self.cap);
+            bail!("KV shard overflow: slot {b_idx}, layer {}: local \
+                   length {pos} at shard capacity {} tokens{}",
+                  self.layer, self.cap,
+                  if self.page_toks != 0 {
+                      format!(" ({} pages of {})",
+                              self.cap.div_ceil(self.page_toks),
+                              self.page_toks)
+                  } else {
+                      String::new()
+                  });
         }
+        if self.page_toks != 0 && pos % self.page_toks == 0 {
+            let alloc = self.alloc.as_mut().expect("paged shard");
+            let page = alloc.alloc().with_context(|| format!(
+                "KV page pool exhausted: slot {b_idx}, layer {}: local \
+                 length {pos} needs a page, 0 of {} pages free \
+                 ({} tokens each)", self.layer, alloc.total(),
+                self.page_toks))?;
+            self.tables[b_idx].push(page);
+        }
+        // Destination base: d(h) = (base + h * stride) * hsz, with the
+        // page indirection resolved once per append.
+        let (base, stride) = if self.page_toks == 0 {
+            (b_idx * kh * self.cap + pos, self.cap)
+        } else {
+            let page = self.tables[b_idx][pos / self.page_toks] as usize;
+            (page * kh * self.page_toks + pos % self.page_toks,
+             self.page_toks)
+        };
         for (cache, new) in [(&mut self.k, k_new), (&mut self.v, v_new)] {
             let src = new.f32s()?;
             let dst = cache.f32s_mut()?;
             for h in 0..kh {
                 let s = (b_idx * kh + h) * hsz;
-                let d = ((b_idx * kh + h) * self.cap + pos) * hsz;
+                let d = (base + h * stride) * hsz;
                 dst[d..d + hsz].copy_from_slice(&src[s..s + hsz]);
             }
         }
@@ -65,9 +161,96 @@ impl KvShard {
         Ok(())
     }
 
-    /// Evict one batch row (request close/reopen).
+    /// Evict one batch row (request close/reopen). Paged mode returns
+    /// the row's pages to the free list.
     pub fn reset_row(&mut self, row: usize) {
         self.lens[row] = 0;
+        if let Some(alloc) = &mut self.alloc {
+            for p in self.tables[row].drain(..) {
+                alloc.free(p);
+            }
+        }
+    }
+
+    /// Serialize one row's live K/V (+ its local length) into `out` —
+    /// the rank-side half of session offload. Logical order, so the
+    /// blob is independent of which physical pages held the row.
+    pub fn serialize_row(&self, row: usize, out: &mut Vec<u8>)
+                         -> Result<()> {
+        let (kh, hsz) = (self.k.shape[1], self.k.shape[3]);
+        let len = self.lens[row] as usize;
+        out.extend_from_slice(&(len as u32).to_le_bytes());
+        for cache in [&self.k, &self.v] {
+            let data = cache.f32s()?;
+            for h in 0..kh {
+                for pos in 0..len {
+                    let d = self.data_index(row, h, pos);
+                    for &x in &data[d..d + hsz] {
+                        out.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Deserialize a [`Self::serialize_row`] blob back into `row`
+    /// (which must be reset), allocating pages as needed. Returns the
+    /// offset just past the consumed bytes.
+    pub fn deserialize_row(&mut self, row: usize, blob: &[u8], off: usize)
+                           -> Result<usize> {
+        fn take4(blob: &[u8], off: &mut usize, layer: usize)
+                 -> Result<[u8; 4]> {
+            let b: [u8; 4] = blob.get(*off..*off + 4)
+                .with_context(|| format!(
+                    "session blob truncated at {} (layer {layer})", *off))?
+                .try_into().unwrap();
+            *off += 4;
+            Ok(b)
+        }
+        let (kh, hsz) = (self.k.shape[1], self.k.shape[3]);
+        let layer = self.layer;
+        let mut off = off;
+        let len = u32::from_le_bytes(take4(blob, &mut off, layer)?) as usize;
+        if len > self.cap {
+            bail!("restored length {len} exceeds shard capacity {} \
+                   (slot {row}, layer {layer})", self.cap);
+        }
+        if self.lens[row] != 0 {
+            bail!("restore into non-empty slot {row} (layer {layer}, \
+                   local length {})", self.lens[row]);
+        }
+        if self.page_toks != 0 {
+            let alloc = self.alloc.as_mut().expect("paged shard");
+            for _ in 0..len.div_ceil(self.page_toks) {
+                let page = alloc.alloc().with_context(|| format!(
+                    "KV page pool exhausted during restore: slot {row}, \
+                     layer {layer}: need {} pages, {} free",
+                    len.div_ceil(self.page_toks), alloc.free_count()))?;
+                self.tables[row].push(page);
+            }
+        }
+        for pass in 0..2 {
+            for h in 0..kh {
+                for pos in 0..len {
+                    let d = self.data_index(row, h, pos);
+                    let src = blob.get(off..off + 4 * hsz)
+                        .with_context(|| format!(
+                            "session blob truncated at {off} (layer \
+                             {layer})"))?;
+                    let cache = if pass == 0 { &mut self.k }
+                                else { &mut self.v };
+                    let dst = &mut cache.f32s_mut()?[d..d + hsz];
+                    for (i, x) in dst.iter_mut().enumerate() {
+                        *x = f32::from_le_bytes(
+                            src[4 * i..4 * i + 4].try_into().unwrap());
+                    }
+                    off += 4 * hsz;
+                }
+            }
+        }
+        self.lens[row] = len as i32;
+        Ok(off)
     }
 
     /// `lens` as an i32 tensor. The scratch is refilled in place and
@@ -105,6 +288,13 @@ pub struct RankInit {
     pub layers: Vec<LayerShard>,
     /// Full embedding/logits weights (rank 0 only).
     pub embed_weights: Option<(HostTensor, HostTensor, HostTensor)>,
+    /// KV page size in tokens; 0 = flat dense arenas (pre-paging mode).
+    /// Paged mode requires the native backend (the paged flash-decode
+    /// kernel runs outside the compiled-program path).
+    pub page_toks: usize,
+    /// Host-tier session store for [`Cmd::Evict`] / [`Cmd::Restore`];
+    /// `None` disables offload.
+    pub store: Option<SessionStore>,
 }
 
 /// Device-resident weight buffers for one layer (uploaded once at init;
@@ -167,6 +357,12 @@ struct RankState {
     /// Per-layer device-resident weights.
     dev: Vec<LayerDev>,
     kv: Vec<KvShard>,
+    /// This rank's KVP coordinate (attention grid column) — which
+    /// round-robin slice of each session's KV it holds.
+    kvp_k: usize,
+    /// Per-worker scratch for the paged flash-decode kernel (unused in
+    /// flat mode; resized lazily if `HELIX_NATIVE_THREADS` changes).
+    scratch: Vec<AttnScratch>,
     /// q/k/v from the most recent InProj, per layer.
     qkv: Vec<Option<(HostTensor, HostTensor, HostTensor)>>,
     /// Pre-resolved role -> program names (SPerf-L3: no per-command
@@ -248,10 +444,21 @@ impl RankState {
         let lo = &init.layout;
         let kh_local = cfg.kv_heads / lo.tpa;
         let cap = cfg.seq_cap / lo.kvp;
+        if init.page_toks != 0 && rt.backend_name() != "native" {
+            bail!("paged KV cache requires the native backend (the paged \
+                   flash-decode kernel bypasses compiled programs); got \
+                   backend '{}'", rt.backend_name());
+        }
         let kv = (0..cfg.layers)
-            .map(|_| KvShard::new(cfg.batch, kh_local, cap, cfg.head_size))
+            .map(|layer| if init.page_toks != 0 {
+                KvShard::new_paged(cfg.batch, kh_local, cap, cfg.head_size,
+                                   init.page_toks, layer)
+            } else {
+                KvShard::new(cfg.batch, kh_local, cap, cfg.head_size)
+            })
             .collect();
         let qkv = (0..cfg.layers).map(|_| None).collect();
+        let kvp_k = super::shard::attn_coords(lo, init.id).1;
 
         // Resolve every role this rank can be asked to play, and compile
         // the programs up front so the first decode step pays no JIT
@@ -299,7 +506,8 @@ impl RankState {
             .map(|w| LayerDev::from_shard(&rt, w))
             .collect::<Result<Vec<_>>>()?;
         Ok(RankState {
-            init, rt, dev, kv, qkv, prog_in_proj, prog_attn, prog_attn_b1,
+            init, rt, dev, kv, kvp_k, scratch: Vec::new(), qkv,
+            prog_in_proj, prog_attn, prog_attn_b1,
             prog_combine, prog_combine_b1, prog_out_proj, prog_ffn,
             prog_router, prog_expert, prog_shared, prog_embed, prog_logits,
         })
@@ -333,6 +541,9 @@ impl RankState {
                 Ok(Payload::Ack)
             }
             Cmd::Attn { layer } => {
+                if self.kv[layer].is_paged() {
+                    return self.attn_paged(layer, None);
+                }
                 let lens = self.kv[layer].lens_tensor();
                 let qkv = self.qkv[layer].as_ref()
                     .context("Attn before InProj")?;
@@ -345,6 +556,9 @@ impl RankState {
                                    lse: it.next().unwrap(), row: None })
             }
             Cmd::AttnRow { layer, row } => {
+                if self.kv[layer].is_paged() {
+                    return self.attn_paged(layer, Some(row));
+                }
                 let prog = self.prog_attn_b1.as_ref()
                     .context("no batch-1 attention program (kvp==1?)")?;
                 // Zero-copy: q row and K/V rows are Arc views.
@@ -372,6 +586,44 @@ impl RankState {
                 for shard in &mut self.kv {
                     shard.reset_row(row);
                 }
+                Ok(Payload::Ack)
+            }
+            Cmd::Evict { row, session } => {
+                let store = self.init.store.as_ref()
+                    .context("session offload requested but no store \
+                              configured")?;
+                // One blob per rank: all layers of this rank's shard of
+                // the session, in logical token order. The KV bytes go
+                // rank -> store directly; the coordinator only sees Ack.
+                let mut blob = Vec::new();
+                for shard in &self.kv {
+                    shard.serialize_row(row, &mut blob)?;
+                }
+                store.put(session, self.init.id, blob)?;
+                for shard in &mut self.kv {
+                    shard.reset_row(row);
+                }
+                Ok(Payload::Ack)
+            }
+            Cmd::Restore { row, session, len } => {
+                let store = self.init.store.as_ref()
+                    .context("session restore requested but no store \
+                              configured")?;
+                let blob = store.take(session, self.init.id)?;
+                let expect = local_len(len, self.init.cfg.kv_block,
+                                       self.init.layout.kvp, self.kvp_k);
+                let mut off = 0;
+                for li in 0..self.kv.len() {
+                    off = self.kv[li].deserialize_row(row, &blob, off)?;
+                    let got = self.kv[li].lens[row] as usize;
+                    ensure!(got == expect,
+                            "restored slot {row} layer {li}: local length \
+                             {got}, expected {expect} (logical {len}, kvp \
+                             rank {})", self.kvp_k);
+                }
+                ensure!(off == blob.len(),
+                        "session {session} blob has {} trailing bytes",
+                        blob.len() - off);
                 Ok(Payload::Ack)
             }
             Cmd::OutProj { layer, o_slice } => {
@@ -417,6 +669,39 @@ impl RankState {
                 unreachable!("handled by run()")
             }
         }
+    }
+
+    /// Paged flash-decode: calls the native kernel directly (the
+    /// compiled attention programs expect dense arenas). `block_s` is
+    /// the flat kernel's tile for this shard capacity, so with the
+    /// default page size the paged walk visits identical tiles and the
+    /// outputs are bit-identical to the flat path.
+    fn attn_paged(&mut self, layer: usize, row: Option<usize>)
+                  -> Result<Payload> {
+        let cfg = &self.init.cfg;
+        let lo = &self.init.layout;
+        let (qhl, khl) = (cfg.q_heads / lo.tpa, cfg.kv_heads / lo.tpa);
+        let (g, hsz) = (qhl / khl, cfg.head_size);
+        let block_s = native::attn_block_size(cfg.seq_cap / lo.kvp);
+        let workers = native::native_workers();
+        if self.scratch.len() < workers {
+            self.scratch.resize_with(workers, AttnScratch::default);
+        }
+        let q_full = &self.qkv[layer].as_ref()
+            .context("Attn before InProj")?.0;
+        let (q, b, r0) = match row {
+            Some(r) => (q_full.slice_axis(0, r, 1)?, 1, r),
+            None => (q_full.clone(), q_full.shape[0], 0),
+        };
+        let mut o = HostTensor::zeros(&[b, qhl, hsz]);
+        let mut lse = HostTensor::zeros(&[b, qhl]);
+        let shard = &self.kv[layer];
+        native::flash_decode_paged(
+            q.f32s()?, shard.k.f32s()?, shard.v.f32s()?,
+            &shard.tables[r0..r0 + b], &shard.lens[r0..r0 + b],
+            b, khl, g, hsz, shard.page_toks, block_s,
+            o.f32s_mut()?, lse.f32s_mut()?, &mut self.scratch, workers);
+        Ok(Payload::Attn { o, lse, row })
     }
 
     /// MoE FFN partial: local router (redundant, DP-style), held experts
@@ -487,6 +772,29 @@ pub fn append_rank(logical_len: usize, kv_block: usize, kvp: usize) -> usize {
     (logical_len / kv_block) % kvp
 }
 
+/// Tokens held by KVP rank `k` of a session at logical length
+/// `logical_len` under round-robin append — the per-rank length a
+/// restore must reproduce.
+pub fn local_len(logical_len: usize, kv_block: usize, kvp: usize, k: usize)
+                 -> usize {
+    let cycle = kv_block * kvp;
+    let full = logical_len / cycle;
+    let rem = logical_len % cycle;
+    full * kv_block + rem.saturating_sub(k * kv_block).min(kv_block)
+}
+
+/// Default KV page size: the flat attention kernel's tile for this
+/// shard capacity, but never smaller than a round-robin block. Pages
+/// then align with the kernel's tile walk, so paged attention is
+/// bit-identical to the dense arena — paging costs indirection, not
+/// numerics. `layout.page` (when set) overrides.
+pub fn default_page_toks(cfg: &EngineModelConfig, lo: &Layout) -> usize {
+    if lo.page != 0 {
+        return lo.page;
+    }
+    native::attn_block_size(cfg.seq_cap / lo.kvp).max(cfg.kv_block)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -515,6 +823,119 @@ mod tests {
         s.append(0, &n, &n).unwrap();
         s.append(0, &n, &n).unwrap();
         assert!(s.append(0, &n, &n).is_err());
+    }
+
+    #[test]
+    fn paged_append_matches_flat_reads() {
+        // Same appends into a flat and a paged shard; every
+        // (slot, head, pos) read through data_index must agree.
+        let (b, kh, cap, hsz, pt) = (2, 2, 8, 3, 4);
+        let mut flat = KvShard::new(b, kh, cap, hsz);
+        let mut paged = KvShard::new_paged(b, kh, cap, hsz, pt, 1);
+        let mut rng = crate::util::Rng::new(7);
+        for step in 0..cap * b {
+            let row = step % b;
+            let vals: Vec<f32> =
+                (0..b * kh * hsz).map(|_| rng.f32_signed()).collect();
+            let t = HostTensor::from_f32(vals, &[b, kh, hsz]).unwrap();
+            flat.append(row, &t, &t).unwrap();
+            paged.append(row, &t, &t).unwrap();
+        }
+        assert_eq!(flat.lens, paged.lens);
+        let (fk, pk) = (flat.k.f32s().unwrap(), paged.k.f32s().unwrap());
+        for row in 0..b {
+            for h in 0..kh {
+                for pos in 0..flat.lens[row] as usize {
+                    let fd = flat.data_index(row, h, pos);
+                    let pd = paged.data_index(row, h, pos);
+                    assert_eq!(fk[fd..fd + hsz], pk[pd..pd + hsz],
+                               "row {row} head {h} pos {pos}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn paged_overflow_and_reset_recycle() {
+        let mut s = KvShard::new_paged(2, 1, 4, 2, 2, 3);
+        let t = HostTensor::zeros(&[2, 1, 2]);
+        for _ in 0..4 {
+            s.append(0, &t, &t).unwrap();
+            s.append(1, &t, &t).unwrap();
+        }
+        let err = format!("{:#}", s.append(0, &t, &t).unwrap_err());
+        for needle in ["slot 0", "layer 3", "length 4", "capacity 4",
+                       "2 pages of 2"] {
+            assert!(err.contains(needle), "missing {needle:?} in {err}");
+        }
+        // Freeing row 1's pages lets row 0... still not grow (per-slot
+        // cap), but a fresh row reuses them.
+        s.reset_row(1);
+        s.reset_row(0);
+        for _ in 0..4 {
+            s.append(0, &t, &t).unwrap();
+        }
+        assert_eq!(s.lens, vec![4, 0]);
+    }
+
+    #[test]
+    fn serialize_restore_roundtrip_flat_to_paged() {
+        // A session offloaded from a flat shard restores bit-identically
+        // into a paged shard (and into a different slot): the blob is
+        // logical-order, storage-independent.
+        let (b, kh, cap, hsz) = (2, 2, 8, 3);
+        let mut src = KvShard::new(b, kh, cap, hsz);
+        let mut rng = crate::util::Rng::new(11);
+        for _ in 0..5 {
+            let kv: Vec<f32> =
+                (0..b * kh * hsz).map(|_| rng.f32_signed()).collect();
+            let kt = HostTensor::from_f32(kv, &[b, kh, hsz]).unwrap();
+            let vv: Vec<f32> =
+                (0..b * kh * hsz).map(|_| rng.f32_signed()).collect();
+            let vt = HostTensor::from_f32(vv, &[b, kh, hsz]).unwrap();
+            src.append(1, &kt, &vt).unwrap();
+        }
+        let mut blob = Vec::new();
+        src.serialize_row(1, &mut blob).unwrap();
+
+        let mut dst = KvShard::new_paged(b, kh, cap, hsz, 4, 0);
+        let off = dst.deserialize_row(0, &blob, 0).unwrap();
+        assert_eq!(off, blob.len());
+        assert_eq!(dst.lens[0], 5);
+        for h in 0..kh {
+            for pos in 0..5 {
+                let s = src.data_index(1, h, pos);
+                let d = dst.data_index(0, h, pos);
+                assert_eq!(src.k.f32s().unwrap()[s..s + hsz],
+                           dst.k.f32s().unwrap()[d..d + hsz]);
+                assert_eq!(src.v.f32s().unwrap()[s..s + hsz],
+                           dst.v.f32s().unwrap()[d..d + hsz]);
+            }
+        }
+        // Restore into an occupied slot is refused.
+        assert!(dst.deserialize_row(0, &blob, 0).is_err());
+        // Truncated blob is an error, not a panic.
+        assert!(dst.deserialize_row(1, &blob[..blob.len() - 2], 0).is_err());
+    }
+
+    #[test]
+    fn local_len_partitions_logical_len() {
+        // Sum over kvp ranks of local_len == logical length, and each
+        // rank's share matches a replayed round-robin append.
+        for kvp in [1usize, 2, 3, 4] {
+            for len in 0..=40usize {
+                let mut counts = vec![0usize; kvp];
+                for l in 0..len {
+                    counts[append_rank(l, 4, kvp)] += 1;
+                }
+                for k in 0..kvp {
+                    assert_eq!(local_len(len, 4, kvp, k), counts[k],
+                               "len {len} kvp {kvp} rank {k}");
+                }
+                assert_eq!((0..kvp).map(|k| local_len(len, 4, kvp, k))
+                           .sum::<usize>(), len);
+            }
+        }
     }
 
     #[test]

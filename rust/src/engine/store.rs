@@ -1,0 +1,152 @@
+//! Host-tier session store: where evicted sessions' KV pages live.
+//!
+//! The store is a byte-blob map keyed by `(session, rank)` — each KVP
+//! rank serializes *its own shard* of a session's KV (CacheFlow-style
+//! 3D-parallel restoration: restore bandwidth scales with the layout,
+//! and no KV bytes ever funnel through the coordinator). The
+//! coordinator only moves page *counts* and lengths; the
+//! `tests/session_churn.rs` acceptance test pins coordinator-side KV
+//! traffic at ≈ 0 by reading the byte counters kept here.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Result};
+
+/// Cumulative traffic counters (bytes written on evict / read on
+/// restore), for metrics and the restore-GB/s bench key.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StoreStats {
+    pub bytes: usize,
+    pub blobs: usize,
+    pub bytes_in: usize,
+    pub bytes_out: usize,
+    pub evictions: usize,
+    pub restores: usize,
+}
+
+#[derive(Default)]
+struct Inner {
+    blobs: HashMap<(u64, usize), Vec<u8>>,
+    /// Current resident bytes; `budget` (0 = unlimited) caps it.
+    bytes: usize,
+    budget: usize,
+    bytes_in: usize,
+    bytes_out: usize,
+    evictions: usize,
+    restores: usize,
+}
+
+/// Shared handle: every rank thread and the coordinator hold a clone.
+#[derive(Clone, Default)]
+pub struct SessionStore {
+    inner: Arc<Mutex<Inner>>,
+}
+
+impl SessionStore {
+    /// Unlimited host tier.
+    pub fn new() -> SessionStore {
+        SessionStore::default()
+    }
+
+    /// Host tier capped at `budget_bytes` (0 = unlimited): `put` fails
+    /// when the cap would be exceeded, which surfaces as an evict error
+    /// instead of silent unbounded growth.
+    pub fn with_budget(budget_bytes: usize) -> SessionStore {
+        let store = SessionStore::default();
+        store.inner.lock().unwrap().budget = budget_bytes;
+        store
+    }
+
+    /// Stash rank `rank`'s shard of session `session`. One blob per
+    /// (session, rank); re-putting an un-taken blob is a logic error.
+    pub fn put(&self, session: u64, rank: usize, blob: Vec<u8>)
+               -> Result<()> {
+        let mut i = self.inner.lock().unwrap();
+        if i.budget != 0 && i.bytes + blob.len() > i.budget {
+            bail!("session store over budget: {} + {} > {} bytes \
+                   (session {session}, rank {rank})",
+                  i.bytes, blob.len(), i.budget);
+        }
+        if i.blobs.contains_key(&(session, rank)) {
+            bail!("session {session} rank {rank} already offloaded");
+        }
+        i.bytes += blob.len();
+        i.bytes_in += blob.len();
+        i.evictions += 1;
+        i.blobs.insert((session, rank), blob);
+        Ok(())
+    }
+
+    /// Take rank `rank`'s shard of session `session` back out
+    /// (consume-on-take: a session restores exactly once per evict).
+    pub fn take(&self, session: u64, rank: usize) -> Result<Vec<u8>> {
+        let mut i = self.inner.lock().unwrap();
+        match i.blobs.remove(&(session, rank)) {
+            Some(blob) => {
+                i.bytes -= blob.len();
+                i.bytes_out += blob.len();
+                i.restores += 1;
+                Ok(blob)
+            }
+            None => bail!("session {session} rank {rank} not in store"),
+        }
+    }
+
+    /// Drop every shard of a session (retire without restore).
+    pub fn discard(&self, session: u64) {
+        let mut i = self.inner.lock().unwrap();
+        let keys: Vec<(u64, usize)> = i.blobs.keys()
+            .filter(|(s, _)| *s == session).copied().collect();
+        for key in keys {
+            if let Some(blob) = i.blobs.remove(&key) {
+                i.bytes -= blob.len();
+            }
+        }
+    }
+
+    pub fn stats(&self) -> StoreStats {
+        let i = self.inner.lock().unwrap();
+        StoreStats {
+            bytes: i.bytes,
+            blobs: i.blobs.len(),
+            bytes_in: i.bytes_in,
+            bytes_out: i.bytes_out,
+            evictions: i.evictions,
+            restores: i.restores,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_take_roundtrip_and_counters() {
+        let s = SessionStore::new();
+        s.put(7, 0, vec![1, 2, 3]).unwrap();
+        s.put(7, 1, vec![4, 5]).unwrap();
+        assert_eq!(s.stats().bytes, 5);
+        assert_eq!(s.stats().blobs, 2);
+        assert_eq!(s.take(7, 1).unwrap(), vec![4, 5]);
+        // consume-on-take
+        assert!(s.take(7, 1).is_err());
+        let st = s.stats();
+        assert_eq!((st.bytes_in, st.bytes_out), (5, 2));
+        assert_eq!((st.evictions, st.restores), (2, 1));
+        s.discard(7);
+        assert_eq!(s.stats().bytes, 0);
+    }
+
+    #[test]
+    fn budget_enforced() {
+        let s = SessionStore::with_budget(4);
+        s.put(1, 0, vec![0; 3]).unwrap();
+        assert!(s.put(2, 0, vec![0; 2]).is_err());
+        s.take(1, 0).unwrap();
+        s.put(2, 0, vec![0; 2]).unwrap();
+        // double-put of the same (session, rank) is refused
+        assert!(s.put(2, 0, vec![0; 1]).is_err());
+    }
+}

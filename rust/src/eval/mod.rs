@@ -52,6 +52,13 @@ pub struct Scenario {
     /// independent Poisson arrivals.
     pub burst: usize,
     pub seed: u64,
+    /// Conversation turns per session (`<=1` = single-shot).
+    pub turns: usize,
+    /// Engine steps a session idles between turns (think-time).
+    pub idle_steps: usize,
+    /// Fraction of the physical KV pool admission may commit
+    /// (`1.0` = the full pool; `<1` forces churn through the host tier).
+    pub kv_budget_frac: f64,
 }
 
 impl Scenario {
@@ -63,6 +70,8 @@ impl Scenario {
             seed: self.seed,
             arrival_rate: self.arrival_rate,
             burst: self.burst,
+            turns: self.turns,
+            idle_steps: self.idle_steps,
         }
     }
 
@@ -77,6 +86,9 @@ impl Scenario {
         m.insert("arrival_rate".into(), Json::Num(self.arrival_rate));
         m.insert("burst".into(), Json::Num(self.burst as f64));
         m.insert("seed".into(), Json::Num(self.seed as f64));
+        m.insert("turns".into(), Json::Num(self.turns as f64));
+        m.insert("idle_steps".into(), Json::Num(self.idle_steps as f64));
+        m.insert("kv_budget_frac".into(), Json::Num(self.kv_budget_frac));
         Json::Obj(m)
     }
 
@@ -91,6 +103,19 @@ impl Scenario {
             arrival_rate: j.get("arrival_rate")?.as_f64()?,
             burst: j.get("burst")?.as_usize()?,
             seed: j.get("seed")?.as_usize()? as u64,
+            // Churn knobs landed with schema v2; absent in older docs.
+            turns: match j.opt("turns") {
+                Some(v) => v.as_usize()?,
+                None => 1,
+            },
+            idle_steps: match j.opt("idle_steps") {
+                Some(v) => v.as_usize()?,
+                None => 0,
+            },
+            kv_budget_frac: match j.opt("kv_budget_frac") {
+                Some(v) => v.as_f64()?,
+                None => 1.0,
+            },
         })
     }
 }
@@ -104,19 +129,33 @@ impl Scenario {
 pub fn scenario_matrix(seq_cap: usize) -> Vec<Scenario> {
     let long_prompt = ((seq_cap / 4).max(2), (seq_cap / 3).max(3));
     let long_gen = ((seq_cap / 16).max(2), (seq_cap / 8).max(3));
+    // Churn cell: multi-turn sessions idling between turns under a KV
+    // budget far below their aggregate demand, so admission must cycle
+    // idle sessions through the host tier (evict on pressure, restore
+    // on wake) for the population to complete at all.
+    let churn_prompt = ((seq_cap / 16).max(2), (seq_cap / 8).max(3));
+    let churn_gen = ((seq_cap / 32).max(2), (seq_cap / 16).max(3));
     vec![
         Scenario { name: "steady_short".into(), requests: 8,
                    prompt: (2, 6), gen: (4, 8),
-                   arrival_rate: 0.5, burst: 1, seed: 11 },
+                   arrival_rate: 0.5, burst: 1, seed: 11,
+                   turns: 1, idle_steps: 0, kv_budget_frac: 1.0 },
         Scenario { name: "burst_short".into(), requests: 8,
                    prompt: (2, 6), gen: (4, 8),
-                   arrival_rate: 0.25, burst: 4, seed: 13 },
+                   arrival_rate: 0.25, burst: 4, seed: 13,
+                   turns: 1, idle_steps: 0, kv_budget_frac: 1.0 },
         Scenario { name: "steady_long".into(), requests: 6,
                    prompt: long_prompt, gen: long_gen,
-                   arrival_rate: 0.2, burst: 1, seed: 17 },
+                   arrival_rate: 0.2, burst: 1, seed: 17,
+                   turns: 1, idle_steps: 0, kv_budget_frac: 1.0 },
         Scenario { name: "burst_long".into(), requests: 6,
                    prompt: long_prompt, gen: long_gen,
-                   arrival_rate: 0.1, burst: 3, seed: 19 },
+                   arrival_rate: 0.1, burst: 3, seed: 19,
+                   turns: 1, idle_steps: 0, kv_budget_frac: 1.0 },
+        Scenario { name: "session_churn".into(), requests: 8,
+                   prompt: churn_prompt, gen: churn_gen,
+                   arrival_rate: 0.5, burst: 1, seed: 23,
+                   turns: 3, idle_steps: 8, kv_budget_frac: 0.25 },
     ]
 }
 
@@ -124,7 +163,8 @@ pub fn scenario_matrix(seq_cap: usize) -> Vec<Scenario> {
 pub fn smoke_matrix(_seq_cap: usize) -> Vec<Scenario> {
     vec![Scenario { name: "steady_short".into(), requests: 6,
                     prompt: (2, 6), gen: (4, 8),
-                    arrival_rate: 0.5, burst: 1, seed: 11 }]
+                    arrival_rate: 0.5, burst: 1, seed: 11,
+                    turns: 1, idle_steps: 0, kv_budget_frac: 1.0 }]
 }
 
 /// One (plan, scenario) serve run, summarized.
@@ -144,6 +184,10 @@ pub struct RunRecord {
     pub tokens_per_s: f64,
     pub peak_kv_tokens: usize,
     pub peak_active: usize,
+    /// Host-tier churn this run: sessions evicted to / restored from
+    /// the session store.
+    pub evictions: usize,
+    pub restores: usize,
     /// FNV-1a over every completed request's (id, generated tokens) —
     /// bit-identical across reruns on the native backend, the anchor
     /// for the determinism regression tests.
@@ -169,6 +213,8 @@ impl RunRecord {
         m.insert("peak_kv_tokens".into(),
                  Json::Num(self.peak_kv_tokens as f64));
         m.insert("peak_active".into(), Json::Num(self.peak_active as f64));
+        m.insert("evictions".into(), Json::Num(self.evictions as f64));
+        m.insert("restores".into(), Json::Num(self.restores as f64));
         // u64 digests do not fit an f64 JSON number losslessly.
         m.insert("token_digest".into(),
                  Json::Str(format!("{:016x}", self.token_digest)));
@@ -192,6 +238,15 @@ impl RunRecord {
             tokens_per_s: j.get("tokens_per_s")?.as_f64()?,
             peak_kv_tokens: j.get("peak_kv_tokens")?.as_usize()?,
             peak_active: j.get("peak_active")?.as_usize()?,
+            // Churn counters landed with schema v2; absent before.
+            evictions: match j.opt("evictions") {
+                Some(v) => v.as_usize()?,
+                None => 0,
+            },
+            restores: match j.opt("restores") {
+                Some(v) => v.as_usize()?,
+                None => 0,
+            },
             token_digest: u64::from_str_radix(digest, 16)
                 .with_context(|| format!("bad token_digest {digest:?}"))?,
         })
@@ -459,7 +514,10 @@ pub struct EvalOutcome {
 impl EvalOutcome {
     pub fn to_doc(&self) -> Json {
         let mut m = BTreeMap::new();
-        m.insert("version".into(), Json::Num(1.0));
+        // v2: churn fields (scenario turns/idle_steps/kv_budget_frac,
+        // per-run and per-plan evictions/restores, restore_p99_ms,
+        // plan host_kv_budget). v1 docs still parse (fields default).
+        m.insert("version".into(), Json::Num(2.0));
         m.insert("kind".into(), Json::Str("helix-eval".into()));
         m.insert("rank_by".into(), Json::Str(self.rank_by.clone()));
         m.insert("models".into(),
@@ -499,6 +557,7 @@ mod tests {
             predicted: Predicted { ttl_ms: 1.0, interactivity: 1000.0,
                                    tokens_per_gpu_s: 100.0 },
             kv_budget: 512,
+            host_kv_budget: 256,
             measured: Some(Measured {
                 ttl_p50_ms: 1e3 / inter,
                 ttl_p95_ms: 1.5e3 / inter,
@@ -513,6 +572,9 @@ mod tests {
                 steps: 120,
                 generated_tokens: 48,
                 wall_s: 0.25,
+                evictions: 2,
+                restores: 2,
+                restore_p99_ms: 0.5,
             }),
         }
     }
@@ -543,12 +605,16 @@ mod tests {
                 assert!(sc.prompt.0 <= sc.prompt.1, "{}", sc.name);
                 assert!(sc.gen.0 <= sc.gen.1, "{}", sc.name);
                 // Worst case fits a slot under the widest built KVP
-                // split (kv_block 16, kvp 4 for the tiny models).
-                assert!(sc.prompt.1 + sc.gen.1 <= cap - cap.min(64),
+                // split (kv_block 16, kvp 4 for the tiny models): a
+                // multi-turn session accumulates turns * gen tokens.
+                assert!(sc.prompt.1 + sc.turns.max(1) * sc.gen.1
+                        <= cap - cap.min(64),
                         "{} overflows seq_cap {cap}", sc.name);
                 assert!(sc.requests >= 2);
             }
-            assert!(scenario_matrix(cap).len() >= 4);
+            assert!(scenario_matrix(cap).len() >= 5);
+            assert!(scenario_matrix(cap).iter()
+                    .any(|sc| sc.kv_budget_frac < 1.0 && sc.turns > 1));
             assert_eq!(smoke_matrix(cap).len(), 1);
         }
     }
@@ -585,7 +651,7 @@ mod tests {
                         comm_s: 0.0, ttl_p50_ms: 1.25, ttl_p95_ms: 2.5,
                         ttl_p99_ms: 3.0, ttft_p99_ms: 9.75,
                         tokens_per_s: 288.0, peak_kv_tokens: 60,
-                        peak_active: 4,
+                        peak_active: 4, evictions: 1, restores: 1,
                         token_digest: 0xdead_beef_cafe_f00d,
                     }],
                 }],

@@ -12,6 +12,7 @@
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::config::{registry, Hardware};
+use crate::engine::HelixCluster;
 use crate::plan::{self, Measured, Plan, Planner};
 use crate::serve::{RequestState, ServeReport, Server};
 use crate::util::stats;
@@ -115,8 +116,27 @@ fn run_record(sc: &Scenario, report: &ServeReport, digest: u64)
         tokens_per_s: m.tokens_per_sec(),
         peak_kv_tokens: m.peak_kv_tokens,
         peak_active: m.peak_active,
+        evictions: m.evictions,
+        restores: m.restores,
         token_digest: digest,
     }
+}
+
+/// Boot a server for one (plan, scenario) pair. A churn scenario
+/// (`kv_budget_frac < 1`) shrinks the admission budget below the
+/// physical pool and opens a host tier wide enough to park the whole
+/// population, so admission must evict/restore idle sessions instead
+/// of rejecting.
+fn server_for(plan: &Plan, sc: &Scenario) -> Result<Server> {
+    if sc.kv_budget_frac >= 1.0 {
+        return Server::from_plan(plan);
+    }
+    let cluster = HelixCluster::from_plan(plan)?;
+    let physical = cluster.kv_budget_tokens();
+    let budget = ((plan.kv_budget.min(physical) as f64
+                   * sc.kv_budget_frac).ceil() as usize)
+        .max(cluster.slot_kv_tokens());
+    Ok(Server::with_budgets(cluster, budget, physical * 4))
 }
 
 /// Run one plan through every scenario; returns the plan with its
@@ -130,10 +150,12 @@ pub fn eval_plan(plan: &Plan, scenarios: &[Scenario], opts: &EvalOptions)
     let (mut gen_total, mut steps_total) = (0usize, 0u64);
     let (mut wall_total, mut peak_kv) = (0.0f64, 0usize);
     let (mut completed, mut rejected) = (0usize, 0usize);
+    let (mut evictions, mut restores) = (0usize, 0usize);
+    let mut restore_pool: Vec<f64> = Vec::new();
     let mut gpus = plan.gpus;
 
     for sc in scenarios {
-        let mut server = Server::from_plan(plan)
+        let mut server = server_for(plan, sc)
             .with_context(|| format!("booting plan [{}] for {}",
                                      plan.layout.key(), plan.model))?;
         let report = server.run(&sc.workload(), opts.max_steps)
@@ -153,6 +175,9 @@ pub fn eval_plan(plan: &Plan, scenarios: &[Scenario], opts: &EvalOptions)
         peak_kv = peak_kv.max(m.peak_kv_tokens);
         completed += report.completed;
         rejected += report.rejected;
+        evictions += m.evictions;
+        restores += m.restores;
+        restore_pool.extend_from_slice(&m.restore_times);
         gpus = report.gpus;
         let digest = token_digest(&server.router.completed);
         runs.push(run_record(sc, &report, digest));
@@ -187,6 +212,11 @@ pub fn eval_plan(plan: &Plan, scenarios: &[Scenario], opts: &EvalOptions)
         steps: steps_total,
         generated_tokens: gen_total,
         wall_s: wall_total,
+        evictions,
+        restores,
+        restore_p99_ms: if restore_pool.is_empty() { 0.0 }
+                        else { stats::percentile(&restore_pool, 99.0)
+                               * 1e3 },
     };
     let plan = plan.clone().with_measured(measured);
     let calibration = Calibration::from_plan(&plan);

@@ -80,6 +80,12 @@ pub struct Measured {
     pub generated_tokens: usize,
     /// Total serving wall time, seconds.
     pub wall_s: f64,
+    /// Session evictions to / restores from the host-tier KV store
+    /// across every run (0 when the scenario has no churn).
+    pub evictions: usize,
+    pub restores: usize,
+    /// p99 latency of a session restore (store → per-rank shards), ms.
+    pub restore_p99_ms: f64,
 }
 
 impl Measured {
@@ -102,6 +108,9 @@ impl Measured {
         m.insert("generated_tokens".into(),
                  Json::Num(self.generated_tokens as f64));
         m.insert("wall_s".into(), Json::Num(self.wall_s));
+        m.insert("evictions".into(), Json::Num(self.evictions as f64));
+        m.insert("restores".into(), Json::Num(self.restores as f64));
+        m.insert("restore_p99_ms".into(), Json::Num(self.restore_p99_ms));
         Json::Obj(m)
     }
 
@@ -121,6 +130,19 @@ impl Measured {
             steps: j.get("steps")?.as_usize()? as u64,
             generated_tokens: j.get("generated_tokens")?.as_usize()?,
             wall_s: j.get("wall_s")?.as_f64()?,
+            // Churn fields landed with schema v2; absent in older docs.
+            evictions: match j.opt("evictions") {
+                Some(v) => v.as_usize()?,
+                None => 0,
+            },
+            restores: match j.opt("restores") {
+                Some(v) => v.as_usize()?,
+                None => 0,
+            },
+            restore_p99_ms: match j.opt("restore_p99_ms") {
+                Some(v) => v.as_f64()?,
+                None => 0.0,
+            },
         })
     }
 }
@@ -146,6 +168,10 @@ pub struct Plan {
     /// (`batch * (seq_cap - kv_block*kvp)`); for full-size models it is
     /// the HBM envelope net of weights.
     pub kv_budget: usize,
+    /// Host-tier KV budget (logical tokens) idle sessions may offload
+    /// into under admission churn; `0` disables offload. Feeds
+    /// `Server::from_plan` → [`crate::serve::KvBudget::host_tokens`].
+    pub host_kv_budget: usize,
     /// Measured metrics from actually serving this plan (`helix eval`);
     /// `None` until the eval harness has run it.
     pub measured: Option<Measured>,
@@ -168,6 +194,7 @@ impl Plan {
         m.insert("seq_len".into(), num(self.seq_len));
         m.insert("predicted".into(), Json::Obj(pred));
         m.insert("kv_budget".into(), num(self.kv_budget as f64));
+        m.insert("host_kv_budget".into(), num(self.host_kv_budget as f64));
         if let Some(meas) = &self.measured {
             m.insert("measured".into(), meas.to_json());
         }
@@ -189,6 +216,11 @@ impl Plan {
                 tokens_per_gpu_s: pred.get("tokens_per_gpu_s")?.as_f64()?,
             },
             kv_budget: j.get("kv_budget")?.as_usize()?,
+            // Schema v2 knob; absent in pre-churn plan documents.
+            host_kv_budget: match j.opt("host_kv_budget") {
+                Some(v) => v.as_usize()?,
+                None => 0,
+            },
             measured: match j.opt("measured") {
                 Some(m) => Some(Measured::from_json(m)?),
                 None => None,
@@ -315,6 +347,9 @@ pub struct Planner {
     /// built layouts). `None` = the whole search space.
     restrict: Option<Vec<Layout>>,
     strategies: Vec<Strategy>,
+    /// Host-tier KV offload allowance stamped onto every emitted plan
+    /// (logical tokens; 0 = plans disable offload).
+    host_kv_budget: usize,
 }
 
 impl Planner {
@@ -340,7 +375,7 @@ impl Planner {
         let mut strategies = vec![Strategy::Helix { hopb: true }];
         strategies.extend(sweep::baseline_strategies(&handle.spec));
         Planner { handle, hw, bounds, ttl_budget_ms: None, batch: None,
-                  restrict, strategies }
+                  restrict, strategies, host_kv_budget: 0 }
     }
 
     /// Plan for a bare simulator spec (no engine restriction).
@@ -363,6 +398,13 @@ impl Planner {
     /// Pin the per-microbatch batch size.
     pub fn batch(mut self, b: usize) -> Planner {
         self.batch = Some(b);
+        self
+    }
+
+    /// Host-tier KV budget (tokens) every emitted plan carries for
+    /// idle-session offload; 0 (the default) disables offload.
+    pub fn host_kv_budget(mut self, tokens: usize) -> Planner {
+        self.host_kv_budget = tokens;
         self
     }
 
@@ -511,6 +553,7 @@ impl Planner {
                 tokens_per_gpu_s: p.throughput_per_gpu,
             },
             kv_budget: self.kv_budget_for(&p.layout),
+            host_kv_budget: self.host_kv_budget,
             measured: None,
         }
     }
@@ -607,6 +650,9 @@ mod tests {
             steps: 100,
             generated_tokens: 64,
             wall_s: 0.5,
+            evictions: 3,
+            restores: 2,
+            restore_p99_ms: 0.75,
         }
     }
 

@@ -679,6 +679,148 @@ pub fn flash_decode_blocked(q: &[f32], k: &[f32], v: &[f32], lens: &[i32],
     });
 }
 
+/// One (batch row, KV head) *paged* flash-decode task: the exact
+/// online-softmax recurrence of [`flash_task`], with K/V reached
+/// through the row's page table instead of a dense arena. Pages are
+/// walked in logical order and tiled `block_s` at a time; since
+/// `page_toks` is a multiple of `block_s`, the tile boundaries (and
+/// therefore every intermediate float) match the flat kernel's
+/// whenever `block_s` equals the flat tile width.
+#[allow(clippy::too_many_arguments)]
+fn paged_task(q: &[f32], k_pool: &[f32], v_pool: &[f32], table: &[u32],
+              len: usize, kh: usize, hi: usize, g: usize, hsz: usize,
+              page_toks: usize, block_s: usize, scale: f32,
+              ws: &mut AttnScratch, o: &mut [f32], lse: &mut [f32]) {
+    ws.ensure(g, hsz, block_s);
+    ws.m.fill(NEG_INF);
+    ws.l.fill(0.0);
+    ws.acc.fill(0.0);
+    let len = len.min(table.len() * page_toks);
+    let mut start = 0;
+    while start < len {
+        let page = table[start / page_toks] as usize;
+        let off = start % page_toks;
+        let bs = block_s.min(page_toks - off).min(len - start);
+        let base = ((page * kh + hi) * page_toks + off) * hsz;
+        let kt = &k_pool[base..base + bs * hsz];
+        let vt = &v_pool[base..base + bs * hsz];
+        // scores tile [G, bs]
+        for gq in 0..g {
+            let qrow = &q[gq * hsz..(gq + 1) * hsz];
+            for j in 0..bs {
+                ws.s[gq * block_s + j] =
+                    dot(qrow, &kt[j * hsz..(j + 1) * hsz]) * scale;
+            }
+        }
+        for gq in 0..g {
+            let srow = &mut ws.s[gq * block_s..gq * block_s + bs];
+            let mut m_new = ws.m[gq];
+            for &sv in srow.iter() {
+                m_new = m_new.max(sv);
+            }
+            let alpha = (ws.m[gq] - m_new).exp();
+            let mut psum = 0.0;
+            for sv in srow.iter_mut() {
+                *sv = (*sv - m_new).exp();
+                psum += *sv;
+            }
+            ws.l[gq] = ws.l[gq] * alpha + psum;
+            ws.m[gq] = m_new;
+            let acc = &mut ws.acc[gq * hsz..(gq + 1) * hsz];
+            if alpha != 1.0 {
+                for a in acc.iter_mut() {
+                    *a *= alpha;
+                }
+            }
+            for j in 0..bs {
+                let p = ws.s[gq * block_s + j];
+                if p == 0.0 {
+                    continue;
+                }
+                let vvec = &vt[j * hsz..(j + 1) * hsz];
+                for (a, &vv) in acc.iter_mut().zip(vvec) {
+                    *a += p * vv;
+                }
+            }
+        }
+        start += bs;
+    }
+    for gq in 0..g {
+        let l = ws.l[gq];
+        let safe = l.max(1e-30);
+        for (ov, &av) in o[gq * hsz..(gq + 1) * hsz]
+            .iter_mut()
+            .zip(&ws.acc[gq * hsz..(gq + 1) * hsz])
+        {
+            *ov = av / safe;
+        }
+        lse[gq] = if l > 0.0 { ws.m[gq] + safe.ln() } else { NEG_INF };
+    }
+}
+
+/// Paged flash-decode over a whole KV shard: q/o/lens/lse laid out as
+/// in [`flash_decode_blocked`], K/V in a shared page pool
+/// `[P, Kh, page_toks, Hsz]` reached through per-row page tables
+/// (`tables[bi]` lists row bi's pages in logical order; unmapped rows
+/// pass an empty table and produce `o == 0`, `lse == NEG_INF`). With
+/// the engine's default page size the tile walk is identical to the
+/// flat kernel's, so outputs are bit-identical — the `kv/page/*` CI
+/// gate measures pure indirection cost.
+#[allow(clippy::too_many_arguments)]
+pub fn flash_decode_paged(q: &[f32], k_pool: &[f32], v_pool: &[f32],
+                          tables: &[Vec<u32>], lens: &[i32], b: usize,
+                          kh: usize, g: usize, hsz: usize, page_toks: usize,
+                          block_s: usize, o: &mut [f32], lse: &mut [f32],
+                          scratch: &mut [AttnScratch], workers: usize) {
+    let scale = 1.0 / (hsz as f32).sqrt();
+    let tasks = b * kh;
+    let nw = workers
+        .min(tasks)
+        .min(scratch.len())
+        .max(1);
+    let task = |t: usize, ws: &mut AttnScratch, o_t: &mut [f32],
+                lse_t: &mut [f32]| {
+        let (bi, hi) = (t / kh, t % kh);
+        let len = lens[bi].max(0) as usize;
+        paged_task(&q[(bi * kh + hi) * g * hsz..][..g * hsz], k_pool,
+                   v_pool, &tables[bi], len, kh, hi, g, hsz, page_toks,
+                   block_s, scale, ws, o_t, lse_t);
+    };
+    if nw <= 1 {
+        let ws = &mut scratch[0];
+        for (t, (o_t, lse_t)) in
+            o.chunks_mut(g * hsz).zip(lse.chunks_mut(g)).enumerate()
+        {
+            task(t, ws, o_t, lse_t);
+        }
+        return;
+    }
+    let per = tasks.div_ceil(nw);
+    std::thread::scope(|scope| {
+        let mut o_rest = o;
+        let mut lse_rest = lse;
+        for (w, ws) in scratch.iter_mut().enumerate().take(nw) {
+            let start = w * per;
+            if start >= tasks {
+                break;
+            }
+            let n = per.min(tasks - start);
+            let (o_chunk, o_r) = o_rest.split_at_mut(n * g * hsz);
+            let (lse_chunk, lse_r) = lse_rest.split_at_mut(n * g);
+            o_rest = o_r;
+            lse_rest = lse_r;
+            scope.spawn(move || {
+                for t in 0..n {
+                    task(start + t,
+                         ws,
+                         &mut o_chunk[t * g * hsz..(t + 1) * g * hsz],
+                         &mut lse_chunk[t * g..(t + 1) * g]);
+                }
+            });
+        }
+    });
+}
+
 /// KVP combine (flash-decoding rescale-and-sum), mirroring
 /// `combine.py`: o_parts [R,B,Qs,Hsz], lse_parts [R,B,Qs] ->
 /// out [B, Qs*Hsz]. Empty shards (lse <= NEG_INF/2) get zero weight;
@@ -975,6 +1117,66 @@ mod tests {
         // empty row contract
         assert!(o[..kh * g * hsz].iter().all(|&x| x == 0.0));
         assert!(lse[..kh * g].iter().all(|&x| x == NEG_INF));
+    }
+
+    #[test]
+    fn paged_flash_is_bit_identical_to_flat() {
+        // Scatter a flat arena into a shuffled page pool; with the
+        // paged tile width equal to the flat tile width, the paged
+        // kernel must reproduce the flat outputs exactly (==, not ~).
+        let (b, kh, g, hsz, scap, block_s) = (3, 2, 2, 8, 32, 8);
+        let page_toks = 16; // 2 tiles per page, 2 pages per row
+        let mut rng = crate::util::Rng::new(11);
+        let mut fill = |n: usize| -> Vec<f32> {
+            (0..n).map(|_| rng.f32_signed()).collect()
+        };
+        let q = fill(b * kh * g * hsz);
+        let k = fill(b * kh * scap * hsz);
+        let v = fill(b * kh * scap * hsz);
+        let lens = [0i32, 13, 32];
+        let mut o_flat = vec![0.0f32; b * kh * g * hsz];
+        let mut lse_flat = vec![0.0f32; b * kh * g];
+        let mut scratch = vec![AttnScratch::default(); 2];
+        flash_decode_blocked(&q, &k, &v, &lens, b, kh, g, hsz, scap,
+                             block_s, &mut o_flat, &mut lse_flat,
+                             &mut scratch, 2);
+
+        // Page pool: pages assigned out of order on purpose.
+        let pages_per_row = scap / page_toks;
+        let total_pages = b * pages_per_row;
+        let order: Vec<usize> = (0..total_pages).rev().collect();
+        let mut k_pool = vec![0.0f32; total_pages * kh * page_toks * hsz];
+        let mut v_pool = k_pool.clone();
+        let mut tables: Vec<Vec<u32>> = vec![Vec::new(); b];
+        for bi in 0..b {
+            for lp in 0..pages_per_row {
+                let p = order[bi * pages_per_row + lp];
+                tables[bi].push(p as u32);
+                for hi in 0..kh {
+                    let src = ((bi * kh + hi) * scap + lp * page_toks) * hsz;
+                    let dst = ((p * kh + hi) * page_toks) * hsz;
+                    let n = page_toks * hsz;
+                    k_pool[dst..dst + n].copy_from_slice(&k[src..src + n]);
+                    v_pool[dst..dst + n].copy_from_slice(&v[src..src + n]);
+                }
+            }
+        }
+        let mut o = vec![0.0f32; b * kh * g * hsz];
+        let mut lse = vec![0.0f32; b * kh * g];
+        flash_decode_paged(&q, &k_pool, &v_pool, &tables, &lens, b, kh, g,
+                           hsz, page_toks, block_s, &mut o, &mut lse,
+                           &mut scratch, 2);
+        assert_eq!(o, o_flat, "paged o diverged from flat");
+        assert_eq!(lse, lse_flat, "paged lse diverged from flat");
+
+        // Unmapped row contract: empty table -> zeros / NEG_INF.
+        let empty: Vec<Vec<u32>> = vec![Vec::new(); b];
+        let lens_live = [4i32, 4, 4];
+        flash_decode_paged(&q, &k_pool, &v_pool, &empty, &lens_live, b, kh,
+                           g, hsz, page_toks, block_s, &mut o, &mut lse,
+                           &mut scratch, 1);
+        assert!(o.iter().all(|&x| x == 0.0));
+        assert!(lse.iter().all(|&x| x == NEG_INF));
     }
 
     #[test]

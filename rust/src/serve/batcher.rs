@@ -17,12 +17,16 @@ pub struct StepBatch {
     pub active: Vec<bool>,
 }
 
-/// Build the next step's batch from router state.
+/// Build the next step's batch from router state. Sessions asleep
+/// between turns hold their slot (KV resident) but sit out the step.
 pub fn build_step(router: &Router, batch: usize) -> StepBatch {
     let mut tokens = vec![0i32; batch];
     let mut active = vec![false; batch];
     for (slot, st) in router.slots.iter().enumerate() {
         if let Some(st) = st {
+            if st.sleep_until.is_some() {
+                continue;
+            }
             tokens[slot] = st.next_input();
             active[slot] = true;
         }
@@ -33,13 +37,19 @@ pub fn build_step(router: &Router, batch: usize) -> StepBatch {
 /// Feed one step's engine outputs back into request state. Only slots
 /// that were active in `batch` — the mask the engine actually ran with —
 /// advance; slots filled after the batch was built are left untouched.
-/// `wall` is the serving clock (seconds since serve start) at step end.
+/// `wall` is the serving clock (seconds since serve start) at step end,
+/// `step` the engine step just executed. Returns the slots whose
+/// session finished a turn this step and went to sleep — the serve loop
+/// deactivates those engine slots until the session wakes.
 pub fn apply_step(router: &mut Router, batch: &StepBatch, next: &[i32],
-                  wall: f64) {
+                  wall: f64, step: u64) -> Vec<usize> {
+    let mut slept = Vec::new();
     for st in router.slots.iter_mut().flatten() {
         if !batch.active.get(st.slot).copied().unwrap_or(false) {
             continue;
         }
+        st.last_step = step;
+        let mut pushed = false;
         if st.in_prefill() {
             st.prompt_pos += 1;
             // The token generated after the final prompt token is the
@@ -47,12 +57,24 @@ pub fn apply_step(router: &mut Router, batch: &StepBatch, next: &[i32],
             if !st.in_prefill() {
                 st.generated.push(next[st.slot]);
                 st.token_times.push(wall);
+                pushed = true;
             }
         } else {
             st.generated.push(next[st.slot]);
             st.token_times.push(wall);
+            pushed = true;
+        }
+        // Turn boundary: a multi-turn session that just finished a turn
+        // (but not the whole session) sleeps through its think-time.
+        if pushed && !st.done()
+            && st.generated.len() % st.req.max_new_tokens == 0
+        {
+            st.sleep_until =
+                Some(step + 1 + st.req.idle_steps as u64);
+            slept.push(st.slot);
         }
     }
+    slept
 }
 
 #[cfg(test)]
@@ -65,7 +87,8 @@ mod tests {
         for (i, &p) in prompts.iter().enumerate() {
             r.submit(Request { id: i as u64,
                                prompt: (0..p as i32).collect(),
-                               max_new_tokens: 2, arrival: 0.0 }, 0.0);
+                               max_new_tokens: 2, arrival: 0.0,
+                               turns: 1, idle_steps: 0 }, 0.0);
         }
         r.admit(0, 0.0);
         r
@@ -85,18 +108,19 @@ mod tests {
         let mut r = router_with(&[2]);
         // Step 1: feeds prompt[0].
         let sb = build_step(&r, 2);
-        apply_step(&mut r, &sb, &[9, 0], 0.01);
+        apply_step(&mut r, &sb, &[9, 0], 0.01, 0);
         assert_eq!(r.slots[0].as_ref().unwrap().prompt_pos, 1);
         assert!(r.slots[0].as_ref().unwrap().generated.is_empty());
         // Step 2: feeds prompt[1]; its output is the first generation.
         let sb = build_step(&r, 2);
-        apply_step(&mut r, &sb, &[7, 0], 0.02);
+        apply_step(&mut r, &sb, &[7, 0], 0.02, 1);
         let st = r.slots[0].as_ref().unwrap();
         assert_eq!(st.generated, vec![7]);
         // Step 3: decode.
         let sb = build_step(&r, 2);
-        apply_step(&mut r, &sb, &[8, 0], 0.03);
+        apply_step(&mut r, &sb, &[8, 0], 0.03, 2);
         assert_eq!(r.slots[0].as_ref().unwrap().generated, vec![7, 8]);
+        assert_eq!(r.slots[0].as_ref().unwrap().last_step, 2);
         assert_eq!(r.slots[0].as_ref().unwrap().token_times,
                    vec![0.02, 0.03]);
         assert!(r.slots[0].as_ref().unwrap().done());
@@ -110,11 +134,12 @@ mod tests {
         let sb = build_step(&r, 2); // only slot 0 is active
         // A request lands in slot 1 *after* the batch snapshot.
         r.submit(Request { id: 9, prompt: vec![5, 6],
-                           max_new_tokens: 2, arrival: 0.0 }, 0.0);
+                           max_new_tokens: 2, arrival: 0.0,
+                           turns: 1, idle_steps: 0 }, 0.0);
         r.admit(1, 0.0);
         assert!(r.slots[1].is_some());
 
-        apply_step(&mut r, &sb, &[7, 8], 0.01);
+        apply_step(&mut r, &sb, &[7, 8], 0.01, 1);
         // Slot 0 (in the batch) advanced ...
         assert_eq!(r.slots[0].as_ref().unwrap().prompt_pos, 1);
         // ... slot 1 (admitted mid-step) did not: no prompt consumed,
@@ -123,5 +148,36 @@ mod tests {
         assert_eq!(late.prompt_pos, 0);
         assert!(late.generated.is_empty());
         assert!(late.token_times.is_empty());
+    }
+
+    #[test]
+    fn turn_boundary_puts_session_to_sleep_and_masks_it() {
+        let mut r = Router::new(1, KvBudget::uniform(100));
+        r.submit(Request { id: 0, prompt: vec![1], max_new_tokens: 2,
+                           arrival: 0.0, turns: 2, idle_steps: 3 }, 0.0);
+        r.admit(0, 0.0);
+        // Step 0 feeds the whole 1-token prompt, yielding generation 1
+        // of 2 — no boundary yet.
+        let sb = build_step(&r, 1);
+        assert_eq!(apply_step(&mut r, &sb, &[7], 0.01, 0),
+                   Vec::<usize>::new());
+        // Step 1 finishes turn 1 of 2: the session goes to sleep.
+        let sb = build_step(&r, 1);
+        let slept = apply_step(&mut r, &sb, &[8], 0.02, 1);
+        assert_eq!(slept, vec![0]);
+        let st = r.slots[0].as_ref().unwrap();
+        assert_eq!(st.sleep_until, Some(1 + 1 + 3));
+        assert!(!st.done());
+        // Sleeping sessions sit out the batch.
+        let sb = build_step(&r, 1);
+        assert_eq!(sb.active, vec![false]);
+        // Wake at step 5 and finish the second turn.
+        assert_eq!(r.admit(5, 0.0).len(), 1);
+        for step in 5..7u64 {
+            let sb = build_step(&r, 1);
+            assert_eq!(sb.active, vec![true]);
+            apply_step(&mut r, &sb, &[9], 0.03, step);
+        }
+        assert!(r.slots[0].as_ref().unwrap().done());
     }
 }

@@ -125,7 +125,10 @@ fn cmd_verify(args: &Args) -> Result<()> {
 /// (requests per engine step; 0 queues everything up front), `--burst K`
 /// (arrivals land K at a time), `--kv-budget T` (override the aggregate
 /// KV-token admission budget; 0 uses the plan's budget or the cluster's
-/// full physical pool).
+/// full physical pool). Multi-turn churn: `--turns T` (conversation
+/// turns per session), `--idle-steps S` (think-time between turns),
+/// `--host-kv T` (host-tier KV tokens idle sessions may offload into;
+/// 0 disables offload).
 fn cmd_serve(args: &Args) -> Result<()> {
     let (cluster, model, plan) = cluster_from(args, args.flag("verify"))?;
     let gpus = cluster.n();
@@ -139,15 +142,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
         seed: args.opt_usize("seed", 42)? as u64,
         arrival_rate: args.opt_f64("arrival-rate", 0.0)?,
         burst: args.opt_usize("burst", 1)?,
+        turns: args.opt_usize("turns", 1)?,
+        idle_steps: args.opt_usize("idle-steps", 0)?,
     };
     let kv_budget = match args.opt_usize("kv-budget", 0)? {
         0 => plan.as_ref()
             .map(|p| p.kv_budget.min(cluster.kv_budget_tokens())),
         explicit => Some(explicit),
     };
+    let host_kv = args.opt_usize("host-kv", 0)?;
     let mut server = match kv_budget {
-        Some(b) => Server::with_kv_budget(cluster, b),
-        None => Server::new(cluster),
+        Some(b) => Server::with_budgets(cluster, b, host_kv),
+        None => {
+            let b = cluster.kv_budget_tokens();
+            Server::with_budgets(cluster, b, host_kv)
+        }
     };
     println!("serving {} requests on {model} [{layout}] over {gpus} ranks \
               (hopb={}, comm-scale={}, arrival-rate={}, burst={}, \

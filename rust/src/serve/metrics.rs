@@ -57,6 +57,19 @@ pub struct ServeMetrics {
     pub peak_committed_tokens: usize,
     /// Peak concurrently active slots.
     pub peak_active: usize,
+    /// Sessions evicted to the host-tier store (admission churn).
+    pub evictions: usize,
+    /// Sessions restored from the host-tier store.
+    pub restores: usize,
+    /// Wall time of each session restore (store → per-rank KV shards),
+    /// seconds.
+    pub restore_times: Vec<f64>,
+    /// Peak KV tokens parked in the host tier (router accounting).
+    pub peak_offloaded_tokens: usize,
+    /// Peak fraction of allocated KV capacity holding no live token —
+    /// page-granularity fragmentation when paged, whole-arena slack
+    /// when flat.
+    pub kv_page_slack: f64,
 }
 
 impl ServeMetrics {
@@ -146,6 +159,14 @@ impl ServeMetrics {
         pct(&self.step_times, 99.0)
     }
 
+    pub fn restore_p50(&self) -> f64 {
+        pct(&self.restore_times, 50.0)
+    }
+
+    pub fn restore_p99(&self) -> f64 {
+        pct(&self.restore_times, 99.0)
+    }
+
     /// System throughput: generated tokens per second of wall time.
     pub fn tokens_per_sec(&self) -> f64 {
         if self.wall <= 0.0 {
@@ -200,6 +221,13 @@ impl ServeMetrics {
         m.insert("peak_committed_tokens".into(),
                  Json::Num(self.peak_committed_tokens as f64));
         m.insert("peak_active".into(), Json::Num(self.peak_active as f64));
+        m.insert("evictions".into(), Json::Num(self.evictions as f64));
+        m.insert("restores".into(), Json::Num(self.restores as f64));
+        m.insert("restore_p50_ms".into(), ms(self.restore_p50()));
+        m.insert("restore_p99_ms".into(), ms(self.restore_p99()));
+        m.insert("peak_offloaded_tokens".into(),
+                 Json::Num(self.peak_offloaded_tokens as f64));
+        m.insert("kv_page_slack".into(), Json::Num(self.kv_page_slack));
         Json::Obj(m)
     }
 }
@@ -237,7 +265,8 @@ mod tests {
     fn per_request_distributions() {
         let st = RequestState {
             req: Request { id: 0, prompt: vec![1, 2],
-                           max_new_tokens: 3, arrival: 0.0 },
+                           max_new_tokens: 3, arrival: 0.0,
+                           turns: 1, idle_steps: 0 },
             slot: 0,
             prompt_pos: 2,
             generated: vec![5, 6, 7],
@@ -246,6 +275,8 @@ mod tests {
             token_times: vec![2.0, 2.2, 2.6],
             submitted_wall: 1.0,
             admitted_wall: 1.5,
+            sleep_until: None,
+            last_step: 0,
         };
         let mut m = ServeMetrics::default();
         m.record_request(&st);
@@ -265,7 +296,8 @@ mod tests {
     fn single_token_requests_skip_ttl_and_tpot() {
         let st = RequestState {
             req: Request { id: 0, prompt: vec![1],
-                           max_new_tokens: 1, arrival: 0.0 },
+                           max_new_tokens: 1, arrival: 0.0,
+                           turns: 1, idle_steps: 0 },
             slot: 0,
             prompt_pos: 1,
             generated: vec![3],
@@ -273,6 +305,8 @@ mod tests {
             token_times: vec![0.4],
             submitted_wall: 0.1,
             admitted_wall: 0.1,
+            sleep_until: None,
+            last_step: 0,
         };
         let mut m = ServeMetrics::default();
         m.record_request(&st);

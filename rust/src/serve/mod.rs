@@ -20,5 +20,5 @@ pub mod router;
 pub mod server;
 
 pub use metrics::ServeMetrics;
-pub use router::{KvBudget, Request, RequestState, Router};
+pub use router::{AdmitAction, KvBudget, Request, RequestState, Router};
 pub use server::{ServeReport, Server, Workload};

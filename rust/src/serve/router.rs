@@ -11,22 +11,36 @@
 
 use std::collections::VecDeque;
 
-/// A decode request.
+/// A decode request — possibly a multi-turn *session*: `turns` rounds
+/// of `max_new_tokens` generation separated by `idle_steps` engine
+/// steps of user think-time, over one persistent KV cache.
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: u64,
     pub prompt: Vec<i32>,
+    /// Tokens generated per turn.
     pub max_new_tokens: usize,
     /// Arrival time in engine-step units (workload clock). Requests are
     /// only visible to the router once the serve loop reaches this step.
     pub arrival: f64,
+    /// Turns in the session (`<= 1` = classic single-shot request).
+    pub turns: usize,
+    /// Engine steps the session sleeps between turns. While asleep its
+    /// KV is idle — resident if room allows, offloaded to the host tier
+    /// when admission needs the slot.
+    pub idle_steps: usize,
 }
 
 impl Request {
-    /// Worst-case KV footprint: every prompt token plus every generated
-    /// token occupies one logical KV entry by completion.
+    /// Worst-case KV footprint: every prompt token plus every token of
+    /// every turn occupies one logical KV entry by completion.
     pub fn kv_tokens(&self) -> usize {
-        self.prompt.len() + self.max_new_tokens
+        self.prompt.len() + self.turns.max(1) * self.max_new_tokens
+    }
+
+    /// Total tokens the session generates across all turns.
+    pub fn total_gen(&self) -> usize {
+        self.turns.max(1) * self.max_new_tokens
     }
 }
 
@@ -43,15 +57,20 @@ pub struct KvBudget {
     /// Watermark held back from the aggregate at admission so in-flight
     /// growth (staggered appends mid-block) never lands on a full shard.
     pub reserve_tokens: usize,
+    /// Restorable pool: KV tokens the host-tier session store may hold
+    /// for offloaded (sleeping) sessions. `0` disables offload — idle
+    /// sessions then stay resident and admission cannot reclaim their
+    /// slots.
+    pub host_tokens: usize,
 }
 
 impl KvBudget {
     /// Uniform budget: per-request and aggregate caps coincide, no
-    /// reserve. Matches the historical single-knob router behaviour and
-    /// keeps unit tests compact.
+    /// reserve, no host tier. Matches the historical single-knob router
+    /// behaviour and keeps unit tests compact.
     pub fn uniform(tokens: usize) -> KvBudget {
         KvBudget { slot_tokens: tokens, budget_tokens: tokens,
-                   reserve_tokens: 0 }
+                   reserve_tokens: 0, host_tokens: 0 }
     }
 
     /// Tokens actually available to admissions.
@@ -80,6 +99,12 @@ pub struct RequestState {
     pub submitted_wall: f64,
     /// Serving clock at admission (winning a slot).
     pub admitted_wall: f64,
+    /// `Some(step)` while the session sleeps between turns: it resumes
+    /// decoding once the serve loop reaches `step`. Cleared on wake.
+    pub sleep_until: Option<u64>,
+    /// Engine step this session last decoded a token at — the LRU key
+    /// churn-aware admission evicts by.
+    pub last_step: u64,
 }
 
 impl RequestState {
@@ -88,7 +113,12 @@ impl RequestState {
     }
 
     pub fn done(&self) -> bool {
-        !self.in_prefill() && self.generated.len() >= self.req.max_new_tokens
+        !self.in_prefill() && self.generated.len() >= self.req.total_gen()
+    }
+
+    /// Asleep between turns as of `step` (not yet due to wake).
+    pub fn asleep(&self, step: u64) -> bool {
+        self.sleep_until.map_or(false, |w| w > step)
     }
 
     /// Next token to feed the engine for this request.
@@ -113,6 +143,26 @@ impl RequestState {
     }
 }
 
+/// One slot-state transition [`Router::admit`] asks the serve loop to
+/// execute on the engine, in order. Admission is a *plan* over slots;
+/// the engine-side moves (ResetRow, per-rank offload streams, restores)
+/// happen in the server, which owns the cluster.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmitAction {
+    /// Stream the (sleeping) session in `slot` to the host tier, then
+    /// free its pages — churn-aware admission reclaiming the coldest
+    /// idle KV.
+    Evict { slot: usize, id: u64 },
+    /// Reset `slot` and start the freshly admitted request `id` in it.
+    Open { slot: usize, id: u64 },
+    /// Pull offloaded session `id` back from the host tier into `slot`
+    /// (any free slot — not necessarily the one it left).
+    Restore { slot: usize, id: u64 },
+    /// Re-activate the resident sleeping session in `slot` (its KV
+    /// never left the shards; no engine traffic beyond the flag).
+    Wake { slot: usize, id: u64 },
+}
+
 /// FIFO admission over a fixed number of slots, bounded by a [`KvBudget`].
 #[derive(Debug)]
 pub struct Router {
@@ -123,9 +173,14 @@ pub struct Router {
     /// Requests rejected at submit time (can never fit the KV budget,
     /// or are degenerate: empty prompt with tokens to generate).
     pub rejected: Vec<Request>,
+    /// Sessions offloaded to the host tier mid-session (asleep between
+    /// turns, KV parked in the engine's session store under their id).
+    pub suspended: Vec<RequestState>,
     budget: KvBudget,
     /// Sum of `total_tokens` over currently admitted requests.
     committed_tokens: usize,
+    /// Sum of `total_tokens` over offloaded (suspended) sessions.
+    host_committed: usize,
 }
 
 impl Router {
@@ -135,8 +190,10 @@ impl Router {
             slots: (0..num_slots).map(|_| None).collect(),
             completed: Vec::new(),
             rejected: Vec::new(),
+            suspended: Vec::new(),
             budget,
             committed_tokens: 0,
+            host_committed: 0,
         }
     }
 
@@ -147,6 +204,11 @@ impl Router {
     /// Aggregate KV tokens committed to admitted requests.
     pub fn committed_tokens(&self) -> usize {
         self.committed_tokens
+    }
+
+    /// Aggregate KV tokens of sessions parked in the host tier.
+    pub fn host_committed(&self) -> usize {
+        self.host_committed
     }
 
     /// Submit a request at serving clock `now`.
@@ -169,6 +231,8 @@ impl Router {
                 token_times: Vec::new(),
                 submitted_wall: now,
                 admitted_wall: now,
+                sleep_until: None,
+                last_step: 0,
             });
             return;
         }
@@ -183,21 +247,50 @@ impl Router {
         self.queue.push_back((req, now));
     }
 
-    /// Admit queued requests into free slots while the aggregate KV
-    /// budget holds; returns (slot, id) pairs. Strictly FIFO: admission
-    /// stops at the first request the budget cannot take, so a large
-    /// request at the head is never starved by smaller later arrivals.
-    pub fn admit(&mut self, step: u64, now: f64) -> Vec<(usize, u64)> {
-        let mut admitted = Vec::new();
+    /// One admission round, returning the slot transitions for the
+    /// serve loop to execute in order:
+    ///
+    /// 1. **Wake** resident sleepers whose idle period elapsed (free).
+    /// 2. **Restore** due offloaded sessions into slots, evicting the
+    ///    coldest resident sleeper (LRU over `last_step`) when no slot
+    ///    or budget headroom is free.
+    /// 3. **Open** queued requests, strictly FIFO — admission stops at
+    ///    the first request the budget cannot take, so a large request
+    ///    at the head is never starved by smaller later arrivals — also
+    ///    evicting cold sleepers to make room.
+    pub fn admit(&mut self, step: u64, now: f64) -> Vec<AdmitAction> {
+        let mut actions = Vec::new();
         for slot in 0..self.slots.len() {
-            if self.slots[slot].is_some() {
-                continue;
+            if let Some(st) = &mut self.slots[slot] {
+                if st.sleep_until.map_or(false, |w| step >= w) {
+                    st.sleep_until = None;
+                    actions.push(AdmitAction::Wake { slot, id: st.req.id });
+                }
             }
+        }
+        // Due offloaded sessions, oldest wake deadline first: they gate
+        // session completion the way the FIFO head gates admission.
+        self.suspended.sort_by_key(|s| (s.sleep_until.unwrap_or(0),
+                                        s.req.id));
+        while let Some(i) = self.suspended.iter().position(
+                |s| s.sleep_until.map_or(true, |w| step >= w)) {
+            let need = self.suspended[i].total_tokens();
+            let Some(slot) = self.make_room(need, step, &mut actions)
+            else { break };
+            let mut st = self.suspended.remove(i);
+            self.host_committed -= need;
+            self.committed_tokens += need;
+            st.sleep_until = None;
+            st.slot = slot;
+            let id = st.req.id;
+            self.slots[slot] = Some(st);
+            actions.push(AdmitAction::Restore { slot, id });
+        }
+        loop {
             let Some((req, _)) = self.queue.front() else { break };
             let need = req.kv_tokens();
-            if self.committed_tokens + need > self.budget.admissible() {
-                break;
-            }
+            let Some(slot) = self.make_room(need, step, &mut actions)
+            else { break };
             let (req, submitted_wall) = self.queue.pop_front().unwrap();
             self.committed_tokens += need;
             let id = req.id;
@@ -210,10 +303,49 @@ impl Router {
                 token_times: Vec::new(),
                 submitted_wall,
                 admitted_wall: now,
+                sleep_until: None,
+                last_step: step,
             });
-            admitted.push((slot, id));
+            actions.push(AdmitAction::Open { slot, id });
         }
-        admitted
+        actions
+    }
+
+    /// Find a free slot with `need` tokens of resident headroom,
+    /// evicting coldest sleeping residents to the host tier until both
+    /// hold (or nothing more can be evicted). Appends the Evict actions
+    /// it decides on.
+    fn make_room(&mut self, need: usize, step: u64,
+                 actions: &mut Vec<AdmitAction>) -> Option<usize> {
+        loop {
+            let free = self.slots.iter().position(|s| s.is_none());
+            if let Some(slot) = free {
+                if self.committed_tokens + need <= self.budget.admissible() {
+                    return Some(slot);
+                }
+            }
+            if self.budget.host_tokens == 0 {
+                return None; // offload disabled
+            }
+            let victim = self.slots.iter().enumerate()
+                .filter_map(|(i, s)| s.as_ref().map(|st| (i, st)))
+                .filter(|(_, st)| st.asleep(step))
+                .min_by_key(|(_, st)| (st.last_step, st.req.id))
+                .map(|(i, _)| i)?;
+            let st = self.slots[victim].take().unwrap();
+            let evicted = st.total_tokens();
+            if self.host_committed + evicted > self.budget.host_tokens {
+                self.slots[victim] = Some(st); // host tier full
+                return None;
+            }
+            self.committed_tokens -= evicted;
+            self.host_committed += evicted;
+            actions.push(AdmitAction::Evict { slot: victim,
+                                              id: st.req.id });
+            let mut st = st;
+            st.slot = usize::MAX;
+            self.suspended.push(st);
+        }
     }
 
     /// Retire finished requests, releasing their KV commitment; returns
@@ -239,6 +371,7 @@ impl Router {
 
     pub fn idle(&self) -> bool {
         self.queue.is_empty() && self.active_count() == 0
+            && self.suspended.is_empty()
     }
 }
 
@@ -248,7 +381,13 @@ mod tests {
 
     fn req(id: u64, prompt: usize, gen: usize) -> Request {
         Request { id, prompt: vec![1; prompt], max_new_tokens: gen,
-                  arrival: 0.0 }
+                  arrival: 0.0, turns: 1, idle_steps: 0 }
+    }
+
+    fn session(id: u64, prompt: usize, gen: usize, turns: usize,
+               idle: usize) -> Request {
+        Request { id, prompt: vec![1; prompt], max_new_tokens: gen,
+                  arrival: 0.0, turns, idle_steps: idle }
     }
 
     #[test]
@@ -280,7 +419,7 @@ mod tests {
         // 4 slots, aggregate budget 20, each request needs 8 tokens:
         // only two fit concurrently (24 > 20), despite 4 free slots.
         let budget = KvBudget { slot_tokens: 10, budget_tokens: 20,
-                                reserve_tokens: 0 };
+                                reserve_tokens: 0, host_tokens: 0 };
         let mut r = Router::new(4, budget);
         for i in 0..4 {
             r.submit(req(i, 3, 5), 0.0);
@@ -293,7 +432,10 @@ mod tests {
         // Retiring one request frees its commitment and unblocks the
         // FIFO head.
         {
-            let st = r.slots[adm[0].0].as_mut().unwrap();
+            let AdmitAction::Open { slot, .. } = adm[0] else {
+                panic!("expected Open, got {:?}", adm[0]);
+            };
+            let st = r.slots[slot].as_mut().unwrap();
             st.prompt_pos = 3;
             st.generated = vec![1, 2, 3, 4, 5];
         }
@@ -306,7 +448,7 @@ mod tests {
     #[test]
     fn reserve_watermark_shrinks_admissible_budget() {
         let budget = KvBudget { slot_tokens: 10, budget_tokens: 20,
-                                reserve_tokens: 5 };
+                                reserve_tokens: 5, host_tokens: 0 };
         assert_eq!(budget.admissible(), 15);
         let mut r = Router::new(4, budget);
         for i in 0..2 {
@@ -320,14 +462,13 @@ mod tests {
     #[test]
     fn fifo_head_is_not_starved_by_smaller_requests() {
         let budget = KvBudget { slot_tokens: 12, budget_tokens: 16,
-                                reserve_tokens: 0 };
+                                reserve_tokens: 0, host_tokens: 0 };
         let mut r = Router::new(4, budget);
         r.submit(req(0, 5, 5), 0.0); // 10 tokens, admitted
         r.submit(req(1, 6, 6), 0.0); // 12 tokens, blocked (22 > 16)
         r.submit(req(2, 1, 1), 0.0); // 2 tokens, would fit — must wait
         let adm = r.admit(0, 0.0);
-        assert_eq!(adm.len(), 1);
-        assert_eq!(adm[0].1, 0);
+        assert_eq!(adm, vec![AdmitAction::Open { slot: 0, id: 0 }]);
         // Strict FIFO: request 2 is NOT admitted around the blocked head.
         assert_eq!(r.queue.len(), 2);
         assert_eq!(r.queue[0].0.id, 1);
@@ -369,6 +510,8 @@ mod tests {
             token_times: Vec::new(),
             submitted_wall: 0.0,
             admitted_wall: 0.0,
+            sleep_until: None,
+            last_step: 0,
         };
         assert!(st.in_prefill());
         assert_eq!(st.next_input(), 1);
@@ -397,7 +540,138 @@ mod tests {
         assert_eq!(freed, vec![0]);
         assert_eq!(r.committed_tokens(), 0);
         let adm = r.admit(1, 0.0);
-        assert_eq!(adm, vec![(0, 1)]);
+        assert_eq!(adm, vec![AdmitAction::Open { slot: 0, id: 1 }]);
         assert_eq!(r.completed.len(), 1);
+    }
+
+    /// Put the session in `slot` to sleep until `wake`, stamping the
+    /// LRU key.
+    fn put_to_sleep(r: &mut Router, slot: usize, wake: u64,
+                    last_step: u64) {
+        let st = r.slots[slot].as_mut().unwrap();
+        st.sleep_until = Some(wake);
+        st.last_step = last_step;
+    }
+
+    #[test]
+    fn coldest_sleeper_is_evicted_for_new_arrival() {
+        let mut budget = KvBudget::uniform(100);
+        budget.host_tokens = 100;
+        let mut r = Router::new(2, budget);
+        r.submit(session(0, 2, 2, 2, 10), 0.0);
+        r.submit(session(1, 2, 2, 2, 10), 0.0);
+        r.admit(0, 0.0);
+        // Both sleep; session 0 is colder (decoded longest ago).
+        put_to_sleep(&mut r, 0, 50, 3);
+        put_to_sleep(&mut r, 1, 50, 7);
+        r.submit(req(2, 2, 2), 0.0);
+        let adm = r.admit(10, 0.0);
+        assert_eq!(adm, vec![
+            AdmitAction::Evict { slot: 0, id: 0 },
+            AdmitAction::Open { slot: 0, id: 2 },
+        ]);
+        assert_eq!(r.suspended.len(), 1);
+        assert_eq!(r.host_committed(), 6);
+        // The warmer sleeper (id 1) stays resident.
+        assert_eq!(r.slots[1].as_ref().unwrap().req.id, 1);
+    }
+
+    #[test]
+    fn no_host_budget_means_no_eviction() {
+        let mut r = Router::new(1, KvBudget::uniform(100));
+        r.submit(session(0, 2, 2, 2, 10), 0.0);
+        r.admit(0, 0.0);
+        put_to_sleep(&mut r, 0, 50, 0);
+        r.submit(req(1, 2, 2), 0.0);
+        assert!(r.admit(10, 0.0).is_empty(),
+                "host_tokens == 0 must pin idle sessions resident");
+        assert_eq!(r.queue.len(), 1);
+    }
+
+    #[test]
+    fn due_suspended_session_restores_before_queue() {
+        let mut budget = KvBudget::uniform(100);
+        budget.host_tokens = 100;
+        let mut r = Router::new(2, budget);
+        r.submit(session(0, 2, 2, 3, 5), 0.0);
+        r.submit(session(1, 2, 2, 3, 5), 0.0);
+        r.admit(0, 0.0);
+        put_to_sleep(&mut r, 0, 20, 1);
+        put_to_sleep(&mut r, 1, 30, 2);
+        // Two new arrivals evict both sleepers.
+        r.submit(req(2, 2, 2), 0.0);
+        r.submit(req(3, 2, 2), 0.0);
+        let adm = r.admit(5, 0.0);
+        assert_eq!(adm.iter().filter(|a| matches!(
+            a, AdmitAction::Evict { .. })).count(), 2);
+        assert_eq!(r.suspended.len(), 2);
+        // Finish the newcomers, then reach session 0's wake step: it is
+        // restored (and outranks the still-sleeping session 1).
+        for slot in [0, 1] {
+            let st = r.slots[slot].as_mut().unwrap();
+            st.prompt_pos = 2;
+            st.generated = vec![9, 9];
+        }
+        r.retire();
+        let adm = r.admit(20, 0.0);
+        assert!(adm.contains(&AdmitAction::Restore { slot: 0, id: 0 }),
+                "due session must restore, got {adm:?}");
+        assert!(!adm.iter().any(|a| matches!(
+            a, AdmitAction::Restore { id: 1, .. })),
+                "session 1 sleeps until 30, got {adm:?}");
+        assert_eq!(r.slots[0].as_ref().unwrap().req.id, 0);
+        assert!(r.slots[0].as_ref().unwrap().sleep_until.is_none());
+    }
+
+    #[test]
+    fn resident_sleeper_wakes_in_place() {
+        let mut r = Router::new(1, KvBudget::uniform(100));
+        r.submit(session(0, 2, 2, 2, 4), 0.0);
+        r.admit(0, 0.0);
+        put_to_sleep(&mut r, 0, 8, 3);
+        assert!(r.admit(7, 0.0).is_empty(), "not due yet");
+        assert_eq!(r.admit(8, 0.0),
+                   vec![AdmitAction::Wake { slot: 0, id: 0 }]);
+        assert!(r.slots[0].as_ref().unwrap().sleep_until.is_none());
+    }
+
+    #[test]
+    fn host_budget_caps_offload() {
+        let mut budget = KvBudget::uniform(100);
+        budget.host_tokens = 7; // one 6-token session fits, not two
+        let mut r = Router::new(2, budget);
+        r.submit(session(0, 2, 2, 2, 50), 0.0);
+        r.submit(session(1, 2, 2, 2, 50), 0.0);
+        r.admit(0, 0.0);
+        put_to_sleep(&mut r, 0, 90, 1);
+        put_to_sleep(&mut r, 1, 90, 2);
+        r.submit(req(2, 2, 2), 0.0);
+        r.submit(req(3, 2, 2), 0.0);
+        let adm = r.admit(10, 0.0);
+        // Only one eviction fits the host tier; one newcomer waits.
+        assert_eq!(adm.iter().filter(|a| matches!(
+            a, AdmitAction::Evict { .. })).count(), 1);
+        assert_eq!(r.queue.len(), 1);
+        assert_eq!(r.host_committed(), 6);
+    }
+
+    #[test]
+    fn multi_turn_done_counts_all_turns() {
+        let mut st = RequestState {
+            req: session(0, 2, 3, 2, 5),
+            slot: 0,
+            prompt_pos: 2,
+            generated: vec![1, 2, 3],
+            admitted_step: 0,
+            token_times: Vec::new(),
+            submitted_wall: 0.0,
+            admitted_wall: 0.0,
+            sleep_until: None,
+            last_step: 0,
+        };
+        assert!(!st.done(), "one of two turns generated");
+        assert_eq!(st.req.kv_tokens(), 2 + 6);
+        st.generated.extend([4, 5, 6]);
+        assert!(st.done());
     }
 }

@@ -2,18 +2,18 @@
 //! batching — arrival-driven submission, KV-budget admission, per-step
 //! active masks, retirement — measuring TTL/TTFT/TPOT and throughput.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
-use crate::engine::HelixCluster;
+use crate::engine::{HelixCluster, SessionSnapshot};
 use crate::plan::Plan;
 use crate::util::Rng;
 
 use super::batcher;
 use super::metrics::ServeMetrics;
-use super::router::{KvBudget, Request, Router};
+use super::router::{AdmitAction, KvBudget, Request, Router};
 
 /// Synthetic workload description (the paper's interactive-agent
 /// scenario: modest prompts, streaming decode, bursty arrivals).
@@ -30,6 +30,12 @@ pub struct Workload {
     /// Requests per burst: arrivals land `burst` at a time at the same
     /// step (models agentic fan-out). `<= 1` means independent arrivals.
     pub burst: usize,
+    /// Conversation turns per session (`<= 1` = single-shot). Each turn
+    /// generates `gen_len` tokens on top of the accumulated context.
+    pub turns: usize,
+    /// Engine steps a session sleeps between turns (user think-time);
+    /// its KV stays cached — resident or offloaded — across the gap.
+    pub idle_steps: usize,
 }
 
 impl Workload {
@@ -54,6 +60,8 @@ impl Workload {
                     prompt,
                     max_new_tokens: glen,
                     arrival: clock,
+                    turns: self.turns.max(1),
+                    idle_steps: self.idle_steps,
                 }
             })
             .collect()
@@ -89,6 +97,8 @@ impl ServeReport {
                   Json::Num(self.kv_budget.budget_tokens as f64));
         kb.insert("reserve_tokens".into(),
                   Json::Num(self.kv_budget.reserve_tokens as f64));
+        kb.insert("host_tokens".into(),
+                  Json::Num(self.kv_budget.host_tokens as f64));
         m.insert("kv_budget".into(), Json::Obj(kb));
         if let Some(d) = self.max_ref_diff {
             m.insert("max_ref_diff".into(), Json::Num(d as f64));
@@ -112,6 +122,9 @@ impl ServeReport {
              queue delay mean   : {:.2} ms\n\
              peak active slots  : {}\n\
              peak KV tokens     : {} committed {} (budget {}, reserve {})\n\
+             evict / restore    : {} / {} (restore p50/p99 {:.2} / {:.2} ms)\n\
+             peak offloaded KV  : {} tokens (host budget {})\n\
+             KV page slack      : {:.1}% peak\n\
              tokens/s (system)  : {:.1}\n\
              tokens/s/user      : {:.1}\n\
              tokens/s/GPU       : {:.1}{}",
@@ -124,6 +137,10 @@ impl ServeReport {
             m.queue_delay_mean() * 1e3,
             m.peak_active, m.peak_kv_tokens, m.peak_committed_tokens,
             self.kv_budget.budget_tokens, self.kv_budget.reserve_tokens,
+            m.evictions, m.restores,
+            m.restore_p50() * 1e3, m.restore_p99() * 1e3,
+            m.peak_offloaded_tokens, self.kv_budget.host_tokens,
+            m.kv_page_slack * 100.0,
             m.tokens_per_sec(), m.tokens_per_sec_per_user(),
             m.tokens_per_sec() / self.gpus as f64,
             match self.max_ref_diff {
@@ -134,10 +151,16 @@ impl ServeReport {
     }
 }
 
-/// The server: a cluster plus a router.
+/// The server: a cluster plus a router, plus the host-tier snapshots
+/// of sessions the admission layer has parked off-device.
 pub struct Server {
     pub cluster: HelixCluster,
     pub router: Router,
+    /// Evicted sessions, keyed by request id. The KV bytes themselves
+    /// sit in the per-rank [`crate::engine::SessionStore`]; the
+    /// snapshot here is the coordinator-side bookkeeping (logical
+    /// length, verify mirror) needed to restore.
+    snapshots: HashMap<u64, SessionSnapshot>,
 }
 
 impl Server {
@@ -151,9 +174,18 @@ impl Server {
     /// tighter HBM envelope than the preallocated caches). The reserve
     /// watermark holds one round-robin block per KVP shard back from
     /// admission, clamped so a single full-size request stays
-    /// admissible.
+    /// admissible. No host tier: admission never offloads.
     pub fn with_kv_budget(cluster: HelixCluster, budget_tokens: usize)
                           -> Server {
+        Server::with_budgets(cluster, budget_tokens, 0)
+    }
+
+    /// [`Self::with_kv_budget`] plus a host-tier budget: up to
+    /// `host_tokens` of idle-session KV may be evicted to the session
+    /// store to make room for new admissions, and restored when the
+    /// session wakes. `0` disables offload.
+    pub fn with_budgets(cluster: HelixCluster, budget_tokens: usize,
+                        host_tokens: usize) -> Server {
         let slots = cluster.batch();
         let slot_tokens = cluster.slot_kv_tokens();
         let reserve = (cluster.cfg.kv_block * cluster.layout.kvp)
@@ -162,18 +194,21 @@ impl Server {
             slot_tokens,
             budget_tokens,
             reserve_tokens: reserve,
+            host_tokens,
         };
-        Server { cluster, router: Router::new(slots, budget) }
+        Server { cluster, router: Router::new(slots, budget),
+                 snapshots: HashMap::new() }
     }
 
     /// Boot a server straight from a planner [`Plan`]: the planned
     /// layout becomes the cluster, and the plan's KV budget becomes the
     /// admission budget (clamped to the cluster's physical pool — the
     /// planner's envelope can never oversubscribe the real caches).
+    /// The plan's host-tier budget becomes the offload allowance.
     pub fn from_plan(plan: &Plan) -> Result<Server> {
         let cluster = HelixCluster::from_plan(plan)?;
         let budget = plan.kv_budget.min(cluster.kv_budget_tokens());
-        Ok(Server::with_kv_budget(cluster, budget))
+        Ok(Server::with_budgets(cluster, budget, plan.host_kv_budget))
     }
 
     /// Run a synthetic workload to completion (or `max_steps`).
@@ -220,10 +255,41 @@ impl Server {
                 continue;
             }
 
-            for (slot, _) in self.router.admit(step, clock) {
-                self.cluster.open_slot(slot)?;
+            for act in self.router.admit(step, clock) {
+                match act {
+                    AdmitAction::Open { slot, .. } => {
+                        self.cluster.open_slot(slot)?;
+                    }
+                    AdmitAction::Wake { slot, .. } => {
+                        // KV stayed resident through the sleep; just
+                        // rejoin the batch, no reset.
+                        self.cluster.reopen_slot(slot)?;
+                    }
+                    AdmitAction::Evict { slot, id } => {
+                        let snap = self.cluster.evict_slot(slot, id)?;
+                        self.snapshots.insert(id, snap);
+                        metrics.evictions += 1;
+                    }
+                    AdmitAction::Restore { slot, id } => {
+                        let snap = self.snapshots.remove(&id)
+                            .with_context(|| format!(
+                                "no snapshot for session {id}"))?;
+                        let tr = Instant::now();
+                        self.cluster.restore_slot(slot, &snap)?;
+                        metrics.restore_times
+                            .push(tr.elapsed().as_secs_f64());
+                        metrics.restores += 1;
+                    }
+                }
             }
             let sb = batcher::build_step(&self.router, self.cluster.batch());
+            if !sb.active.iter().any(|&a| a) {
+                // Every resident session is asleep between turns and
+                // nothing new is admissible: idle-tick the step clock
+                // instead of running an all-masked decode.
+                step += 1;
+                continue;
+            }
             // Slots the engine should treat as live this step.
             self.cluster.active = sb.active.clone();
 
@@ -249,7 +315,12 @@ impl Server {
             if let Some(d) = sm.max_ref_diff {
                 max_diff = Some(max_diff.unwrap_or(0.0).max(d));
             }
-            batcher::apply_step(&mut self.router, &sb, &next, clock);
+            for slot in batcher::apply_step(&mut self.router, &sb, &next,
+                                            clock, step) {
+                // Turn boundary: the session sleeps with its KV resident
+                // (admission may later evict it to the host tier).
+                self.cluster.close_slot(slot);
+            }
             metrics.generated_tokens += self
                 .router
                 .slots
@@ -263,10 +334,22 @@ impl Server {
             metrics.peak_committed_tokens = metrics
                 .peak_committed_tokens
                 .max(self.router.committed_tokens());
+            metrics.peak_offloaded_tokens = metrics
+                .peak_offloaded_tokens
+                .max(self.router.host_committed());
+            let (live, alloc) = self.cluster.kv_page_stats();
+            if alloc > 0 {
+                metrics.kv_page_slack = metrics.kv_page_slack
+                    .max((alloc - live) as f64 / alloc as f64);
+            }
             metrics.peak_active =
                 metrics.peak_active.max(self.router.active_count());
             for slot in self.router.retire() {
                 self.cluster.close_slot(slot);
+                // Retired, not sleeping: the KV is garbage now, so drop
+                // it from the resident gauges ([`open_slot`] resets the
+                // physical rows on reuse).
+                self.cluster.lens[slot] = 0;
             }
             step += 1;
         }
@@ -300,7 +383,8 @@ mod tests {
     fn workload_arrivals_are_monotone_and_bursty() {
         let w = Workload { num_requests: 12, prompt_len: (2, 4),
                            gen_len: (3, 5), seed: 9,
-                           arrival_rate: 0.5, burst: 3 };
+                           arrival_rate: 0.5, burst: 3,
+                           turns: 1, idle_steps: 0 };
         let reqs = w.generate(128);
         assert_eq!(reqs.len(), 12);
         for pair in reqs.windows(2) {
@@ -318,7 +402,8 @@ mod tests {
     fn offline_workload_arrives_at_step_zero() {
         let w = Workload { num_requests: 5, prompt_len: (2, 4),
                            gen_len: (3, 5), seed: 9,
-                           arrival_rate: 0.0, burst: 1 };
+                           arrival_rate: 0.0, burst: 1,
+                           turns: 1, idle_steps: 0 };
         assert!(w.generate(128).iter().all(|r| r.arrival == 0.0));
     }
 
@@ -326,7 +411,8 @@ mod tests {
     fn workload_is_deterministic_per_seed() {
         let w = Workload { num_requests: 8, prompt_len: (2, 6),
                            gen_len: (3, 5), seed: 41,
-                           arrival_rate: 1.5, burst: 2 };
+                           arrival_rate: 1.5, burst: 2,
+                           turns: 1, idle_steps: 0 };
         let (a, b) = (w.generate(64), w.generate(64));
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.prompt, y.prompt);

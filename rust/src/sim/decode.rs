@@ -217,7 +217,7 @@ mod tests {
             .map(|p| 64usize * (1 << p))
             .filter(|&b| {
                 evaluate(&m, &h, Strategy::DpEp,
-                         &Layout { kvp: 64, tpa: 1, tpf: 1, ep: 64, pp: 1 },
+                         &Layout { kvp: 64, tpa: 1, tpf: 1, ep: 64, pp: 1, page: 0 },
                          b, 1.0e6)
                     .is_some()
             })

@@ -50,6 +50,18 @@ fn assert_all_cells_complete(me: &ModelEval) {
                         KV envelope)", pe.plan.layout.key(), sc.name);
             assert!(run.generated_tokens > 0);
             assert!(run.steps > 0);
+            // A drained run parks no session in the host tier: every
+            // eviction was followed by the restore that finished the
+            // session's remaining turns.
+            assert_eq!(run.evictions, run.restores,
+                       "[{}] {} left sessions offloaded",
+                       pe.plan.layout.key(), sc.name);
+            if sc.name == "session_churn" {
+                assert!(run.evictions > 0,
+                        "[{}] session_churn never churned (8 multi-turn \
+                         sessions over 4 slots must evict sleepers)",
+                        pe.plan.layout.key());
+            }
         }
         let m = pe.plan.measured.as_ref().expect("measured slot filled");
         assert_eq!(m.completed,

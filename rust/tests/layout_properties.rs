@@ -23,6 +23,7 @@ fn valid_helix_layouts_never_duplicate_kv() {
             tpf: 1,
             ep: 1,
             pp: 1,
+            page: 0,
         };
         let lo = Layout { tpf: lo.n(), ..lo };
         if lo.validate(&m, false).is_ok() {
@@ -39,7 +40,7 @@ fn duplication_factor_matches_definition() {
     forall("dup = max(1, tpa/K)", 200, |rng| {
         let m = random_model(rng);
         let tpa = pow2(rng, 7);
-        let lo = Layout { kvp: 1, tpa, tpf: tpa, ep: 1, pp: 1 };
+        let lo = Layout { kvp: 1, tpa, tpf: tpa, ep: 1, pp: 1, page: 0 };
         let k = m.attention.kv_heads() as f64;
         let want = (tpa as f64 / k).max(1.0);
         assert_eq!(lo.kv_duplication(&m), want);
@@ -55,7 +56,7 @@ fn gpu_accounting_is_consistent() {
         if kvp % ep != 0 {
             return;
         }
-        let lo = Layout { kvp, tpa: 1, tpf: kvp / ep, ep, pp: 1 };
+        let lo = Layout { kvp, tpa: 1, tpf: kvp / ep, ep, pp: 1, page: 0 };
         if lo.validate(&m, false).is_ok() {
             assert_eq!(lo.gpus(), lo.n());
             assert_eq!(lo.tpf * lo.ep, lo.kvp * lo.tpa);
@@ -69,7 +70,7 @@ fn validate_rejects_mismatched_ffn_grid() {
         let m = ModelSpec::llama_405b();
         let kvp = pow2(rng, 3);
         let tpa = pow2(rng, 3);
-        let lo = Layout { kvp, tpa, tpf: kvp * tpa * 2, ep: 1, pp: 1 };
+        let lo = Layout { kvp, tpa, tpf: kvp * tpa * 2, ep: 1, pp: 1, page: 0 };
         assert!(lo.validate(&m, true).is_err());
     });
 }

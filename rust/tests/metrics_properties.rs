@@ -121,6 +121,7 @@ fn random_measured_plan(rng: &mut Rng) -> Plan {
         predicted: Predicted { ttl_ms: 1.0, interactivity: 1000.0,
                                tokens_per_gpu_s: 10.0 },
         kv_budget: 1024,
+        host_kv_budget: 0,
         measured: Some(Measured {
             ttl_p50_ms: if inter > 0.0 { 1e3 / inter } else { 0.0 },
             ttl_p95_ms: 0.0,
@@ -135,6 +136,9 @@ fn random_measured_plan(rng: &mut Rng) -> Plan {
             steps: 1,
             generated_tokens: 1,
             wall_s: 1.0,
+            evictions: 0,
+            restores: 0,
+            restore_p99_ms: 0.0,
         }),
     }
 }

@@ -137,7 +137,8 @@ fn planned_serving_matches_direct_serving() {
     let best = planner("tiny_gqa").best().unwrap();
     let workload = Workload { num_requests: 4, prompt_len: (2, 4),
                               gen_len: (3, 5), seed: 123,
-                              arrival_rate: 0.0, burst: 1 };
+                              arrival_rate: 0.0, burst: 1,
+                              turns: 1, idle_steps: 0 };
 
     let mut planned = match Server::from_plan(&best) {
         Ok(s) => s,

@@ -44,7 +44,8 @@ fn bursty_trace_respects_kv_budget_and_matches_solo_decode() {
     const BUDGET: usize = 30;
     let workload = Workload { num_requests: 12, prompt_len: (3, 6),
                               gen_len: (5, 9), seed: 13,
-                              arrival_rate: 1.5, burst: 3 };
+                              arrival_rate: 1.5, burst: 3,
+                              turns: 1, idle_steps: 0 };
     let trace = workload.generate(vocab);
     assert!(trace.iter().all(|r| {
         let t = r.prompt.len() + r.max_new_tokens;
@@ -84,7 +85,7 @@ fn bursty_trace_respects_kv_budget_and_matches_solo_decode() {
     for req in &trace {
         let solo_req = Request { id: req.id, prompt: req.prompt.clone(),
                                  max_new_tokens: req.max_new_tokens,
-                                 arrival: 0.0 };
+                                 arrival: 0.0, turns: 1, idle_steps: 0 };
         let rep = solo.run_trace(vec![solo_req], 10_000).unwrap();
         assert_eq!(rep.completed, 1);
         let st = solo.router.completed.last().unwrap();
@@ -104,7 +105,8 @@ fn completes_more_requests_than_slots() {
     let mut server = Server::new(c);
     let workload = Workload { num_requests: 10, prompt_len: (2, 5),
                               gen_len: (4, 8), seed: 3,
-                              arrival_rate: 0.0, burst: 1 };
+                              arrival_rate: 0.0, burst: 1,
+                              turns: 1, idle_steps: 0 };
     let report = server.run(&workload, 10_000).unwrap();
     assert_eq!(report.completed, 10);
     assert_eq!(report.rejected, 0);
@@ -131,7 +133,8 @@ fn hopb_partial_batch_serving_is_exact() {
     let mut server = Server::with_kv_budget(c, 30);
     let workload = Workload { num_requests: 8, prompt_len: (3, 6),
                               gen_len: (5, 9), seed: 21,
-                              arrival_rate: 2.0, burst: 2 };
+                              arrival_rate: 2.0, burst: 2,
+                              turns: 1, idle_steps: 0 };
     let report = server.run(&workload, 100_000).unwrap();
     assert_eq!(report.completed, 8);
     assert!(report.metrics.peak_active >= 2, "HOP-B path never exercised");
@@ -146,7 +149,8 @@ fn every_request_generates_requested_tokens() {
     let mut server = Server::new(c);
     let workload = Workload { num_requests: 6, prompt_len: (3, 3),
                               gen_len: (5, 9), seed: 11,
-                              arrival_rate: 0.0, burst: 1 };
+                              arrival_rate: 0.0, burst: 1,
+                              turns: 1, idle_steps: 0 };
     server.run(&workload, 10_000).unwrap();
     for st in &server.router.completed {
         assert_eq!(st.generated.len(), st.req.max_new_tokens,
@@ -171,7 +175,8 @@ fn oversized_requests_are_rejected_not_wedged() {
     let mut server = Server::new(c);
     let workload = Workload { num_requests: 3, prompt_len: (cap, cap + 4),
                               gen_len: (8, 8), seed: 1,
-                              arrival_rate: 0.0, burst: 1 };
+                              arrival_rate: 0.0, burst: 1,
+                              turns: 1, idle_steps: 0 };
     let report = server.run(&workload, 1_000).unwrap();
     assert_eq!(report.completed, 0);
     assert_eq!(report.rejected, 3);
@@ -186,14 +191,15 @@ fn degenerate_requests_never_reach_the_engine() {
     // Zero-generation requests fast-path to completion at submit...
     let zero_gen = Workload { num_requests: 4, prompt_len: (2, 5),
                               gen_len: (0, 0), seed: 17,
-                              arrival_rate: 0.0, burst: 1 };
+                              arrival_rate: 0.0, burst: 1,
+                              turns: 1, idle_steps: 0 };
     let report = server.run(&zero_gen, 1_000).unwrap();
     assert_eq!(report.completed, 4);
     assert_eq!(report.metrics.steps, 0,
                "zero-gen requests must not occupy engine steps");
     // ... and empty prompts are rejected, not silently fed token 0.
     let empty = Request { id: 99, prompt: vec![], max_new_tokens: 3,
-                          arrival: 0.0 };
+                          arrival: 0.0, turns: 1, idle_steps: 0 };
     let report = server.run_trace(vec![empty], 1_000).unwrap();
     assert_eq!(report.completed, 0);
     assert_eq!(report.rejected, 1);
@@ -207,7 +213,8 @@ fn deterministic_given_seed() {
         let mut server = Server::new(c);
         let workload = Workload { num_requests: 4, prompt_len: (2, 4),
                                   gen_len: (4, 6), seed: 99,
-                                  arrival_rate: 0.7, burst: 2 };
+                                  arrival_rate: 0.7, burst: 2,
+                              turns: 1, idle_steps: 0 };
         server.run(&workload, 10_000).unwrap();
         let mut outs: Vec<(u64, Vec<i32>)> = server
             .router
@@ -229,7 +236,8 @@ fn moe_serving_works() {
     let mut server = Server::new(c);
     let workload = Workload { num_requests: 5, prompt_len: (2, 4),
                               gen_len: (4, 6), seed: 5,
-                              arrival_rate: 0.0, burst: 1 };
+                              arrival_rate: 0.0, burst: 1,
+                              turns: 1, idle_steps: 0 };
     let report = server.run(&workload, 10_000).unwrap();
     assert_eq!(report.completed, 5);
     assert!(report.max_ref_diff.unwrap() < 1e-3);
@@ -242,7 +250,8 @@ fn mla_serving_works() {
     let mut server = Server::new(c);
     let workload = Workload { num_requests: 5, prompt_len: (2, 4),
                               gen_len: (4, 6), seed: 6,
-                              arrival_rate: 0.0, burst: 1 };
+                              arrival_rate: 0.0, burst: 1,
+                              turns: 1, idle_steps: 0 };
     let report = server.run(&workload, 10_000).unwrap();
     assert_eq!(report.completed, 5);
     assert!(report.max_ref_diff.unwrap() < 1e-3);

@@ -1,0 +1,149 @@
+//! Churn-aware admission: a multi-turn session population whose total
+//! KV demand oversubscribes the resident budget several times over must
+//! still complete in full — idle sessions are evicted to the host-tier
+//! session store, restored when they wake, and the generated tokens are
+//! bit-identical to an uncontended run. The offload path streams KV as
+//! per-KVP-rank blobs: the coordinator never sees the bytes.
+
+mod common;
+
+use std::collections::HashMap;
+
+use helix::config::Layout;
+use helix::engine::ClusterConfig;
+use helix::serve::{Server, Workload};
+
+use crate::common::cluster_or_skip;
+
+const MODEL: &str = "tiny_gqa";
+
+fn layout() -> Layout {
+    Layout::helix(2, 2, 4, 1)
+}
+
+/// The evict/restore byte streams are per-rank: every rank parks its
+/// own shard blob in the session store, and the coordinator-side
+/// snapshot carries identity + logical length only (zero KV bytes in a
+/// serving configuration).
+#[test]
+fn offload_streams_bypass_the_coordinator() {
+    let cc = ClusterConfig::new(MODEL, layout());
+    let Some(mut cluster) = cluster_or_skip(cc) else { return };
+    let b = cluster.batch();
+    let n = cluster.n();
+    cluster.open_slot(0).unwrap();
+
+    // Reference: the same session decoded without the host-tier trip.
+    let cc = ClusterConfig::new(MODEL, layout());
+    let Some(mut flat) = cluster_or_skip(cc) else { return };
+    flat.open_slot(0).unwrap();
+    let mut ref_stream = Vec::new();
+    let mut tokens = vec![9i32; b];
+    for _ in 0..8 {
+        let (next, _) = flat.decode_step(&tokens).unwrap();
+        ref_stream.push(next[0]);
+        tokens = next;
+    }
+    flat.shutdown();
+
+    let mut tokens = vec![9i32; b];
+    for _ in 0..5 {
+        let (next, _) = cluster.decode_step(&tokens).unwrap();
+        assert_eq!(next[0], ref_stream.remove(0));
+        tokens = next;
+    }
+    let snap = cluster.evict_slot(0, 77).unwrap();
+    assert_eq!(snap.coordinator_kv_bytes(), 0,
+               "offload must not gather KV through the coordinator");
+    let st = cluster.store_stats();
+    assert!(st.bytes_in > 0, "eviction streamed no KV to the host tier");
+    assert_eq!(st.blobs, n, "one blob per rank, not one gathered blob");
+
+    // Resume in a different slot; the continuation must keep matching
+    // the uninterrupted reference.
+    cluster.restore_slot(2, &snap).unwrap();
+    assert_eq!(cluster.store_stats().blobs, 0);
+    tokens[2] = tokens[0];
+    for _ in 0..3 {
+        let (next, _) = cluster.decode_step(&tokens).unwrap();
+        assert_eq!(next[2], ref_stream.remove(0),
+                   "restored session diverged from the reference");
+        tokens = next;
+    }
+    cluster.shutdown();
+}
+
+fn churn_workload() -> Workload {
+    Workload {
+        num_requests: 12,
+        prompt_len: (4, 8),
+        gen_len: (6, 10),
+        seed: 1234,
+        arrival_rate: 0.4,
+        burst: 1,
+        turns: 3,
+        idle_steps: 6,
+    }
+}
+
+fn completed_tokens(server: &Server) -> HashMap<u64, Vec<i32>> {
+    server.router.completed.iter()
+        .map(|st| (st.req.id, st.generated.clone()))
+        .collect()
+}
+
+/// The acceptance pin: total session KV >= 4x the resident budget, yet
+/// every session is admitted and completes, with tokens bit-identical
+/// to a run under the full physical budget (no churn at all).
+#[test]
+fn oversubscribed_population_completes_bit_identically() {
+    let wl = churn_workload();
+    const RESIDENT_BUDGET: usize = 80;
+
+    // Uncontended reference: full physical budget, offload disabled.
+    let cc = ClusterConfig::new(MODEL, layout());
+    let Some(cluster) = cluster_or_skip(cc) else { return };
+    let demand: usize = wl.generate(cluster.cfg.vocab).iter()
+        .map(|r| r.kv_tokens()).sum();
+    assert!(demand >= 4 * RESIDENT_BUDGET,
+            "population demands {demand} KV tokens, want >= 4x the \
+             {RESIDENT_BUDGET}-token resident budget");
+    let physical = cluster.kv_budget_tokens();
+    let mut generous = Server::with_budgets(cluster, physical, 0);
+    let ref_report = generous.run(&wl, 100_000).unwrap();
+    assert_eq!(ref_report.completed, wl.num_requests);
+    assert_eq!(ref_report.rejected, 0);
+    assert_eq!(ref_report.metrics.evictions, 0,
+               "the generous run must not churn");
+    let want = completed_tokens(&generous);
+    generous.cluster.shutdown();
+
+    // Churned run: a resident budget the population oversubscribes 4x,
+    // with an ample host tier to absorb the evictions.
+    let cc = ClusterConfig::new(MODEL, layout());
+    let Some(cluster) = cluster_or_skip(cc) else { return };
+    let mut server = Server::with_budgets(cluster, RESIDENT_BUDGET,
+                                          10 * RESIDENT_BUDGET);
+    let report = server.run(&wl, 100_000).unwrap();
+    assert_eq!(report.completed, wl.num_requests,
+               "every oversubscribed session must complete");
+    assert_eq!(report.rejected, 0);
+    assert!(report.metrics.evictions > 0,
+            "a 4x-oversubscribed population must churn");
+    assert_eq!(report.metrics.evictions, report.metrics.restores,
+               "a drained run leaves no session parked in the host tier");
+    assert!(report.metrics.peak_offloaded_tokens > 0);
+    let st = server.cluster.store_stats();
+    assert!(st.bytes_in > 0 && st.bytes_out > 0,
+            "churn must move KV through the session store: {st:?}");
+    assert_eq!(st.blobs, 0, "store must drain by completion");
+
+    let got = completed_tokens(&server);
+    assert_eq!(got.len(), want.len());
+    for (id, tokens) in &want {
+        assert_eq!(got.get(id), Some(tokens),
+                   "session {id}: churned tokens differ from the \
+                    uncontended run");
+    }
+    server.cluster.shutdown();
+}

@@ -1,0 +1,161 @@
+//! Offload/restore exactness: suspending a session to the host-tier
+//! store and resuming it — even into a *different* batch slot — must
+//! leave the decoded token stream bit-identical to an uninterrupted
+//! run, across KVP widths and native worker counts. The per-rank blob
+//! format round-trips logical order, so storage layout (page tables,
+//! pool order) is free to differ before and after the trip.
+//!
+//! One #[test] on purpose: the matrix mutates `HELIX_NATIVE_THREADS`,
+//! which is process-global state — parallel tests in this binary would
+//! race it (same convention as tests/concurrency_exactness.rs).
+
+mod common;
+
+use std::time::{Duration, Instant};
+
+use helix::config::Layout;
+use helix::engine::ClusterConfig;
+
+use crate::common::cluster_or_skip;
+
+const PRE: usize = 6; // decode steps before the evict/restore trip
+const POST: usize = 6; // decode steps after it
+
+fn verify_cluster(model: &str, layout: Layout)
+                  -> Option<helix::engine::HelixCluster> {
+    let mut cc = ClusterConfig::new(model, layout);
+    cc.verify = true; // keep the unsharded oracle checking every step
+    let mut cluster = cluster_or_skip(cc)?;
+    for s in 0..cluster.batch() {
+        cluster.open_slot(s).unwrap();
+    }
+    Some(cluster)
+}
+
+fn step(cluster: &mut helix::engine::HelixCluster, tokens: &[i32])
+        -> Vec<i32> {
+    let (next, m) = cluster.decode_step(tokens).expect("decode step");
+    if let Some(d) = m.max_ref_diff {
+        assert!(d < 1e-3, "engine drifted {d:.3e} from the reference");
+    }
+    next
+}
+
+/// Uninterrupted run: PRE + POST steps, sessions never leave their
+/// slots. The stream is indexed [step][session].
+fn reference(model: &str, layout: Layout) -> Option<Vec<Vec<i32>>> {
+    let mut cluster = verify_cluster(model, layout)?;
+    let mut tokens: Vec<i32> =
+        (0..cluster.batch() as i32).map(|i| i + 5).collect();
+    let mut stream = Vec::with_capacity(PRE + POST);
+    for _ in 0..PRE + POST {
+        let next = step(&mut cluster, &tokens);
+        stream.push(next.clone());
+        tokens = next;
+    }
+    cluster.shutdown();
+    Some(stream)
+}
+
+/// Churned run: after PRE steps, sessions in slots 1 and 2 are evicted
+/// to the host tier and restored *swapped* (session from slot 1 comes
+/// back in slot 2 and vice versa), then decode POST more steps. The
+/// returned stream is re-indexed by session so it must equal the
+/// reference bit for bit.
+fn churned(model: &str, layout: Layout) -> Option<Vec<Vec<i32>>> {
+    let mut cluster = verify_cluster(model, layout)?;
+    let n = cluster.n();
+    let mut tokens: Vec<i32> =
+        (0..cluster.batch() as i32).map(|i| i + 5).collect();
+    let mut stream = Vec::with_capacity(PRE + POST);
+    for _ in 0..PRE {
+        let next = step(&mut cluster, &tokens);
+        stream.push(next.clone());
+        tokens = next;
+    }
+
+    // Suspend two sessions: every rank streams its own shard to the
+    // store, so the blob count is sessions x ranks.
+    let snap1 = cluster.evict_slot(1, 101).expect("evict slot 1");
+    let snap2 = cluster.evict_slot(2, 102).expect("evict slot 2");
+    let st = cluster.store_stats();
+    assert!(st.bytes_in > 0, "eviction streamed no KV bytes");
+    assert_eq!(st.blobs, 2 * n,
+               "expected one host-tier blob per (session, rank)");
+
+    // Resume them swapped: restore is slot-agnostic because blobs are
+    // serialized in logical token order, not storage order.
+    cluster.restore_slot(1, &snap2).expect("restore 102 into slot 1");
+    cluster.restore_slot(2, &snap1).expect("restore 101 into slot 2");
+    let st = cluster.store_stats();
+    assert_eq!(st.blobs, 0, "restore must drain the store");
+    assert!(st.bytes_out >= st.bytes_in);
+
+    // Slot r now holds the session that generated tokens[perm[r]].
+    tokens.swap(1, 2);
+    for _ in 0..POST {
+        let next = step(&mut cluster, &tokens);
+        let mut by_session = next.clone();
+        by_session.swap(1, 2); // undo the slot permutation
+        stream.push(by_session);
+        tokens = next;
+    }
+    cluster.shutdown();
+    Some(stream)
+}
+
+/// Hang-proofing: a rank that dies mid-run turns the next evict
+/// collective into a timely coordinator error, never a deadlock.
+fn crash_during_evict_errors() {
+    let mut cc = ClusterConfig::new("tiny_gqa", Layout::helix(2, 2, 4, 1));
+    cc.recv_timeout = Duration::from_millis(500);
+    let Some(mut cluster) = cluster_or_skip(cc) else { return };
+    for s in 0..cluster.batch() {
+        cluster.open_slot(s).unwrap();
+    }
+    let tokens: Vec<i32> = (0..cluster.batch() as i32).map(|i| i + 5)
+        .collect();
+    cluster.decode_step(&tokens).expect("healthy pool decodes");
+
+    cluster.inject_crash(1).expect("crash command delivered");
+    let start = Instant::now();
+    let err = cluster.evict_slot(0, 7)
+        .expect_err("evict through a dead rank must fail");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("rank"),
+            "error should point at the rank pool: {msg}");
+    assert!(start.elapsed() < Duration::from_secs(10),
+            "dead-rank detection took {:?} — hang-proofing failed",
+            start.elapsed());
+    cluster.shutdown();
+}
+
+#[test]
+fn offload_restore_is_bit_identical_across_kvp_and_threads() {
+    // kvp x tpa sweeps the attention grid while n stays 4; the blob
+    // format has to reassemble the same logical KV from 1, 2, or 4
+    // round-robin shards.
+    let layouts = [Layout::helix(1, 4, 4, 1),
+                   Layout::helix(2, 2, 4, 1),
+                   Layout::helix(4, 1, 4, 1)];
+    for layout in layouts {
+        std::env::set_var("HELIX_NATIVE_THREADS", "1");
+        let Some(want) = reference("tiny_gqa", layout) else {
+            std::env::remove_var("HELIX_NATIVE_THREADS");
+            return; // pjrt-without-artifacts environment
+        };
+        for threads in ["1", "4"] {
+            std::env::set_var("HELIX_NATIVE_THREADS", threads);
+            let Some(got) = churned("tiny_gqa", layout) else {
+                std::env::remove_var("HELIX_NATIVE_THREADS");
+                return;
+            };
+            assert_eq!(want, got,
+                       "offload round-trip changed tokens: layout {} \
+                        threads {threads}", layout.key());
+        }
+    }
+    std::env::remove_var("HELIX_NATIVE_THREADS");
+
+    crash_during_evict_errors();
+}

@@ -29,6 +29,13 @@ than lockstep does. The fraction is built from modeled link charges and
 requested rank waits, so it is far less wall-clock-noisy than the raw
 step speedup (which is printed for information only, never gated).
 
+The paged-KV ablation (``kv/page/*``) is gated on its *overhead
+fraction*: page-table indirection may cost at most PAGED_MAX_OVERHEAD
+(5%) of flat-arena decode throughput. It is a ratio of two medians from
+the same run, so machine speed cancels out. The restore bandwidth
+(``kv/page/restore_gb_s_per_rank``) is printed for information only —
+host-tier copy speed is machine-dependent.
+
 Stdlib only (the CI runner needs nothing installed).
 """
 
@@ -101,6 +108,29 @@ def overlap_failures(cur, base):
     return failures
 
 
+# Page-table indirection may slow the decode step by at most this
+# fraction relative to flat dense arenas (a within-run ratio, so it is
+# immune to machine-speed differences between runs).
+PAGED_MAX_OVERHEAD = 0.05
+
+
+def paged_failures(cur):
+    """Engine-report paged-KV gate; no-op for reports without the
+    ablation (eval reports, older baselines)."""
+    metrics = cur.get("metrics", {})
+    overhead = metrics.get("kv/page/overhead_frac")
+    if not isinstance(overhead, (int, float)):
+        return []
+    gbs = metrics.get("kv/page/restore_gb_s_per_rank")
+    extra = (f", restore {gbs:.3f} GB/s per rank (informational)"
+             if isinstance(gbs, (int, float)) else "")
+    print(f"paged KV: overhead {overhead:+.1%} vs flat arenas{extra}")
+    if overhead > PAGED_MAX_OVERHEAD:
+        return [f"paged KV overhead {overhead:.1%} exceeds the "
+                f"{PAGED_MAX_OVERHEAD:.0%} budget over flat arenas"]
+    return []
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("current")
@@ -125,10 +155,11 @@ def main(argv=None) -> int:
               f"(commit the current report there to start gating):")
         for k in sorted(cur_tok):
             print(f"  {k}: {cur_tok[k]:.3f}")
-        # The within-report overlap contract holds even on a first run.
-        overlap = overlap_failures(cur, None)
-        if overlap:
-            print("FAIL: " + "; ".join(overlap))
+        # The within-report overlap and paged-KV contracts hold even on
+        # a first run.
+        within = overlap_failures(cur, None) + paged_failures(cur)
+        if within:
+            print("FAIL: " + "; ".join(within))
             return 1
         return 0
 
@@ -157,9 +188,9 @@ def main(argv=None) -> int:
         print(f"FAIL: {len(failures)} tokens/s regression(s) > "
               f"{args.threshold:.0%}")
         return 1
-    overlap = overlap_failures(cur, base)
-    if overlap:
-        print("FAIL: " + "; ".join(overlap))
+    within = overlap_failures(cur, base) + paged_failures(cur)
+    if within:
+        print("FAIL: " + "; ".join(within))
         return 1
     print("bench gate passed")
     return 0

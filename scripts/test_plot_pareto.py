@@ -216,5 +216,50 @@ class OverlapGateTest(unittest.TestCase):
             check_bench_regression.overlap_failures(report, None), [])
 
 
+class PagedGateTest(unittest.TestCase):
+    """The engine report's paged-KV overhead contract."""
+
+    def engine_report(self, overhead=0.01):
+        return {"metrics": {"engine/tiny/tokens_per_s": 100.0,
+                            "kv/page/paged_tokens_per_s": 100.0,
+                            "kv/page/flat_tokens_per_s": 101.0,
+                            "kv/page/overhead_frac": overhead,
+                            "kv/page/restore_gb_s_per_rank": 2.5,
+                            "status": "ok"}}
+
+    def write(self, doc):
+        f = tempfile.NamedTemporaryFile("w", suffix=".json", delete=False)
+        json.dump(doc, f)
+        f.close()
+        self.addCleanup(os.unlink, f.name)
+        return f.name
+
+    def test_cheap_indirection_passes(self):
+        self.assertEqual(
+            check_bench_regression.paged_failures(self.engine_report()), [])
+        path = self.write(self.engine_report())
+        self.assertEqual(check_bench_regression.main([path, path]), 0)
+
+    def test_negative_overhead_passes(self):
+        # Paged faster than flat (cache effects) is fine.
+        self.assertEqual(check_bench_regression.paged_failures(
+            self.engine_report(overhead=-0.02)), [])
+
+    def test_expensive_indirection_fails_even_without_baseline(self):
+        broken = self.engine_report(
+            overhead=check_bench_regression.PAGED_MAX_OVERHEAD + 0.02)
+        self.assertTrue(check_bench_regression.paged_failures(broken))
+        cur = self.write(broken)
+        self.assertEqual(
+            check_bench_regression.main([cur, cur + ".missing"]), 1)
+        # ... and with a baseline present.
+        self.assertEqual(check_bench_regression.main([cur, cur]), 1)
+
+    def test_reports_without_ablation_are_not_gated(self):
+        report = {"metrics": {"decode/tokens_per_s": 1.0, "status": "ok"}}
+        self.assertEqual(
+            check_bench_regression.paged_failures(report), [])
+
+
 if __name__ == "__main__":
     unittest.main(verbosity=2)

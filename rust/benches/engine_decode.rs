@@ -231,6 +231,72 @@ fn restore_bandwidth(report: &mut JsonReport, model: &str,
     cluster.shutdown();
 }
 
+/// Rank-death recovery cost: fill a batch to a realistic context,
+/// checkpoint every slot to the host tier, kill a rank, then time the
+/// recovery pipeline — respawn from the boot config, restore the
+/// checkpoints, deterministically replay the tokens fed since. The
+/// replay rate is the key number: it bounds how much decode progress a
+/// checkpoint cadence can put at risk (see docs/ROBUSTNESS.md).
+fn recovery_replay(report: &mut JsonReport, model: &str, layout: Layout) {
+    use helix::serve::ckpt_key;
+    let mut cc = ClusterConfig::new(model, layout);
+    cc.recv_timeout = std::time::Duration::from_millis(2_000);
+    let mut cluster = match HelixCluster::new(cc) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("skipping recovery replay: {e:#}");
+            return;
+        }
+    };
+    let b = cluster.batch();
+    for s in 0..b {
+        cluster.open_slot(s).unwrap();
+    }
+    const FILL: usize = 32;
+    const CKPT: usize = FILL / 2;
+    // fed[i] is the token vector fed at step i; greedy decode makes the
+    // whole trajectory replayable from any prefix.
+    let mut fed: Vec<Vec<i32>> =
+        vec![(0..b as i32).map(|i| i + 3).collect()];
+    let mut snaps = Vec::new();
+    for i in 0..FILL {
+        if i == CKPT {
+            for s in 0..b {
+                snaps.push(cluster
+                    .checkpoint_slot(s, ckpt_key(1, s as u64))
+                    .unwrap());
+            }
+        }
+        let (next, _) = cluster.decode_step(&fed[i]).unwrap();
+        fed.push(next);
+    }
+
+    cluster.inject_crash(1).unwrap();
+    // Detection cost is the recv_timeout knob, not a property of the
+    // machine — respawn directly and time the pipeline itself.
+    let cfg = cluster.config();
+    let t_respawn = std::time::Instant::now();
+    cluster.shutdown();
+    cluster = HelixCluster::new(cfg).unwrap();
+    for (s, snap) in snaps.iter().enumerate() {
+        cluster.restore_slot(s, snap).unwrap();
+    }
+    let restore_s = t_respawn.elapsed().as_secs_f64();
+    let t_replay = std::time::Instant::now();
+    for i in CKPT..FILL {
+        let (next, _) = cluster.decode_step(&fed[i]).unwrap();
+        assert_eq!(next, fed[i + 1], "replay diverged at step {i}");
+    }
+    let replay_s = t_replay.elapsed().as_secs_f64();
+    let replayed = ((FILL - CKPT) * b) as f64;
+    println!("recovery: respawn+restore {:.2} ms, replayed {} tokens at \
+              {:.1} tok/s", restore_s * 1e3, replayed as usize,
+             replayed / replay_s);
+    report.metric("recovery/respawn_restore_ms", restore_s * 1e3);
+    report.metric("recovery/replay_tokens_per_s", replayed / replay_s);
+    cluster.shutdown();
+}
+
 fn main() {
     let mut report = JsonReport::new("engine");
     let backend = std::env::var("HELIX_BACKEND")
@@ -312,6 +378,7 @@ fn main() {
         report.metric("kv/page/overhead_frac", overhead);
     }
     restore_bandwidth(&mut report, "tiny_gqa", Layout::helix(2, 2, 4, 1));
+    recovery_replay(&mut report, "tiny_gqa", Layout::helix(2, 2, 4, 1));
 
     context_scaling(&mut report, "tiny_gqa",
                     Layout::helix(2, 2, 4, 1));

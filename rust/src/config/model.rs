@@ -264,9 +264,13 @@ fn intern_name(name: &str) -> &'static str {
     use std::sync::{Mutex, OnceLock};
     static NAMES: OnceLock<Mutex<BTreeMap<String, &'static str>>> =
         OnceLock::new();
+    // Poison-recovering: the table is insert-only (a holder can only
+    // die between fully-formed inserts), so a panicking thread
+    // elsewhere must not turn every later model construction into a
+    // second panic.
     let mut map = NAMES.get_or_init(|| Mutex::new(BTreeMap::new()))
         .lock()
-        .expect("name intern table poisoned");
+        .unwrap_or_else(|e| e.into_inner());
     if let Some(s) = map.get(name) {
         return s;
     }

@@ -17,6 +17,7 @@ use crate::plan::Plan;
 use crate::runtime::{BackendKind, HostTensor, Manifest, Runtime};
 
 use super::comm_model::{CommModel, Link};
+use super::fault::ClusterError;
 use super::proto::{Cmd, Payload, Resp};
 use super::rank::{self, append_rank, local_len, RankInit};
 use super::shard;
@@ -50,6 +51,12 @@ pub struct ClusterConfig {
     /// Host-tier session-store budget in bytes (0 = unlimited): caps
     /// how much offloaded KV the evict path may park.
     pub host_kv_bytes: usize,
+    /// Share an existing host-tier store instead of creating a fresh
+    /// one (`host_kv_bytes` is then ignored). This is how recovery
+    /// respawns a cluster *around* the surviving checkpoints and
+    /// offloaded sessions: [`HelixCluster::config`] hands back the boot
+    /// config with the live store attached.
+    pub store: Option<SessionStore>,
 }
 
 impl ClusterConfig {
@@ -65,6 +72,7 @@ impl ClusterConfig {
             recv_timeout: Duration::from_secs(30),
             paged: true,
             host_kv_bytes: 0,
+            store: None,
         }
     }
 
@@ -139,6 +147,13 @@ pub struct SessionSnapshot {
 }
 
 impl SessionSnapshot {
+    /// Mirror-less snapshot — constructor for crate-internal tests in
+    /// layers where the private verify mirror is not visible.
+    #[doc(hidden)]
+    pub fn for_tests(session: u64, len: usize) -> SessionSnapshot {
+        SessionSnapshot { session, len, mirror: None }
+    }
+
     /// KV bytes this snapshot routed through the coordinator. Zero
     /// unless the exactness mirror is on — the acceptance criterion for
     /// per-rank offload streaming.
@@ -193,6 +208,9 @@ pub struct HelixCluster {
     page_toks: usize,
     /// Host-tier store the ranks stream evicted sessions into.
     store: SessionStore,
+    /// The construction config (with the live store attached) — what a
+    /// recovery respawn boots the replacement pool from.
+    boot: ClusterConfig,
     /// Step arena: reusable [B] i32 scratch tensors, refilled in place
     /// once per decode step. Broadcast clones are Arc refcount bumps;
     /// COW detaches automatically if a rank still holds last step's
@@ -203,6 +221,7 @@ pub struct HelixCluster {
 
 impl HelixCluster {
     pub fn new(cc: ClusterConfig) -> Result<HelixCluster> {
+        let mut boot = cc.clone();
         let manifest = Manifest::load_or_synthetic(&cc.artifacts)?;
         let entry = manifest.model(&cc.model)?.clone();
         let cfg = entry.config.clone();
@@ -240,7 +259,9 @@ impl HelixCluster {
         } else {
             0
         };
-        let store = SessionStore::with_budget(cc.host_kv_bytes);
+        let store = cc.store.clone()
+            .unwrap_or_else(|| SessionStore::with_budget(cc.host_kv_bytes));
+        boot.store = Some(store.clone());
         let (resp_tx, rx) = channel::<Resp>();
         let mut txs = Vec::with_capacity(n);
         let mut handles = Vec::with_capacity(n);
@@ -345,6 +366,7 @@ impl HelixCluster {
             in_flight: false,
             page_toks,
             store,
+            boot,
         })
     }
 
@@ -366,23 +388,28 @@ impl HelixCluster {
 
     fn send(&self, rank: usize, cmd: Cmd) -> Result<()> {
         self.txs[rank].send(cmd).map_err(|_| {
-            anyhow!("rank {rank} is down (channel closed)")
+            anyhow::Error::new(ClusterError::RankDead { rank })
+                .context(format!("rank {rank} is down (channel closed)"))
         })
     }
 
     /// Receive one response within the hang-proofing deadline. A rank
-    /// thread that died mid-collective turns into an error here instead
-    /// of blocking the coordinator forever.
+    /// thread that died mid-collective turns into a typed
+    /// [`ClusterError::CollectiveTimeout`] here instead of blocking the
+    /// coordinator forever.
     fn recv_resp(&mut self) -> Result<Resp> {
         use std::sync::mpsc::RecvTimeoutError;
         match self.rx.recv_timeout(self.recv_timeout) {
             Ok(resp) => Ok(resp),
-            Err(RecvTimeoutError::Timeout) => bail!(
-                "rank pool unresponsive: no response within {:?} — a rank \
-                 thread likely died mid-collective", self.recv_timeout),
-            Err(RecvTimeoutError::Disconnected) => {
-                bail!("rank pool hung up")
-            }
+            Err(RecvTimeoutError::Timeout) => Err(anyhow::Error::new(
+                ClusterError::CollectiveTimeout { waited: self.recv_timeout })
+                .context(format!(
+                    "rank pool unresponsive: no response within {:?} — a \
+                     rank thread likely died mid-collective",
+                    self.recv_timeout))),
+            Err(RecvTimeoutError::Disconnected) => Err(anyhow::Error::new(
+                ClusterError::CollectiveTimeout { waited: Duration::ZERO })
+                .context("rank pool hung up")),
         }
     }
 
@@ -390,20 +417,34 @@ impl HelixCluster {
     /// The longest rank-side link wait in the round is charged to
     /// exposed communication: the barrier means nothing else could have
     /// hidden it.
+    ///
+    /// The full round is drained before a rank-side error is reported:
+    /// a survivable per-operation failure (store write fault, KV
+    /// overflow) must not leave the other n-1 responses queued to
+    /// desynchronize the next collective. A dead rank still shortcuts
+    /// out via the `recv_resp` timeout.
     fn collect(&mut self, n: usize) -> Result<Vec<Payload>> {
         let mut out: Vec<Option<Payload>> = (0..self.n()).map(|_| None)
             .collect();
         let mut exposed = Duration::ZERO;
+        let mut first_err: Option<anyhow::Error> = None;
         for _ in 0..n {
             let resp = self.recv_resp()?;
             exposed = exposed.max(resp.waited);
-            if let Payload::Err(e) = &resp.payload {
-                bail!("rank {}: {e}", resp.rank);
+            match resp.payload {
+                Payload::Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(rank_err(resp.rank, &e));
+                    }
+                }
+                p => out[resp.rank] = Some(p),
             }
-            out[resp.rank] = Some(resp.payload);
         }
         self.comm_exposed += exposed;
-        Ok(out.into_iter().flatten().collect())
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(out.into_iter().flatten().collect()),
+        }
     }
 
     /// Charge one transfer on the broadcast/All-Reduce wire. The
@@ -454,9 +495,8 @@ impl HelixCluster {
     pub fn open_slot(&mut self, row: usize) -> Result<()> {
         ensure!(row < self.cfg.batch, "slot {row} out of range");
         ensure!(!self.in_flight, "cannot open a slot mid-step");
-        for tx in &self.txs {
-            tx.send(Cmd::ResetRow { row })
-                .map_err(|_| anyhow!("rank down"))?;
+        for r in 0..self.n() {
+            self.send(r, Cmd::ResetRow { row })?;
         }
         self.collect(self.n())?;
         self.lens[row] = 0;
@@ -531,6 +571,41 @@ impl HelixCluster {
             None => None,
         };
         Ok(SessionSnapshot { session, len, mirror })
+    }
+
+    /// Non-destructive [`Self::evict_slot`]: every rank serializes its
+    /// shard of slot `row` into the host-tier store under `key` (an
+    /// epoch-tagged checkpoint identity — see `serve::recovery`), but
+    /// the resident KV keeps decoding and the slot stays live. The
+    /// returned snapshot restores into a *fresh* cluster after a rank
+    /// death exactly like an evict snapshot would.
+    ///
+    /// On failure (e.g. an injected store write fault on one rank) the
+    /// pool stays usable, but blobs from the ranks that succeeded are
+    /// left under `key` — the caller must `store().discard(key)` before
+    /// retrying.
+    pub fn checkpoint_slot(&mut self, row: usize, key: u64)
+                           -> Result<SessionSnapshot> {
+        ensure!(row < self.cfg.batch, "slot {row} out of range");
+        ensure!(!self.in_flight, "cannot checkpoint a slot mid-step");
+        ensure!(self.lens[row] > 0, "checkpointing empty slot {row}");
+        let len = self.lens[row];
+        for r in 0..self.n() {
+            self.send(r, Cmd::Checkpoint { row, session: key })?;
+        }
+        self.collect(self.n())?;
+        let mirror = match &self.verify {
+            Some(v) => {
+                let mut rows = Vec::with_capacity(self.cfg.layers);
+                for layer in 0..self.cfg.layers {
+                    rows.push((copy_batch_row(&v.k_full[layer], row)?,
+                               copy_batch_row(&v.v_full[layer], row)?));
+                }
+                Some(rows)
+            }
+            None => None,
+        };
+        Ok(SessionSnapshot { session: key, len, mirror })
     }
 
     /// Resume an offloaded session into batch slot `row` (not
@@ -929,7 +1004,9 @@ impl HelixCluster {
                         combined[rr][resp.rank] = Some(o_slice);
                         comb_seen += 1;
                     }
-                    Payload::Err(e) => bail!("rank {}: {e}", resp.rank),
+                    Payload::Err(e) => {
+                        return Err(rank_err(resp.rank, &e));
+                    }
                     p => bail!("unexpected {}", p.name()),
                 }
             }
@@ -962,7 +1039,7 @@ impl HelixCluster {
                     combined[rr][resp.rank] = Some(o_slice);
                     comb_seen += 1;
                 }
-                Payload::Err(e) => bail!("rank {}: {e}", resp.rank),
+                Payload::Err(e) => return Err(rank_err(resp.rank, &e)),
                 p => bail!("unexpected {}", p.name()),
             }
         }
@@ -1059,12 +1136,47 @@ impl HelixCluster {
         }
     }
 
-    /// Kill one rank thread outright (tests): the next collective must
-    /// surface "rank down" / a recv timeout instead of hanging the
-    /// coordinator forever.
+    /// Kill one rank thread outright (tests/chaos): the next receive
+    /// that depends on it surfaces a typed
+    /// [`ClusterError::RankDead`]/[`ClusterError::CollectiveTimeout`]
+    /// instead of hanging the coordinator forever. Deliberately legal
+    /// mid-step and mid-collective — crash-during-HOP-B and
+    /// crash-during-Restore are exactly the paths the chaos tests
+    /// exercise.
     pub fn inject_crash(&mut self, rank: usize) -> Result<()> {
-        ensure!(!self.in_flight, "cannot crash a rank mid-step");
         self.send(rank, Cmd::Crash)
+    }
+
+    /// Inject a link-latency spike: rank `rank` stalls until
+    /// `now + delay` before serving its next command. Wall-clock and
+    /// exposed-comm accounting feel it; token content never does (a
+    /// spike is indistinguishable from a slow modeled transfer).
+    pub fn inject_delay(&mut self, rank: usize, delay: Duration)
+                        -> Result<()> {
+        self.send(rank, Cmd::NetDelay { deadline: Instant::now() + delay })
+    }
+
+    /// The construction config this pool was booted from, with the
+    /// live host-tier store attached: `HelixCluster::new(c.config())`
+    /// respawns an identical pool *around* the surviving checkpoints
+    /// and offloaded sessions — the recovery path after a rank death.
+    pub fn config(&self) -> ClusterConfig {
+        self.boot.clone()
+    }
+
+    /// A handle to the host-tier session store.
+    pub fn store(&self) -> SessionStore {
+        self.store.clone()
+    }
+}
+
+/// Wrap a rank-side error string, re-attaching the typed taxonomy the
+/// rank->coordinator channel flattened (see [`ClusterError::classify`]).
+fn rank_err(rank: usize, msg: &str) -> anyhow::Error {
+    let ctx = format!("rank {rank}: {msg}");
+    match ClusterError::classify(msg) {
+        Some(ce) => anyhow::Error::new(ce).context(ctx),
+        None => anyhow!("{ctx}"),
     }
 }
 

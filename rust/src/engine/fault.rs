@@ -1,0 +1,281 @@
+//! fault — deterministic fault injection plus the typed cluster error
+//! taxonomy.
+//!
+//! Two halves:
+//!
+//! * [`ClusterError`] is the machine-readable classification of what
+//!   went wrong inside the rank pool — the serve layer's recovery path
+//!   branches on it (respawn on [`ClusterError::RankDead`] /
+//!   [`ClusterError::CollectiveTimeout`], retry next cadence on
+//!   [`ClusterError::StoreFault`]) instead of grepping error strings.
+//!   Errors still travel as `anyhow` chains so every existing
+//!   `format!("{err:#}")` message survives verbatim; the enum rides the
+//!   chain as a typed cause, recovered with [`ClusterError::find`].
+//! * [`FaultPlan`] is a seeded, fully deterministic schedule of
+//!   injected failures (crash rank r at step s, link-latency spikes,
+//!   host-store write failures, transient admission-pool exhaustion).
+//!   The *server* consumes it at step boundaries — exactly once per
+//!   event, across cluster respawns — so a chaos trace replays
+//!   bit-identically in tests and CI.
+
+use std::fmt;
+use std::time::Duration;
+
+use crate::util::Rng;
+
+/// Typed classification of rank-pool failures. Carried inside `anyhow`
+/// chains (see [`ClusterError::find`]); `Display` keeps messages
+/// self-contained so the enum can also be the outermost error.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ClusterError {
+    /// A rank's command channel is closed: its thread panicked or was
+    /// shut down. The pool cannot make progress; recovery must respawn.
+    RankDead { rank: usize },
+    /// A collective did not hear back from every rank within the
+    /// coordinator's `recv_timeout` — a rank died mid-collective (its
+    /// channel may still look open) or is wedged. Treated like rank
+    /// death by recovery.
+    CollectiveTimeout { waited: Duration },
+    /// The host-tier session store refused a blob: admitting it would
+    /// exceed the configured byte budget.
+    StoreFull { needed: usize, budget: usize },
+    /// An injected (or transient) host-store write failure. The KV
+    /// shard that failed to serialize is still resident, so the caller
+    /// may simply retry at the next checkpoint cadence.
+    StoreFault,
+    /// A KV shard ran out of physical capacity (slot sequence cap or
+    /// page pool exhausted).
+    KvOverflow { slot: usize },
+}
+
+impl fmt::Display for ClusterError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ClusterError::RankDead { rank } => {
+                write!(f, "rank {rank} is dead (channel closed)")
+            }
+            ClusterError::CollectiveTimeout { waited } => {
+                write!(f, "collective timed out after {waited:?}")
+            }
+            ClusterError::StoreFull { needed, budget } => {
+                write!(f, "session store full ({needed} > {budget} bytes)")
+            }
+            ClusterError::StoreFault => {
+                write!(f, "session store write fault (injected/transient)")
+            }
+            ClusterError::KvOverflow { slot } => {
+                write!(f, "KV shard overflow on slot {slot}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ClusterError {}
+
+impl ClusterError {
+    /// Walk an `anyhow` chain and return the first typed cluster error
+    /// riding it, if any.
+    pub fn find(err: &anyhow::Error) -> Option<&ClusterError> {
+        err.chain().find_map(|c| c.downcast_ref::<ClusterError>())
+    }
+
+    /// Does this error mean the rank pool itself is unusable (vs a
+    /// survivable per-operation failure)? Recovery respawns on these.
+    pub fn is_fatal(&self) -> bool {
+        matches!(self, ClusterError::RankDead { .. }
+                     | ClusterError::CollectiveTimeout { .. })
+    }
+
+    /// Best-effort re-typing of an error that crossed the rank->
+    /// coordinator channel as a `Payload::Err(String)`. Rank-side
+    /// failures serialize to strings in transit; this recovers the
+    /// taxonomy from the stable phrases the rank/store errors use so
+    /// the coordinator can re-attach a typed cause.
+    pub fn classify(msg: &str) -> Option<ClusterError> {
+        if msg.contains("KV shard overflow")
+            || msg.contains("page pool exhausted") {
+            // The slot index is part of the message but not needed for
+            // dispatch; 0 is a placeholder when unparseable.
+            let slot = msg.split("slot ").nth(1)
+                .and_then(|s| s.split([',', ' ', ':']).next())
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(0);
+            return Some(ClusterError::KvOverflow { slot });
+        }
+        if msg.contains("session store over budget") {
+            return Some(ClusterError::StoreFull { needed: 0, budget: 0 });
+        }
+        if msg.contains("session store write fault") {
+            return Some(ClusterError::StoreFault);
+        }
+        None
+    }
+}
+
+/// One scheduled failure.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Fault {
+    /// Kill rank `rank`'s thread (it dies without replying).
+    CrashRank { rank: usize },
+    /// A modeled link-latency spike: rank `rank` stalls for `delay`
+    /// before serving its next command (folded into exposed-comm
+    /// accounting, never into token content).
+    LinkSpike { rank: usize, delay: Duration },
+    /// The next `count` host-store writes fail (checkpoint puts — the
+    /// resident KV stays intact, so the writer retries next cadence).
+    StoreFail { count: usize },
+    /// Transient admission-pool exhaustion: the server sheds/defers new
+    /// admissions for `steps` engine steps.
+    PoolExhaust { steps: u64 },
+}
+
+/// A deterministic schedule of [`Fault`]s keyed by engine step. The
+/// server drains due events exactly once per step boundary
+/// ([`FaultPlan::take_due`]), so the schedule survives cluster
+/// respawns (cluster-side step counters reset; the serve-clock step
+/// does not).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    /// (step, fault), kept sorted by step.
+    events: Vec<(u64, Fault)>,
+}
+
+impl FaultPlan {
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Builder: schedule `fault` at engine step `step`.
+    pub fn at(mut self, step: u64, fault: Fault) -> FaultPlan {
+        self.push(step, fault);
+        self
+    }
+
+    pub fn push(&mut self, step: u64, fault: Fault) {
+        self.events.push((step, fault));
+        self.events.sort_by_key(|(s, _)| *s);
+    }
+
+    /// A reproducible chaos schedule: one rank crash, one link spike,
+    /// and one burst of store-write failures, all placed by `seed`
+    /// within the first `horizon` steps of a pool of `ranks` ranks.
+    pub fn seeded(seed: u64, horizon: u64, ranks: usize) -> FaultPlan {
+        let mut rng = Rng::new(seed ^ 0xfau64.rotate_left(33));
+        let h = horizon.max(4) as usize;
+        let mut plan = FaultPlan::new();
+        plan.push(rng.range(1, h / 2) as u64, Fault::LinkSpike {
+            rank: rng.range(0, ranks),
+            delay: Duration::from_micros(200 + rng.range(0, 800) as u64),
+        });
+        plan.push(rng.range(1, h / 2) as u64,
+                  Fault::StoreFail { count: 1 + rng.range(0, 2) });
+        plan.push(rng.range(h / 2, h) as u64,
+                  Fault::CrashRank { rank: rng.range(0, ranks) });
+        plan
+    }
+
+    /// Drain every event scheduled at or before `step`, in schedule
+    /// order. Consumed events never fire again.
+    pub fn take_due(&mut self, step: u64) -> Vec<Fault> {
+        let mut due = Vec::new();
+        self.events.retain(|(s, f)| {
+            if *s <= step {
+                due.push(f.clone());
+                false
+            } else {
+                true
+            }
+        });
+        due
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// The earliest scheduled step still pending, if any.
+    pub fn next_step(&self) -> Option<u64> {
+        self.events.first().map(|(s, _)| *s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use anyhow::Context;
+
+    #[test]
+    fn find_walks_anyhow_chains() {
+        let err = anyhow::Error::new(ClusterError::RankDead { rank: 2 })
+            .context("rank 2: send failed")
+            .context("decode step 7");
+        match ClusterError::find(&err) {
+            Some(ClusterError::RankDead { rank: 2 }) => {}
+            other => panic!("expected RankDead{{2}}, got {other:?}"),
+        }
+        assert!(ClusterError::find(&err).unwrap().is_fatal());
+        // The human-readable chain is untouched by the typed cause.
+        let msg = format!("{err:#}");
+        assert!(msg.contains("decode step 7") && msg.contains("rank 2"));
+
+        let plain: anyhow::Result<()> = Err(anyhow::anyhow!("boring"))
+            .context("outer");
+        assert!(ClusterError::find(&plain.unwrap_err()).is_none());
+    }
+
+    #[test]
+    fn classify_recovers_rank_side_taxonomy() {
+        let e = ClusterError::classify(
+            "KV shard overflow: slot 3, layer 1: len 64 reached cap 64");
+        assert_eq!(e, Some(ClusterError::KvOverflow { slot: 3 }));
+        assert!(!e.unwrap().is_fatal());
+        assert_eq!(
+            ClusterError::classify(
+                "session store over budget: 10 + 20 > 16 bytes"),
+            Some(ClusterError::StoreFull { needed: 0, budget: 0 }));
+        assert_eq!(ClusterError::classify("session store write fault hit"),
+                   Some(ClusterError::StoreFault));
+        assert_eq!(ClusterError::classify("something else"), None);
+    }
+
+    #[test]
+    fn fault_plan_fires_exactly_once_in_order() {
+        let mut plan = FaultPlan::new()
+            .at(5, Fault::CrashRank { rank: 1 })
+            .at(2, Fault::StoreFail { count: 2 })
+            .at(5, Fault::PoolExhaust { steps: 3 });
+        assert_eq!(plan.len(), 3);
+        assert_eq!(plan.next_step(), Some(2));
+        assert_eq!(plan.take_due(1), vec![]);
+        assert_eq!(plan.take_due(4), vec![Fault::StoreFail { count: 2 }]);
+        // Both step-5 events fire together, then never again.
+        assert_eq!(plan.take_due(9).len(), 2);
+        assert!(plan.is_empty());
+        assert_eq!(plan.take_due(1000), vec![]);
+    }
+
+    #[test]
+    fn seeded_plans_are_reproducible_and_in_horizon() {
+        let a = FaultPlan::seeded(42, 20, 4);
+        let b = FaultPlan::seeded(42, 20, 4);
+        assert_eq!(a, b, "same seed must give the same schedule");
+        assert_ne!(a, FaultPlan::seeded(43, 20, 4));
+        assert_eq!(a.len(), 3);
+        let mut plan = a;
+        let due = plan.take_due(20);
+        assert_eq!(due.len(), 3, "all events inside the horizon");
+        assert!(due.iter().any(|f| matches!(f, Fault::CrashRank { .. })));
+        assert!(due.iter().any(|f| matches!(f, Fault::LinkSpike { .. })));
+        assert!(due.iter().any(|f| matches!(f, Fault::StoreFail { .. })));
+        for f in due {
+            if let Fault::CrashRank { rank } | Fault::LinkSpike { rank, .. }
+                = f {
+                assert!(rank < 4);
+            }
+        }
+    }
+}

@@ -21,6 +21,7 @@
 
 pub mod cluster;
 pub mod comm_model;
+pub mod fault;
 pub mod proto;
 pub mod rank;
 pub mod shard;
@@ -29,4 +30,5 @@ pub mod store;
 pub use cluster::{ClusterConfig, HelixCluster, PendingStep, SessionSnapshot,
                   StepMetrics};
 pub use comm_model::{CommModel, Link};
+pub use fault::{ClusterError, Fault, FaultPlan};
 pub use store::{SessionStore, StoreStats};

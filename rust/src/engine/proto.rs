@@ -40,6 +40,11 @@ pub enum Cmd {
     /// host tier back into batch slot `row` — not necessarily the slot
     /// it was evicted from.
     Restore { row: usize, session: u64, len: usize },
+    /// Non-destructive [`Cmd::Evict`]: serialize batch slot `row`'s KV
+    /// shard into the host tier under `session` (an epoch-tagged
+    /// checkpoint key) but leave the resident shard untouched — the
+    /// recovery substrate for rank-death respawn.
+    Checkpoint { row: usize, session: u64 },
     /// TP=N output projection of this rank's combined slice.
     OutProj { layer: usize, o_slice: HostTensor },
     /// Dense SwiGLU FFN partial (TPF shard) for `layer`.

@@ -119,16 +119,22 @@ impl KvShard {
         let (kh, hsz) = (self.k.shape[1], self.k.shape[3]);
         let pos = self.lens[b_idx] as usize;
         if pos >= self.cap {
-            bail!("KV shard overflow: slot {b_idx}, layer {}: local \
-                   length {pos} at shard capacity {} tokens{}",
-                  self.layer, self.cap,
-                  if self.page_toks != 0 {
-                      format!(" ({} pages of {})",
-                              self.cap.div_ceil(self.page_toks),
-                              self.page_toks)
-                  } else {
-                      String::new()
-                  });
+            // Typed for the serve layer's taxonomy; the message keeps
+            // the full diagnosis (and survives the rank->coordinator
+            // channel as a string, re-typed by `ClusterError::classify`).
+            return Err(anyhow::Error::new(
+                super::fault::ClusterError::KvOverflow { slot: b_idx })
+                .context(format!(
+                    "KV shard overflow: slot {b_idx}, layer {}: local \
+                     length {pos} at shard capacity {} tokens{}",
+                    self.layer, self.cap,
+                    if self.page_toks != 0 {
+                        format!(" ({} pages of {})",
+                                self.cap.div_ceil(self.page_toks),
+                                self.page_toks)
+                    } else {
+                        String::new()
+                    })));
         }
         if self.page_toks != 0 && pos % self.page_toks == 0 {
             let alloc = self.alloc.as_mut().expect("paged shard");
@@ -603,6 +609,21 @@ impl RankState {
                 for shard in &mut self.kv {
                     shard.reset_row(row);
                 }
+                Ok(Payload::Ack)
+            }
+            Cmd::Checkpoint { row, session } => {
+                // Non-destructive Evict: same per-rank blob (all layers,
+                // logical token order) under an epoch-tagged key, but
+                // the resident shard keeps decoding — the recovery
+                // substrate for rank-death respawn.
+                let store = self.init.store.as_ref()
+                    .context("session checkpoint requested but no store \
+                              configured")?;
+                let mut blob = Vec::new();
+                for shard in &self.kv {
+                    shard.serialize_row(row, &mut blob)?;
+                }
+                store.put(session, self.init.id, blob)?;
                 Ok(Payload::Ack)
             }
             Cmd::Restore { row, session, len } => {

@@ -7,11 +7,20 @@
 //! coordinator only moves page *counts* and lengths; the
 //! `tests/session_churn.rs` acceptance test pins coordinator-side KV
 //! traffic at ≈ 0 by reading the byte counters kept here.
+//!
+//! The same map doubles as the recovery tier: the serve layer
+//! checkpoints active sessions here under epoch-tagged keys (see
+//! `serve::recovery`) so a respawned cluster can restore them after a
+//! rank death. `fail_next_puts` injects deterministic write faults for
+//! the chaos tests.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::fmt;
+use std::sync::{Arc, Mutex, MutexGuard};
 
-use anyhow::{bail, Result};
+use anyhow::Result;
+
+use super::fault::ClusterError;
 
 /// Cumulative traffic counters (bytes written on evict / read on
 /// restore), for metrics and the restore-GB/s bench key.
@@ -23,6 +32,8 @@ pub struct StoreStats {
     pub bytes_out: usize,
     pub evictions: usize,
     pub restores: usize,
+    /// Writes refused by injected faults ([`SessionStore::fail_next_puts`]).
+    pub put_faults: usize,
 }
 
 #[derive(Default)]
@@ -35,12 +46,28 @@ struct Inner {
     bytes_out: usize,
     evictions: usize,
     restores: usize,
+    /// Fault injection: the next `fail_puts` writes error out.
+    fail_puts: usize,
+    put_faults: usize,
 }
 
 /// Shared handle: every rank thread and the coordinator hold a clone.
 #[derive(Clone, Default)]
 pub struct SessionStore {
     inner: Arc<Mutex<Inner>>,
+}
+
+// `ClusterConfig` (which may carry a store handle for respawn) derives
+// Debug; summarize rather than dumping blob bytes.
+impl fmt::Debug for SessionStore {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let i = self.lock();
+        f.debug_struct("SessionStore")
+            .field("blobs", &i.blobs.len())
+            .field("bytes", &i.bytes)
+            .field("budget", &i.budget)
+            .finish()
+    }
 }
 
 impl SessionStore {
@@ -54,22 +81,42 @@ impl SessionStore {
     /// instead of silent unbounded growth.
     pub fn with_budget(budget_bytes: usize) -> SessionStore {
         let store = SessionStore::default();
-        store.inner.lock().unwrap().budget = budget_bytes;
+        store.lock().budget = budget_bytes;
         store
+    }
+
+    /// Poison-recovering lock: a rank thread that panicked while
+    /// holding the mutex (e.g. an injected `Cmd::Crash` landing at the
+    /// worst moment) must not take the whole store down with it — the
+    /// guarded state is plain counters and owned byte blobs, valid
+    /// regardless of where the holder died.
+    fn lock(&self) -> MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
     }
 
     /// Stash rank `rank`'s shard of session `session`. One blob per
     /// (session, rank); re-putting an un-taken blob is a logic error.
     pub fn put(&self, session: u64, rank: usize, blob: Vec<u8>)
                -> Result<()> {
-        let mut i = self.inner.lock().unwrap();
+        let mut i = self.lock();
+        if i.fail_puts > 0 {
+            i.fail_puts -= 1;
+            i.put_faults += 1;
+            return Err(anyhow::Error::new(ClusterError::StoreFault)
+                .context(format!("session store write fault (injected): \
+                                  session {session}, rank {rank}")));
+        }
         if i.budget != 0 && i.bytes + blob.len() > i.budget {
-            bail!("session store over budget: {} + {} > {} bytes \
-                   (session {session}, rank {rank})",
-                  i.bytes, blob.len(), i.budget);
+            let (needed, budget) = (i.bytes + blob.len(), i.budget);
+            return Err(anyhow::Error::new(
+                ClusterError::StoreFull { needed, budget })
+                .context(format!(
+                    "session store over budget: {} + {} > {} bytes \
+                     (session {session}, rank {rank})",
+                    i.bytes, blob.len(), i.budget)));
         }
         if i.blobs.contains_key(&(session, rank)) {
-            bail!("session {session} rank {rank} already offloaded");
+            anyhow::bail!("session {session} rank {rank} already offloaded");
         }
         i.bytes += blob.len();
         i.bytes_in += blob.len();
@@ -81,7 +128,7 @@ impl SessionStore {
     /// Take rank `rank`'s shard of session `session` back out
     /// (consume-on-take: a session restores exactly once per evict).
     pub fn take(&self, session: u64, rank: usize) -> Result<Vec<u8>> {
-        let mut i = self.inner.lock().unwrap();
+        let mut i = self.lock();
         match i.blobs.remove(&(session, rank)) {
             Some(blob) => {
                 i.bytes -= blob.len();
@@ -89,13 +136,36 @@ impl SessionStore {
                 i.restores += 1;
                 Ok(blob)
             }
-            None => bail!("session {session} rank {rank} not in store"),
+            None => anyhow::bail!("session {session} rank {rank} \
+                                   not in store"),
         }
+    }
+
+    /// Non-consuming read: copy rank `rank`'s shard of `session`
+    /// without removing it (checkpoints restore-and-keep until the next
+    /// epoch supersedes them).
+    pub fn peek(&self, session: u64, rank: usize) -> Result<Vec<u8>> {
+        let mut i = self.lock();
+        match i.blobs.get(&(session, rank)) {
+            Some(blob) => {
+                let blob = blob.clone();
+                i.bytes_out += blob.len();
+                i.restores += 1;
+                Ok(blob)
+            }
+            None => anyhow::bail!("session {session} rank {rank} \
+                                   not in store"),
+        }
+    }
+
+    /// Does the store hold any shard of `session`?
+    pub fn contains(&self, session: u64) -> bool {
+        self.lock().blobs.keys().any(|(s, _)| *s == session)
     }
 
     /// Drop every shard of a session (retire without restore).
     pub fn discard(&self, session: u64) {
-        let mut i = self.inner.lock().unwrap();
+        let mut i = self.lock();
         let keys: Vec<(u64, usize)> = i.blobs.keys()
             .filter(|(s, _)| *s == session).copied().collect();
         for key in keys {
@@ -105,8 +175,14 @@ impl SessionStore {
         }
     }
 
+    /// Fault injection: make the next `n` `put`s fail with
+    /// [`ClusterError::StoreFault`] (deterministic chaos testing).
+    pub fn fail_next_puts(&self, n: usize) {
+        self.lock().fail_puts += n;
+    }
+
     pub fn stats(&self) -> StoreStats {
-        let i = self.inner.lock().unwrap();
+        let i = self.lock();
         StoreStats {
             bytes: i.bytes,
             blobs: i.blobs.len(),
@@ -114,6 +190,7 @@ impl SessionStore {
             bytes_out: i.bytes_out,
             evictions: i.evictions,
             restores: i.restores,
+            put_faults: i.put_faults,
         }
     }
 }
@@ -143,10 +220,40 @@ mod tests {
     fn budget_enforced() {
         let s = SessionStore::with_budget(4);
         s.put(1, 0, vec![0; 3]).unwrap();
-        assert!(s.put(2, 0, vec![0; 2]).is_err());
+        let err = s.put(2, 0, vec![0; 2]).unwrap_err();
+        assert!(matches!(ClusterError::find(&err),
+                         Some(ClusterError::StoreFull { needed: 5,
+                                                        budget: 4 })));
         s.take(1, 0).unwrap();
         s.put(2, 0, vec![0; 2]).unwrap();
         // double-put of the same (session, rank) is refused
         assert!(s.put(2, 0, vec![0; 1]).is_err());
+    }
+
+    #[test]
+    fn peek_keeps_the_blob_resident() {
+        let s = SessionStore::new();
+        s.put(9, 0, vec![1, 2, 3]).unwrap();
+        assert_eq!(s.peek(9, 0).unwrap(), vec![1, 2, 3]);
+        assert!(s.contains(9));
+        assert_eq!(s.stats().blobs, 1, "peek must not consume");
+        assert_eq!(s.take(9, 0).unwrap(), vec![1, 2, 3]);
+        assert!(!s.contains(9));
+        assert!(s.peek(9, 0).is_err());
+    }
+
+    #[test]
+    fn injected_put_faults_fire_exactly_n_times() {
+        let s = SessionStore::new();
+        s.fail_next_puts(2);
+        let err = s.put(1, 0, vec![0; 8]).unwrap_err();
+        assert!(matches!(ClusterError::find(&err),
+                         Some(ClusterError::StoreFault)));
+        assert!(s.put(1, 1, vec![0; 8]).is_err());
+        s.put(1, 2, vec![0; 8]).unwrap();
+        let st = s.stats();
+        assert_eq!(st.put_faults, 2);
+        assert_eq!(st.blobs, 1, "failed puts must not admit bytes");
+        assert_eq!(st.bytes, 8);
     }
 }

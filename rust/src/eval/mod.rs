@@ -192,9 +192,29 @@ pub struct RunRecord {
     /// bit-identical across reruns on the native backend, the anchor
     /// for the determinism regression tests.
     pub token_digest: u64,
+    /// `Some(why)` when the scenario failed to boot or drain. The
+    /// record's metrics are then zeroed and excluded from the plan's
+    /// aggregate [`crate::plan::Measured`]; the rest of the matrix
+    /// still runs.
+    pub error: Option<String>,
 }
 
 impl RunRecord {
+    /// Record for a scenario that failed: metrics zeroed, the error
+    /// preserved, so one bad (plan, scenario) cell cannot abort the
+    /// whole matrix.
+    pub fn failed(scenario: &str, error: &str) -> RunRecord {
+        RunRecord {
+            scenario: scenario.to_string(),
+            completed: 0, rejected: 0, steps: 0, generated_tokens: 0,
+            wall_s: 0.0, comm_s: 0.0, ttl_p50_ms: 0.0, ttl_p95_ms: 0.0,
+            ttl_p99_ms: 0.0, ttft_p99_ms: 0.0, tokens_per_s: 0.0,
+            peak_kv_tokens: 0, peak_active: 0, evictions: 0, restores: 0,
+            token_digest: 0,
+            error: Some(error.to_string()),
+        }
+    }
+
     pub fn to_json(&self) -> Json {
         let mut m = BTreeMap::new();
         m.insert("scenario".into(), Json::Str(self.scenario.clone()));
@@ -218,6 +238,9 @@ impl RunRecord {
         // u64 digests do not fit an f64 JSON number losslessly.
         m.insert("token_digest".into(),
                  Json::Str(format!("{:016x}", self.token_digest)));
+        if let Some(e) = &self.error {
+            m.insert("error".into(), Json::Str(e.clone()));
+        }
         Json::Obj(m)
     }
 
@@ -249,6 +272,12 @@ impl RunRecord {
             },
             token_digest: u64::from_str_radix(digest, 16)
                 .with_context(|| format!("bad token_digest {digest:?}"))?,
+            // Failure capture landed with the robustness pass; absent
+            // (= clean run) in older docs.
+            error: match j.opt("error") {
+                Some(v) => Some(v.as_str()?.to_string()),
+                None => None,
+            },
         })
     }
 }
@@ -635,6 +664,16 @@ mod tests {
     }
 
     #[test]
+    fn failed_run_records_roundtrip_and_carry_the_error() {
+        let r = RunRecord::failed("burst_long", "rank 2 is down");
+        assert_eq!(r.completed, 0);
+        assert_eq!(r.token_digest, 0);
+        let back = RunRecord::from_json(&r.to_json()).unwrap();
+        assert_eq!(back, r);
+        assert_eq!(back.error.as_deref(), Some("rank 2 is down"));
+    }
+
+    #[test]
     fn outcome_doc_roundtrips_identically() {
         let outcome = EvalOutcome {
             rank_by: "steps".into(),
@@ -653,6 +692,7 @@ mod tests {
                         tokens_per_s: 288.0, peak_kv_tokens: 60,
                         peak_active: 4, evictions: 1, restores: 1,
                         token_digest: 0xdead_beef_cafe_f00d,
+                        error: None,
                     }],
                 }],
             }],

@@ -119,6 +119,7 @@ fn run_record(sc: &Scenario, report: &ServeReport, digest: u64)
         evictions: m.evictions,
         restores: m.restores,
         token_digest: digest,
+        error: None,
     }
 }
 
@@ -155,18 +156,34 @@ pub fn eval_plan(plan: &Plan, scenarios: &[Scenario], opts: &EvalOptions)
     let mut gpus = plan.gpus;
 
     for sc in scenarios {
-        let mut server = server_for(plan, sc)
-            .with_context(|| format!("booting plan [{}] for {}",
-                                     plan.layout.key(), plan.model))?;
-        let report = server.run(&sc.workload(), opts.max_steps)
-            .with_context(|| format!("scenario {} on [{}]", sc.name,
-                                     plan.layout.key()))?;
-        ensure!(report.completed + report.rejected == sc.requests,
-                "scenario {} on [{}] did not drain: {} of {} requests \
-                 finished under max_steps={} — raise --max-steps",
-                sc.name, plan.layout.key(),
-                report.completed + report.rejected, sc.requests,
-                opts.max_steps);
+        // A scenario that fails to boot, serve or drain becomes a
+        // *failed record* — error string preserved, metrics zeroed,
+        // excluded from the plan aggregate — instead of aborting the
+        // rest of the matrix.
+        let attempt = (|| -> Result<(Server, ServeReport)> {
+            let mut server = server_for(plan, sc)
+                .with_context(|| format!("booting plan [{}] for {}",
+                                         plan.layout.key(), plan.model))?;
+            let report = server.run(&sc.workload(), opts.max_steps)
+                .with_context(|| format!("scenario {} on [{}]", sc.name,
+                                         plan.layout.key()))?;
+            ensure!(report.completed + report.rejected == sc.requests,
+                    "scenario {} on [{}] did not drain: {} of {} requests \
+                     finished under max_steps={} — raise --max-steps",
+                    sc.name, plan.layout.key(),
+                    report.completed + report.rejected, sc.requests,
+                    opts.max_steps);
+            Ok((server, report))
+        })();
+        let (server, report) = match attempt {
+            Ok(ok) => ok,
+            Err(e) => {
+                eprintln!("eval: scenario {} on [{}] FAILED: {e:#}",
+                          sc.name, plan.layout.key());
+                runs.push(RunRecord::failed(&sc.name, &format!("{e:#}")));
+                continue;
+            }
+        };
         let m = &report.metrics;
         ttl_pool.extend_from_slice(m.ttl_samples());
         gen_total += m.generated_tokens;

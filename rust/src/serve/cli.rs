@@ -10,7 +10,8 @@
 use anyhow::{bail, Context, Result};
 
 use crate::config::Layout;
-use crate::engine::{ClusterConfig, CommModel, HelixCluster};
+use crate::engine::{ClusterConfig, CommModel, Fault, FaultPlan,
+                    HelixCluster};
 use crate::plan::{self, Plan};
 use crate::runtime::Manifest;
 use crate::util::cli::Args;
@@ -84,6 +85,11 @@ fn cluster_from(args: &Args, verify: bool)
     if scale > 0.0 {
         cc.comm = CommModel { scale, ..CommModel::nvlink() };
     }
+    // Hang-proofing deadline: how long the coordinator waits on a rank
+    // before declaring the collective dead (chaos runs shorten it so
+    // crash detection is fast).
+    cc.recv_timeout = std::time::Duration::from_millis(
+        args.opt_usize("recv-timeout-ms", 30_000)? as u64);
     Ok((HelixCluster::new(cc)?, model, plan))
 }
 
@@ -129,6 +135,16 @@ fn cmd_verify(args: &Args) -> Result<()> {
 /// turns per session), `--idle-steps S` (think-time between turns),
 /// `--host-kv T` (host-tier KV tokens idle sessions may offload into;
 /// 0 disables offload).
+///
+/// Chaos / recovery knobs (docs/ROBUSTNESS.md): `--fault-seed S`
+/// (seeded deterministic fault plan, placed within `--fault-horizon`
+/// steps), `--crash-step S` + `--crash-rank R` (kill rank R at step S),
+/// `--store-fail-step S` + `--store-fail-count N` (fail the next N
+/// host-store writes at step S), `--checkpoint-every K` (periodic KV
+/// checkpoints to the host tier; 0 disables and recovery replays from
+/// token zero), `--recovery-shed K` (steps to shed admissions after a
+/// recovery), `--recv-timeout-ms T` (hang-proofing deadline before a
+/// silent rank is declared dead).
 fn cmd_serve(args: &Args) -> Result<()> {
     let (cluster, model, plan) = cluster_from(args, args.flag("verify"))?;
     let gpus = cluster.n();
@@ -158,6 +174,30 @@ fn cmd_serve(args: &Args) -> Result<()> {
             Server::with_budgets(cluster, b, host_kv)
         }
     };
+    let mut fplan = match args.opt_usize("fault-seed", 0)? {
+        0 => FaultPlan::new(),
+        seed => FaultPlan::seeded(
+            seed as u64, args.opt_usize("fault-horizon", 64)? as u64, gpus),
+    };
+    if let Some(s) = args.opt("crash-step") {
+        fplan.push(s.parse::<u64>().context("parsing --crash-step")?,
+                   Fault::CrashRank {
+                       rank: args.opt_usize("crash-rank", 0)?,
+                   });
+    }
+    if let Some(s) = args.opt("store-fail-step") {
+        fplan.push(s.parse::<u64>().context("parsing --store-fail-step")?,
+                   Fault::StoreFail {
+                       count: args.opt_usize("store-fail-count", 1)?,
+                   });
+    }
+    if !fplan.is_empty() {
+        println!("fault plan: {} scheduled event(s)", fplan.len());
+        server.set_fault_plan(fplan);
+    }
+    server.set_checkpoint_every(
+        args.opt_usize("checkpoint-every", 0)? as u64);
+    server.set_recovery_shed(args.opt_usize("recovery-shed", 2)? as u64);
     println!("serving {} requests on {model} [{layout}] over {gpus} ranks \
               (hopb={}, comm-scale={}, arrival-rate={}, burst={}, \
               kv-budget={}{})",

@@ -70,6 +70,20 @@ pub struct ServeMetrics {
     /// page-granularity fragmentation when paged, whole-arena slack
     /// when flat.
     pub kv_page_slack: f64,
+    /// Faults the server's [`crate::engine::FaultPlan`] injected.
+    pub faults_injected: usize,
+    /// Rank-death recoveries (cluster respawn + restore + replay).
+    pub recoveries: usize,
+    /// Wall time of each recovery (teardown → respawn → restore →
+    /// replay), seconds.
+    pub recovery_times: Vec<f64>,
+    /// Tokens deterministically re-decoded from checkpoints during
+    /// recoveries.
+    pub tokens_replayed: usize,
+    /// Admissions deferred by the post-recovery / pool-exhaustion shed
+    /// window (each counted once per shed event; they retry via the
+    /// FIFO queue, never erroring out).
+    pub requests_shed: usize,
 }
 
 impl ServeMetrics {
@@ -167,6 +181,14 @@ impl ServeMetrics {
         pct(&self.restore_times, 99.0)
     }
 
+    pub fn recovery_p50(&self) -> f64 {
+        pct(&self.recovery_times, 50.0)
+    }
+
+    pub fn recovery_p99(&self) -> f64 {
+        pct(&self.recovery_times, 99.0)
+    }
+
     /// System throughput: generated tokens per second of wall time.
     pub fn tokens_per_sec(&self) -> f64 {
         if self.wall <= 0.0 {
@@ -228,6 +250,15 @@ impl ServeMetrics {
         m.insert("peak_offloaded_tokens".into(),
                  Json::Num(self.peak_offloaded_tokens as f64));
         m.insert("kv_page_slack".into(), Json::Num(self.kv_page_slack));
+        m.insert("faults_injected".into(),
+                 Json::Num(self.faults_injected as f64));
+        m.insert("recoveries".into(), Json::Num(self.recoveries as f64));
+        m.insert("recovery_p50_ms".into(), ms(self.recovery_p50()));
+        m.insert("recovery_p99_ms".into(), ms(self.recovery_p99()));
+        m.insert("tokens_replayed".into(),
+                 Json::Num(self.tokens_replayed as f64));
+        m.insert("requests_shed".into(),
+                 Json::Num(self.requests_shed as f64));
         Json::Obj(m)
     }
 }

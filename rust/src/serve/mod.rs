@@ -16,9 +16,11 @@
 pub mod batcher;
 pub mod cli;
 pub mod metrics;
+pub mod recovery;
 pub mod router;
 pub mod server;
 
 pub use metrics::ServeMetrics;
+pub use recovery::{ckpt_key, CheckpointBook, FaultInjector};
 pub use router::{AdmitAction, KvBudget, Request, RequestState, Router};
 pub use server::{ServeReport, Server, Workload};

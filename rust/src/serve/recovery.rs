@@ -1,0 +1,255 @@
+//! Recovery substrate for the self-healing serve loop.
+//!
+//! Three pieces, all consumed by [`super::server::Server`]:
+//!
+//! * [`ckpt_key`] — the epoch-tagged store identity periodic KV
+//!   checkpoints live under. Checkpoints reuse the Evict serialization
+//!   path ([`crate::engine::HelixCluster::checkpoint_slot`]) and the
+//!   same host-tier [`crate::engine::SessionStore`], so their keys must
+//!   never collide with real session ids: bit 63 marks a checkpoint,
+//!   bit 62 carries the epoch parity that double-buffers consecutive
+//!   epochs (the new epoch is fully written before the old one is
+//!   discarded — a write fault mid-checkpoint never leaves the session
+//!   without a complete fallback).
+//! * [`CheckpointBook`] — coordinator-side bookkeeping: which epoch of
+//!   which session is restorable, at what logical length, on what
+//!   cadence.
+//! * [`FaultInjector`] — owns the deterministic
+//!   [`crate::engine::FaultPlan`] plus the load-shedding window the
+//!   server opens during recovery (and on injected pool exhaustion):
+//!   while shedding, queued and newly arrived requests are *deferred*
+//!   — they stay in the FIFO and retry once the window closes — never
+//!   dropped.
+//!
+//! The recovery invariant the server builds on: decoding is greedy and
+//! per-slot attention is independent of batch composition, so feeding
+//! the same token stream into a fresh cluster reproduces KV state *and*
+//! output tokens bit-identically. A checkpoint just shortens the replay
+//! suffix; correctness never depends on one existing.
+
+use std::collections::HashMap;
+
+use crate::engine::{FaultPlan, SessionSnapshot};
+
+use super::router::RequestState;
+
+/// Store identity for session `session`'s checkpoint epoch `epoch`.
+/// Bit 63 separates the checkpoint namespace from live session ids
+/// (which are request ids, far below 2^62); bit 62 is the epoch parity
+/// that keeps epoch `e` and `e+1` under distinct keys while both are
+/// briefly resident during rotation.
+pub fn ckpt_key(epoch: u64, session: u64) -> u64 {
+    (1u64 << 63) | ((epoch & 1) << 62) | (session & ((1u64 << 62) - 1))
+}
+
+/// One restorable checkpoint: the coordinator-side snapshot (logical
+/// length + verify mirror) for blobs parked under
+/// [`ckpt_key`]`(epoch, session)`.
+pub struct Checkpoint {
+    pub epoch: u64,
+    pub snap: SessionSnapshot,
+}
+
+/// Latest complete checkpoint per resident session, plus the cadence.
+#[derive(Default)]
+pub struct CheckpointBook {
+    /// Checkpoint every `every` engine steps (`0` disables — recovery
+    /// then replays every session from token zero).
+    pub every: u64,
+    entries: HashMap<u64, Checkpoint>,
+}
+
+impl CheckpointBook {
+    pub fn new(every: u64) -> CheckpointBook {
+        CheckpointBook { every, entries: HashMap::new() }
+    }
+
+    /// Is `step` a checkpoint boundary? Step 0 never is: nothing has
+    /// decoded yet.
+    pub fn due(&self, step: u64) -> bool {
+        self.every > 0 && step > 0 && step % self.every == 0
+    }
+
+    /// Epoch the next checkpoint of `session` should be written under.
+    pub fn next_epoch(&self, session: u64) -> u64 {
+        self.entries.get(&session).map_or(1, |c| c.epoch + 1)
+    }
+
+    /// Record a freshly written checkpoint, returning the store key of
+    /// the epoch it supersedes (for the caller to discard) — the
+    /// rotation that makes the pair of parity keys a double buffer.
+    pub fn install(&mut self, session: u64, epoch: u64,
+                   snap: SessionSnapshot) -> Option<u64> {
+        self.entries
+            .insert(session, Checkpoint { epoch, snap })
+            .map(|old| ckpt_key(old.epoch, session))
+    }
+
+    /// Claim `session`'s checkpoint for a restore (the restore consumes
+    /// the underlying blobs, so the entry must leave the book with them).
+    pub fn take(&mut self, session: u64) -> Option<Checkpoint> {
+        self.entries.remove(&session)
+    }
+
+    /// Drop every entry whose session is not in `live`, returning the
+    /// removals so the caller can discard their store blobs.
+    pub fn purge_except(&mut self, live: &std::collections::HashSet<u64>)
+                        -> Vec<(u64, Checkpoint)> {
+        let stale: Vec<u64> = self.entries.keys()
+            .filter(|id| !live.contains(id)).copied().collect();
+        stale.into_iter()
+            .map(|id| { let c = self.entries.remove(&id).unwrap(); (id, c) })
+            .collect()
+    }
+
+    /// Remove every entry (post-recovery: the restores consumed the
+    /// blobs, so no entry is restorable any more).
+    pub fn drain(&mut self) -> Vec<(u64, Checkpoint)> {
+        self.entries.drain().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// Deterministic fault schedule plus the shed window.
+#[derive(Debug, Default)]
+pub struct FaultInjector {
+    pub plan: FaultPlan,
+    /// Admissions are suspended for steps `< shed_until` (new arrivals
+    /// keep queuing and retry when the window closes).
+    shed_until: u64,
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan) -> FaultInjector {
+        FaultInjector { plan, shed_until: 0 }
+    }
+
+    /// Is admission shedding at `step`?
+    pub fn shedding(&self, step: u64) -> bool {
+        step < self.shed_until
+    }
+
+    /// Extend the shed window through step `until` (exclusive); windows
+    /// only ever grow — overlapping faults merge.
+    pub fn shed_through(&mut self, until: u64) {
+        self.shed_until = self.shed_until.max(until);
+    }
+}
+
+/// The token stream a session has fed the engine so far, and how many
+/// of those tokens the KV cache holds: `(prompt ++ generated, fed)`.
+///
+/// During prefill exactly `prompt_pos` prompt tokens have been fed.
+/// Post-prefill every prompt token plus all but the newest generated
+/// token have been (the newest is the *next* input). Replaying
+/// `stream[..fed]` into a fresh slot rebuilds the KV bit-identically,
+/// and the engine's output after feeding `stream[i]` for
+/// `i >= prompt.len() - 1` must equal `stream[i + 1]` — the replay
+/// determinism check recovery enforces.
+pub fn fed_stream(st: &RequestState) -> (Vec<i32>, usize) {
+    let mut stream = st.req.prompt.clone();
+    stream.extend_from_slice(&st.generated);
+    let fed = if st.in_prefill() {
+        st.prompt_pos
+    } else {
+        st.req.prompt.len() + st.generated.len() - 1
+    };
+    (stream, fed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::router::Request;
+
+    #[test]
+    fn ckpt_keys_never_collide_with_sessions_and_alternate_parity() {
+        for id in [0u64, 1, 7, (1 << 62) - 1] {
+            for epoch in 1u64..5 {
+                let k = ckpt_key(epoch, id);
+                assert!(k >> 63 == 1, "checkpoint bit must be set");
+                assert_ne!(k, id);
+                // Consecutive epochs double-buffer under distinct keys;
+                // epochs two apart rotate back onto the same key.
+                assert_ne!(k, ckpt_key(epoch + 1, id));
+                assert_eq!(k, ckpt_key(epoch + 2, id));
+            }
+        }
+        assert_ne!(ckpt_key(1, 3), ckpt_key(1, 4));
+    }
+
+    fn snap(len: usize) -> SessionSnapshot {
+        // Field-for-field literal: the mirror is private to the engine,
+        // so tests go through the one crate-visible constructor path.
+        SessionSnapshot::for_tests(99, len)
+    }
+
+    #[test]
+    fn book_rotates_epochs_and_reports_superseded_keys() {
+        let mut book = CheckpointBook::new(4);
+        assert!(!book.due(0), "step 0 has nothing to checkpoint");
+        assert!(book.due(4) && book.due(8) && !book.due(6));
+        assert_eq!(book.next_epoch(7), 1);
+        assert_eq!(book.install(7, 1, snap(3)), None);
+        assert_eq!(book.next_epoch(7), 2);
+        // Installing epoch 2 hands back epoch 1's key for discard.
+        assert_eq!(book.install(7, 2, snap(5)), Some(ckpt_key(1, 7)));
+        let c = book.take(7).expect("entry present");
+        assert_eq!((c.epoch, c.snap.len), (2, 5));
+        assert!(book.take(7).is_none(), "take consumes");
+    }
+
+    #[test]
+    fn purge_drops_only_non_resident_sessions() {
+        let mut book = CheckpointBook::new(2);
+        book.install(1, 1, snap(2));
+        book.install(2, 3, snap(4));
+        let live = std::collections::HashSet::from([1u64]);
+        let purged = book.purge_except(&live);
+        assert_eq!(purged.len(), 1);
+        assert_eq!(purged[0].0, 2);
+        assert_eq!(purged[0].1.epoch, 3);
+        assert_eq!(book.len(), 1);
+        assert_eq!(book.drain().len(), 1);
+        assert!(book.is_empty());
+    }
+
+    #[test]
+    fn shed_windows_merge_and_expire() {
+        let mut inj = FaultInjector::default();
+        assert!(!inj.shedding(0));
+        inj.shed_through(5);
+        inj.shed_through(3); // shorter window must not shrink the open one
+        assert!(inj.shedding(4));
+        assert!(!inj.shedding(5), "window end is exclusive");
+    }
+
+    #[test]
+    fn fed_stream_counts_prefill_and_decode_feeds() {
+        let req = Request { id: 0, prompt: vec![10, 11, 12],
+                            max_new_tokens: 4, arrival: 0.0, turns: 1,
+                            idle_steps: 0 };
+        let mut st = RequestState {
+            req, slot: 0, prompt_pos: 2, generated: Vec::new(),
+            admitted_step: 0, token_times: Vec::new(),
+            submitted_wall: 0.0, admitted_wall: 0.0, sleep_until: None,
+            last_step: 0,
+        };
+        // Mid-prefill: two prompt tokens fed, none generated.
+        assert_eq!(fed_stream(&st), (vec![10, 11, 12], 2));
+        // Post-prefill with two tokens out: all 3 prompt tokens fed
+        // plus generated[0]; generated[1] is the next input, not fed.
+        st.prompt_pos = 3;
+        st.generated = vec![20, 21];
+        let (stream, fed) = fed_stream(&st);
+        assert_eq!(stream, vec![10, 11, 12, 20, 21]);
+        assert_eq!(fed, 4);
+    }
+}

@@ -2,17 +2,19 @@
 //! batching — arrival-driven submission, KV-budget admission, per-step
 //! active masks, retirement — measuring TTL/TTFT/TPOT and throughput.
 
-use std::collections::{HashMap, VecDeque};
-use std::time::Instant;
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::time::{Duration, Instant};
 
-use anyhow::{Context, Result};
+use anyhow::{ensure, Context, Result};
 
-use crate::engine::{HelixCluster, SessionSnapshot};
+use crate::engine::{ClusterError, Fault, FaultPlan, HelixCluster,
+                    SessionSnapshot};
 use crate::plan::Plan;
 use crate::util::Rng;
 
 use super::batcher;
 use super::metrics::ServeMetrics;
+use super::recovery::{self, CheckpointBook, FaultInjector};
 use super::router::{AdmitAction, KvBudget, Request, Router};
 
 /// Synthetic workload description (the paper's interactive-agent
@@ -125,6 +127,9 @@ impl ServeReport {
              evict / restore    : {} / {} (restore p50/p99 {:.2} / {:.2} ms)\n\
              peak offloaded KV  : {} tokens (host budget {})\n\
              KV page slack      : {:.1}% peak\n\
+             faults / recoveries: {} / {} (recovery p50/p99 {:.2} / {:.2} ms)\n\
+             tokens replayed    : {}\n\
+             requests shed      : {}\n\
              tokens/s (system)  : {:.1}\n\
              tokens/s/user      : {:.1}\n\
              tokens/s/GPU       : {:.1}{}",
@@ -141,6 +146,9 @@ impl ServeReport {
             m.restore_p50() * 1e3, m.restore_p99() * 1e3,
             m.peak_offloaded_tokens, self.kv_budget.host_tokens,
             m.kv_page_slack * 100.0,
+            m.faults_injected, m.recoveries,
+            m.recovery_p50() * 1e3, m.recovery_p99() * 1e3,
+            m.tokens_replayed, m.requests_shed,
             m.tokens_per_sec(), m.tokens_per_sec_per_user(),
             m.tokens_per_sec() / self.gpus as f64,
             match self.max_ref_diff {
@@ -161,6 +169,13 @@ pub struct Server {
     /// snapshot here is the coordinator-side bookkeeping (logical
     /// length, verify mirror) needed to restore.
     snapshots: HashMap<u64, SessionSnapshot>,
+    /// Deterministic fault schedule plus the shed-window state.
+    faults: FaultInjector,
+    /// Periodic epoch-tagged KV checkpoints backing rank-death recovery.
+    ckpts: CheckpointBook,
+    /// Steps to keep shedding new admissions after a recovery — bounded
+    /// degradation instead of piling load onto a just-respawned pool.
+    shed_steps: u64,
 }
 
 impl Server {
@@ -197,7 +212,34 @@ impl Server {
             host_tokens,
         };
         Server { cluster, router: Router::new(slots, budget),
-                 snapshots: HashMap::new() }
+                 snapshots: HashMap::new(),
+                 faults: FaultInjector::default(),
+                 ckpts: CheckpointBook::default(),
+                 shed_steps: 2 }
+    }
+
+    /// Install a deterministic fault schedule (chaos testing). Events
+    /// fire at serve-loop step boundaries, exactly once each, keyed to
+    /// the serve-step clock — which survives cluster respawns.
+    pub fn set_fault_plan(&mut self, plan: FaultPlan) {
+        self.faults = FaultInjector::new(plan);
+    }
+
+    /// Checkpoint every resident session's KV to the host tier every
+    /// `every` steps (`0` disables — recovery then rebuilds sessions by
+    /// replaying their full token streams).
+    pub fn set_checkpoint_every(&mut self, every: u64) {
+        self.ckpts.every = every;
+    }
+
+    /// Steps to keep shedding new admissions after each recovery.
+    pub fn set_recovery_shed(&mut self, steps: u64) {
+        self.shed_steps = steps;
+    }
+
+    /// Scheduled faults that have not fired yet.
+    pub fn faults_pending(&self) -> usize {
+        self.faults.plan.len()
     }
 
     /// Boot a server straight from a planner [`Plan`]: the planned
@@ -222,6 +264,13 @@ impl Server {
     /// end to end: submit on arrival, admit under the KV budget, open
     /// engine slots, step, apply the step's own active mask, retire and
     /// close slots — continuously, until the trace drains.
+    ///
+    /// The loop is *self-healing*: scheduled faults fire at step
+    /// boundaries, and a fatal rank-pool failure triggers a respawn +
+    /// restore + replay cycle ([`Self::recover`]) after which the
+    /// failed step is retried (bounded) — every admitted request still
+    /// completes, with tokens bit-identical to the fault-free run. See
+    /// docs/ROBUSTNESS.md.
     pub fn run_trace(&mut self, mut reqs: Vec<Request>, max_steps: u64)
                      -> Result<ServeReport> {
         reqs.sort_by(|a, b| a.arrival.total_cmp(&b.arrival)
@@ -229,23 +278,36 @@ impl Server {
         let mut arrivals: VecDeque<Request> = reqs.into();
         let done0 = self.router.completed.len();
         let rej0 = self.router.rejected.len();
-        let comm0 = (self.cluster.comm_exposed, self.cluster.comm_total);
+        // Comm accounting must survive respawns: a fresh cluster's
+        // counters restart at zero, so each dead incarnation's deltas
+        // fold into the carry before teardown.
+        let mut comm0 = (self.cluster.comm_exposed, self.cluster.comm_total);
+        let mut carry = (Duration::ZERO, Duration::ZERO);
         let mut metrics = ServeMetrics::default();
         let mut max_diff: Option<f32> = None;
         let t0 = Instant::now();
         let mut step: u64 = 0;
+        let mut retries = 0u32;
         // Serving clock: cumulative engine time, the base for every
         // per-request timestamp.
         let mut clock = 0.0f64;
 
         while step < max_steps {
             // Submissions due by this step enter the router queue.
+            let pre_q = self.router.queue.len();
             while arrivals
                 .front()
                 .map(|r| r.arrival <= step as f64)
                 .unwrap_or(false)
             {
                 self.router.submit(arrivals.pop_front().unwrap(), clock);
+            }
+            if self.faults.shedding(step) {
+                // Arrivals inside a shed window are deferred, never
+                // dropped — they stay queued and retry — but each
+                // counts as shed once.
+                metrics.requests_shed +=
+                    self.router.queue.len().saturating_sub(pre_q);
             }
             if self.router.idle() {
                 if arrivals.is_empty() {
@@ -255,7 +317,99 @@ impl Server {
                 continue;
             }
 
-            for act in self.router.admit(step, clock) {
+            // Scheduled faults fire here, exactly once each, on the
+            // serve-step clock (cluster-side step counters reset on
+            // respawn; this clock does not).
+            for f in self.faults.plan.take_due(step) {
+                metrics.faults_injected += 1;
+                let n = self.cluster.n();
+                match f {
+                    Fault::CrashRank { rank } => {
+                        // The send itself may fail if the rank is
+                        // already gone; the next collective surfaces it.
+                        let _ = self.cluster.inject_crash(rank % n);
+                    }
+                    Fault::LinkSpike { rank, delay } => {
+                        let _ = self.cluster.inject_delay(rank % n, delay);
+                    }
+                    Fault::StoreFail { count } => {
+                        self.cluster.store().fail_next_puts(count);
+                    }
+                    Fault::PoolExhaust { steps } => {
+                        self.faults.shed_through(step + steps);
+                        metrics.requests_shed += self.router.queue.len();
+                    }
+                }
+            }
+
+            match self.step_once(step, &mut arrivals, &mut metrics,
+                                 &mut max_diff, &mut clock) {
+                Ok(()) => {
+                    retries = 0;
+                    step += 1;
+                }
+                Err(e) if ClusterError::find(&e)
+                    .map_or(false, |c| c.is_fatal()) =>
+                {
+                    retries += 1;
+                    if retries > 3 {
+                        return Err(e.context(format!(
+                            "step {step} still failing after {retries} \
+                             recovery attempts")));
+                    }
+                    carry.0 += self.cluster.comm_exposed - comm0.0;
+                    carry.1 += self.cluster.comm_total - comm0.1;
+                    let tr = Instant::now();
+                    self.recover(&mut metrics).with_context(|| format!(
+                        "recovering rank pool at step {step}"))?;
+                    comm0 = (Duration::ZERO, Duration::ZERO);
+                    let dt = tr.elapsed().as_secs_f64();
+                    clock += dt;
+                    metrics.recoveries += 1;
+                    metrics.recovery_times.push(dt);
+                    if self.shed_steps > 0 {
+                        // Graceful degradation: hold new admissions
+                        // back while the respawned pool re-warms;
+                        // queued requests retry once the window closes.
+                        self.faults.shed_through(step + self.shed_steps);
+                        metrics.requests_shed += self.router.queue.len();
+                    }
+                    // Retry the same step: it credited no token.
+                }
+                Err(e) => return Err(e),
+            }
+        }
+
+        metrics.wall = t0.elapsed().as_secs_f64();
+        // Deltas, not the cluster's lifetime totals: a Server can drive
+        // several traces (the solo-reference loops in tests do).
+        metrics.comm_exposed =
+            (carry.0 + self.cluster.comm_exposed - comm0.0).as_secs_f64();
+        metrics.comm_total =
+            (carry.1 + self.cluster.comm_total - comm0.1).as_secs_f64();
+        for st in &self.router.completed[done0..] {
+            metrics.record_request(st);
+        }
+        Ok(ServeReport {
+            completed: self.router.completed.len() - done0,
+            rejected: self.router.rejected.len() - rej0,
+            gpus: self.cluster.n(),
+            kv_budget: self.router.budget(),
+            metrics,
+            max_ref_diff: max_diff,
+        })
+    }
+
+    /// One serve-loop step against the engine: admission (unless
+    /// shedding), checkpoint cadence, masked decode, token application,
+    /// retirement. On a fatal failure anywhere in here, the router is
+    /// the source of truth — [`Self::recover`] rebuilds the cluster
+    /// from it and the caller retries the step.
+    fn step_once(&mut self, step: u64, arrivals: &mut VecDeque<Request>,
+                 metrics: &mut ServeMetrics, max_diff: &mut Option<f32>,
+                 clock: &mut f64) -> Result<()> {
+        if !self.faults.shedding(step) {
+            for act in self.router.admit(step, *clock) {
                 match act {
                     AdmitAction::Open { slot, .. } => {
                         self.cluster.open_slot(slot)?;
@@ -282,96 +436,243 @@ impl Server {
                     }
                 }
             }
-            let sb = batcher::build_step(&self.router, self.cluster.batch());
-            if !sb.active.iter().any(|&a| a) {
-                // Every resident session is asleep between turns and
-                // nothing new is admissible: idle-tick the step clock
-                // instead of running an all-masked decode.
-                step += 1;
-                continue;
-            }
-            // Slots the engine should treat as live this step.
-            self.cluster.active = sb.active.clone();
+        }
+        if self.ckpts.due(step) {
+            self.checkpoint_resident()?;
+        }
+        let sb = batcher::build_step(&self.router, self.cluster.batch());
+        if !sb.active.iter().any(|&a| a) {
+            // Every resident session is asleep between turns and
+            // nothing new is admissible (or admission is shedding):
+            // idle-tick the step clock instead of running an all-masked
+            // decode.
+            return Ok(());
+        }
+        // Slots the engine should treat as live this step.
+        self.cluster.active = sb.active.clone();
 
-            let ts = Instant::now();
-            let pending = self.cluster.decode_step_begin(&sb.tokens)?;
-            // Event-driven tail: while rank 0 runs the LM head, ingest
-            // the arrivals due by the *next* step, so admission works
-            // from an up-to-date queue the moment the logits land —
-            // submissions no longer serialize behind the decode step.
-            while arrivals
-                .front()
-                .map(|r| r.arrival <= (step + 1) as f64)
-                .unwrap_or(false)
-            {
-                self.router.submit(arrivals.pop_front().unwrap(), clock);
-            }
-            let (next, sm) = self.cluster.decode_step_finish(pending)?;
-            let dt = ts.elapsed().as_secs_f64();
-            clock += dt;
+        let ts = Instant::now();
+        let pending = self.cluster.decode_step_begin(&sb.tokens)?;
+        // Event-driven tail: while rank 0 runs the LM head, ingest
+        // the arrivals due by the *next* step, so admission works
+        // from an up-to-date queue the moment the logits land —
+        // submissions no longer serialize behind the decode step.
+        let pre_q = self.router.queue.len();
+        while arrivals
+            .front()
+            .map(|r| r.arrival <= (step + 1) as f64)
+            .unwrap_or(false)
+        {
+            self.router.submit(arrivals.pop_front().unwrap(), *clock);
+        }
+        if self.faults.shedding(step + 1) {
+            // Their first admission opportunity is the next step; count
+            // them as shed if that step is inside the window.
+            metrics.requests_shed +=
+                self.router.queue.len().saturating_sub(pre_q);
+        }
+        let (next, sm) = self.cluster.decode_step_finish(pending)?;
+        let dt = ts.elapsed().as_secs_f64();
+        *clock += dt;
 
-            metrics.step_times.push(dt);
-            metrics.steps += 1;
-            if let Some(d) = sm.max_ref_diff {
-                max_diff = Some(max_diff.unwrap_or(0.0).max(d));
+        metrics.step_times.push(dt);
+        metrics.steps += 1;
+        if let Some(d) = sm.max_ref_diff {
+            *max_diff = Some(max_diff.unwrap_or(0.0).max(d));
+        }
+        for slot in batcher::apply_step(&mut self.router, &sb, &next,
+                                        *clock, step) {
+            // Turn boundary: the session sleeps with its KV resident
+            // (admission may later evict it to the host tier).
+            self.cluster.close_slot(slot);
+        }
+        metrics.generated_tokens += self
+            .router
+            .slots
+            .iter()
+            .flatten()
+            .filter(|st| sb.active[st.slot] && !st.in_prefill())
+            .count();
+        metrics.peak_kv_tokens = metrics
+            .peak_kv_tokens
+            .max(self.cluster.live_kv_tokens());
+        metrics.peak_committed_tokens = metrics
+            .peak_committed_tokens
+            .max(self.router.committed_tokens());
+        metrics.peak_offloaded_tokens = metrics
+            .peak_offloaded_tokens
+            .max(self.router.host_committed());
+        let (live, alloc) = self.cluster.kv_page_stats();
+        if alloc > 0 {
+            metrics.kv_page_slack = metrics.kv_page_slack
+                .max((alloc - live) as f64 / alloc as f64);
+        }
+        metrics.peak_active =
+            metrics.peak_active.max(self.router.active_count());
+        for slot in self.router.retire() {
+            self.cluster.close_slot(slot);
+            // Retired, not sleeping: the KV is garbage now, so drop
+            // it from the resident gauges ([`open_slot`] resets the
+            // physical rows on reuse).
+            self.cluster.lens[slot] = 0;
+        }
+        Ok(())
+    }
+
+    /// Checkpoint every resident session's KV to the host tier under a
+    /// fresh epoch key. Epochs double-buffer: the previous one is only
+    /// discarded once the new one is fully written, so a write fault
+    /// mid-cadence never leaves a session without a complete fallback.
+    fn checkpoint_resident(&mut self) -> Result<()> {
+        let store = self.cluster.store();
+        // Sessions that retired or were offloaded since the last
+        // cadence no longer need a checkpoint; their blobs would
+        // otherwise hold store budget forever.
+        let live: HashSet<u64> = self.router.slots.iter().flatten()
+            .map(|st| st.req.id).collect();
+        for (id, c) in self.ckpts.purge_except(&live) {
+            store.discard(recovery::ckpt_key(c.epoch, id));
+        }
+        let targets: Vec<(usize, u64)> = self.router.slots.iter()
+            .enumerate()
+            .filter_map(|(slot, s)| s.as_ref().map(|st| (slot, st.req.id)))
+            .filter(|&(slot, _)| self.cluster.lens[slot] > 0)
+            .collect();
+        for (slot, id) in targets {
+            let epoch = self.ckpts.next_epoch(id);
+            let key = recovery::ckpt_key(epoch, id);
+            match self.cluster.checkpoint_slot(slot, key) {
+                Ok(snap) => {
+                    if let Some(old) = self.ckpts.install(id, epoch, snap) {
+                        store.discard(old);
+                    }
+                }
+                Err(e) => {
+                    // Ranks that did write left blobs under the new
+                    // key; they must not shadow the intact prior epoch.
+                    store.discard(key);
+                    match ClusterError::find(&e) {
+                        // Survivable store failure (injected fault or
+                        // byte budget): keep the old epoch, retry next
+                        // cadence.
+                        Some(c) if !c.is_fatal() => {}
+                        _ => return Err(e),
+                    }
+                }
             }
-            for slot in batcher::apply_step(&mut self.router, &sb, &next,
-                                            clock, step) {
-                // Turn boundary: the session sleeps with its KV resident
-                // (admission may later evict it to the host tier).
-                self.cluster.close_slot(slot);
-            }
-            metrics.generated_tokens += self
-                .router
-                .slots
-                .iter()
-                .flatten()
-                .filter(|st| sb.active[st.slot] && !st.in_prefill())
-                .count();
-            metrics.peak_kv_tokens = metrics
-                .peak_kv_tokens
-                .max(self.cluster.live_kv_tokens());
-            metrics.peak_committed_tokens = metrics
-                .peak_committed_tokens
-                .max(self.router.committed_tokens());
-            metrics.peak_offloaded_tokens = metrics
-                .peak_offloaded_tokens
-                .max(self.router.host_committed());
-            let (live, alloc) = self.cluster.kv_page_stats();
-            if alloc > 0 {
-                metrics.kv_page_slack = metrics.kv_page_slack
-                    .max((alloc - live) as f64 / alloc as f64);
-            }
-            metrics.peak_active =
-                metrics.peak_active.max(self.router.active_count());
-            for slot in self.router.retire() {
-                self.cluster.close_slot(slot);
-                // Retired, not sleeping: the KV is garbage now, so drop
-                // it from the resident gauges ([`open_slot`] resets the
-                // physical rows on reuse).
-                self.cluster.lens[slot] = 0;
-            }
-            step += 1;
+        }
+        Ok(())
+    }
+
+    /// Rank-death recovery: tear the dead pool down, respawn a fresh
+    /// [`HelixCluster`] from the same boot config (sharing the
+    /// surviving host-tier store), restore every session from its
+    /// newest complete checkpoint — or rebuild it from token zero —
+    /// and deterministically replay the tokens fed since. Greedy
+    /// decoding plus batch-composition-independent attention make the
+    /// replayed streams bit-identical to the uninterrupted run, which
+    /// [`Self::replay_slot`] asserts token by token.
+    fn recover(&mut self, metrics: &mut ServeMetrics) -> Result<()> {
+        let fresh = HelixCluster::new(self.cluster.config())
+            .context("respawning rank pool")?;
+        // Construct-then-swap: the old pool is only torn down (its Drop
+        // is crash-safe) once the replacement exists.
+        drop(std::mem::replace(&mut self.cluster, fresh));
+        let store = self.cluster.store();
+
+        // Orphaned evictions: the router already moved these sessions
+        // to `suspended`, but the crash interrupted the per-rank
+        // offload streams — no coordinator snapshot, a partial blob
+        // set. Rebuild each one through scratch slot 0 and evict it
+        // again; every resident session is restored *after* this, so
+        // the scratch slot is free by construction.
+        let orphans: Vec<(u64, usize, Vec<i32>, usize)> =
+            self.router.suspended.iter()
+            .filter(|st| !self.snapshots.contains_key(&st.req.id))
+            .map(|st| {
+                let (stream, fed) = recovery::fed_stream(st);
+                (st.req.id, st.req.prompt.len(), stream, fed)
+            })
+            .collect();
+        for (id, plen, stream, fed) in orphans {
+            store.discard(id);
+            self.cluster.open_slot(0)?;
+            self.replay_slot(0, &stream, 0, fed, plen, metrics)?;
+            let snap = self.cluster.evict_slot(0, id)?;
+            self.snapshots.insert(id, snap);
+            metrics.evictions += 1;
         }
 
-        metrics.wall = t0.elapsed().as_secs_f64();
-        // Deltas, not the cluster's lifetime totals: a Server can drive
-        // several traces (the solo-reference loops in tests do).
-        metrics.comm_exposed =
-            (self.cluster.comm_exposed - comm0.0).as_secs_f64();
-        metrics.comm_total =
-            (self.cluster.comm_total - comm0.1).as_secs_f64();
-        for st in &self.router.completed[done0..] {
-            metrics.record_request(st);
+        // Residents — live, or asleep in place with KV cached.
+        let residents: Vec<(usize, u64, usize, Vec<i32>, usize)> =
+            self.router.slots.iter().enumerate()
+            .filter_map(|(slot, s)| s.as_ref().map(|st| {
+                let (stream, fed) = recovery::fed_stream(st);
+                (slot, st.req.id, st.req.prompt.len(), stream, fed)
+            }))
+            .collect();
+        for (slot, id, plen, stream, fed) in residents {
+            match self.ckpts.take(id) {
+                Some(c) if c.snap.len <= fed => {
+                    self.cluster.restore_slot(slot, &c.snap)
+                        .with_context(|| format!(
+                            "restoring checkpoint epoch {} of session \
+                             {id}", c.epoch))?;
+                    // The restore consumed the blobs; drop any stray.
+                    store.discard(recovery::ckpt_key(c.epoch, id));
+                    self.replay_slot(slot, &stream, c.snap.len, fed,
+                                     plen, metrics)?;
+                }
+                other => {
+                    // No usable checkpoint: full deterministic rebuild.
+                    // A crash mid-Restore may have left half-consumed
+                    // blobs under the session id — clear them.
+                    if let Some(c) = other {
+                        store.discard(recovery::ckpt_key(c.epoch, id));
+                    }
+                    store.discard(id);
+                    self.cluster.open_slot(slot)?;
+                    self.replay_slot(slot, &stream, 0, fed, plen,
+                                     metrics)?;
+                }
+            }
         }
-        Ok(ServeReport {
-            completed: self.router.completed.len() - done0,
-            rejected: self.router.rejected.len() - rej0,
-            gpus: self.cluster.n(),
-            kv_budget: self.router.budget(),
-            metrics,
-            max_ref_diff: max_diff,
-        })
+
+        // Whatever the book still holds belongs to sessions that are
+        // neither resident nor restorable any more.
+        for (id, c) in self.ckpts.drain() {
+            store.discard(recovery::ckpt_key(c.epoch, id));
+        }
+        // The restores above consumed the checkpoint blobs; re-seed so
+        // a second fault does not degrade to full-stream replay.
+        if self.ckpts.every > 0 {
+            self.checkpoint_resident()?;
+        }
+        Ok(())
+    }
+
+    /// Re-decode `stream[from..fed]` into `slot` (only that slot
+    /// active), asserting every post-prefill output equals the token
+    /// the original run recorded.
+    fn replay_slot(&mut self, slot: usize, stream: &[i32], from: usize,
+                   fed: usize, plen: usize, metrics: &mut ServeMetrics)
+                   -> Result<()> {
+        let b = self.cluster.batch();
+        for i in from..fed {
+            let mut toks = vec![0i32; b];
+            toks[slot] = stream[i];
+            let mut mask = vec![false; b];
+            mask[slot] = true;
+            self.cluster.active = mask;
+            let pending = self.cluster.decode_step_begin(&toks)?;
+            let (next, _) = self.cluster.decode_step_finish(pending)?;
+            ensure!(i + 1 < plen || next[slot] == stream[i + 1],
+                    "replay diverged in slot {slot} at token {i}: \
+                     engine {} vs recorded {}",
+                    next[slot], stream[i + 1]);
+            metrics.tokens_replayed += 1;
+        }
+        Ok(())
     }
 }
 

@@ -14,7 +14,7 @@ mod common;
 use std::time::Duration;
 
 use helix::config::Layout;
-use helix::engine::{ClusterConfig, CommModel};
+use helix::engine::{ClusterConfig, ClusterError, CommModel};
 
 use crate::common::cluster_or_skip;
 
@@ -164,6 +164,50 @@ fn crashed_rank_errors_instead_of_hanging() {
             start.elapsed());
 
     // The pool is unusable but must stay shut-downable.
+    cluster.shutdown();
+}
+
+/// Satellite: a crash injected *mid-flight* — between the HOP-B
+/// dispatch of `decode_step_begin` and the logits collection of
+/// `decode_step_finish` — must not corrupt the in-flight step (ranks
+/// drain already-queued work before dying), and the *next* collective
+/// must surface a typed fatal error instead of hanging.
+#[test]
+fn crash_mid_flight_hopb_errors_instead_of_hanging() {
+    let mut cc = ClusterConfig::new(MODEL, layout());
+    cc.hopb = true;
+    cc.verify = true; // oracle checks the mid-flight step's numerics
+    cc.recv_timeout = Duration::from_millis(500);
+    let Some(mut cluster) = cluster_or_skip(cc) else { return };
+    for s in 0..cluster.batch() {
+        cluster.open_slot(s).unwrap();
+    }
+    let tokens: Vec<i32> = (0..cluster.batch() as i32).map(|i| i + 5)
+        .collect();
+    cluster.decode_step(&tokens).expect("healthy pool decodes");
+
+    // Crash lands behind the in-flight step in rank 1's command queue:
+    // the step it already started must complete, numerically intact.
+    let pending = cluster.decode_step_begin(&tokens)
+        .expect("step dispatch on a healthy pool");
+    cluster.inject_crash(1).expect("mid-flight crash is legal");
+    let (_, sm) = cluster.decode_step_finish(pending)
+        .expect("the dispatched step drains cleanly past the crash");
+    let d = sm.max_ref_diff.expect("verify mirror should have run");
+    assert!(d < 1e-3, "crash command corrupted an in-flight step \
+                       (drift {d:.3e} from the reference)");
+
+    // The next step needs rank 1 and must fail typed and timely.
+    let start = std::time::Instant::now();
+    let err = cluster.decode_step(&tokens)
+        .expect_err("decode through a dead rank must fail");
+    let ce = ClusterError::find(&err)
+        .expect("dead-rank failure should carry a typed ClusterError");
+    assert!(ce.is_fatal(),
+            "a dead rank is a fatal pool error, got {ce}");
+    assert!(start.elapsed() < Duration::from_secs(10),
+            "dead-rank detection took {:?} — hang-proofing failed",
+            start.elapsed());
     cluster.shutdown();
 }
 

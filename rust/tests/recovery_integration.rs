@@ -1,0 +1,156 @@
+//! Self-healing serve loop acceptance: a rank crashed mid-run is
+//! respawned, its sessions are restored from host-tier checkpoints (or
+//! rebuilt from token zero) and replayed, and every admitted request
+//! still completes with a token stream **bit-identical** to the
+//! fault-free run of the same workload. Greedy decoding plus
+//! batch-composition-independent attention are what make that a hard
+//! equality, and this test is the contract that keeps them honest.
+//!
+//! One #[test] on purpose: the matrix mutates `HELIX_NATIVE_THREADS`,
+//! which is process-global state — parallel tests in this binary would
+//! race it (same convention as tests/session_offload.rs).
+
+mod common;
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use helix::config::Layout;
+use helix::engine::{ClusterConfig, Fault, FaultPlan};
+use helix::serve::{ServeReport, Server, Workload};
+use helix::util::Rng;
+
+use crate::common::cluster_or_skip;
+
+const MAX_STEPS: u64 = 20_000;
+
+fn workload(requests: usize, seed: u64) -> Workload {
+    Workload {
+        num_requests: requests,
+        prompt_len: (3, 6),
+        gen_len: (8, 14),
+        seed,
+        arrival_rate: 0.5,
+        burst: 2,
+        turns: 1,
+        idle_steps: 0,
+    }
+}
+
+/// Boot a server with the full physical pool as the admission budget
+/// (no churn — evictions here come from recovery, not admission) and a
+/// short hang-proofing deadline so dead-rank detection is test-fast.
+fn boot(model: &str, layout: Layout) -> Option<Server> {
+    let mut cc = ClusterConfig::new(model, layout);
+    cc.recv_timeout = Duration::from_millis(1_000);
+    let cluster = cluster_or_skip(cc)?;
+    let budget = cluster.kv_budget_tokens();
+    Some(Server::with_budgets(cluster, budget, budget * 4))
+}
+
+fn streams(server: &Server) -> BTreeMap<u64, Vec<i32>> {
+    server.router.completed.iter()
+        .map(|st| (st.req.id, st.generated.clone()))
+        .collect()
+}
+
+fn run_case(model: &str, layout: Layout, faults: FaultPlan,
+            ckpt_every: u64, w: &Workload)
+            -> Option<(ServeReport, BTreeMap<u64, Vec<i32>>)> {
+    let mut server = boot(model, layout)?;
+    server.set_fault_plan(faults);
+    server.set_checkpoint_every(ckpt_every);
+    let report = server.run(w, MAX_STEPS).expect("serve run must heal");
+    assert_eq!(server.faults_pending(), 0,
+               "scheduled faults must all have fired");
+    Some((report, streams(&server)))
+}
+
+/// Directed case: one rank killed mid-run, with a checkpoint cadence
+/// short enough that recovery restores from the host tier and replays
+/// only the tail. Pins the full metrics contract, not just the tokens.
+fn directed_crash_case(model: &str, layout: Layout) -> Option<()> {
+    let w = workload(10, 42);
+    let (base, want) = run_case(model, layout, FaultPlan::new(), 0, &w)?;
+    assert_eq!(base.completed, 10, "fault-free trace must drain");
+    assert_eq!(base.metrics.recoveries, 0);
+    assert_eq!(base.metrics.faults_injected, 0);
+
+    let mut plan = FaultPlan::new();
+    plan.push(6, Fault::CrashRank { rank: 1 });
+    let (rep, got) = run_case(model, layout, plan, 4, &w)?;
+
+    assert_eq!(got, want,
+               "recovered streams diverged from the uninterrupted run \
+                ({model} [{}])", layout.key());
+    assert_eq!(rep.completed, base.completed,
+               "recovery lost admitted requests");
+    assert_eq!(rep.rejected, base.rejected);
+    assert_eq!(rep.metrics.faults_injected, 1);
+    assert!(rep.metrics.recoveries >= 1,
+            "a mid-run rank death must trigger a recovery");
+    assert!(rep.metrics.tokens_replayed >= 1,
+            "recovery replayed nothing despite live sessions at crash");
+    assert!(rep.metrics.recovery_p99() > 0.0,
+            "recovery latency percentiles must be populated");
+    Some(())
+}
+
+/// Property-style sweep: random checkpoint cadences (including 0 =
+/// replay-from-zero) and random crash steps/ranks must never change
+/// the decoded streams or lose a request.
+fn random_crash_case(model: &str, layout: Layout, trial: u64)
+                     -> Option<()> {
+    let mut rng = Rng::new(0xBAD5_EED0 + trial);
+    let ckpt_every = [0u64, 3, 4, 6][rng.range(0, 4)];
+    let crash_step = rng.range(3, 12) as u64;
+    let crash_rank = rng.range(0, 4);
+    let w = workload(8, 100 + trial);
+
+    let (base, want) = run_case(model, layout, FaultPlan::new(), 0, &w)?;
+    assert_eq!(base.completed, 8, "fault-free trace must drain");
+
+    let mut plan = FaultPlan::new();
+    plan.push(crash_step, Fault::CrashRank { rank: crash_rank });
+    let (rep, got) = run_case(model, layout, plan, ckpt_every, &w)?;
+
+    assert_eq!(got, want,
+               "trial {trial}: crash at step {crash_step} (rank \
+                {crash_rank}, checkpoint every {ckpt_every}) changed \
+                the decoded streams on {model} [{}]", layout.key());
+    assert_eq!(rep.completed, base.completed,
+               "trial {trial}: recovery lost admitted requests");
+    assert!(rep.metrics.recoveries >= 1,
+            "trial {trial}: crash at step {crash_step} never recovered");
+    Some(())
+}
+
+#[test]
+fn recovered_streams_are_bit_identical_to_fault_free_runs() {
+    let cases = [("tiny_gqa", Layout::helix(2, 2, 4, 1)),
+                 ("tiny_moe", Layout::helix(2, 2, 2, 2))];
+
+    // Directed crash on dense + MoE, single- and multi-threaded ranks.
+    for (model, layout) in cases {
+        for threads in ["1", "4"] {
+            std::env::set_var("HELIX_NATIVE_THREADS", threads);
+            if directed_crash_case(model, layout).is_none() {
+                std::env::remove_var("HELIX_NATIVE_THREADS");
+                return; // pjrt-without-artifacts environment
+            }
+        }
+    }
+
+    // Randomized cadence/crash-step sweep, alternating model and
+    // worker count per trial.
+    for trial in 0..4u64 {
+        let (model, layout) = cases[(trial % 2) as usize];
+        let threads = if trial < 2 { "1" } else { "4" };
+        std::env::set_var("HELIX_NATIVE_THREADS", threads);
+        if random_crash_case(model, layout, trial).is_none() {
+            std::env::remove_var("HELIX_NATIVE_THREADS");
+            return;
+        }
+    }
+    std::env::remove_var("HELIX_NATIVE_THREADS");
+}

@@ -14,7 +14,7 @@ mod common;
 use std::time::{Duration, Instant};
 
 use helix::config::Layout;
-use helix::engine::ClusterConfig;
+use helix::engine::{ClusterConfig, ClusterError};
 
 use crate::common::cluster_or_skip;
 
@@ -130,6 +130,35 @@ fn crash_during_evict_errors() {
     cluster.shutdown();
 }
 
+/// Hang-proofing, restore edition: a rank that dies *between* evict
+/// and restore turns the restore collective into a typed, timely
+/// coordinator error — half-consumed blobs and all — never a hang.
+fn crash_during_restore_errors() {
+    let mut cc = ClusterConfig::new("tiny_gqa", Layout::helix(2, 2, 4, 1));
+    cc.recv_timeout = Duration::from_millis(500);
+    let Some(mut cluster) = cluster_or_skip(cc) else { return };
+    for s in 0..cluster.batch() {
+        cluster.open_slot(s).unwrap();
+    }
+    let tokens: Vec<i32> = (0..cluster.batch() as i32).map(|i| i + 5)
+        .collect();
+    cluster.decode_step(&tokens).expect("healthy pool decodes");
+
+    let snap = cluster.evict_slot(1, 11).expect("evict slot 1");
+    cluster.inject_crash(2).expect("crash command delivered");
+    let start = Instant::now();
+    let err = cluster.restore_slot(1, &snap)
+        .expect_err("restore through a dead rank must fail");
+    let ce = ClusterError::find(&err)
+        .expect("restore failure should carry a typed ClusterError");
+    assert!(ce.is_fatal(),
+            "a dead rank is a fatal pool error, got {ce}");
+    assert!(start.elapsed() < Duration::from_secs(10),
+            "dead-rank detection took {:?} — hang-proofing failed",
+            start.elapsed());
+    cluster.shutdown();
+}
+
 #[test]
 fn offload_restore_is_bit_identical_across_kvp_and_threads() {
     // kvp x tpa sweeps the attention grid while n stays 4; the blob
@@ -158,4 +187,5 @@ fn offload_restore_is_bit_identical_across_kvp_and_threads() {
     std::env::remove_var("HELIX_NATIVE_THREADS");
 
     crash_during_evict_errors();
+    crash_during_restore_errors();
 }

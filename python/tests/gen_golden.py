@@ -44,6 +44,30 @@ def flash_case(name, b, kh, g, hsz, scap, block_s, lens, seed):
     }
 
 
+def prefill_case(name, t, kh, g, hsz, scap, block_s, valid, seed):
+    """Chunked-prefill flash attention: ``t`` query tokens share ONE
+    KV shard (``k/v [Kh, Scap, Hsz]``) with per-query ragged lengths
+    (``valid [T]`` — causal mask composed with the KVP round-robin
+    split; 0 marks a query whose shard holds none of its prefix yet).
+    The oracle is flash_decode_ref with the shard broadcast across the
+    query axis."""
+    rng = np.random.default_rng(seed)
+    q = rng.standard_normal((t, kh, g, hsz)).astype(np.float32)
+    k = rng.standard_normal((kh, scap, hsz)).astype(np.float32)
+    v = rng.standard_normal((kh, scap, hsz)).astype(np.float32)
+    valid = np.asarray(valid, dtype=np.int32)
+    assert valid.shape == (t,)
+    kb = np.broadcast_to(k[None], (t, kh, scap, hsz))
+    vb = np.broadcast_to(v[None], (t, kh, scap, hsz))
+    o, lse = flash_decode_ref(q, kb, vb, valid)
+    return {
+        "name": name, "t": t, "kh": kh, "g": g, "hsz": hsz, "scap": scap,
+        "block_s": block_s, "valid": [int(x) for x in valid],
+        "q": _flat(q), "k": _flat(k), "v": _flat(v),
+        "o": _flat(o), "lse": _flat(lse),
+    }
+
+
 def combine_case(name, r, b, qs, hsz, empty, seed):
     """`empty` is a list of (r, b) shard coordinates to mark empty
     (o = 0, lse = NEG_INF), mirroring what the flash kernel emits for
@@ -81,6 +105,24 @@ def main():
     with open(os.path.join(OUT, "flash_decode.json"), "w") as f:
         json.dump({"cases": flash}, f)
 
+    prefill = [
+        # pure causal ramp: query i sees exactly i+1 entries (kvp=1)
+        prefill_case("causal_ramp", t=6, kh=2, g=2, hsz=8, scap=32,
+                     block_s=8, valid=list(range(1, 7)), seed=909),
+        # KVP-split raggedness: early queries own nothing locally (0),
+        # later ones an uneven prefix — the round-robin composition
+        prefill_case("kvp_ragged", t=5, kh=2, g=2, hsz=8, scap=32,
+                     block_s=8, valid=[0, 0, 3, 3, 11], seed=1010),
+        # block boundaries incl. the full shard
+        prefill_case("block_boundary", t=4, kh=1, g=4, hsz=16, scap=64,
+                     block_s=16, valid=[16, 32, 48, 64], seed=1111),
+        # degenerate one-token chunk (the decode shape)
+        prefill_case("t1", t=1, kh=2, g=2, hsz=8, scap=32, block_s=8,
+                     valid=[21], seed=1212),
+    ]
+    with open(os.path.join(OUT, "flash_prefill.json"), "w") as f:
+        json.dump({"cases": prefill}, f)
+
     combine = [
         combine_case("dense", r=2, b=2, qs=2, hsz=8, empty=[], seed=505),
         # one empty shard for row 0; row 1 sees both shards
@@ -105,9 +147,9 @@ def main():
     with open(os.path.join(fdir, "manifest.json"), "w") as f:
         json.dump(build_manifest(), f, indent=1, sort_keys=True)
 
-    print(f"wrote {len(flash)} flash_decode + {len(combine)} combine "
-          f"cases + the synthetic-manifest fixture to "
-          f"{os.path.normpath(OUT)}")
+    print(f"wrote {len(flash)} flash_decode + {len(prefill)} "
+          f"flash_prefill + {len(combine)} combine cases + the "
+          f"synthetic-manifest fixture to {os.path.normpath(OUT)}")
 
 
 if __name__ == "__main__":

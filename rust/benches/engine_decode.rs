@@ -231,6 +231,55 @@ fn restore_bandwidth(report: &mut JsonReport, model: &str,
     cluster.shutdown();
 }
 
+/// Chunked-prefill ingestion: tokens/s through `prefill_chunk` plus
+/// the TTFT trajectory — cumulative ingestion time when the context
+/// crosses 1/8, 1/4, 1/2 and ~all of the per-slot KV capacity. This is
+/// the measured counterpart of `Plan::predicted_ttft_ms`, and what the
+/// `prefill/` CI gate watches (scripts/check_bench_regression.py:
+/// ingestion rate present and positive, TTFT monotone in context).
+fn prefill_ingestion(report: &mut JsonReport, model: &str,
+                     layout: Layout) {
+    let cc = ClusterConfig::new(model, layout);
+    let mut cluster = match HelixCluster::new(cc) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("skipping prefill ingestion: {e:#}");
+            return;
+        }
+    };
+    cluster.open_slot(0).unwrap();
+    let vocab = cluster.cfg.vocab as i32;
+    let body = cluster.slot_kv_tokens() - 1; // final token decodes
+    let prompt: Vec<i32> = (0..body)
+        .map(|i| 1 + (i as i32 * 13) % (vocab - 1))
+        .collect();
+    const CHUNK: usize = 16;
+    let marks: Vec<usize> = [8, 4, 2, 1].iter().map(|d| body / d)
+        .collect();
+    println!("\n## chunked prefill: ingestion rate and TTFT vs context \
+              ({model} {}, chunk {CHUNK})", layout.key());
+    let (mut off, mut elapsed, mut mi) = (0usize, 0.0f64, 0usize);
+    while off < body {
+        let take = CHUNK.min(body - off);
+        let pm = cluster.prefill_chunk(0, &prompt[off..off + take])
+            .unwrap();
+        elapsed += pm.total.as_secs_f64();
+        off += take;
+        while mi < marks.len() && off >= marks[mi] {
+            println!("ctx {:>6}: ttft {:>9.2} ms", marks[mi],
+                     elapsed * 1e3);
+            report.metric(&format!("prefill/{model}/ttft_ctx{}_ms",
+                                   marks[mi]), elapsed * 1e3);
+            mi += 1;
+        }
+    }
+    let tok_s = body as f64 / elapsed.max(1e-12);
+    println!("ingested {body} tokens in {:.2} ms ({tok_s:.0} tok/s)",
+             elapsed * 1e3);
+    report.metric(&format!("prefill/{model}/chunk_tokens_per_s"), tok_s);
+    cluster.shutdown();
+}
+
 /// Rank-death recovery cost: fill a batch to a realistic context,
 /// checkpoint every slot to the host tier, kill a rank, then time the
 /// recovery pipeline — respawn from the boot config, restore the
@@ -379,6 +428,7 @@ fn main() {
     }
     restore_bandwidth(&mut report, "tiny_gqa", Layout::helix(2, 2, 4, 1));
     recovery_replay(&mut report, "tiny_gqa", Layout::helix(2, 2, 4, 1));
+    prefill_ingestion(&mut report, "tiny_gqa", Layout::helix(2, 2, 4, 1));
 
     context_scaling(&mut report, "tiny_gqa",
                     Layout::helix(2, 2, 4, 1));

@@ -164,11 +164,11 @@ impl SessionSnapshot {
     }
 }
 
-struct VerifyState {
+pub(super) struct VerifyState {
     rt: Runtime,
     /// Full (logical-order) KV mirror per layer: [B, Kh, Scap, Hsz].
-    k_full: Vec<HostTensor>,
-    v_full: Vec<HostTensor>,
+    pub(super) k_full: Vec<HostTensor>,
+    pub(super) v_full: Vec<HostTensor>,
 }
 
 /// The coordinator.
@@ -178,9 +178,9 @@ pub struct HelixCluster {
     model: String,
     /// Broadcast/All-Reduce wire (charged per transfer, never slept on
     /// the coordinator).
-    link: Link,
+    pub(super) link: Link,
     /// The KVP All-to-All wire HOP-B pipelines (possibly distinct).
-    a2a_link: Link,
+    pub(super) a2a_link: Link,
     hopb: bool,
     txs: Vec<Sender<Cmd>>,
     rx: Receiver<Resp>,
@@ -189,8 +189,8 @@ pub struct HelixCluster {
     pub lens: Vec<usize>,
     /// Which batch slots hold live requests.
     pub active: Vec<bool>,
-    full_weights: Vec<BTreeMap<String, HostTensor>>,
-    verify: Option<VerifyState>,
+    pub(super) full_weights: Vec<BTreeMap<String, HostTensor>>,
+    pub(super) verify: Option<VerifyState>,
     /// Cumulative modeled link time, every transfer summed (overlap
     /// ignored).
     pub comm_total: Duration,
@@ -199,11 +199,11 @@ pub struct HelixCluster {
     pub comm_exposed: Duration,
     /// An All-Reduce completion deadline not yet attached to a command
     /// (consumed by the next fan-out that reads the reduced tensor).
-    pending_delay: Option<Instant>,
+    pub(super) pending_delay: Option<Instant>,
     /// Hang-proofing deadline for the shared response channel.
-    recv_timeout: Duration,
+    pub(super) recv_timeout: Duration,
     /// A `decode_step_begin` awaiting its `decode_step_finish`.
-    in_flight: bool,
+    pub(super) in_flight: bool,
     /// KV page size in tokens (0 = flat dense arenas).
     page_toks: usize,
     /// Host-tier store the ranks stream evicted sessions into.
@@ -386,7 +386,7 @@ impl HelixCluster {
         self.cfg.batch
     }
 
-    fn send(&self, rank: usize, cmd: Cmd) -> Result<()> {
+    pub(super) fn send(&self, rank: usize, cmd: Cmd) -> Result<()> {
         self.txs[rank].send(cmd).map_err(|_| {
             anyhow::Error::new(ClusterError::RankDead { rank })
                 .context(format!("rank {rank} is down (channel closed)"))
@@ -423,7 +423,7 @@ impl HelixCluster {
     /// overflow) must not leave the other n-1 responses queued to
     /// desynchronize the next collective. A dead rank still shortcuts
     /// out via the `recv_resp` timeout.
-    fn collect(&mut self, n: usize) -> Result<Vec<Payload>> {
+    pub(super) fn collect(&mut self, n: usize) -> Result<Vec<Payload>> {
         let mut out: Vec<Option<Payload>> = (0..self.n()).map(|_| None)
             .collect();
         let mut exposed = Duration::ZERO;
@@ -451,7 +451,7 @@ impl HelixCluster {
     /// returned deadline (None when emulation is off) must be delivered
     /// to each receiving rank via [`Self::send_delay`] *before* the
     /// command that consumes the transferred data.
-    fn charge_main(&mut self, bytes: usize) -> Option<Instant> {
+    pub(super) fn charge_main(&mut self, bytes: usize) -> Option<Instant> {
         let (deadline, d) = self.link.charge(bytes)?;
         self.comm_total += d;
         Some(deadline)
@@ -459,7 +459,7 @@ impl HelixCluster {
 
     /// Charge the KVP All-to-All wire (possibly distinct — see
     /// `ClusterConfig::a2a_comm`).
-    fn charge_a2a(&mut self, bytes: usize) -> Option<Instant> {
+    pub(super) fn charge_a2a(&mut self, bytes: usize) -> Option<Instant> {
         let (deadline, d) = self.a2a_link.charge(bytes)?;
         self.comm_total += d;
         Some(deadline)
@@ -467,8 +467,8 @@ impl HelixCluster {
 
     /// Queue the modeled-arrival barrier on one rank (no-op without a
     /// deadline, keeping the disabled-comm hot path free of traffic).
-    fn send_delay(&self, rank: usize, deadline: Option<Instant>)
-                  -> Result<()> {
+    pub(super) fn send_delay(&self, rank: usize, deadline: Option<Instant>)
+                             -> Result<()> {
         if let Some(deadline) = deadline {
             self.send(rank, Cmd::NetDelay { deadline })?;
         }
@@ -477,7 +477,7 @@ impl HelixCluster {
 
     /// Hold an All-Reduce completion deadline for the next fan-out (the
     /// reduced tensor is what that fan-out's command consumes).
-    fn defer_delay(&mut self, deadline: Option<Instant>) {
+    pub(super) fn defer_delay(&mut self, deadline: Option<Instant>) {
         if let Some(d) = deadline {
             self.pending_delay = Some(match self.pending_delay {
                 Some(p) if p > d => p,
@@ -859,7 +859,7 @@ impl HelixCluster {
     /// accumulator from rank 0's buffer (no zero-init allocation, one
     /// fewer add pass; rank order is preserved, so numerics are
     /// identical to the zero-seeded sum).
-    fn reduce_partials(&mut self, n: usize) -> Result<HostTensor> {
+    pub(super) fn reduce_partials(&mut self, n: usize) -> Result<HostTensor> {
         let mut acc: Option<HostTensor> = None;
         for p in self.collect(n)? {
             let Payload::Partial(t) = p else { bail!("expected partial") };
@@ -879,8 +879,9 @@ impl HelixCluster {
     /// views ([`crate::runtime::AxisView`]) — indices, not buffers — and
     /// the only copy is the single gather into each destination stack
     /// (previously: one copy per slice *plus* the stack copy).
-    fn a2a_stacks(&self, partials: &[(HostTensor, HostTensor)], qs: usize)
-                  -> Result<Vec<(HostTensor, HostTensor)>> {
+    pub(super) fn a2a_stacks(&self, partials: &[(HostTensor, HostTensor)],
+                             qs: usize)
+                             -> Result<Vec<(HostTensor, HostTensor)>> {
         let lo = self.layout;
         let mut out = Vec::with_capacity(lo.n());
         let mut os = Vec::with_capacity(lo.kvp);

@@ -22,6 +22,7 @@
 pub mod cluster;
 pub mod comm_model;
 pub mod fault;
+pub mod prefill;
 pub mod proto;
 pub mod rank;
 pub mod shard;
@@ -31,4 +32,5 @@ pub use cluster::{ClusterConfig, HelixCluster, PendingStep, SessionSnapshot,
                   StepMetrics};
 pub use comm_model::{CommModel, Link};
 pub use fault::{ClusterError, Fault, FaultPlan};
+pub use prefill::PrefillMetrics;
 pub use store::{SessionStore, StoreStats};

@@ -1,0 +1,344 @@
+//! Context-parallel chunked prefill: million-token prompt ingestion.
+//!
+//! Decode moves one token per step through the Fig 4 pipeline; a long
+//! prompt fed that way pays the whole per-layer collective cadence per
+//! token. Prefill instead ingests the prompt in fixed-size chunks of T
+//! tokens, context-parallel across the existing KVP ranks (the pass-KV
+//! / pass-(O, LSE) schedule of "Context Parallelism for Scalable
+//! Million-Token Inference" mapped onto Helix's KVP grid):
+//!
+//! 1. the chunk's hidden states are broadcast once; every rank computes
+//!    the full chunk's Q/K/V (redundant across KVP, like decode's
+//!    in-projection) and appends only its round-robin-owned tokens to
+//!    its local shard — the same `append_rank` ownership decode uses,
+//!    so the handoff to decode is a no-op;
+//! 2. each rank runs causal ragged flash attention of every chunk
+//!    query over its own shard prefix (query i sees logical positions
+//!    `<= base + i`), producing per-rank partial (O, LSE);
+//! 3. the partials rotate around the KVP group and merge through the
+//!    *same* All-to-All + LSE-combine primitive decode uses — an exact
+//!    softmax over the full context, never materialized in one place;
+//! 4. output projection + All-Reduce + FFN run on the chunk exactly as
+//!    they do on a decode batch, T rows at a time.
+//!
+//! Every constituent op is row-independent and reuses the decode
+//! kernels' per-(query, head) recurrence and summation orders (experts
+//! in index order, All-Reduce in rank order, residual adds on the
+//! coordinator), so chunked prefill writes bit-identical KV to feeding
+//! the prompt token-by-token through the decode path — pinned by
+//! `tests/prefill_exactness.rs`.
+//!
+//! No logits are computed for prefill chunks: the serve layer feeds the
+//! *final* prompt token through a normal decode step, which produces
+//! the first generated token (TTFT) with the existing machinery.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::runtime::native::{self, AttnScratch};
+use crate::runtime::HostTensor;
+
+use super::cluster::HelixCluster;
+use super::proto::{Cmd, Payload};
+
+/// Timing + verification metrics for one prefill chunk.
+#[derive(Debug, Clone, Default)]
+pub struct PrefillMetrics {
+    /// Tokens ingested by this chunk.
+    pub tokens: usize,
+    /// Wall time of the chunk.
+    pub total: Duration,
+    /// Modeled link time left on the chunk's critical path.
+    pub comm_exposed: Duration,
+    /// Summed modeled link time of every transfer the chunk charged.
+    pub comm_total: Duration,
+    /// Max |engine - reference| over the chunk's final hidden states
+    /// (verify mode).
+    pub max_ref_diff: Option<f32>,
+}
+
+impl HelixCluster {
+    /// Ingest `tokens` into batch slot `row` as one context-parallel
+    /// prefill chunk, starting at the slot's current logical length.
+    /// Advances `lens[row]` by the chunk size; produces no logits.
+    pub fn prefill_chunk(&mut self, row: usize, tokens: &[i32])
+                         -> Result<PrefillMetrics> {
+        ensure!(row < self.cfg.batch, "slot {row} out of range");
+        ensure!(!self.in_flight, "cannot prefill mid-step");
+        ensure!(self.active[row], "prefill into inactive slot {row}");
+        ensure!(!tokens.is_empty(), "empty prefill chunk");
+        // Scale the hang-proofing deadline with the outstanding work: a
+        // fixed timeout false-positives CollectiveTimeout on chunks
+        // whose modeled transfers or compute legitimately exceed it.
+        let saved = self.recv_timeout;
+        self.recv_timeout = self.prefill_timeout(tokens.len());
+        let out = self.prefill_chunk_inner(row, tokens);
+        self.recv_timeout = saved;
+        out
+    }
+
+    /// Hang-proofing deadline for a T-token chunk: the configured
+    /// timeout (the production 30 s floor) plus the chunk's modeled
+    /// link and compute time. The derived extra is proportional to the
+    /// chunk, so the chaos tests' shortened timeouts still detect a
+    /// mid-prefill rank death timely at test scale.
+    pub fn prefill_timeout(&self, t: usize) -> Duration {
+        let chunk_bytes = t * self.cfg.hidden * 4;
+        // Per layer: the chunk broadcast + two All-Reduces ride the
+        // main wire, the (O, LSE) rotation rides the All-to-All wire.
+        let per_layer = self.link.model.delay(3 * chunk_bytes)
+            + self.a2a_link.model.delay(chunk_bytes);
+        // ~1 us per token-layer of modeled compute headroom keeps
+        // million-token chunks from outrunning the floor on slow hosts.
+        let compute =
+            Duration::from_micros((t * self.cfg.layers) as u64);
+        saturating_add(self.recv_timeout,
+                       per_layer * self.cfg.layers as u32 + compute)
+    }
+
+    fn prefill_chunk_inner(&mut self, row: usize, tokens: &[i32])
+                           -> Result<PrefillMetrics> {
+        let t0 = Instant::now();
+        let comm0 = (self.comm_exposed, self.comm_total);
+        let t = tokens.len();
+        let base = self.lens[row];
+
+        // Embed the whole chunk on rank 0.
+        let tok_t = HostTensor::from_i32(tokens.to_vec(), &[t])?;
+        self.send(0, Cmd::PrefillEmbed { tokens: tok_t })?;
+        let mut x = match self.collect(1)?.remove(0) {
+            Payload::Embedded(x) => x,
+            p => bail!("expected chunk embedding, got {}", p.name()),
+        };
+        let x0 = self.verify.is_some().then(|| x.clone());
+
+        for layer in 0..self.cfg.layers {
+            x = self.prefill_layer(layer, row, base, x)?;
+        }
+        let max_ref_diff = match x0 {
+            Some(x0) => Some(self.reference_prefill(row, base, x0, &x)?),
+            None => None,
+        };
+        self.lens[row] += t;
+        Ok(PrefillMetrics {
+            tokens: t,
+            total: t0.elapsed(),
+            comm_exposed: self.comm_exposed - comm0.0,
+            comm_total: self.comm_total - comm0.1,
+            max_ref_diff,
+        })
+    }
+
+    /// One Helix layer over a T-token chunk — the chunk analogue of
+    /// `layer_step`, with identical collective order and identical
+    /// rank-order summation (the bit-exactness hinges on both).
+    fn prefill_layer(&mut self, layer: usize, row: usize, base: usize,
+                     x: HostTensor) -> Result<HostTensor> {
+        let lo = self.layout;
+        let n = lo.n();
+        let (t, h) = (x.shape[0], x.shape[1]);
+        let hsz = self.cfg.head_size;
+        let qhl = self.cfg.q_heads / lo.tpa;
+        let qs = self.cfg.q_heads / n;
+
+        // Chunk broadcast (+ any deferred All-Reduce deadline).
+        let bcast = self.charge_main(x.size_bytes());
+        self.defer_delay(bcast);
+        let gate = self.pending_delay.take();
+        for r in 0..n {
+            self.send_delay(r, gate)?;
+            self.send(r, Cmd::PrefillChunk { layer, row, base,
+                                             x: x.clone() })?;
+        }
+        let partials: Vec<(HostTensor, HostTensor)> = self
+            .collect(n)?
+            .into_iter()
+            .map(|p| match p {
+                Payload::Attn { o, lse, .. } => Ok((o, lse)),
+                p => bail!("expected chunk attn, got {}", p.name()),
+            })
+            .collect::<Result<_>>()?;
+
+        let o_slices: Vec<HostTensor> = if lo.kvp == 1 {
+            // No KVP exchange: each rank already owns its N-slice.
+            partials.into_iter()
+                .map(|(o, _)| o.reshape(&[t, qhl * hsz]))
+                .collect::<Result<_>>()?
+        } else {
+            // Pass-(O, LSE) around the KVP group, modeled as the same
+            // All-to-All volume decode charges: (kvp-1)/kvp of each
+            // rank's [T, qhl, hsz] partial (+ LSE).
+            let bytes = t * qhl * hsz * 4 * (lo.kvp - 1) / lo.kvp;
+            let gate = self.charge_a2a(bytes);
+            let stacks = self.a2a_stacks(&partials, qs)?;
+            for (r, (o_parts, lse_parts)) in stacks.into_iter().enumerate() {
+                self.send_delay(r, gate)?;
+                self.send(r, Cmd::PrefillCombine { o_parts, lse_parts })?;
+            }
+            self.collect(n)?
+                .into_iter()
+                .map(|p| match p {
+                    Payload::Combined { o_slice, .. } => Ok(o_slice),
+                    p => bail!("expected chunk combine, got {}", p.name()),
+                })
+                .collect::<Result<_>>()?
+        };
+
+        // TP=N output projection + All-Reduce (rank-order sum).
+        for (r, o_slice) in o_slices.into_iter().enumerate() {
+            self.send(r, Cmd::PrefillOut { layer, o_slice })?;
+        }
+        let attn_out = self.reduce_partials(n)?;
+        let ar = self.charge_main(2 * t * h * 4);
+        self.defer_delay(ar);
+        let mut h1 = x;
+        h1.add_assign(&attn_out)?;
+
+        // FFN phase on the chunk.
+        let gate = self.pending_delay.take();
+        for r in 0..n {
+            self.send_delay(r, gate)?;
+            self.send(r, Cmd::PrefillFfn { layer, h1: h1.clone() })?;
+        }
+        let ffn_out = self.reduce_partials(n)?;
+        let ar = self.charge_main(2 * t * h * 4);
+        self.defer_delay(ar);
+        let mut y = h1;
+        y.add_assign(&ffn_out)?;
+        Ok(y)
+    }
+
+    /// Verify-mode reference: the unsharded T-token forward, hand-rolled
+    /// from the same native math blocks over the full weights, appending
+    /// the chunk's K/V into the mirror at `base..base+T` — so subsequent
+    /// decode steps' `run_reference` sees the prefilled context. Returns
+    /// max |engine - reference| over the chunk's final hidden states.
+    fn reference_prefill(&mut self, row: usize, base: usize,
+                         x0: HostTensor, y_engine: &HostTensor)
+                         -> Result<f32> {
+        let cfg = self.cfg.clone();
+        let (t, h) = (x0.shape[0], x0.shape[1]);
+        let (qh, kh, hsz) = (cfg.q_heads, cfg.kv_heads, cfg.head_size);
+        let g = qh / kh;
+        let pos: Vec<i32> = (0..t).map(|i| (base + i) as i32).collect();
+        let valid: Vec<i32> =
+            (0..t).map(|i| (base + i + 1) as i32).collect();
+        let mut scratch = vec![AttnScratch::default()];
+        let (mut t1, mut t2) = (Vec::new(), Vec::new());
+
+        let mut x: Vec<f32> = x0.f32s()?.to_vec();
+        for layer in 0..cfg.layers {
+            let lw = &self.full_weights[layer];
+            let get = |name: &str| -> Result<&HostTensor> {
+                lw.get(name)
+                    .with_context(|| format!("ref weight {name}"))
+            };
+            let v = self.verify.as_mut().expect("verify mode");
+            let scap = v.k_full[layer].shape[2];
+
+            // Attention: rmsnorm + full-head QKV + RoPE, mirror append
+            // at base..base+T, causal flash over the logical prefix.
+            let mut xn = vec![0.0f32; t * h];
+            native::rmsnorm_rows(&x, get("wn1")?.f32s()?, t, h, &mut xn);
+            let mut q = vec![0.0f32; t * qh * hsz];
+            let mut k_new = vec![0.0f32; t * kh * hsz];
+            let mut v_new = vec![0.0f32; t * kh * hsz];
+            native::matmul(&xn, get("wq")?.f32s()?, t, h, qh * hsz, &mut q);
+            native::matmul(&xn, get("wk")?.f32s()?, t, h, kh * hsz,
+                           &mut k_new);
+            native::matmul(&xn, get("wv")?.f32s()?, t, h, kh * hsz,
+                           &mut v_new);
+            native::rope_rows(&mut q, &pos, t, qh, hsz);
+            native::rope_rows(&mut k_new, &pos, t, kh, hsz);
+            for (cache, new) in [(&mut v.k_full[layer], &k_new),
+                                 (&mut v.v_full[layer], &v_new)] {
+                let dst = cache.f32s_mut()?;
+                for i in 0..t {
+                    for hh in 0..kh {
+                        let d = ((row * kh + hh) * scap + base + i) * hsz;
+                        dst[d..d + hsz].copy_from_slice(
+                            &new[(i * kh + hh) * hsz..][..hsz]);
+                    }
+                }
+            }
+            let span = kh * scap * hsz;
+            let mut o = vec![0.0f32; t * qh * hsz];
+            let mut lse = vec![0.0f32; t * qh];
+            native::flash_prefill_flat(
+                &q, &v.k_full[layer].f32s()?[row * span..][..span],
+                &v.v_full[layer].f32s()?[row * span..][..span], &valid, t,
+                kh, g, hsz, scap, native::attn_block_size(scap), &mut o,
+                &mut lse, &mut scratch, 1);
+            let mut attn_out = vec![0.0f32; t * h];
+            native::matmul(&o, get("wo")?.f32s()?, t, qh * hsz, h,
+                           &mut attn_out);
+            for (xv, a) in x.iter_mut().zip(&attn_out) {
+                *xv += a;
+            }
+
+            // FFN.
+            let mut hn = vec![0.0f32; t * h];
+            native::rmsnorm_rows(&x, get("wn2")?.f32s()?, t, h, &mut hn);
+            let mut ffn = vec![0.0f32; t * h];
+            if cfg.is_moe() {
+                let (e, fe) = (cfg.experts, cfg.expert_ffn);
+                let mut logits = vec![0.0f32; t * e];
+                native::matmul(&hn, get("wr")?.f32s()?, t, h, e,
+                               &mut logits);
+                let mut gates = vec![0.0f32; t * e];
+                let mut masked = Vec::new();
+                for ti in 0..t {
+                    native::topk_softmax_row(
+                        &logits[ti * e..(ti + 1) * e], cfg.top_k,
+                        &mut gates[ti * e..(ti + 1) * e], &mut masked);
+                }
+                let mut part = vec![0.0f32; t * h];
+                let (we1, weg, we2) = (get("we1")?.f32s()?,
+                                       get("weg")?.f32s()?,
+                                       get("we2")?.f32s()?);
+                for ei in 0..e {
+                    native::swiglu(&hn, &we1[ei * h * fe..][..h * fe],
+                                   &weg[ei * h * fe..][..h * fe],
+                                   &we2[ei * fe * h..][..fe * h], t, h, fe,
+                                   &mut t1, &mut t2, &mut part);
+                    for ti in 0..t {
+                        let gv = gates[ti * e + ei];
+                        if gv != 0.0 {
+                            for j in 0..h {
+                                ffn[ti * h + j] += gv * part[ti * h + j];
+                            }
+                        }
+                    }
+                }
+                native::swiglu(&hn, get("ws1")?.f32s()?,
+                               get("wsg")?.f32s()?, get("ws2")?.f32s()?, t,
+                               h, cfg.shared_ffn, &mut t1, &mut t2,
+                               &mut part);
+                for (f, &p) in ffn.iter_mut().zip(&part) {
+                    *f += p;
+                }
+            } else {
+                native::swiglu(&hn, get("w1")?.f32s()?, get("wg")?.f32s()?,
+                               get("w2")?.f32s()?, t, h, cfg.ffn, &mut t1,
+                               &mut t2, &mut ffn);
+            }
+            for (xv, f) in x.iter_mut().zip(&ffn) {
+                *xv += f;
+            }
+        }
+
+        let ye = y_engine.f32s()?;
+        let mut max = 0.0f32;
+        for (a, b) in ye.iter().zip(&x) {
+            max = max.max((a - b).abs());
+        }
+        Ok(max)
+    }
+}
+
+/// `Duration` addition that saturates instead of panicking on overflow
+/// (absurd chunk sizes must degrade to "wait forever-ish", not abort).
+fn saturating_add(a: Duration, b: Duration) -> Duration {
+    a.checked_add(b).unwrap_or(Duration::MAX)
+}

@@ -54,6 +54,26 @@ pub enum Cmd {
     FfnMoe { layer: usize, h1: HostTensor },
     /// Token embedding (executed on rank 0).
     Embed { tokens: HostTensor },
+    /// Chunked-prefill embedding of a whole `T`-token chunk (executed
+    /// on rank 0): same gather as [`Cmd::Embed`], arbitrary row count.
+    PrefillEmbed { tokens: HostTensor },
+    /// Context-parallel prefill of one chunk for `layer`, batch slot
+    /// `row`: rmsnorm + QKV + RoPE at logical positions
+    /// `base..base+T`, append the round-robin-owned tokens to the
+    /// local shard, then causal-masked flash attention of every chunk
+    /// query over the shard's (per-query ragged) logical prefix.
+    /// Replies with `Payload::Attn` partials `[T, qh_local, hsz]` for
+    /// the same LSE-combine path decode uses.
+    PrefillChunk { layer: usize, row: usize, base: usize, x: HostTensor },
+    /// LSE combine of a chunk's stacked partials (post All-to-All):
+    /// o_parts [R, T, Qs, Hsz], lse_parts [R, T, Qs].
+    PrefillCombine { o_parts: HostTensor, lse_parts: HostTensor },
+    /// Output projection of a chunk's combined slice [T, cols].
+    PrefillOut { layer: usize, o_slice: HostTensor },
+    /// FFN partial for a chunk's hidden states [T, H] (dense SwiGLU or
+    /// MoE, matching the rank's shard — same math as `FfnDense` /
+    /// `FfnMoe`, T rows instead of the compiled batch).
+    PrefillFfn { layer: usize, h1: HostTensor },
     /// Final norm + LM head + greedy argmax (executed on rank 0).
     Logits { x: HostTensor },
     /// A modeled transfer feeding this rank's *next* command completes

@@ -117,6 +117,18 @@ impl KvShard {
     pub fn append(&mut self, b_idx: usize, k_new: &HostTensor,
                   v_new: &HostTensor) -> Result<()> {
         let (kh, hsz) = (self.k.shape[1], self.k.shape[3]);
+        let s = b_idx * kh * hsz;
+        self.append_token(b_idx, &k_new.f32s()?[s..s + kh * hsz],
+                          &v_new.f32s()?[s..s + kh * hsz])
+    }
+
+    /// Append one token's K/V given contiguous `[kh_local, hsz]` rows —
+    /// the chunked-prefill path ([`Cmd::PrefillChunk`]) computes a whole
+    /// chunk's K/V as `[T, kh_local, hsz]` and appends the
+    /// round-robin-owned tokens one by one, in logical order.
+    pub fn append_token(&mut self, b_idx: usize, k_row: &[f32],
+                        v_row: &[f32]) -> Result<()> {
+        let (kh, hsz) = (self.k.shape[1], self.k.shape[3]);
         let pos = self.lens[b_idx] as usize;
         if pos >= self.cap {
             // Typed for the serve layer's taxonomy; the message keeps
@@ -154,13 +166,11 @@ impl KvShard {
             (page * kh * self.page_toks + pos % self.page_toks,
              self.page_toks)
         };
-        for (cache, new) in [(&mut self.k, k_new), (&mut self.v, v_new)] {
-            let src = new.f32s()?;
+        for (cache, src) in [(&mut self.k, k_row), (&mut self.v, v_row)] {
             let dst = cache.f32s_mut()?;
             for h in 0..kh {
-                let s = (b_idx * kh + h) * hsz;
                 let d = (base + h * stride) * hsz;
-                dst[d..d + hsz].copy_from_slice(&src[s..s + hsz]);
+                dst[d..d + hsz].copy_from_slice(&src[h * hsz..(h + 1) * hsz]);
             }
         }
         self.lens[b_idx] += 1;
@@ -675,6 +685,45 @@ impl RankState {
                 let out = self.rt.execute(prog, &[&tokens, wemb])?;
                 Ok(Payload::Embedded(out.into_iter().next().unwrap()))
             }
+            Cmd::PrefillEmbed { tokens } => {
+                let (wemb, _, _) = self.init.embed_weights.as_ref()
+                    .context("prefill embed runs on rank 0 only")?;
+                let (vocab, h) = (wemb.shape[0], wemb.shape[1]);
+                let toks = tokens.i32s()?;
+                let wd = wemb.f32s()?;
+                let mut x = HostTensor::zeros(&[toks.len(), h]);
+                let xd = x.f32s_mut()?;
+                for (i, &tk) in toks.iter().enumerate() {
+                    // Same clipping as the Embed kernel (jnp.take in jit
+                    // mode clips out-of-range indices).
+                    let tk = (tk.max(0) as usize).min(vocab - 1);
+                    xd[i * h..(i + 1) * h]
+                        .copy_from_slice(&wd[tk * h..(tk + 1) * h]);
+                }
+                Ok(Payload::Embedded(x))
+            }
+            Cmd::PrefillChunk { layer, row, base, x } => {
+                self.prefill_chunk(layer, row, base, x)
+            }
+            Cmd::PrefillCombine { o_parts, lse_parts } => {
+                let (r, t, qs, hsz) =
+                    (o_parts.shape[0], o_parts.shape[1], o_parts.shape[2],
+                     o_parts.shape[3]);
+                let mut out = HostTensor::zeros(&[t, qs * hsz]);
+                native::kvp_combine(o_parts.f32s()?, lse_parts.f32s()?, r,
+                                    t, qs, hsz, out.f32s_mut()?);
+                Ok(Payload::Combined { o_slice: out, row: None })
+            }
+            Cmd::PrefillOut { layer, o_slice } => {
+                let w = &self.init.layers[layer];
+                let (t, cols) = (o_slice.shape[0], o_slice.shape[1]);
+                let h = w.wo_slice.shape[1];
+                let mut out = HostTensor::zeros(&[t, h]);
+                native::matmul(o_slice.f32s()?, w.wo_slice.f32s()?, t, cols,
+                               h, out.f32s_mut()?);
+                Ok(Payload::Partial(out))
+            }
+            Cmd::PrefillFfn { layer, h1 } => self.prefill_ffn(layer, h1),
             Cmd::Logits { x } => {
                 let prog = self.prog_logits.as_ref()
                     .context("logits runs on rank 0 only")?;
@@ -723,6 +772,162 @@ impl RankState {
             b, khl, g, hsz, shard.page_toks, block_s,
             o.f32s_mut()?, lse.f32s_mut()?, &mut self.scratch, workers);
         Ok(Payload::Attn { o, lse, row })
+    }
+
+    /// Context-parallel prefill of one chunk: the T-token analogue of
+    /// InProj + Append + Attn in a single command. The AOT programs are
+    /// shaped for the fixed decode batch, so the chunk hand-rolls the
+    /// same native building blocks over T rows; every op is
+    /// row-independent, which is what makes this path bit-identical to
+    /// feeding the prompt token by token through the decode path.
+    fn prefill_chunk(&mut self, layer: usize, row: usize, base: usize,
+                     x: HostTensor) -> Result<Payload> {
+        ensure!(self.rt.backend_name() == "native",
+                "chunked prefill requires the native backend (the chunk \
+                 math bypasses compiled programs); got backend '{}'",
+                self.rt.backend_name());
+        let cfg = &self.init.cfg;
+        let lo = &self.init.layout;
+        let (t, h) = (x.shape[0], x.shape[1]);
+        let (qhl, khl) = (cfg.q_heads / lo.tpa, cfg.kv_heads / lo.tpa);
+        let (g, hsz) = (qhl / khl, cfg.head_size);
+        let (kv_block, kvp) = (cfg.kv_block, lo.kvp);
+        let block_s = native::attn_block_size(cfg.seq_cap / lo.kvp);
+        let w = &self.init.layers[layer];
+
+        // Same op sequence as the InProj kernel, T rows at logical
+        // positions base..base+T.
+        let mut xn = vec![0.0f32; t * h];
+        native::rmsnorm_rows(x.f32s()?, w.wn1.f32s()?, t, h, &mut xn);
+        let mut q = HostTensor::zeros(&[t, qhl, hsz]);
+        let mut k = vec![0.0f32; t * khl * hsz];
+        let mut v = vec![0.0f32; t * khl * hsz];
+        native::matmul(&xn, w.wq.f32s()?, t, h, qhl * hsz, q.f32s_mut()?);
+        native::matmul(&xn, w.wk.f32s()?, t, h, khl * hsz, &mut k);
+        native::matmul(&xn, w.wv.f32s()?, t, h, khl * hsz, &mut v);
+        let pos: Vec<i32> = (0..t).map(|i| (base + i) as i32).collect();
+        native::rope_rows(q.f32s_mut()?, &pos, t, qhl, hsz);
+        native::rope_rows(&mut k, &pos, t, khl, hsz);
+
+        // Append this rank's round-robin-owned tokens, in logical
+        // order. Local storage is logical-order, so query i's causal
+        // prefix is exactly the first local_len(base+i+1) entries —
+        // the later chunk tokens sit past the ragged length and are
+        // never read.
+        let shard = &mut self.kv[layer];
+        let expect = local_len(base, kv_block, kvp, self.kvp_k);
+        ensure!(shard.lens[row] as usize == expect,
+                "prefill chunk at base {base}: slot {row} layer {layer} \
+                 has local length {}, expected {expect} (kvp rank {})",
+                shard.lens[row], self.kvp_k);
+        for i in 0..t {
+            if append_rank(base + i, kv_block, kvp) == self.kvp_k {
+                shard.append_token(
+                    row, &k[i * khl * hsz..(i + 1) * khl * hsz],
+                    &v[i * khl * hsz..(i + 1) * khl * hsz])?;
+            }
+        }
+
+        // Causal ragged flash over the local shard: the identical
+        // per-(query, head) online-softmax recurrence the decode
+        // kernels run, one chunk query at a time.
+        let valid: Vec<i32> = (0..t)
+            .map(|i| local_len(base + i + 1, kv_block, kvp,
+                               self.kvp_k) as i32)
+            .collect();
+        let workers = native::native_workers();
+        if self.scratch.len() < workers {
+            self.scratch.resize_with(workers, AttnScratch::default);
+        }
+        let mut o = HostTensor::zeros(&[t, qhl, hsz]);
+        let mut lse = HostTensor::zeros(&[t, qhl]);
+        let shard = &self.kv[layer];
+        if shard.is_paged() {
+            native::flash_prefill_paged(
+                q.f32s()?, shard.k.f32s()?, shard.v.f32s()?,
+                &shard.tables[row], &valid, t, khl, g, hsz,
+                shard.page_toks, block_s, o.f32s_mut()?, lse.f32s_mut()?,
+                &mut self.scratch, workers);
+        } else {
+            let span = khl * shard.cap * hsz;
+            native::flash_prefill_flat(
+                q.f32s()?, &shard.k.f32s()?[row * span..(row + 1) * span],
+                &shard.v.f32s()?[row * span..(row + 1) * span], &valid, t,
+                khl, g, hsz, shard.cap, block_s, o.f32s_mut()?,
+                lse.f32s_mut()?, &mut self.scratch, workers);
+        }
+        Ok(Payload::Attn { o, lse, row: None })
+    }
+
+    /// FFN partial for a T-row chunk: the same per-row math as the
+    /// FfnDense / Router + Expert + Shared kernels, with the identical
+    /// accumulation order to [`Self::ffn_moe`] — held experts in index
+    /// order seeded from the first gate-scaled partial, shared expert
+    /// added last — so chunked and token-at-a-time prefill sum in the
+    /// same order.
+    fn prefill_ffn(&mut self, layer: usize, h1: HostTensor)
+                   -> Result<Payload> {
+        let (t, h) = (h1.shape[0], h1.shape[1]);
+        let w = &self.init.layers[layer];
+        let mut hn = vec![0.0f32; t * h];
+        native::rmsnorm_rows(h1.f32s()?, w.wn2.f32s()?, t, h, &mut hn);
+        let (mut t1, mut t2) = (Vec::new(), Vec::new());
+        match &w.ffn {
+            FfnShard::Dense { w1, wg, w2 } => {
+                let fp = w1.shape[1];
+                let mut out = HostTensor::zeros(&[t, h]);
+                native::swiglu(&hn, w1.f32s()?, wg.f32s()?, w2.f32s()?, t,
+                               h, fp, &mut t1, &mut t2, out.f32s_mut()?);
+                Ok(Payload::Partial(out))
+            }
+            FfnShard::Moe { wr, experts, shared } => {
+                let e = wr.shape[1];
+                let mut logits = vec![0.0f32; t * e];
+                native::matmul(&hn, wr.f32s()?, t, h, e, &mut logits);
+                let mut gates = vec![0.0f32; t * e];
+                let mut masked = Vec::new();
+                for ti in 0..t {
+                    native::topk_softmax_row(
+                        &logits[ti * e..(ti + 1) * e], self.init.cfg.top_k,
+                        &mut gates[ti * e..(ti + 1) * e], &mut masked);
+                }
+                let mut part = vec![0.0f32; t * h];
+                let mut acc: Option<Vec<f32>> = None;
+                for (ei, w1, wg, w2) in experts {
+                    let fe = w1.shape[1];
+                    native::swiglu(&hn, w1.f32s()?, wg.f32s()?, w2.f32s()?,
+                                   t, h, fe, &mut t1, &mut t2, &mut part);
+                    for ti in 0..t {
+                        let gate = gates[ti * e + *ei];
+                        for xv in &mut part[ti * h..(ti + 1) * h] {
+                            *xv *= gate;
+                        }
+                    }
+                    match acc {
+                        None => acc = Some(part.clone()),
+                        Some(ref mut a) => {
+                            for (av, &pv) in a.iter_mut().zip(part.iter()) {
+                                *av += pv;
+                            }
+                        }
+                    }
+                }
+                let (ws1, wsg, ws2) = shared;
+                let fs = ws1.shape[1];
+                native::swiglu(&hn, ws1.f32s()?, wsg.f32s()?, ws2.f32s()?,
+                               t, h, fs, &mut t1, &mut t2, &mut part);
+                let data = match acc {
+                    None => part,
+                    Some(mut a) => {
+                        for (av, &pv) in a.iter_mut().zip(part.iter()) {
+                            *av += pv;
+                        }
+                        a
+                    }
+                };
+                Ok(Payload::Partial(HostTensor::from_f32(data, &[t, h])?))
+            }
+        }
     }
 
     /// MoE FFN partial: local router (redundant, DP-style), held experts

@@ -30,7 +30,7 @@ pub mod runner;
 
 use std::collections::BTreeMap;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::plan::Plan;
 use crate::serve::Workload;
@@ -59,6 +59,9 @@ pub struct Scenario {
     /// Fraction of the physical KV pool admission may commit
     /// (`1.0` = the full pool; `<1` forces churn through the host tier).
     pub kv_budget_frac: f64,
+    /// Chunked-prefill chunk size for this cell (`0` = token-by-token
+    /// prompt ingestion through the decode path, the historical mode).
+    pub prefill_chunk: usize,
 }
 
 impl Scenario {
@@ -89,6 +92,8 @@ impl Scenario {
         m.insert("turns".into(), Json::Num(self.turns as f64));
         m.insert("idle_steps".into(), Json::Num(self.idle_steps as f64));
         m.insert("kv_budget_frac".into(), Json::Num(self.kv_budget_frac));
+        m.insert("prefill_chunk".into(),
+                 Json::Num(self.prefill_chunk as f64));
         Json::Obj(m)
     }
 
@@ -116,6 +121,11 @@ impl Scenario {
                 Some(v) => v.as_f64()?,
                 None => 1.0,
             },
+            // Chunked prefill landed with schema v3; absent before.
+            prefill_chunk: match j.opt("prefill_chunk") {
+                Some(v) => v.as_usize()?,
+                None => 0,
+            },
         })
     }
 }
@@ -135,27 +145,45 @@ pub fn scenario_matrix(seq_cap: usize) -> Vec<Scenario> {
     // on wake) for the population to complete at all.
     let churn_prompt = ((seq_cap / 16).max(2), (seq_cap / 8).max(3));
     let churn_gen = ((seq_cap / 32).max(2), (seq_cap / 16).max(3));
+    // Prefill cell: prompts pushed to the slot envelope (7/16 of
+    // seq_cap keeps prompt + generation inside `cap - min(cap, 64)`,
+    // the round-robin headroom bound the envelope test pins), short
+    // generations, ingested in seq_cap/8 context-parallel chunks — the
+    // TTFT-at-context-length axis of the Pareto doc comes from here.
+    let prefill_prompt = ((seq_cap / 4).max(2),
+                          (seq_cap * 7 / 16).max(3));
+    let prefill_gen = (2, (seq_cap / 16).min(8).max(3));
     vec![
         Scenario { name: "steady_short".into(), requests: 8,
                    prompt: (2, 6), gen: (4, 8),
                    arrival_rate: 0.5, burst: 1, seed: 11,
-                   turns: 1, idle_steps: 0, kv_budget_frac: 1.0 },
+                   turns: 1, idle_steps: 0, kv_budget_frac: 1.0,
+                   prefill_chunk: 0 },
         Scenario { name: "burst_short".into(), requests: 8,
                    prompt: (2, 6), gen: (4, 8),
                    arrival_rate: 0.25, burst: 4, seed: 13,
-                   turns: 1, idle_steps: 0, kv_budget_frac: 1.0 },
+                   turns: 1, idle_steps: 0, kv_budget_frac: 1.0,
+                   prefill_chunk: 0 },
         Scenario { name: "steady_long".into(), requests: 6,
                    prompt: long_prompt, gen: long_gen,
                    arrival_rate: 0.2, burst: 1, seed: 17,
-                   turns: 1, idle_steps: 0, kv_budget_frac: 1.0 },
+                   turns: 1, idle_steps: 0, kv_budget_frac: 1.0,
+                   prefill_chunk: 0 },
         Scenario { name: "burst_long".into(), requests: 6,
                    prompt: long_prompt, gen: long_gen,
                    arrival_rate: 0.1, burst: 3, seed: 19,
-                   turns: 1, idle_steps: 0, kv_budget_frac: 1.0 },
+                   turns: 1, idle_steps: 0, kv_budget_frac: 1.0,
+                   prefill_chunk: 0 },
         Scenario { name: "session_churn".into(), requests: 8,
                    prompt: churn_prompt, gen: churn_gen,
                    arrival_rate: 0.5, burst: 1, seed: 23,
-                   turns: 3, idle_steps: 8, kv_budget_frac: 0.25 },
+                   turns: 3, idle_steps: 8, kv_budget_frac: 0.25,
+                   prefill_chunk: 0 },
+        Scenario { name: "long_prefill".into(), requests: 3,
+                   prompt: prefill_prompt, gen: prefill_gen,
+                   arrival_rate: 0.2, burst: 1, seed: 29,
+                   turns: 1, idle_steps: 0, kv_budget_frac: 1.0,
+                   prefill_chunk: (seq_cap / 8).max(4) },
     ]
 }
 
@@ -164,7 +192,8 @@ pub fn smoke_matrix(_seq_cap: usize) -> Vec<Scenario> {
     vec![Scenario { name: "steady_short".into(), requests: 6,
                     prompt: (2, 6), gen: (4, 8),
                     arrival_rate: 0.5, burst: 1, seed: 11,
-                    turns: 1, idle_steps: 0, kv_budget_frac: 1.0 }]
+                    turns: 1, idle_steps: 0, kv_budget_frac: 1.0,
+                    prefill_chunk: 0 }]
 }
 
 /// One (plan, scenario) serve run, summarized.
@@ -192,6 +221,11 @@ pub struct RunRecord {
     /// bit-identical across reruns on the native backend, the anchor
     /// for the determinism regression tests.
     pub token_digest: u64,
+    /// Per-request (context length, TTFT ms) samples, context
+    /// ascending — the raw points of the doc's TTFT-at-context-length
+    /// axis (schema v3). Populated for every run; the `long_prefill`
+    /// scenario sweeps the context dimension.
+    pub ttft_by_context: Vec<(usize, f64)>,
     /// `Some(why)` when the scenario failed to boot or drain. The
     /// record's metrics are then zeroed and excluded from the plan's
     /// aggregate [`crate::plan::Measured`]; the rest of the matrix
@@ -211,6 +245,7 @@ impl RunRecord {
             ttl_p99_ms: 0.0, ttft_p99_ms: 0.0, tokens_per_s: 0.0,
             peak_kv_tokens: 0, peak_active: 0, evictions: 0, restores: 0,
             token_digest: 0,
+            ttft_by_context: Vec::new(),
             error: Some(error.to_string()),
         }
     }
@@ -238,6 +273,13 @@ impl RunRecord {
         // u64 digests do not fit an f64 JSON number losslessly.
         m.insert("token_digest".into(),
                  Json::Str(format!("{:016x}", self.token_digest)));
+        if !self.ttft_by_context.is_empty() {
+            m.insert("ttft_by_context".into(), Json::Arr(
+                self.ttft_by_context.iter()
+                    .map(|&(c, t)| Json::Arr(vec![Json::Num(c as f64),
+                                                  Json::Num(t)]))
+                    .collect()));
+        }
         if let Some(e) = &self.error {
             m.insert("error".into(), Json::Str(e.clone()));
         }
@@ -272,6 +314,17 @@ impl RunRecord {
             },
             token_digest: u64::from_str_radix(digest, 16)
                 .with_context(|| format!("bad token_digest {digest:?}"))?,
+            // TTFT-vs-context samples landed with schema v3; absent
+            // (= none recorded) in older docs.
+            ttft_by_context: match j.opt("ttft_by_context") {
+                Some(v) => v.as_arr()?.iter().map(|p| {
+                    let p = p.as_arr()?;
+                    ensure!(p.len() == 2,
+                            "ttft_by_context entries are [context, ms]");
+                    Ok((p[0].as_usize()?, p[1].as_f64()?))
+                }).collect::<Result<_>>()?,
+                None => Vec::new(),
+            },
             // Failure capture landed with the robustness pass; absent
             // (= clean run) in older docs.
             error: match j.opt("error") {
@@ -496,6 +549,29 @@ impl ModelEval {
         Json::Arr(pts)
     }
 
+    /// Derived TTFT-at-context-length series (schema v3): one series
+    /// per evaluated plan, pooling every run's per-request
+    /// (context, TTFT ms) samples, context ascending. The
+    /// `long_prefill` scenario sweeps the context dimension, so its
+    /// samples dominate the series' long-context end.
+    fn ttft_vs_context_json(&self) -> Json {
+        Json::Arr(self.plans.iter().map(|pe| {
+            let mut pts: Vec<(usize, f64)> = pe.runs.iter()
+                .flat_map(|r| r.ttft_by_context.iter().copied())
+                .collect();
+            pts.sort_by(|a, b| a.0.cmp(&b.0).then(a.1.total_cmp(&b.1)));
+            let mut m = BTreeMap::new();
+            m.insert("strategy".into(),
+                     Json::Str(pe.plan.strategy.clone()));
+            m.insert("layout".into(), Json::Str(pe.plan.layout.key()));
+            m.insert("points".into(), Json::Arr(pts.into_iter()
+                .map(|(c, t)| Json::Arr(vec![Json::Num(c as f64),
+                                             Json::Num(t)]))
+                .collect()));
+            Json::Obj(m)
+        }).collect())
+    }
+
     pub fn to_json(&self) -> Json {
         let mut m = BTreeMap::new();
         m.insert("model".into(), Json::Str(self.model.clone()));
@@ -514,6 +590,8 @@ impl ModelEval {
                             .map(MeasuredPoint::to_series_json)
                             .collect()));
         m.insert("frontiers".into(), Json::Obj(fr));
+        // Derived TTFT axis (schema v3) — also not parsed back.
+        m.insert("ttft_vs_context".into(), self.ttft_vs_context_json());
         Json::Obj(m)
     }
 
@@ -545,8 +623,11 @@ impl EvalOutcome {
         let mut m = BTreeMap::new();
         // v2: churn fields (scenario turns/idle_steps/kv_budget_frac,
         // per-run and per-plan evictions/restores, restore_p99_ms,
-        // plan host_kv_budget). v1 docs still parse (fields default).
-        m.insert("version".into(), Json::Num(2.0));
+        // plan host_kv_budget). v3: chunked prefill (scenario
+        // prefill_chunk, per-run ttft_by_context, per-model
+        // ttft_vs_context series). Older docs still parse (fields
+        // default).
+        m.insert("version".into(), Json::Num(3.0));
         m.insert("kind".into(), Json::Str("helix-eval".into()));
         m.insert("rank_by".into(), Json::Str(self.rank_by.clone()));
         m.insert("models".into(),
@@ -641,9 +722,18 @@ mod tests {
                         "{} overflows seq_cap {cap}", sc.name);
                 assert!(sc.requests >= 2);
             }
-            assert!(scenario_matrix(cap).len() >= 5);
+            assert!(scenario_matrix(cap).len() >= 6);
             assert!(scenario_matrix(cap).iter()
                     .any(|sc| sc.kv_budget_frac < 1.0 && sc.turns > 1));
+            // The prefill cell chunks its prompts, and the chunks are
+            // meaningfully smaller than the prompts they ingest.
+            let pf = scenario_matrix(cap).into_iter()
+                .find(|sc| sc.name == "long_prefill")
+                .expect("matrix has a long_prefill cell");
+            assert!(pf.prefill_chunk >= 4);
+            assert!(pf.prefill_chunk < pf.prompt.1,
+                    "chunk {} should split the max prompt {}",
+                    pf.prefill_chunk, pf.prompt.1);
             assert_eq!(smoke_matrix(cap).len(), 1);
         }
     }
@@ -692,6 +782,7 @@ mod tests {
                         tokens_per_s: 288.0, peak_kv_tokens: 60,
                         peak_active: 4, evictions: 1, restores: 1,
                         token_digest: 0xdead_beef_cafe_f00d,
+                        ttft_by_context: vec![(4, 6.5), (6, 9.75)],
                         error: None,
                     }],
                 }],
@@ -707,6 +798,14 @@ mod tests {
             .get("frontiers").unwrap().clone();
         assert_eq!(fr.get("predicted").unwrap().as_arr().unwrap().len(), 1);
         assert_eq!(fr.get("measured").unwrap().as_arr().unwrap().len(), 1);
+        // Schema v3: the doc version and the derived TTFT axis.
+        assert_eq!(j.get("version").unwrap().as_f64().unwrap(), 3.0);
+        let tv = j.get("models").unwrap().as_arr().unwrap()[0]
+            .get("ttft_vs_context").unwrap().clone();
+        let series = tv.as_arr().unwrap();
+        assert_eq!(series.len(), 1);
+        let pts = series[0].get("points").unwrap().as_arr().unwrap().len();
+        assert_eq!(pts, 2, "both (context, ttft) samples surface");
         // Non-eval docs are rejected loudly.
         assert!(EvalOutcome::from_doc(&Json::parse("{}").unwrap()).is_err());
     }

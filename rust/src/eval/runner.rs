@@ -14,7 +14,7 @@ use anyhow::{bail, ensure, Context, Result};
 use crate::config::{registry, Hardware};
 use crate::engine::HelixCluster;
 use crate::plan::{self, Measured, Plan, Planner};
-use crate::serve::{RequestState, ServeReport, Server};
+use crate::serve::{ChunkPolicy, RequestState, ServeReport, Server};
 use crate::util::stats;
 
 use super::{scenario_matrix, smoke_matrix, Calibration, EvalOutcome,
@@ -96,8 +96,25 @@ pub fn top_distinct_layouts(plans: Vec<Plan>, n: usize) -> Vec<Plan> {
     out
 }
 
-fn run_record(sc: &Scenario, report: &ServeReport, digest: u64)
-              -> RunRecord {
+/// Per-request (context_len, ttft_ms) samples — the raw points behind
+/// the schema-v3 TTFT-vs-context axis. Only requests that actually
+/// streamed a token contribute; shed/rejected requests have no TTFT.
+pub fn ttft_by_context(completed: &[RequestState]) -> Vec<(usize, f64)> {
+    let mut pts: Vec<(usize, f64)> = completed.iter()
+        .filter(|st| st.slot != usize::MAX)
+        .filter_map(|st| st.token_times.first().map(|&first| {
+            (st.req.prompt.len(),
+             (first - st.submitted_wall).max(0.0) * 1e3)
+        }))
+        .collect();
+    pts.sort_by(|a, b| a.0.cmp(&b.0)
+                .then(a.1.partial_cmp(&b.1)
+                      .unwrap_or(std::cmp::Ordering::Equal)));
+    pts
+}
+
+fn run_record(sc: &Scenario, report: &ServeReport, digest: u64,
+              ttft_by_context: Vec<(usize, f64)>) -> RunRecord {
     let m = &report.metrics;
     RunRecord {
         scenario: sc.name.clone(),
@@ -119,6 +136,7 @@ fn run_record(sc: &Scenario, report: &ServeReport, digest: u64)
         evictions: m.evictions,
         restores: m.restores,
         token_digest: digest,
+        ttft_by_context,
         error: None,
     }
 }
@@ -129,15 +147,20 @@ fn run_record(sc: &Scenario, report: &ServeReport, digest: u64)
 /// population, so admission must evict/restore idle sessions instead
 /// of rejecting.
 fn server_for(plan: &Plan, sc: &Scenario) -> Result<Server> {
-    if sc.kv_budget_frac >= 1.0 {
-        return Server::from_plan(plan);
+    let mut server = if sc.kv_budget_frac >= 1.0 {
+        Server::from_plan(plan)?
+    } else {
+        let cluster = HelixCluster::from_plan(plan)?;
+        let physical = cluster.kv_budget_tokens();
+        let budget = ((plan.kv_budget.min(physical) as f64
+                       * sc.kv_budget_frac).ceil() as usize)
+            .max(cluster.slot_kv_tokens());
+        Server::with_budgets(cluster, budget, physical * 4)
+    };
+    if sc.prefill_chunk > 0 {
+        server.set_chunk_policy(ChunkPolicy::chunked(sc.prefill_chunk));
     }
-    let cluster = HelixCluster::from_plan(plan)?;
-    let physical = cluster.kv_budget_tokens();
-    let budget = ((plan.kv_budget.min(physical) as f64
-                   * sc.kv_budget_frac).ceil() as usize)
-        .max(cluster.slot_kv_tokens());
-    Ok(Server::with_budgets(cluster, budget, physical * 4))
+    Ok(server)
 }
 
 /// Run one plan through every scenario; returns the plan with its
@@ -197,7 +220,8 @@ pub fn eval_plan(plan: &Plan, scenarios: &[Scenario], opts: &EvalOptions)
         restore_pool.extend_from_slice(&m.restore_times);
         gpus = report.gpus;
         let digest = token_digest(&server.router.completed);
-        runs.push(run_record(sc, &report, digest));
+        let ttfts = ttft_by_context(&server.router.completed);
+        runs.push(run_record(sc, &report, digest, ttfts));
     }
 
     let pct = |p: f64| if ttl_pool.is_empty() { 0.0 }

@@ -234,6 +234,34 @@ impl Plan {
         self
     }
 
+    /// Predicted time-to-first-token, milliseconds, for ingesting a
+    /// `context_tokens`-long prompt in `chunk_tokens`-sized
+    /// context-parallel chunks (docs/PREFILL.md). Derived entirely
+    /// from the plan's decode predictions, so it needs no new schema:
+    /// every chunk boundary pays one full decode-step latency
+    /// (`ttl_ms` — the pipeline's un-overlapped comm + launch cost),
+    /// and the token stream itself drains at the replica's aggregate
+    /// throughput (`tokens_per_gpu_s * gpus`). `chunk_tokens == 0`
+    /// models the legacy token-by-token path (every token is its own
+    /// "chunk"), which makes the chunking win visible:
+    /// `predicted_ttft_ms(c, t)` < `predicted_ttft_ms(c, 0)` for t > 1.
+    pub fn predicted_ttft_ms(&self, context_tokens: usize,
+                             chunk_tokens: usize) -> f64 {
+        if context_tokens == 0 {
+            return 0.0;
+        }
+        let chunk = chunk_tokens.max(1).min(context_tokens);
+        let chunks = context_tokens.div_ceil(chunk);
+        let replica_tok_s = self.predicted.tokens_per_gpu_s
+            * self.gpus as f64;
+        let drain_ms = if replica_tok_s > 0.0 {
+            context_tokens as f64 / replica_tok_s * 1e3
+        } else {
+            0.0
+        };
+        chunks as f64 * self.predicted.ttl_ms + drain_ms
+    }
+
     /// Accept either a bare plan object or a `helix plan` document
     /// (`{"plans": [...]}`), taking the top-ranked entry.
     pub fn from_json_doc(j: &Json) -> Result<Plan> {
@@ -695,6 +723,30 @@ mod tests {
         assert!(ranked[0].measured.is_some());
         assert_eq!(ranked[3], plans[4]);
         assert_eq!(ranked[4], plans[3]);
+    }
+
+    #[test]
+    fn prefill_ttft_prediction_rewards_chunking() {
+        let plan = Planner::from_spec(ModelSpec::llama_405b(), hw())
+            .max_batch(64)
+            .plan().unwrap().remove(0);
+        // Monotone in context length at a fixed chunk size.
+        let mut last = 0.0;
+        for ctx in [64usize, 256, 1024, 65_536] {
+            let t = plan.predicted_ttft_ms(ctx, 128);
+            assert!(t > last, "ttft({ctx}) = {t} not > {last}");
+            last = t;
+        }
+        // Bigger chunks amortize more step latency: never slower.
+        let ctx = 4096;
+        let t1 = plan.predicted_ttft_ms(ctx, 0); // token-by-token
+        let t128 = plan.predicted_ttft_ms(ctx, 128);
+        let t1024 = plan.predicted_ttft_ms(ctx, 1024);
+        assert!(t128 < t1, "chunked {t128} not < token-by-token {t1}");
+        assert!(t1024 <= t128);
+        // Degenerate inputs stay finite and sane.
+        assert_eq!(plan.predicted_ttft_ms(0, 128), 0.0);
+        assert!(plan.predicted_ttft_ms(1, 4096).is_finite());
     }
 
     #[test]

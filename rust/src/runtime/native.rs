@@ -412,7 +412,14 @@ fn dot(a: &[f32], b: &[f32]) -> f32 {
 }
 
 /// RMSNorm each row: out = x * rsqrt(mean(x^2) + EPS) * w.
-fn rmsnorm_rows(x: &[f32], w: &[f32], b: usize, h: usize, out: &mut [f32]) {
+///
+/// The row-wise math helpers below are `pub(crate)`: the rank-side
+/// prefill handlers (`engine::rank`) and the coordinator's verify-mode
+/// reference prefill (`engine::prefill`) hand-roll T-token layer math
+/// directly against the host weight shards — AOT programs are shaped
+/// for the fixed decode batch, so a T-token chunk cannot reuse them.
+pub(crate) fn rmsnorm_rows(x: &[f32], w: &[f32], b: usize, h: usize,
+                           out: &mut [f32]) {
     for bi in 0..b {
         let row = &x[bi * h..(bi + 1) * h];
         let var = row.iter().map(|v| v * v).sum::<f32>() / h as f32;
@@ -429,8 +436,8 @@ fn rmsnorm_rows(x: &[f32], w: &[f32], b: usize, h: usize, out: &mut [f32]) {
 /// Row-major matmul: out [b,n] = x [b,k] @ w [k,n], overwriting out.
 /// Streams `w` row-by-row (cache-friendly for the [in, out] weight
 /// layout every manifest program uses).
-fn matmul(x: &[f32], w: &[f32], b: usize, k: usize, n: usize,
-          out: &mut [f32]) {
+pub(crate) fn matmul(x: &[f32], w: &[f32], b: usize, k: usize, n: usize,
+                     out: &mut [f32]) {
     for bi in 0..b {
         let orow = &mut out[bi * n..(bi + 1) * n];
         orow.fill(0.0);
@@ -451,7 +458,8 @@ fn matmul(x: &[f32], w: &[f32], b: usize, k: usize, n: usize,
 /// The angle depends only on (row position, frequency index), so the
 /// transcendentals (`powf`, `sin_cos`) are hoisted out of the head
 /// loop: `b * half` evaluations per call instead of `b * nh * half`.
-fn rope_rows(x: &mut [f32], pos: &[i32], b: usize, nh: usize, hsz: usize) {
+pub(crate) fn rope_rows(x: &mut [f32], pos: &[i32], b: usize, nh: usize,
+                        hsz: usize) {
     let half = hsz / 2;
     for bi in 0..b {
         let p = pos[bi] as f32;
@@ -475,9 +483,9 @@ fn silu(x: f32) -> f32 {
 
 /// SwiGLU partial: out [b,h] = (silu(x@wg) * (x@w1)) @ w2.
 #[allow(clippy::too_many_arguments)]
-fn swiglu(x: &[f32], w1: &[f32], wg: &[f32], w2: &[f32], b: usize, h: usize,
-          fp: usize, t_gate: &mut Vec<f32>, t_up: &mut Vec<f32>,
-          out: &mut [f32]) {
+pub(crate) fn swiglu(x: &[f32], w1: &[f32], wg: &[f32], w2: &[f32],
+                     b: usize, h: usize, fp: usize, t_gate: &mut Vec<f32>,
+                     t_up: &mut Vec<f32>, out: &mut [f32]) {
     resize(t_gate, b * fp);
     resize(t_up, b * fp);
     matmul(x, wg, b, h, fp, t_gate);
@@ -489,7 +497,7 @@ fn swiglu(x: &[f32], w1: &[f32], wg: &[f32], w2: &[f32], b: usize, h: usize,
 }
 
 /// First index of the maximum (jnp.argmax tie-break).
-fn argmax_first(xs: &[f32]) -> usize {
+pub(crate) fn argmax_first(xs: &[f32]) -> usize {
     let mut best = 0;
     for (i, &x) in xs.iter().enumerate().skip(1) {
         if x > xs[best] {
@@ -502,8 +510,8 @@ fn argmax_first(xs: &[f32]) -> usize {
 /// Dense top-k softmax gates for one row (mirrors `model._topk_gates`:
 /// k rounds of argmax+mask, then softmax over the selected logits with
 /// zeros elsewhere).
-fn topk_softmax_row(logits: &[f32], k: usize, gates: &mut [f32],
-                    masked: &mut Vec<f32>) {
+pub(crate) fn topk_softmax_row(logits: &[f32], k: usize, gates: &mut [f32],
+                               masked: &mut Vec<f32>) {
     let e = logits.len();
     masked.clear();
     masked.extend_from_slice(logits);
@@ -815,6 +823,130 @@ pub fn flash_decode_paged(q: &[f32], k_pool: &[f32], v_pool: &[f32],
                          ws,
                          &mut o_chunk[t * g * hsz..(t + 1) * g * hsz],
                          &mut lse_chunk[t * g..(t + 1) * g]);
+                }
+            });
+        }
+    });
+}
+
+/// Chunked-prefill flash attention over one slot's flat KV shard.
+///
+/// `t` query tokens attend the shard's logical prefix with *per-query*
+/// ragged lengths: query `ti` sees `valid[ti]` KV entries (the caller
+/// derives `valid` from the causal mask + the KVP round-robin split,
+/// having appended every owned token of the chunk first — local
+/// storage is logical-order, so the first `valid[ti]` entries are
+/// exactly the owned tokens with logical position `<= base + ti`).
+/// Layouts: q/o `[T, Kh, G, Hsz]`, k/v `[Kh, Scap, Hsz]` (ONE row's
+/// shard — all queries of a chunk share it), lse `[T, Kh, G]`.
+/// Each (query, KV-head) task runs the exact [`flash_task`] recurrence
+/// the decode path uses, so a token prefilled in a chunk produces
+/// bit-identical attention to the same token decoded one at a time.
+#[allow(clippy::too_many_arguments)]
+pub fn flash_prefill_flat(q: &[f32], k: &[f32], v: &[f32], valid: &[i32],
+                          t: usize, kh: usize, g: usize, hsz: usize,
+                          scap: usize, block_s: usize, o: &mut [f32],
+                          lse: &mut [f32], scratch: &mut [AttnScratch],
+                          workers: usize) {
+    let scale = 1.0 / (hsz as f32).sqrt();
+    let tasks = t * kh;
+    let nw = workers.min(tasks).min(scratch.len()).max(1);
+    let task = |tk: usize, ws: &mut AttnScratch, o_t: &mut [f32],
+                lse_t: &mut [f32]| {
+        let (ti, hi) = (tk / kh, tk % kh);
+        let len = valid[ti].max(0) as usize;
+        flash_task(&q[(ti * kh + hi) * g * hsz..][..g * hsz],
+                   &k[hi * scap * hsz..][..scap * hsz],
+                   &v[hi * scap * hsz..][..scap * hsz],
+                   len, g, hsz, scap, block_s, scale, ws, o_t, lse_t);
+    };
+    if nw <= 1 {
+        let ws = &mut scratch[0];
+        for (tk, (o_t, lse_t)) in
+            o.chunks_mut(g * hsz).zip(lse.chunks_mut(g)).enumerate()
+        {
+            task(tk, ws, o_t, lse_t);
+        }
+        return;
+    }
+    let per = tasks.div_ceil(nw);
+    std::thread::scope(|scope| {
+        let mut o_rest = o;
+        let mut lse_rest = lse;
+        for (w, ws) in scratch.iter_mut().enumerate().take(nw) {
+            let start = w * per;
+            if start >= tasks {
+                break;
+            }
+            let n = per.min(tasks - start);
+            let (o_chunk, o_r) = o_rest.split_at_mut(n * g * hsz);
+            let (lse_chunk, lse_r) = lse_rest.split_at_mut(n * g);
+            o_rest = o_r;
+            lse_rest = lse_r;
+            scope.spawn(move || {
+                for tk in 0..n {
+                    task(start + tk,
+                         ws,
+                         &mut o_chunk[tk * g * hsz..(tk + 1) * g * hsz],
+                         &mut lse_chunk[tk * g..(tk + 1) * g]);
+                }
+            });
+        }
+    });
+}
+
+/// Paged twin of [`flash_prefill_flat`]: one slot's page `table`
+/// (shared by every query of the chunk), per-query ragged `valid`
+/// lengths, the [`paged_task`] recurrence per (query, KV-head). With
+/// the engine's tile-aligned page size the outputs are bit-identical
+/// to the flat kernel's, exactly as in decode.
+#[allow(clippy::too_many_arguments)]
+pub fn flash_prefill_paged(q: &[f32], k_pool: &[f32], v_pool: &[f32],
+                           table: &[u32], valid: &[i32], t: usize,
+                           kh: usize, g: usize, hsz: usize,
+                           page_toks: usize, block_s: usize, o: &mut [f32],
+                           lse: &mut [f32], scratch: &mut [AttnScratch],
+                           workers: usize) {
+    let scale = 1.0 / (hsz as f32).sqrt();
+    let tasks = t * kh;
+    let nw = workers.min(tasks).min(scratch.len()).max(1);
+    let task = |tk: usize, ws: &mut AttnScratch, o_t: &mut [f32],
+                lse_t: &mut [f32]| {
+        let (ti, hi) = (tk / kh, tk % kh);
+        let len = valid[ti].max(0) as usize;
+        paged_task(&q[(ti * kh + hi) * g * hsz..][..g * hsz], k_pool,
+                   v_pool, table, len, kh, hi, g, hsz, page_toks,
+                   block_s, scale, ws, o_t, lse_t);
+    };
+    if nw <= 1 {
+        let ws = &mut scratch[0];
+        for (tk, (o_t, lse_t)) in
+            o.chunks_mut(g * hsz).zip(lse.chunks_mut(g)).enumerate()
+        {
+            task(tk, ws, o_t, lse_t);
+        }
+        return;
+    }
+    let per = tasks.div_ceil(nw);
+    std::thread::scope(|scope| {
+        let mut o_rest = o;
+        let mut lse_rest = lse;
+        for (w, ws) in scratch.iter_mut().enumerate().take(nw) {
+            let start = w * per;
+            if start >= tasks {
+                break;
+            }
+            let n = per.min(tasks - start);
+            let (o_chunk, o_r) = o_rest.split_at_mut(n * g * hsz);
+            let (lse_chunk, lse_r) = lse_rest.split_at_mut(n * g);
+            o_rest = o_r;
+            lse_rest = lse_r;
+            scope.spawn(move || {
+                for tk in 0..n {
+                    task(start + tk,
+                         ws,
+                         &mut o_chunk[tk * g * hsz..(tk + 1) * g * hsz],
+                         &mut lse_chunk[tk * g..(tk + 1) * g]);
                 }
             });
         }
@@ -1222,5 +1354,98 @@ mod tests {
     fn argmax_first_tie_break() {
         assert_eq!(argmax_first(&[1.0, 3.0, 3.0, 2.0]), 1);
         assert_eq!(argmax_first(&[5.0]), 0);
+    }
+
+    #[test]
+    fn prefill_flash_matches_per_query_oracle() {
+        // A chunk of T queries over one shared KV shard with causal
+        // ragged lens must equal T independent flash-decode calls.
+        let (t, kh, g, hsz, scap, block_s) = (5, 2, 2, 8, 32, 8);
+        let mut rng = crate::util::Rng::new(23);
+        let mut fill = |n: usize| -> Vec<f32> {
+            (0..n).map(|_| rng.f32_signed()).collect()
+        };
+        let q = fill(t * kh * g * hsz);
+        let k = fill(kh * scap * hsz);
+        let v = fill(kh * scap * hsz);
+        // causal-ish ragged: includes empty, mid-block, block boundary
+        let valid = [0i32, 3, 8, 13, 16];
+        for workers in [1usize, 3] {
+            let mut o = vec![0.0f32; t * kh * g * hsz];
+            let mut lse = vec![0.0f32; t * kh * g];
+            let mut scratch = vec![AttnScratch::default(); workers];
+            flash_prefill_flat(&q, &k, &v, &valid, t, kh, g, hsz, scap,
+                               block_s, &mut o, &mut lse, &mut scratch,
+                               workers);
+            for ti in 0..t {
+                for hi in 0..kh {
+                    let mut oo = vec![0.0f32; g * hsz];
+                    let mut ll = vec![0.0f32; g];
+                    attn_oracle(&q[(ti * kh + hi) * g * hsz..][..g * hsz],
+                                &k[hi * scap * hsz..][..scap * hsz],
+                                &v[hi * scap * hsz..][..scap * hsz],
+                                valid[ti] as usize, g, hsz, &mut oo,
+                                &mut ll);
+                    for (a, e) in o[(ti * kh + hi) * g * hsz..][..g * hsz]
+                        .iter()
+                        .zip(&oo)
+                    {
+                        assert!((a - e).abs() < 1e-5, "o {a} vs {e}");
+                    }
+                    for (a, e) in
+                        lse[(ti * kh + hi) * g..][..g].iter().zip(&ll)
+                    {
+                        assert!((a - e).abs() < 1e-4, "lse {a} vs {e}");
+                    }
+                }
+            }
+            // empty-prefix query contract
+            assert!(o[..kh * g * hsz].iter().all(|&x| x == 0.0));
+            assert!(lse[..kh * g].iter().all(|&x| x == NEG_INF));
+        }
+    }
+
+    #[test]
+    fn prefill_paged_is_bit_identical_to_flat() {
+        let (t, kh, g, hsz, scap, block_s) = (4, 2, 2, 8, 32, 8);
+        let page_toks = 16;
+        let mut rng = crate::util::Rng::new(31);
+        let mut fill = |n: usize| -> Vec<f32> {
+            (0..n).map(|_| rng.f32_signed()).collect()
+        };
+        let q = fill(t * kh * g * hsz);
+        let k = fill(kh * scap * hsz);
+        let v = fill(kh * scap * hsz);
+        let valid = [1i32, 13, 16, 32];
+        let mut o_flat = vec![0.0f32; t * kh * g * hsz];
+        let mut lse_flat = vec![0.0f32; t * kh * g];
+        let mut scratch = vec![AttnScratch::default(); 2];
+        flash_prefill_flat(&q, &k, &v, &valid, t, kh, g, hsz, scap,
+                           block_s, &mut o_flat, &mut lse_flat,
+                           &mut scratch, 2);
+        // Scatter the shard into an out-of-order page pool.
+        let pages = scap / page_toks;
+        let order: Vec<usize> = (0..pages).rev().collect();
+        let mut k_pool = vec![0.0f32; pages * kh * page_toks * hsz];
+        let mut v_pool = k_pool.clone();
+        let mut table: Vec<u32> = Vec::new();
+        for lp in 0..pages {
+            let p = order[lp];
+            table.push(p as u32);
+            for hi in 0..kh {
+                let src = (hi * scap + lp * page_toks) * hsz;
+                let dst = ((p * kh + hi) * page_toks) * hsz;
+                let n = page_toks * hsz;
+                k_pool[dst..dst + n].copy_from_slice(&k[src..src + n]);
+                v_pool[dst..dst + n].copy_from_slice(&v[src..src + n]);
+            }
+        }
+        let mut o = vec![0.0f32; t * kh * g * hsz];
+        let mut lse = vec![0.0f32; t * kh * g];
+        flash_prefill_paged(&q, &k_pool, &v_pool, &table, &valid, t, kh,
+                            g, hsz, page_toks, block_s, &mut o, &mut lse,
+                            &mut scratch, 2);
+        assert_eq!(o, o_flat, "paged prefill o diverged from flat");
+        assert_eq!(lse, lse_flat, "paged prefill lse diverged from flat");
     }
 }

@@ -20,12 +20,26 @@ pub struct StepBatch {
 /// Build the next step's batch from router state. Sessions asleep
 /// between turns hold their slot (KV resident) but sit out the step.
 pub fn build_step(router: &Router, batch: usize) -> StepBatch {
+    build_step_chunked(router, batch, false)
+}
+
+/// [`build_step`] under chunked prefill: slots still ingesting prompt
+/// chunks (more than one prompt token left) sit out the decode step —
+/// the chunk scheduler owns them until only the final prompt token
+/// remains. That last token goes through the normal decode path, so
+/// the first generated token (and with it TTFT) rides the existing
+/// apply-step machinery unchanged.
+pub fn build_step_chunked(router: &Router, batch: usize, chunked: bool)
+                          -> StepBatch {
     let mut tokens = vec![0i32; batch];
     let mut active = vec![false; batch];
     for (slot, st) in router.slots.iter().enumerate() {
         if let Some(st) = st {
             if st.sleep_until.is_some() {
                 continue;
+            }
+            if chunked && st.prompt_pos + 1 < st.req.prompt.len() {
+                continue; // chunk phase: the prefill scheduler feeds it
             }
             tokens[slot] = st.next_input();
             active[slot] = true;
@@ -124,6 +138,28 @@ mod tests {
         assert_eq!(r.slots[0].as_ref().unwrap().token_times,
                    vec![0.02, 0.03]);
         assert!(r.slots[0].as_ref().unwrap().done());
+    }
+
+    /// Chunked prefill: a slot with more than one prompt token left
+    /// belongs to the chunk scheduler and must sit out the decode
+    /// batch; once only the final prompt token remains it rejoins so
+    /// the first generated token uses the normal decode path.
+    #[test]
+    fn chunk_phase_slots_sit_out_the_decode_batch() {
+        let mut r = router_with(&[4, 1]);
+        // Slot 0 has 4 prompt tokens (3 chunkable), slot 1 has 1 (its
+        // final token — decodes immediately).
+        let sb = build_step_chunked(&r, 3, true);
+        assert_eq!(sb.active, vec![false, true, false]);
+        // The legacy path still feeds everyone token by token.
+        let sb = build_step_chunked(&r, 3, false);
+        assert_eq!(sb.active, vec![true, true, false]);
+        // Chunks ingested prompt[0..3]: only the final token is left,
+        // so the slot rejoins the decode batch.
+        r.slots[0].as_mut().unwrap().prompt_pos = 3;
+        let sb = build_step_chunked(&r, 3, true);
+        assert_eq!(sb.active, vec![true, true, false]);
+        assert_eq!(sb.tokens[0], 3); // prompt[3], the final token
     }
 
     /// Regression for the mid-step admission race: a slot filled after

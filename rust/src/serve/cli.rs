@@ -18,7 +18,7 @@ use crate::util::cli::Args;
 use crate::util::table::Table;
 use crate::util::{Json, Rng};
 
-use super::server::{Server, Workload};
+use super::server::{ChunkPolicy, Server, Workload};
 
 /// Resolve what to boot: an explicit plan, an inline planner run, or
 /// the legacy model + layout-key flags.
@@ -136,6 +136,12 @@ fn cmd_verify(args: &Args) -> Result<()> {
 /// `--host-kv T` (host-tier KV tokens idle sessions may offload into;
 /// 0 disables offload).
 ///
+/// Chunked prefill (docs/PREFILL.md): `--prefill-chunk T` ingests each
+/// prompt in T-token context-parallel chunks (0 = token-by-token
+/// through the decode path, the historical behaviour) and
+/// `--prefill-budget B` caps prefill tokens per serve step (default:
+/// one chunk) so long arriving prompts cannot starve resident decode.
+///
 /// Chaos / recovery knobs (docs/ROBUSTNESS.md): `--fault-seed S`
 /// (seeded deterministic fault plan, placed within `--fault-horizon`
 /// steps), `--crash-step S` + `--crash-rank R` (kill rank R at step S),
@@ -198,6 +204,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     server.set_checkpoint_every(
         args.opt_usize("checkpoint-every", 0)? as u64);
     server.set_recovery_shed(args.opt_usize("recovery-shed", 2)? as u64);
+    let chunk = args.opt_usize("prefill-chunk", 0)?;
+    if chunk > 0 {
+        server.set_chunk_policy(ChunkPolicy {
+            chunk_tokens: chunk,
+            step_budget: args.opt_usize("prefill-budget", chunk)?,
+        });
+    }
     println!("serving {} requests on {model} [{layout}] over {gpus} ranks \
               (hopb={}, comm-scale={}, arrival-rate={}, burst={}, \
               kv-budget={}{})",

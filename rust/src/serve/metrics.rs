@@ -84,6 +84,13 @@ pub struct ServeMetrics {
     /// window (each counted once per shed event; they retry via the
     /// FIFO queue, never erroring out).
     pub requests_shed: usize,
+    /// Context-parallel prefill chunks issued to the engine.
+    pub prefill_chunks: usize,
+    /// Prompt tokens ingested through prefill chunks (the final prompt
+    /// token of each request decodes normally and is not counted here).
+    pub prefill_tokens: usize,
+    /// Wall time spent inside prefill chunks, seconds.
+    pub prefill_time: f64,
 }
 
 impl ServeMetrics {
@@ -189,6 +196,14 @@ impl ServeMetrics {
         pct(&self.recovery_times, 99.0)
     }
 
+    /// Prompt-ingestion throughput of the chunked-prefill path.
+    pub fn prefill_tokens_per_sec(&self) -> f64 {
+        if self.prefill_time <= 0.0 {
+            return 0.0;
+        }
+        self.prefill_tokens as f64 / self.prefill_time
+    }
+
     /// System throughput: generated tokens per second of wall time.
     pub fn tokens_per_sec(&self) -> f64 {
         if self.wall <= 0.0 {
@@ -259,6 +274,13 @@ impl ServeMetrics {
                  Json::Num(self.tokens_replayed as f64));
         m.insert("requests_shed".into(),
                  Json::Num(self.requests_shed as f64));
+        m.insert("prefill_chunks".into(),
+                 Json::Num(self.prefill_chunks as f64));
+        m.insert("prefill_tokens".into(),
+                 Json::Num(self.prefill_tokens as f64));
+        m.insert("prefill_time_s".into(), Json::Num(self.prefill_time));
+        m.insert("prefill_tokens_per_s".into(),
+                 Json::Num(self.prefill_tokens_per_sec()));
         Json::Obj(m)
     }
 }

@@ -3,15 +3,21 @@
 //! Continuous batching over the engine's fixed batch slots: requests
 //! arrive on a step clock, are admitted into free slots at step
 //! boundaries *only while the aggregate KV-token budget holds* (a
-//! reserve watermark absorbs in-flight round-robin skew), prefill runs
-//! token by token through the same decode path (the paper is
-//! decode-phase only), and every admitted slot advances one token per
-//! engine step under the step's own active mask — a slot admitted
-//! mid-step is never credited a token it did not compute. Retirement
-//! closes the engine slot and releases the KV commitment, and the
-//! metrics layer reports per-request TTL/TTFT/TPOT percentiles.
+//! reserve watermark absorbs in-flight round-robin skew), and every
+//! admitted slot advances one token per engine step under the step's
+//! own active mask — a slot admitted mid-step is never credited a
+//! token it did not compute. Prompt ingestion has two bit-identical
+//! paths: token by token through the decode pipeline (the default), or
+//! context-parallel chunks under a [`server::ChunkPolicy`] — all but
+//! the final prompt token ingest via
+//! [`crate::engine::HelixCluster::prefill_chunk`], co-scheduled with
+//! decode under a per-step token budget, and the final token decodes
+//! normally to produce the first output. Retirement closes the engine
+//! slot and releases the KV commitment, and the metrics layer reports
+//! per-request TTL/TTFT/TPOT percentiles plus prefill throughput.
 //!
-//! See docs/SERVING.md for the full request lifecycle and budget math.
+//! See docs/SERVING.md for the full request lifecycle and budget math,
+//! and docs/PREFILL.md for the chunk schedule and TTFT accounting.
 
 pub mod batcher;
 pub mod cli;
@@ -23,4 +29,4 @@ pub mod server;
 pub use metrics::ServeMetrics;
 pub use recovery::{ckpt_key, CheckpointBook, FaultInjector};
 pub use router::{AdmitAction, KvBudget, Request, RequestState, Router};
-pub use server::{ServeReport, Server, Workload};
+pub use server::{ChunkPolicy, ServeReport, Server, Workload};

@@ -70,6 +70,42 @@ impl Workload {
     }
 }
 
+/// Chunked-prefill scheduling policy: how prompt ingestion is split
+/// into context-parallel engine chunks and co-scheduled with decode.
+///
+/// `chunk_tokens == 0` disables chunking — prompts then feed token by
+/// token through the decode path (the historical behaviour). When
+/// enabled, all but the final prompt token of each request ingest via
+/// [`crate::engine::HelixCluster::prefill_chunk`]; the final token
+/// decodes normally, producing the first generated token.
+#[derive(Debug, Clone, Copy)]
+pub struct ChunkPolicy {
+    /// Prompt tokens per engine prefill chunk.
+    pub chunk_tokens: usize,
+    /// Max prefill tokens ingested per serve step across all slots —
+    /// the co-scheduling budget that keeps a long arriving prompt from
+    /// starving resident sessions' decode cadence (TPOT). A chunk never
+    /// exceeds the remaining budget: it shrinks instead.
+    pub step_budget: usize,
+}
+
+impl Default for ChunkPolicy {
+    fn default() -> ChunkPolicy {
+        ChunkPolicy { chunk_tokens: 0, step_budget: usize::MAX }
+    }
+}
+
+impl ChunkPolicy {
+    /// Chunked prefill with one `tokens`-sized chunk per step.
+    pub fn chunked(tokens: usize) -> ChunkPolicy {
+        ChunkPolicy { chunk_tokens: tokens, step_budget: tokens }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.chunk_tokens > 0
+    }
+}
+
 /// Serving summary.
 #[derive(Debug, Clone)]
 pub struct ServeReport {
@@ -130,6 +166,7 @@ impl ServeReport {
              faults / recoveries: {} / {} (recovery p50/p99 {:.2} / {:.2} ms)\n\
              tokens replayed    : {}\n\
              requests shed      : {}\n\
+             prefill chunks     : {} ({} tokens, {:.1} tok/s)\n\
              tokens/s (system)  : {:.1}\n\
              tokens/s/user      : {:.1}\n\
              tokens/s/GPU       : {:.1}{}",
@@ -149,6 +186,8 @@ impl ServeReport {
             m.faults_injected, m.recoveries,
             m.recovery_p50() * 1e3, m.recovery_p99() * 1e3,
             m.tokens_replayed, m.requests_shed,
+            m.prefill_chunks, m.prefill_tokens,
+            m.prefill_tokens_per_sec(),
             m.tokens_per_sec(), m.tokens_per_sec_per_user(),
             m.tokens_per_sec() / self.gpus as f64,
             match self.max_ref_diff {
@@ -176,6 +215,8 @@ pub struct Server {
     /// Steps to keep shedding new admissions after a recovery — bounded
     /// degradation instead of piling load onto a just-respawned pool.
     shed_steps: u64,
+    /// Chunked-prefill scheduling policy (disabled by default).
+    chunks: ChunkPolicy,
 }
 
 impl Server {
@@ -215,7 +256,17 @@ impl Server {
                  snapshots: HashMap::new(),
                  faults: FaultInjector::default(),
                  ckpts: CheckpointBook::default(),
-                 shed_steps: 2 }
+                 shed_steps: 2,
+                 chunks: ChunkPolicy::default() }
+    }
+
+    /// Install a chunked-prefill policy (see [`ChunkPolicy`]).
+    pub fn set_chunk_policy(&mut self, policy: ChunkPolicy) {
+        self.chunks = policy;
+    }
+
+    pub fn chunk_policy(&self) -> ChunkPolicy {
+        self.chunks
     }
 
     /// Install a deterministic fault schedule (chaos testing). Events
@@ -440,7 +491,15 @@ impl Server {
         if self.ckpts.due(step) {
             self.checkpoint_resident()?;
         }
-        let sb = batcher::build_step(&self.router, self.cluster.batch());
+        if self.chunks.enabled() {
+            // Ingest prompt chunks before the decode batch is built:
+            // slots still in chunk phase then sit the decode step out,
+            // and a slot whose chunks just finished rejoins with only
+            // its final prompt token left to feed.
+            self.prefill_chunks(step, metrics, max_diff, clock)?;
+        }
+        let sb = batcher::build_step_chunked(
+            &self.router, self.cluster.batch(), self.chunks.enabled());
         if !sb.active.iter().any(|&a| a) {
             // Every resident session is asleep between turns and
             // nothing new is admissible (or admission is shedding):
@@ -517,6 +576,65 @@ impl Server {
             self.cluster.lens[slot] = 0;
         }
         Ok(())
+    }
+
+    /// One chunk-scheduler round: issue context-parallel prefill chunks
+    /// for every awake slot still in chunk phase (more than one prompt
+    /// token left), round-robin across slots, until the per-step token
+    /// budget is spent or no chunkable work remains. A chunk shrinks to
+    /// the remaining budget rather than overshooting it, so the budget
+    /// is a hard per-step compute bound protecting resident decode.
+    ///
+    /// The serving clock advances by each chunk's measured wall time,
+    /// so TTFT — first token timestamp minus submission — reflects the
+    /// actual chunk completion times, not an idealized schedule.
+    fn prefill_chunks(&mut self, step: u64, metrics: &mut ServeMetrics,
+                      max_diff: &mut Option<f32>, clock: &mut f64)
+                      -> Result<()> {
+        let mut budget = self.chunks.step_budget;
+        loop {
+            let mut progressed = false;
+            for slot in 0..self.router.slots.len() {
+                if budget == 0 {
+                    break;
+                }
+                let Some(tokens) = self.router.slots[slot].as_ref()
+                    .and_then(|st| {
+                        if st.sleep_until.is_some() {
+                            return None;
+                        }
+                        let plen = st.req.prompt.len();
+                        if st.prompt_pos + 1 >= plen {
+                            return None; // final token decodes normally
+                        }
+                        let take = self.chunks.chunk_tokens
+                            .min(plen - 1 - st.prompt_pos)
+                            .min(budget);
+                        Some(st.req.prompt[st.prompt_pos..][..take]
+                            .to_vec())
+                    })
+                else { continue };
+                // The engine only prefills live slots; the decode mask
+                // is rebuilt from the router right after this phase.
+                self.cluster.active[slot] = true;
+                let pm = self.cluster.prefill_chunk(slot, &tokens)?;
+                let st = self.router.slots[slot].as_mut().unwrap();
+                st.prompt_pos += tokens.len();
+                st.last_step = step;
+                budget -= tokens.len();
+                *clock += pm.total.as_secs_f64();
+                metrics.prefill_chunks += 1;
+                metrics.prefill_tokens += tokens.len();
+                metrics.prefill_time += pm.total.as_secs_f64();
+                if let Some(d) = pm.max_ref_diff {
+                    *max_diff = Some(max_diff.unwrap_or(0.0).max(d));
+                }
+                progressed = true;
+            }
+            if !progressed || budget == 0 {
+                return Ok(());
+            }
+        }
     }
 
     /// Checkpoint every resident session's KV to the host tier under a
@@ -653,11 +771,31 @@ impl Server {
 
     /// Re-decode `stream[from..fed]` into `slot` (only that slot
     /// active), asserting every post-prefill output equals the token
-    /// the original run recorded.
+    /// the original run recorded. Under a chunked-prefill policy the
+    /// prompt prefix (everything before the final prompt token)
+    /// re-ingests through the same context-parallel chunks the original
+    /// run used — chunked and token-at-a-time ingestion write
+    /// bit-identical KV, so the replayed stream is bit-identical either
+    /// way; chunking just shortens recovery.
     fn replay_slot(&mut self, slot: usize, stream: &[i32], from: usize,
                    fed: usize, plen: usize, metrics: &mut ServeMetrics)
                    -> Result<()> {
         let b = self.cluster.batch();
+        let mut from = from;
+        if self.chunks.enabled() {
+            let end = fed.min(plen.saturating_sub(1));
+            while from < end {
+                let take = self.chunks.chunk_tokens.min(end - from);
+                self.cluster.active[slot] = true;
+                let pm = self.cluster
+                    .prefill_chunk(slot, &stream[from..from + take])?;
+                from += take;
+                metrics.tokens_replayed += take;
+                metrics.prefill_chunks += 1;
+                metrics.prefill_tokens += take;
+                metrics.prefill_time += pm.total.as_secs_f64();
+            }
+        }
         for i in from..fed {
             let mut toks = vec![0i32; b];
             toks[slot] = stream[i];

@@ -1,0 +1,183 @@
+//! Chunked context-parallel prefill exactness: ingesting a prompt via
+//! [`HelixCluster::prefill_chunk`] and then decoding must produce a
+//! token stream bit-identical to the legacy path that feeds the prompt
+//! token by token through the decode pipeline — for every KVP degree,
+//! chunk size, worker count and KV layout (paged and flat), on dense
+//! and MoE models. The chunk path replicates the decode path's exact
+//! per-token kernel sequence and summation orders, so this is a hard
+//! integer equality, not a tolerance check; the unsharded reference
+//! mirror (`verify`) additionally bounds the float deviation of every
+//! chunk.
+//!
+//! One #[test] on purpose: the matrix mutates `HELIX_NATIVE_THREADS`,
+//! which is process-global state — parallel tests in this binary would
+//! race it (same convention as tests/concurrency_exactness.rs).
+
+mod common;
+
+use helix::config::Layout;
+use helix::engine::ClusterConfig;
+
+use crate::common::cluster_or_skip;
+
+const TOL: f32 = 1e-3;
+const GEN: usize = 8;
+
+/// Deterministic per-row prompts, all `plen` long so the legacy run
+/// can feed them column-wise through full-batch decode steps.
+fn prompts(batch: usize, plen: usize, vocab: usize) -> Vec<Vec<i32>> {
+    (0..batch)
+        .map(|row| {
+            (0..plen)
+                .map(|i| (1 + (row * 131 + i * 17) % (vocab - 1)) as i32)
+                .collect()
+        })
+        .collect()
+}
+
+/// Per-row generated streams (`GEN` tokens each): the first element is
+/// the token decoded from the final prompt token, then greedy decode.
+fn decode_from(cluster: &mut helix::engine::HelixCluster,
+               last_col: Vec<i32>) -> Vec<Vec<i32>> {
+    let b = last_col.len();
+    let mut streams = vec![Vec::with_capacity(GEN); b];
+    let mut cur = last_col;
+    for _ in 0..GEN {
+        let (next, _) = cluster.decode_step(&cur).expect("decode step");
+        for (row, s) in streams.iter_mut().enumerate() {
+            s.push(next[row]);
+        }
+        cur = next;
+    }
+    streams
+}
+
+/// Legacy reference: the prompt feeds token by token through the
+/// decode pipeline (the pre-chunking serving behaviour).
+fn legacy_stream(model: &str, layout: Layout, prompts: &[Vec<i32>])
+                 -> Option<Vec<Vec<i32>>> {
+    let cc = ClusterConfig::new(model, layout);
+    let mut cluster = cluster_or_skip(cc)?;
+    assert_eq!(prompts.len(), cluster.batch());
+    for s in 0..cluster.batch() {
+        cluster.open_slot(s).unwrap();
+    }
+    let plen = prompts[0].len();
+    for i in 0..plen - 1 {
+        let col: Vec<i32> = prompts.iter().map(|p| p[i]).collect();
+        cluster.decode_step(&col).expect("prefill-by-decode step");
+    }
+    let last: Vec<i32> = prompts.iter().map(|p| p[plen - 1]).collect();
+    let streams = decode_from(&mut cluster, last);
+    cluster.shutdown();
+    Some(streams)
+}
+
+/// Chunked path: all but the final prompt token ingest via
+/// context-parallel prefill chunks of `chunk` tokens; the final token
+/// decodes normally. With `verify` the unsharded reference mirror runs
+/// alongside every chunk and the worst |engine - ref| is returned.
+fn chunked_stream(model: &str, layout: Layout, prompts: &[Vec<i32>],
+                  chunk: usize, verify: bool, paged: bool)
+                  -> Option<(Vec<Vec<i32>>, f32)> {
+    let mut cc = ClusterConfig::new(model, layout);
+    cc.verify = verify;
+    cc.paged = paged;
+    let mut cluster = cluster_or_skip(cc)?;
+    for s in 0..cluster.batch() {
+        cluster.open_slot(s).unwrap();
+    }
+    let mut worst = 0.0f32;
+    for (row, p) in prompts.iter().enumerate() {
+        let body = &p[..p.len() - 1];
+        let mut off = 0;
+        while off < body.len() {
+            let take = chunk.min(body.len() - off);
+            let pm = cluster.prefill_chunk(row, &body[off..off + take])
+                .expect("prefill chunk");
+            if let Some(d) = pm.max_ref_diff {
+                worst = worst.max(d);
+            }
+            off += take;
+        }
+        assert_eq!(cluster.lens[row], body.len(),
+                   "chunked prefill mis-counted row {row}");
+    }
+    let last: Vec<i32> = prompts.iter().map(|p| *p.last().unwrap())
+        .collect();
+    let streams = decode_from(&mut cluster, last);
+    cluster.shutdown();
+    Some((streams, worst))
+}
+
+fn run_matrix(model: &str, layout: Layout, plen: usize, chunks: &[usize])
+              -> Option<()> {
+    let cc = ClusterConfig::new(model, layout);
+    let cluster = cluster_or_skip(cc)?;
+    let (batch, vocab) = (cluster.batch(), cluster.cfg.vocab);
+    // The derived prefill deadline scales with outstanding chunk work
+    // and never undercuts the configured floor (satellite: coordinator
+    // hang-proofing must not misfire on long chunks).
+    let floor = helix::engine::ClusterConfig::new(model, layout)
+        .recv_timeout;
+    assert!(cluster.prefill_timeout(1) >= floor);
+    assert!(cluster.prefill_timeout(4096) > cluster.prefill_timeout(1),
+            "prefill deadline must grow with the chunk");
+    cluster.shutdown();
+
+    let ps = prompts(batch, plen, vocab);
+    let want = legacy_stream(model, layout, &ps)?;
+    for &chunk in chunks {
+        // Verify (the unsharded reference mirror) on the smallest chunk
+        // size only — it re-runs the full forward per chunk.
+        let verify = chunk == chunks[0];
+        let (got, worst) =
+            chunked_stream(model, layout, &ps, chunk, verify, true)?;
+        assert_eq!(got, want,
+                   "{model} [{}] chunk={chunk}: chunked prefill decoded \
+                    differently from token-by-token", layout.key());
+        if verify {
+            assert!(worst < TOL,
+                    "{model} [{}] chunk={chunk}: |engine-ref| = \
+                     {worst:.3e}", layout.key());
+        }
+    }
+    // Flat (non-paged) KV arenas must agree bit for bit too.
+    let (flat, _) =
+        chunked_stream(model, layout, &ps, chunks[0], false, false)?;
+    assert_eq!(flat, want,
+               "{model} [{}]: flat-KV chunked prefill diverged",
+               layout.key());
+    Some(())
+}
+
+#[test]
+fn chunked_prefill_matches_token_by_token_decode() {
+    // Prompt lengths cross several round-robin KV blocks (kv_block 16)
+    // at the largest KVP degree; chunk sizes deliberately misalign with
+    // the block size so chunks straddle shard boundaries. The last
+    // chunk size is single-shot (the whole prompt body in one chunk).
+    let dense: &[(Layout, usize, &[usize])] = &[
+        (Layout::helix(1, 4, 4, 1), 38, &[5, 37]),       // kvp=1
+        (Layout::helix(2, 2, 4, 1), 70, &[5, 12, 69]),   // kvp=2
+        (Layout::helix(4, 1, 4, 1), 70, &[7, 69]),       // kvp=4
+        (Layout::helix(1, 1, 1, 1), 38, &[5, 37]),       // unsharded
+    ];
+    for threads in ["1", "4"] {
+        std::env::set_var("HELIX_NATIVE_THREADS", threads);
+        for &(layout, plen, chunks) in dense {
+            if run_matrix("tiny_gqa", layout, plen, chunks).is_none() {
+                std::env::remove_var("HELIX_NATIVE_THREADS");
+                return; // pjrt-without-artifacts environment
+            }
+        }
+        // MoE: expert routing + shared expert inside the chunk path.
+        if run_matrix("tiny_moe", Layout::helix(2, 2, 2, 2), 40, &[7, 39])
+            .is_none()
+        {
+            std::env::remove_var("HELIX_NATIVE_THREADS");
+            return;
+        }
+    }
+    std::env::remove_var("HELIX_NATIVE_THREADS");
+}

@@ -17,7 +17,7 @@ use std::time::Duration;
 
 use helix::config::Layout;
 use helix::engine::{ClusterConfig, Fault, FaultPlan};
-use helix::serve::{ServeReport, Server, Workload};
+use helix::serve::{ChunkPolicy, ServeReport, Server, Workload};
 use helix::util::Rng;
 
 use crate::common::cluster_or_skip;
@@ -57,9 +57,17 @@ fn streams(server: &Server) -> BTreeMap<u64, Vec<i32>> {
 fn run_case(model: &str, layout: Layout, faults: FaultPlan,
             ckpt_every: u64, w: &Workload)
             -> Option<(ServeReport, BTreeMap<u64, Vec<i32>>)> {
+    run_case_chunked(model, layout, faults, ckpt_every, w,
+                     ChunkPolicy::default())
+}
+
+fn run_case_chunked(model: &str, layout: Layout, faults: FaultPlan,
+                    ckpt_every: u64, w: &Workload, chunks: ChunkPolicy)
+                    -> Option<(ServeReport, BTreeMap<u64, Vec<i32>>)> {
     let mut server = boot(model, layout)?;
     server.set_fault_plan(faults);
     server.set_checkpoint_every(ckpt_every);
+    server.set_chunk_policy(chunks);
     let report = server.run(w, MAX_STEPS).expect("serve run must heal");
     assert_eq!(server.faults_pending(), 0,
                "scheduled faults must all have fired");
@@ -125,6 +133,55 @@ fn random_crash_case(model: &str, layout: Layout, trial: u64)
     Some(())
 }
 
+/// Chunked-prefill recovery: a rank crashed while sessions are still
+/// mid-prefill must surface as a typed, timely fatal error (the
+/// prefill deadline scales with the chunk but keeps the configured 1s
+/// floor, so detection stays fast), and `Server::recover` must replay
+/// the partially-prefilled prompts — chunk-wise — to streams
+/// bit-identical to the fault-free chunked run.
+fn mid_prefill_crash_case(model: &str, layout: Layout) -> Option<()> {
+    // Long prompts + a small per-step chunk budget stretch prefill
+    // over many serve steps, so a step-3 crash is guaranteed to land
+    // while prompts are still being ingested.
+    let w = Workload {
+        num_requests: 6,
+        prompt_len: (30, 50),
+        gen_len: (4, 8),
+        seed: 77,
+        arrival_rate: 0.0,
+        burst: 1,
+        turns: 1,
+        idle_steps: 0,
+    };
+    let chunks = ChunkPolicy::chunked(5);
+    let (base, want) =
+        run_case_chunked(model, layout, FaultPlan::new(), 0, &w, chunks)?;
+    assert_eq!(base.completed, 6, "fault-free chunked trace must drain");
+    assert!(base.metrics.prefill_chunks > 0);
+
+    for ckpt_every in [0u64, 4] {
+        let mut plan = FaultPlan::new();
+        plan.push(3, Fault::CrashRank { rank: 1 });
+        let (rep, got) =
+            run_case_chunked(model, layout, plan, ckpt_every, &w, chunks)?;
+        assert_eq!(got, want,
+                   "mid-prefill recovery changed the decoded streams \
+                    ({model} [{}], ckpt_every={ckpt_every})",
+                   layout.key());
+        assert_eq!(rep.completed, base.completed);
+        assert_eq!(rep.metrics.faults_injected, 1);
+        assert!(rep.metrics.recoveries >= 1,
+                "mid-prefill rank death must trigger a recovery");
+        // Recovery re-ingested partially-prefilled prompts chunk-wise:
+        // strictly more chunks ran than the fault-free count.
+        assert!(rep.metrics.prefill_chunks > base.metrics.prefill_chunks,
+                "no chunked replay happened (got {}, fault-free {})",
+                rep.metrics.prefill_chunks, base.metrics.prefill_chunks);
+        assert!(rep.metrics.tokens_replayed >= 1);
+    }
+    Some(())
+}
+
 #[test]
 fn recovered_streams_are_bit_identical_to_fault_free_runs() {
     let cases = [("tiny_gqa", Layout::helix(2, 2, 4, 1)),
@@ -148,6 +205,16 @@ fn recovered_streams_are_bit_identical_to_fault_free_runs() {
         let threads = if trial < 2 { "1" } else { "4" };
         std::env::set_var("HELIX_NATIVE_THREADS", threads);
         if random_crash_case(model, layout, trial).is_none() {
+            std::env::remove_var("HELIX_NATIVE_THREADS");
+            return;
+        }
+    }
+
+    // Crash mid-chunked-prefill: dense multi-threaded, MoE serial.
+    for (i, (model, layout)) in cases.iter().enumerate() {
+        std::env::set_var("HELIX_NATIVE_THREADS",
+                          if i == 0 { "4" } else { "1" });
+        if mid_prefill_crash_case(model, *layout).is_none() {
             std::env::remove_var("HELIX_NATIVE_THREADS");
             return;
         }

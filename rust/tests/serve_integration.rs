@@ -11,7 +11,7 @@ use std::collections::BTreeMap;
 
 use helix::engine::{ClusterConfig, HelixCluster};
 use helix::config::Layout;
-use helix::serve::{Request, Server, Workload};
+use helix::serve::{ChunkPolicy, Request, Server, Workload};
 
 fn cluster(model: &str, layout: Layout, verify: bool)
            -> Option<HelixCluster> {
@@ -227,6 +227,109 @@ fn deterministic_given_seed() {
     };
     let (Some(a), Some(b)) = (run(), run()) else { return };
     assert_eq!(a, b, "same seed must reproduce the same tokens");
+}
+
+/// Chunked prefill is a scheduling change, not a numeric one: the same
+/// trace served under every chunk size must produce per-request token
+/// streams bit-identical to the legacy token-by-token path, while
+/// actually ingesting every prompt body through the chunk scheduler.
+#[test]
+fn chunked_prefill_serving_is_bit_identical_to_legacy() {
+    let layout = Layout::helix(2, 2, 4, 1);
+    let Some(c) = cluster("tiny_gqa", layout, false) else { return };
+    let vocab = c.cfg.vocab;
+    let workload = Workload { num_requests: 8, prompt_len: (9, 24),
+                              gen_len: (4, 8), seed: 23,
+                              arrival_rate: 0.8, burst: 2,
+                              turns: 1, idle_steps: 0 };
+    let trace = workload.generate(vocab);
+    let body_tokens: usize = trace.iter()
+        .map(|r| r.prompt.len() - 1).sum();
+
+    let mut legacy = Server::new(c);
+    let base = legacy.run_trace(trace.clone(), 100_000).unwrap();
+    assert_eq!(base.completed, 8);
+    assert_eq!(base.metrics.prefill_chunks, 0,
+               "legacy path must not touch the chunk scheduler");
+    let want: BTreeMap<u64, Vec<i32>> = legacy.router.completed.iter()
+        .map(|st| (st.req.id, st.generated.clone()))
+        .collect();
+
+    for chunk in [1usize, 4, 7, 64] {
+        let Some(c2) = cluster("tiny_gqa", layout, false) else { return };
+        let mut server = Server::new(c2);
+        server.set_chunk_policy(ChunkPolicy::chunked(chunk));
+        let rep = server.run_trace(trace.clone(), 100_000).unwrap();
+        assert_eq!(rep.completed, 8, "chunk={chunk}");
+        assert_eq!(rep.rejected, 0, "chunk={chunk}");
+        let got: BTreeMap<u64, Vec<i32>> = server.router.completed.iter()
+            .map(|st| (st.req.id, st.generated.clone()))
+            .collect();
+        assert_eq!(got, want,
+                   "chunk={chunk}: chunked prefill changed the decoded \
+                    streams");
+        // Every prompt body went through the chunk path, exactly once.
+        assert_eq!(rep.metrics.prefill_tokens, body_tokens,
+                   "chunk={chunk}");
+        assert!(rep.metrics.prefill_chunks > 0);
+        assert!(rep.metrics.prefill_time > 0.0);
+    }
+}
+
+/// The head-of-line pin: a resident decoding session must advance one
+/// token per serve step even while a long prompt prefills concurrently
+/// — the per-step chunk budget bounds the prefill work co-scheduled
+/// with decode, so the resident's step cadence never stalls, and its
+/// observed inter-token latency stays far below the unbounded
+/// (whole-prompt-in-one-chunk) policy.
+#[test]
+fn resident_decode_never_stalls_behind_long_prefill() {
+    let layout = Layout::helix(2, 2, 4, 1);
+    let resident = Request { id: 0, prompt: vec![7, 11], max_new_tokens: 40,
+                             arrival: 0.0, turns: 1, idle_steps: 0 };
+    let long = Request { id: 1,
+                         prompt: (0..180).map(|i| 1 + i % 400).collect(),
+                         max_new_tokens: 4, arrival: 3.0,
+                         turns: 1, idle_steps: 0 };
+
+    let run = |policy: ChunkPolicy| {
+        let c = cluster("tiny_gqa", layout, false)?;
+        let mut server = Server::new(c);
+        server.set_chunk_policy(policy);
+        let rep = server.run_trace(vec![resident.clone(), long.clone()],
+                                   100_000).unwrap();
+        assert_eq!(rep.completed, 2);
+        let st = server.router.completed.iter()
+            .find(|st| st.req.id == 0).unwrap().clone();
+        Some((rep, st))
+    };
+
+    // Budgeted policy: 8 prefill tokens per step, co-scheduled.
+    let Some((bounded, st)) = run(ChunkPolicy::chunked(8)) else { return };
+    assert_eq!(st.generated.len(), 40);
+    // One decode token per serve step from admission to retirement:
+    // the long prefill never pushed the resident out of the batch.
+    assert_eq!(st.last_step - st.admitted_step, 39,
+               "resident session stalled behind the concurrent prefill");
+    // The long prompt really was ingested chunk-wise across many steps.
+    assert_eq!(bounded.metrics.prefill_tokens, 179 + 1);
+    assert!(bounded.metrics.prefill_chunks >= 23,
+            "expected ~ceil(179/8) chunks, got {}",
+            bounded.metrics.prefill_chunks);
+
+    // Unbounded policy: the whole 179-token body lands in one chunk,
+    // and that chunk's wall time shows up as one giant inter-token gap
+    // on whoever is decoding. The budgeted policy's worst gap must be
+    // well under it (the compute ratio is ~20x; 2x margin absorbs
+    // scheduler noise).
+    let whole = ChunkPolicy { chunk_tokens: 256, step_budget: usize::MAX };
+    let Some((unbounded, _)) = run(whole) else { return };
+    assert_eq!(unbounded.metrics.prefill_chunks, 1 + 1);
+    assert!(bounded.metrics.ttl_p99() * 2.0
+            < unbounded.metrics.ttl_p99(),
+            "budgeted prefill did not bound the decode latency tail: \
+             p99 {:.4}s vs unbounded {:.4}s",
+            bounded.metrics.ttl_p99(), unbounded.metrics.ttl_p99());
 }
 
 #[test]

@@ -36,6 +36,13 @@ the same run, so machine speed cancels out. The restore bandwidth
 (``kv/page/restore_gb_s_per_rank``) is printed for information only —
 host-tier copy speed is machine-dependent.
 
+The chunked-prefill section (``prefill/*``) is gated within-run: the
+ingestion rate (``prefill/<model>/chunk_tokens_per_s``) must be
+positive, and the TTFT trajectory (``prefill/<model>/ttft_ctx<N>_ms``)
+must be monotone non-decreasing in context length — cumulative
+ingestion time can only grow with the prefix. Absolute TTFT numbers are
+machine-dependent and never gated across runs.
+
 Stdlib only (the CI runner needs nothing installed).
 """
 
@@ -131,6 +138,40 @@ def paged_failures(cur):
     return []
 
 
+def prefill_failures(cur):
+    """Engine-report chunked-prefill gate; no-op for reports without
+    the section (eval reports, older baselines)."""
+    metrics = cur.get("metrics", {})
+    rates = {k: v for k, v in metrics.items()
+             if k.startswith("prefill/") and
+             k.endswith("/chunk_tokens_per_s")}
+    if not rates:
+        return []
+    failures = []
+    for key, rate in sorted(rates.items()):
+        model = key.split("/")[1]
+        if not isinstance(rate, (int, float)) or rate <= 0:
+            failures.append(f"{key} is not positive ({rate!r})")
+            continue
+        prefix = f"prefill/{model}/ttft_ctx"
+        ttfts = sorted(
+            (int(k[len(prefix):-len("_ms")]), v)
+            for k, v in metrics.items()
+            if k.startswith(prefix) and k.endswith("_ms"))
+        pts = ", ".join(f"{c}:{v:.2f}ms" for c, v in ttfts)
+        print(f"prefill {model}: {rate:.0f} tok/s ingested, TTFT [{pts}]")
+        if len(ttfts) < 2:
+            failures.append(
+                f"prefill/{model}: TTFT-vs-context sweep missing "
+                f"(got {len(ttfts)} points)")
+        for (c0, t0), (c1, t1) in zip(ttfts, ttfts[1:]):
+            if t1 < t0:
+                failures.append(
+                    f"prefill/{model}: TTFT not monotone in context "
+                    f"(ctx {c0}: {t0:.3f} ms > ctx {c1}: {t1:.3f} ms)")
+    return failures
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("current")
@@ -155,9 +196,10 @@ def main(argv=None) -> int:
               f"(commit the current report there to start gating):")
         for k in sorted(cur_tok):
             print(f"  {k}: {cur_tok[k]:.3f}")
-        # The within-report overlap and paged-KV contracts hold even on
-        # a first run.
-        within = overlap_failures(cur, None) + paged_failures(cur)
+        # The within-report overlap, paged-KV and prefill contracts
+        # hold even on a first run.
+        within = (overlap_failures(cur, None) + paged_failures(cur)
+                  + prefill_failures(cur))
         if within:
             print("FAIL: " + "; ".join(within))
             return 1
@@ -188,7 +230,8 @@ def main(argv=None) -> int:
         print(f"FAIL: {len(failures)} tokens/s regression(s) > "
               f"{args.threshold:.0%}")
         return 1
-    within = overlap_failures(cur, base) + paged_failures(cur)
+    within = (overlap_failures(cur, base) + paged_failures(cur)
+              + prefill_failures(cur))
     if within:
         print("FAIL: " + "; ".join(within))
         return 1

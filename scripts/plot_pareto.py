@@ -25,6 +25,12 @@ frontier's maxima when a baseline series exists (exactly as the paper
 reports its results, S3.1); eval documents have no baseline sweep, so
 they normalize to the predicted series instead.
 
+Schema-v3 eval documents additionally carry a per-model
+``ttft_vs_context`` section (one series per evaluated plan, populated
+by the ``long_prefill`` scenario's per-request samples). When present,
+a second chart — TTFT vs context length — is written next to the
+frontier plot as ``<out stem>.ttft.<ext>``.
+
 Stdlib-only by design — matplotlib is optional.
 """
 
@@ -68,7 +74,8 @@ def load(path, model=None):
                      f"\"frontiers\" section")
         meta = {"model": entry.get("model", "?"),
                 "ttl_budget_ms": None,
-                "kind": "helix-eval"}
+                "kind": "helix-eval",
+                "ttft_vs_context": entry.get("ttft_vs_context") or []}
         return meta, frontiers
     frontiers = doc.get("frontiers")
     if not frontiers:
@@ -95,6 +102,96 @@ def normalized_series(frontiers):
     if not out:
         sys.exit("frontiers are empty — nothing to plot")
     return out
+
+
+PALETTE = ["#1f6feb", "#d62728", "#2ca02c", "#9467bd", "#8c564b",
+           "#e377c2", "#7f7f7f", "#bcbd22"]
+
+
+def ttft_series(meta):
+    """Schema-v3 TTFT-vs-context series: ``[(label, [(ctx, ms)...])]``,
+    contexts ascending, empty-point series dropped."""
+    out = []
+    for s in meta.get("ttft_vs_context") or []:
+        pts = sorted((float(c), float(t)) for c, t in s.get("points") or [])
+        if pts:
+            out.append((f'{s.get("strategy", "?")} '
+                        f'{s.get("layout", "?")}', pts))
+    return out
+
+
+def plot_ttft_matplotlib(meta, series, out):
+    import matplotlib
+    matplotlib.use("Agg")
+    import matplotlib.pyplot as plt
+
+    fig, ax = plt.subplots(figsize=(7, 5))
+    for i, (label, pts) in enumerate(series):
+        xs, ys = zip(*pts)
+        ax.plot(xs, ys, marker="o", markersize=4, linewidth=1.2,
+                label=label, color=PALETTE[i % len(PALETTE)])
+    ax.set_xlabel("context length (tokens)")
+    ax.set_ylabel("TTFT (ms)")
+    ax.set_title(f"TTFT vs context length — {meta.get('model', '?')}")
+    ax.grid(True, alpha=0.3)
+    ax.legend()
+    fig.tight_layout()
+    fig.savefig(out, dpi=150)
+    print(f"wrote {out}")
+
+
+def ttft_svg(meta, series, out):
+    """Dependency-free TTFT-vs-context chart: linear axes, one
+    polyline+markers per plan."""
+    w, h, margin = 720, 520, 60
+    xs = [x for _, pts in series for x, _ in pts]
+    ys = [y for _, pts in series for _, y in pts]
+    x0, x1 = min(xs), max(xs)
+    if x1 - x0 < 1e-9:
+        x0, x1 = x0 - 1.0, x1 + 1.0
+    y0, y1 = 0.0, max(max(ys), 1e-9) * 1.05
+
+    def sx(v):
+        return margin + (v - x0) / (x1 - x0) * (w - 2 * margin)
+
+    def sy(v):
+        return h - margin - (v - y0) / (y1 - y0) * (h - 2 * margin)
+
+    el = [f'<svg xmlns="http://www.w3.org/2000/svg" width="{w}" '
+          f'height="{h}" font-family="monospace" font-size="12">',
+          f'<rect width="{w}" height="{h}" fill="white"/>',
+          f'<rect x="{margin}" y="{margin}" width="{w - 2 * margin}" '
+          f'height="{h - 2 * margin}" fill="none" stroke="#ccc"/>']
+    for i in range(5):
+        xv = x0 + (x1 - x0) * i / 4
+        yv = y0 + (y1 - y0) * i / 4
+        el.append(f'<text x="{sx(xv):.1f}" y="{h - margin + 16}" '
+                  f'text-anchor="middle">{xv:.0f}</text>')
+        el.append(f'<line x1="{margin}" y1="{sy(yv):.1f}" '
+                  f'x2="{w - margin}" y2="{sy(yv):.1f}" stroke="#eee"/>')
+        el.append(f'<text x="{margin - 6}" y="{sy(yv) + 4:.1f}" '
+                  f'text-anchor="end">{yv:.2f}</text>')
+    for i, (label, pts) in enumerate(series):
+        color = PALETTE[i % len(PALETTE)]
+        if len(pts) > 1:
+            path = " ".join(f'{sx(x):.1f},{sy(y):.1f}' for x, y in pts)
+            el.append(f'<polyline points="{path}" fill="none" '
+                      f'stroke="{color}" stroke-width="1.5"/>')
+        for x, y in pts:
+            el.append(f'<circle cx="{sx(x):.1f}" cy="{sy(y):.1f}" '
+                      f'r="3" fill="{color}"/>')
+        el.append(f'<text x="{margin + 10}" y="{margin + 18 + 16 * i}" '
+                  f'fill="{color}">{label}</text>')
+    el.append(f'<text x="{w / 2}" y="{h - 12}" text-anchor="middle">'
+              f'context length (tokens)</text>')
+    el.append(f'<text x="16" y="{h / 2}" text-anchor="middle" '
+              f'transform="rotate(-90 16 {h / 2})">TTFT (ms)</text>')
+    el.append(f'<text x="{w / 2}" y="24" text-anchor="middle">TTFT vs '
+              f'context length — {meta.get("model", "?")}</text>')
+    el.append('</svg>')
+    with open(out, "w") as f:
+        f.write("\n".join(el) + "\n")
+    print(f"wrote {out} (matplotlib unavailable; SVG fallback)")
 
 
 def plot_matplotlib(doc, series, out):
@@ -241,6 +338,14 @@ def main(argv=None):
         if not out.endswith(".svg"):
             out = os.path.splitext(out)[0] + ".svg"
         plot_svg(doc, series, out)
+    # Schema-v3 TTFT axis: a second chart next to the frontier plot.
+    ttfts = ttft_series(doc)
+    if ttfts:
+        base, ext = os.path.splitext(out)
+        if have_mpl:
+            plot_ttft_matplotlib(doc, ttfts, base + ".ttft" + ext)
+        else:
+            ttft_svg(doc, ttfts, base + ".ttft.svg")
 
 
 if __name__ == "__main__":

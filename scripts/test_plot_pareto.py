@@ -112,6 +112,59 @@ class SvgRenderTest(unittest.TestCase):
         self.assertIn("tiny_moe", svg)
 
 
+class TtftAxisTest(unittest.TestCase):
+    """Schema-v3 TTFT-vs-context series extraction and rendering."""
+
+    def test_load_carries_ttft_series(self):
+        meta, _ = plot_pareto.load(FIXTURE)
+        self.assertEqual(len(meta["ttft_vs_context"]), 2)
+
+    def test_series_sorted_and_empty_dropped(self):
+        meta, _ = plot_pareto.load(FIXTURE)
+        series = plot_pareto.ttft_series(meta)
+        # The kvp1 plan's series has no points and must be dropped.
+        self.assertEqual(len(series), 1)
+        label, pts = series[0]
+        self.assertIn("kvp2_tpa2_tpf4_ep1", label)
+        self.assertEqual(pts, [(9.0, 6.5), (34.0, 14.0)])
+
+    def test_legacy_plan_docs_have_no_ttft_axis(self):
+        self.assertEqual(plot_pareto.ttft_series({"model": "x"}), [])
+
+    def test_ttft_svg_renders(self):
+        meta, _ = plot_pareto.load(FIXTURE)
+        series = plot_pareto.ttft_series(meta)
+        with tempfile.NamedTemporaryFile("r", suffix=".svg",
+                                         delete=False) as f:
+            path = f.name
+        try:
+            plot_pareto.ttft_svg(meta, series, path)
+            with open(path) as f:
+                svg = f.read()
+        finally:
+            os.unlink(path)
+        self.assertIn("<svg", svg)
+        self.assertIn("TTFT vs context length", svg)
+        self.assertIn("context length (tokens)", svg)
+        self.assertIn("kvp2_tpa2_tpf4_ep1", svg)
+
+    def test_single_point_series_renders(self):
+        meta, _ = plot_pareto.load(FIXTURE, model="tiny_moe")
+        series = plot_pareto.ttft_series(meta)
+        self.assertEqual(len(series), 1)
+        with tempfile.NamedTemporaryFile("r", suffix=".svg",
+                                         delete=False) as f:
+            path = f.name
+        try:
+            plot_pareto.ttft_svg(meta, series, path)
+            with open(path) as f:
+                svg = f.read()
+        finally:
+            os.unlink(path)
+        self.assertIn("<svg", svg)
+        self.assertIn("tiny_moe", svg)
+
+
 class RegressionGateTest(unittest.TestCase):
     def setUp(self):
         with open(FIXTURE) as f:
@@ -259,6 +312,57 @@ class PagedGateTest(unittest.TestCase):
         report = {"metrics": {"decode/tokens_per_s": 1.0, "status": "ok"}}
         self.assertEqual(
             check_bench_regression.paged_failures(report), [])
+
+
+class PrefillGateTest(unittest.TestCase):
+    """The engine report's chunked-prefill ingestion contract."""
+
+    def engine_report(self, rate=5000.0, ttfts=((31, 2.0), (63, 4.5),
+                                                (127, 10.0), (255, 24.0))):
+        metrics = {"engine/tiny/tokens_per_s": 100.0,
+                   "prefill/tiny_gqa/chunk_tokens_per_s": rate,
+                   "status": "ok"}
+        for ctx, ms in ttfts:
+            metrics[f"prefill/tiny_gqa/ttft_ctx{ctx}_ms"] = ms
+        return {"metrics": metrics}
+
+    def write(self, doc):
+        f = tempfile.NamedTemporaryFile("w", suffix=".json", delete=False)
+        json.dump(doc, f)
+        f.close()
+        self.addCleanup(os.unlink, f.name)
+        return f.name
+
+    def test_healthy_prefill_passes(self):
+        self.assertEqual(
+            check_bench_regression.prefill_failures(self.engine_report()),
+            [])
+        path = self.write(self.engine_report())
+        self.assertEqual(check_bench_regression.main([path, path]), 0)
+
+    def test_nonpositive_rate_fails(self):
+        broken = self.engine_report(rate=0.0)
+        self.assertTrue(check_bench_regression.prefill_failures(broken))
+        cur = self.write(broken)
+        self.assertEqual(
+            check_bench_regression.main([cur, cur + ".missing"]), 1)
+
+    def test_nonmonotone_ttft_fails(self):
+        # Cumulative ingestion time cannot shrink with more context.
+        broken = self.engine_report(ttfts=((31, 2.0), (63, 4.5),
+                                           (127, 4.0), (255, 24.0)))
+        self.assertTrue(check_bench_regression.prefill_failures(broken))
+        cur = self.write(broken)
+        self.assertEqual(check_bench_regression.main([cur, cur]), 1)
+
+    def test_missing_ttft_sweep_fails(self):
+        broken = self.engine_report(ttfts=((255, 24.0),))
+        self.assertTrue(check_bench_regression.prefill_failures(broken))
+
+    def test_reports_without_prefill_are_not_gated(self):
+        report = {"metrics": {"decode/tokens_per_s": 1.0, "status": "ok"}}
+        self.assertEqual(
+            check_bench_regression.prefill_failures(report), [])
 
 
 if __name__ == "__main__":

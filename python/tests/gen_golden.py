@@ -44,6 +44,60 @@ def flash_case(name, b, kh, g, hsz, scap, block_s, lens, seed):
     }
 
 
+def _quant_dequant(cache, dtype, sb):
+    """Numpy mirror of the rust ``KvQuant`` storage transform.
+
+    f16: IEEE round-to-nearest-even via np.float16 (bit-identical to the
+    rust ``f32_to_f16_bits``). int8: symmetric per-(row, head, sb-token
+    block) scales ``amax/127`` with round-half-away-from-zero (rust
+    ``f32::round``), codes clipped to [-127, 127]. Returns the
+    dequantized f32 cache — exactly what the rust dequant-on-read
+    kernels reconstruct per tile.
+    """
+    if dtype == "f16":
+        return cache.astype(np.float16).astype(np.float32)
+    assert dtype == "int8"
+    b, kh, s, hsz = cache.shape
+    assert s % sb == 0
+    blocks = cache.reshape(b, kh, s // sb, sb * hsz)
+    scales = (np.abs(blocks).max(axis=-1, keepdims=True) / np.float32(127)
+              ).astype(np.float32)
+    safe = np.where(scales > 0, scales, np.float32(1))
+    # Multiply by the f32 reciprocal (not divide): the rust quantizer
+    # computes `x * (1.0 / s)`, and matching it op-for-op keeps the
+    # codes bit-identical even at rounding boundaries.
+    inv = (np.float32(1) / safe).astype(np.float32)
+    y = (blocks * inv).astype(np.float32)
+    codes = np.clip(np.trunc(y + np.copysign(np.float32(0.5), y)),
+                    -127, 127)
+    return (codes * scales).astype(np.float32).reshape(b, kh, s, hsz)
+
+
+def quant_flash_case(name, dtype, sb, tol, b, kh, g, hsz, scap, block_s,
+                     lens, seed):
+    """Quantized-KV flash decode: f32 q over f16/int8 k/v. The oracle
+    runs on the numpy quant->dequant caches, so the golden pins BOTH the
+    rust quantizer (same codes/scales) and the dequant-on-read kernel
+    (same reconstructed values) — only blocked-summation fp reordering
+    is left inside ``tol``. The emitted k/v are the ORIGINAL f32 inputs;
+    the rust side quantizes them itself."""
+    rng = np.random.default_rng(seed)
+    q = rng.standard_normal((b, kh, g, hsz)).astype(np.float32)
+    k = rng.standard_normal((b, kh, scap, hsz)).astype(np.float32)
+    v = rng.standard_normal((b, kh, scap, hsz)).astype(np.float32)
+    lens = np.asarray(lens, dtype=np.int32)
+    assert lens.shape == (b,)
+    o, lse = flash_decode_ref(q, _quant_dequant(k, dtype, sb),
+                              _quant_dequant(v, dtype, sb), lens)
+    return {
+        "name": name, "dtype": dtype, "scale_block": sb, "tol": tol,
+        "b": b, "kh": kh, "g": g, "hsz": hsz, "scap": scap,
+        "block_s": block_s, "lens": [int(x) for x in lens],
+        "q": _flat(q), "k": _flat(k), "v": _flat(v),
+        "o": _flat(o), "lse": _flat(lse),
+    }
+
+
 def prefill_case(name, t, kh, g, hsz, scap, block_s, valid, seed):
     """Chunked-prefill flash attention: ``t`` query tokens share ONE
     KV shard (``k/v [Kh, Scap, Hsz]``) with per-query ragged lengths
@@ -105,6 +159,23 @@ def main():
     with open(os.path.join(OUT, "flash_decode.json"), "w") as f:
         json.dump({"cases": flash}, f)
 
+    # Quantized-KV goldens (docs/QUANTKV.md): same shapes/seeds as the
+    # f32 "ragged" and "block_boundary" cases, per storage dtype. The
+    # tolerance is tight (1e-3) because the oracle saw the same
+    # quantization: a rust/python quantizer divergence or a dequant bug
+    # shows up at the scale of the quantization step (>= 1e-2), far
+    # outside it.
+    quant = []
+    for dtype in ("f16", "int8"):
+        quant.append(quant_flash_case(
+            f"ragged_{dtype}", dtype, sb=16, tol=1e-3, b=3, kh=2, g=2,
+            hsz=8, scap=32, block_s=8, lens=[0, 13, 27], seed=101))
+        quant.append(quant_flash_case(
+            f"block_boundary_{dtype}", dtype, sb=16, tol=1e-3, b=3, kh=1,
+            g=4, hsz=16, scap=64, block_s=16, lens=[16, 48, 64], seed=202))
+    with open(os.path.join(OUT, "flash_decode_quant.json"), "w") as f:
+        json.dump({"cases": quant}, f)
+
     prefill = [
         # pure causal ramp: query i sees exactly i+1 entries (kvp=1)
         prefill_case("causal_ramp", t=6, kh=2, g=2, hsz=8, scap=32,
@@ -147,9 +218,10 @@ def main():
     with open(os.path.join(fdir, "manifest.json"), "w") as f:
         json.dump(build_manifest(), f, indent=1, sort_keys=True)
 
-    print(f"wrote {len(flash)} flash_decode + {len(prefill)} "
-          f"flash_prefill + {len(combine)} combine cases + the "
-          f"synthetic-manifest fixture to {os.path.normpath(OUT)}")
+    print(f"wrote {len(flash)} flash_decode + {len(quant)} "
+          f"flash_decode_quant + {len(prefill)} flash_prefill + "
+          f"{len(combine)} combine cases + the synthetic-manifest "
+          f"fixture to {os.path.normpath(OUT)}")
 
 
 if __name__ == "__main__":

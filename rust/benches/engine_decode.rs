@@ -16,7 +16,7 @@
 //! diffs across PRs (see scripts/check_bench_regression.py).
 
 use helix::engine::{ClusterConfig, CommModel, HelixCluster};
-use helix::config::Layout;
+use helix::config::{KvDtype, Layout};
 use helix::runtime::Manifest;
 use helix::util::bench::{alloc_count, bench, CountingAlloc, JsonReport};
 
@@ -280,6 +280,66 @@ fn prefill_ingestion(report: &mut JsonReport, model: &str,
     cluster.shutdown();
 }
 
+/// Quantized KV tier ablation: same model, layout, and schedule — only
+/// the KV storage dtype changes. Reports the per-token KV footprint and
+/// the flash-decode cost at the longest context a slot holds, i.e. the
+/// dequant-on-read price the 2x/4x capacity win pays (docs/QUANTKV.md).
+/// The f32 row keeps the usual regression gates; the f16/int8 rows are
+/// report-only in scripts/check_bench_regression.py while the tier
+/// settles.
+fn kv_dtype_ablation(report: &mut JsonReport, model: &str, base: Layout) {
+    println!("\n## KV storage dtype: footprint vs dequant-on-read cost \
+              ({model} {})", base.key());
+    for kv_dtype in [KvDtype::F32, KvDtype::F16, KvDtype::Int8] {
+        let layout = Layout { kv_dtype, ..base };
+        let cc = ClusterConfig::new(model, layout);
+        let mut cluster = match HelixCluster::new(cc) {
+            Ok(c) => c,
+            Err(e) => {
+                // Quantized tiers need the paged native backend; under
+                // a pinned PJRT run only the f32 row reports.
+                eprintln!("skipping kv/dtype/{}: {e:#}", kv_dtype.name());
+                continue;
+            }
+        };
+        for s in 0..cluster.batch() {
+            cluster.open_slot(s).unwrap();
+        }
+        let tokens: Vec<i32> = (0..cluster.batch() as i32).map(|i| i + 3)
+            .collect();
+        // Device KV bytes one decoded token costs across the whole
+        // grid: K + V, every layer, every KV head (+ int8 block scales,
+        // amortized to one f32 per kv_block tokens per head).
+        let c = &cluster.cfg;
+        let elems = 2 * c.layers * c.kv_heads * c.head_size;
+        let mut bpt = (elems * kv_dtype.bytes_per_elem()) as f64;
+        if kv_dtype == KvDtype::Int8 {
+            bpt += (2 * c.layers * c.kv_heads * 4) as f64
+                / c.kv_block as f64;
+        }
+        // Fill to ~capacity, then probe the attention phase where the
+        // KV read dominates.
+        const PROBE: usize = 4;
+        let cap = cluster.slot_kv_tokens();
+        for _ in 0..cap.saturating_sub(PROBE + 1) {
+            cluster.decode_step(&tokens).unwrap();
+        }
+        let mut attn = 0.0f64;
+        for _ in 0..PROBE {
+            let (_, sm) = cluster.decode_step(&tokens).unwrap();
+            attn += sm.attn.as_secs_f64();
+        }
+        let attn_ns = attn / PROBE as f64 * 1e9;
+        println!("{:>5}: {:>8.1} KV bytes/token, attn {:>10.1} ns/step \
+                  at ctx {}", kv_dtype.name(), bpt, attn_ns, cap);
+        report.metric(&format!("kv/dtype/{}/bytes_per_token",
+                               kv_dtype.name()), bpt);
+        report.metric(&format!("kv/dtype/{}/attn_ns_longctx",
+                               kv_dtype.name()), attn_ns);
+        cluster.shutdown();
+    }
+}
+
 /// Rank-death recovery cost: fill a batch to a realistic context,
 /// checkpoint every slot to the host tier, kill a rank, then time the
 /// recovery pipeline — respawn from the boot config, restore the
@@ -426,6 +486,7 @@ fn main() {
         report.metric("kv/page/flat_tokens_per_s", flat.tokens_per_s);
         report.metric("kv/page/overhead_frac", overhead);
     }
+    kv_dtype_ablation(&mut report, "tiny_gqa", Layout::helix(2, 2, 4, 1));
     restore_bandwidth(&mut report, "tiny_gqa", Layout::helix(2, 2, 4, 1));
     recovery_replay(&mut report, "tiny_gqa", Layout::helix(2, 2, 4, 1));
     prefill_ingestion(&mut report, "tiny_gqa", Layout::helix(2, 2, 4, 1));

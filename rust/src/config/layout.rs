@@ -11,6 +11,7 @@ use std::collections::BTreeMap;
 
 use anyhow::{bail, Context, Result};
 
+use crate::runtime::tensor::KvDtype;
 use crate::util::Json;
 
 use super::model::{EngineModelConfig, ModelSpec};
@@ -34,6 +35,11 @@ pub struct Layout {
     /// walks the exact tile sequence the flat arena did). Non-zero
     /// values pin the page explicitly; both validators check them.
     pub page: usize,
+    /// KV-cache element dtype (`f32` = legacy bit-exact path; `f16` /
+    /// `int8` shrink KV bytes 2x/4x with dequantize-on-read kernels).
+    /// A storage knob like `page`: stripped by [`Layout::grid`], so the
+    /// compiled-program identity is dtype-blind.
+    pub kv_dtype: KvDtype,
 }
 
 impl Layout {
@@ -49,31 +55,35 @@ impl Layout {
 
     /// Plain tensor parallelism (the Megatron baseline): one knob.
     pub fn tp(tp: usize) -> Layout {
-        Layout { kvp: 1, tpa: tp, tpf: tp, ep: 1, pp: 1, page: 0 }
+        Layout { kvp: 1, tpa: tp, tpf: tp, ep: 1, pp: 1, page: 0,
+                 kv_dtype: KvDtype::F32 }
     }
 
     /// Helix: decoupled attention (kvp x tpa) and FFN (tpf x ep) grids.
     pub fn helix(kvp: usize, tpa: usize, tpf: usize, ep: usize) -> Layout {
-        Layout { kvp, tpa, tpf, ep, pp: 1, page: 0 }
+        Layout { kvp, tpa, tpf, ep, pp: 1, page: 0, kv_dtype: KvDtype::F32 }
     }
 
     /// Helix over a MoE FFN: the expert grid is given as `ep` and the
     /// FFN TP width follows from the pool (`tpf = kvp*tpa / ep`).
     pub fn moe(kvp: usize, tpa: usize, ep: usize) -> Layout {
         let n = kvp * tpa;
-        Layout { kvp, tpa, tpf: n / ep.max(1), ep, pp: 1, page: 0 }
+        Layout { kvp, tpa, tpf: n / ep.max(1), ep, pp: 1, page: 0,
+                 kv_dtype: KvDtype::F32 }
     }
 
-    /// The sharding grid alone, page knob stripped — the identity the
-    /// artifact manifest speaks (compiled programs depend on the grid,
-    /// never on how KV rows are stored).
+    /// The sharding grid alone, storage knobs (page, kv_dtype)
+    /// stripped — the identity the artifact manifest speaks (compiled
+    /// programs depend on the grid, never on how KV rows are stored).
     pub fn grid(&self) -> Layout {
-        Layout { page: 0, ..*self }
+        Layout { page: 0, kv_dtype: KvDtype::F32, ..*self }
     }
 
-    /// Stable string key (`kvp2_tpa2_tpf4_ep1[_pp2][_page64]`) — the
-    /// identifier used by the artifact manifest, `--layout` flags and
-    /// plan files.
+    /// Stable string key (`kvp2_tpa2_tpf4_ep1[_pp2][_page64][_kvd16]`)
+    /// — the identifier used by the artifact manifest, `--layout` flags
+    /// and plan files. The KV dtype rides as its bit width (`kvd16` =
+    /// f16, `kvd8` = int8) because key segments are name-then-digits;
+    /// f32 is the default and is omitted.
     pub fn key(&self) -> String {
         let mut s = format!("kvp{}_tpa{}_tpf{}_ep{}", self.kvp, self.tpa,
                             self.tpf, self.ep);
@@ -82,6 +92,9 @@ impl Layout {
         }
         if self.page != 0 {
             s.push_str(&format!("_page{}", self.page));
+        }
+        if self.kv_dtype != KvDtype::F32 {
+            s.push_str(&format!("_kvd{}", self.kv_dtype.bytes_per_elem() * 8));
         }
         s
     }
@@ -97,7 +110,9 @@ impl Layout {
             let (name, val) = seg.split_at(split);
             let val: usize = val.parse()
                 .with_context(|| format!("bad value in segment {seg:?}"))?;
-            if !matches!(name, "kvp" | "tpa" | "tpf" | "ep" | "pp" | "page") {
+            if !matches!(name,
+                         "kvp" | "tpa" | "tpf" | "ep" | "pp" | "page" | "kvd")
+            {
                 bail!("unknown layout dimension {name:?} in {s:?}");
             }
             if dims.insert(name, val).is_some() {
@@ -115,6 +130,12 @@ impl Layout {
             ep: req("ep")?,
             pp: dims.get("pp").copied().unwrap_or(1),
             page: dims.get("page").copied().unwrap_or(0),
+            kv_dtype: match dims.get("kvd").copied() {
+                None | Some(32) => KvDtype::F32,
+                Some(16) => KvDtype::F16,
+                Some(8) => KvDtype::Int8,
+                Some(w) => bail!("unknown kv dtype width kvd{w} in {s:?}"),
+            },
         })
     }
 
@@ -130,6 +151,10 @@ impl Layout {
         m.insert("pp".to_string(), Json::Num(self.pp as f64));
         if self.page != 0 {
             m.insert("page".to_string(), Json::Num(self.page as f64));
+        }
+        if self.kv_dtype != KvDtype::F32 {
+            m.insert("kv_dtype".to_string(),
+                     Json::Str(self.kv_dtype.name().to_string()));
         }
         Json::Obj(m)
     }
@@ -149,6 +174,10 @@ impl Layout {
             page: match j.opt("page") {
                 Some(v) => v.as_usize()?,
                 None => 0,
+            },
+            kv_dtype: match j.opt("kv_dtype") {
+                Some(v) => KvDtype::parse(v.as_str()?)?,
+                None => KvDtype::F32,
             },
         })
     }
@@ -279,6 +308,9 @@ impl std::fmt::Display for Layout {
         if self.page != 0 {
             write!(f, "·page{}", self.page)?;
         }
+        if self.kv_dtype != KvDtype::F32 {
+            write!(f, "·{}", self.kv_dtype.name())?;
+        }
         Ok(())
     }
 }
@@ -317,7 +349,8 @@ mod tests {
     #[test]
     fn ffn_grid_must_match_pool() {
         let m = ModelSpec::llama_405b();
-        assert!(Layout { kvp: 4, tpa: 2, tpf: 4, ep: 1, pp: 1, page: 0 }
+        assert!(Layout { kvp: 4, tpa: 2, tpf: 4, ep: 1, pp: 1, page: 0,
+                   kv_dtype: KvDtype::F32 }
             .validate(&m, false)
             .is_err());
     }
@@ -343,10 +376,15 @@ mod tests {
     #[test]
     fn zero_width_dimensions_rejected() {
         let m = ModelSpec::llama_405b();
-        for lo in [Layout { kvp: 0, tpa: 8, tpf: 8, ep: 1, pp: 1, page: 0 },
-                   Layout { kvp: 1, tpa: 0, tpf: 0, ep: 1, pp: 1, page: 0 },
-                   Layout { kvp: 1, tpa: 8, tpf: 8, ep: 0, pp: 1, page: 0 },
-                   Layout { kvp: 1, tpa: 8, tpf: 8, ep: 1, pp: 0, page: 0 }] {
+        let d = KvDtype::F32;
+        for lo in [Layout { kvp: 0, tpa: 8, tpf: 8, ep: 1, pp: 1, page: 0,
+                            kv_dtype: d },
+                   Layout { kvp: 1, tpa: 0, tpf: 0, ep: 1, pp: 1, page: 0,
+                            kv_dtype: d },
+                   Layout { kvp: 1, tpa: 8, tpf: 8, ep: 0, pp: 1, page: 0,
+                            kv_dtype: d },
+                   Layout { kvp: 1, tpa: 8, tpf: 8, ep: 1, pp: 0, page: 0,
+                            kv_dtype: d }] {
             assert!(lo.validate(&m, true).is_err(), "{lo:?}");
         }
     }
@@ -354,7 +392,8 @@ mod tests {
     #[test]
     fn moe_builder_completes_the_grid() {
         let lo = Layout::moe(8, 1, 4);
-        assert_eq!(lo, Layout { kvp: 8, tpa: 1, tpf: 2, ep: 4, pp: 1, page: 0 });
+        assert_eq!(lo, Layout { kvp: 8, tpa: 1, tpf: 2, ep: 4, pp: 1,
+                                page: 0, kv_dtype: KvDtype::F32 });
         assert_eq!(lo.tpf * lo.ep, lo.n());
     }
 
@@ -362,7 +401,8 @@ mod tests {
     fn key_roundtrip() {
         for lo in [Layout::helix(2, 2, 4, 1), Layout::moe(2, 2, 2),
                    Layout::tp(8), Layout { kvp: 1, tpa: 8, tpf: 8, ep: 1,
-                                           pp: 7, page: 0 }] {
+                                           pp: 7, page: 0,
+                                           kv_dtype: KvDtype::F32 }] {
             assert_eq!(Layout::parse_key(&lo.key()).unwrap(), lo,
                        "key {:?}", lo.key());
         }
@@ -377,11 +417,22 @@ mod tests {
         assert_eq!(lo.key(), "kvp2_tpa2_tpf4_ep1_page64");
         assert_eq!(Layout::parse_key(&lo.key()).unwrap(), lo);
         assert_eq!(lo.grid(), Layout::helix(2, 2, 4, 1));
+        // kv_dtype: rides as its bit width, stripped by grid().
+        let mut lo = Layout::helix(2, 2, 4, 1);
+        lo.kv_dtype = KvDtype::F16;
+        assert_eq!(lo.key(), "kvp2_tpa2_tpf4_ep1_kvd16");
+        assert_eq!(Layout::parse_key(&lo.key()).unwrap(), lo);
+        lo.kv_dtype = KvDtype::Int8;
+        assert_eq!(lo.key(), "kvp2_tpa2_tpf4_ep1_kvd8");
+        assert_eq!(Layout::parse_key(&lo.key()).unwrap(), lo);
+        assert_eq!(lo.grid(), Layout::helix(2, 2, 4, 1));
+        assert!(Layout::parse_key("kvp2_tpa2_tpf4_ep1_kvd7").is_err());
     }
 
     #[test]
     fn json_roundtrip() {
-        let lo = Layout { kvp: 2, tpa: 2, tpf: 2, ep: 2, pp: 3, page: 0 };
+        let lo = Layout { kvp: 2, tpa: 2, tpf: 2, ep: 2, pp: 3, page: 0,
+                          kv_dtype: KvDtype::F32 };
         let j = Json::parse(&lo.to_json().to_string()).unwrap();
         assert_eq!(Layout::from_json(&j).unwrap(), lo);
         // Manifest form: no pp key -> defaults to 1.
@@ -395,6 +446,14 @@ mod tests {
         assert_eq!(Layout::from_json(&j).unwrap(), lo);
         assert!(!Layout::helix(2, 2, 4, 1).to_json().to_string()
             .contains("page"));
+        // kv_dtype roundtrips by name; the f32 default is omitted so
+        // documents from dtype-unaware producers stay byte-compatible.
+        let mut lo = Layout::helix(2, 2, 4, 1);
+        lo.kv_dtype = KvDtype::Int8;
+        let j = Json::parse(&lo.to_json().to_string()).unwrap();
+        assert_eq!(Layout::from_json(&j).unwrap(), lo);
+        assert!(!Layout::helix(2, 2, 4, 1).to_json().to_string()
+            .contains("kv_dtype"));
     }
 
     #[test]
@@ -411,13 +470,16 @@ mod tests {
         // ep > 1 needs a MoE model.
         assert!(Layout::helix(2, 2, 2, 2).validate_engine(&c).is_err());
         // FFN grid must cover the pool.
-        assert!(Layout { kvp: 2, tpa: 2, tpf: 2, ep: 1, pp: 1, page: 0 }
+        assert!(Layout { kvp: 2, tpa: 2, tpf: 2, ep: 1, pp: 1, page: 0,
+                   kv_dtype: KvDtype::F32 }
             .validate_engine(&c).is_err());
         // The engine has no pipeline stages.
-        assert!(Layout { kvp: 2, tpa: 2, tpf: 4, ep: 1, pp: 2, page: 0 }
+        assert!(Layout { kvp: 2, tpa: 2, tpf: 4, ep: 1, pp: 2, page: 0,
+                   kv_dtype: KvDtype::F32 }
             .validate_engine(&c).is_err());
         // Zero-width dims rejected.
-        assert!(Layout { kvp: 0, tpa: 2, tpf: 4, ep: 1, pp: 1, page: 0 }
+        assert!(Layout { kvp: 0, tpa: 2, tpf: 4, ep: 1, pp: 1, page: 0,
+                   kv_dtype: KvDtype::F32 }
             .validate_engine(&c).is_err());
         // Page size: must be a power of two, a multiple of kv_block and
         // a divisor of the per-shard cache seq_cap / kvp.

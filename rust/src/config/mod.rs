@@ -20,5 +20,8 @@ pub mod registry;
 
 pub use hardware::Hardware;
 pub use layout::Layout;
+// The KV element dtype is defined next to the byte-backed KV storage
+// in runtime::tensor; re-exported here because it is a Layout knob.
+pub use crate::runtime::tensor::KvDtype;
 pub use model::{Attention, EngineModelConfig, Ffn, ModelSpec};
 pub use registry::ModelHandle;

@@ -12,7 +12,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
-use crate::config::{EngineModelConfig, Layout};
+use crate::config::{EngineModelConfig, KvDtype, Layout};
 use crate::plan::Plan;
 use crate::runtime::{BackendKind, HostTensor, Manifest, Runtime};
 
@@ -229,13 +229,31 @@ impl HelixCluster {
         lo.validate_engine(&cfg)
             .with_context(|| format!("layout {} is invalid for {}", lo.key(),
                                      cc.model))?;
-        // Artifacts are keyed by the compile-relevant grid: page size is
-        // a runtime storage knob, so containment checks strip it.
+        // Artifacts are keyed by the compile-relevant grid: page size
+        // and KV dtype are runtime storage knobs, so containment checks
+        // strip them.
         ensure!(entry.layouts.contains(&lo.grid()),
                 "layout {} not in artifacts for {} (have: {})", lo.key(),
                 cc.model,
                 entry.layouts.iter().map(|l| l.key())
                     .collect::<Vec<_>>().join(", "));
+        // Quantized KV preconditions, checked here for a constructor
+        // error that names the knob (the rank pool would also refuse,
+        // but only with a per-rank init failure):
+        // * dequant-on-read lives in the native paged kernels — the
+        //   compiled PJRT attention programs are dense f32;
+        // * the verify mirror replays through the unsharded f32
+        //   reference, so max_ref_diff would report quantization error,
+        //   not sharding error. Quantized runs validate against the
+        //   per-dtype tolerance tiers instead (see docs/QUANTKV.md).
+        if lo.kv_dtype != KvDtype::F32 {
+            ensure!(cc.paged && BackendKind::native_available(),
+                    "kv_dtype={} needs the paged native backend",
+                    lo.kv_dtype.name());
+            ensure!(!cc.verify,
+                    "verify mirror is f32-only: disable verify for \
+                     kv_dtype={}", lo.kv_dtype.name());
+        }
 
         // Load full weights once; slice per rank.
         let mut full_weights = Vec::with_capacity(cfg.layers);

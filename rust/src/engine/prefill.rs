@@ -37,6 +37,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::runtime::native::{self, AttnScratch};
+use crate::runtime::tensor::ACT_DTYPE;
 use crate::runtime::HostTensor;
 
 use super::cluster::HelixCluster;
@@ -84,7 +85,12 @@ impl HelixCluster {
     /// chunk, so the chaos tests' shortened timeouts still detect a
     /// mid-prefill rank death timely at test scale.
     pub fn prefill_timeout(&self, t: usize) -> Duration {
-        let chunk_bytes = t * self.cfg.hidden * 4;
+        // The modeled wires carry activations (chunk broadcast,
+        // All-Reduce partials, the (O, LSE) rotation), so the element
+        // width follows the runtime activation dtype — previously a
+        // hardcoded f32 `4` that would silently under- or over-scale
+        // the deadline if the activation width ever changed.
+        let chunk_bytes = t * self.cfg.hidden * ACT_DTYPE.size_bytes();
         // Per layer: the chunk broadcast + two All-Reduces ride the
         // main wire, the (O, LSE) rotation rides the All-to-All wire.
         let per_layer = self.link.model.delay(3 * chunk_bytes)

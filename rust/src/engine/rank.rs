@@ -12,8 +12,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
-use crate::config::{EngineModelConfig, Layout};
+use crate::config::{EngineModelConfig, KvDtype, Layout};
 use crate::runtime::native::{self, AttnScratch};
+use crate::runtime::tensor::{KvQuant, KvRef};
 use crate::runtime::{DeviceTensor, HostTensor, Manifest, Runtime};
 
 use super::proto::{Cmd, Payload, Resp};
@@ -33,6 +34,17 @@ use super::store::SessionStore;
 pub struct KvShard {
     pub k: HostTensor,
     pub v: HostTensor,
+    /// Quantized element stores (f16/int8). `None` in f32 mode, where
+    /// `k`/`v` hold the elements; in quant mode `k`/`v` are empty
+    /// placeholders and all reads go through [`Self::k_ref`].
+    qk: Option<KvQuant>,
+    qv: Option<KvQuant>,
+    dtype: KvDtype,
+    kh: usize,
+    hsz: usize,
+    /// Int8 scale-block width in tokens (one scale per `sb` tokens of
+    /// one head); equals `page_toks` in paged mode. 0 in f32 mode.
+    sb: usize,
     pub lens: Vec<i32>,
     /// Reusable [B] i32 tensor mirroring `lens` (refilled in place per
     /// use — no per-command allocation).
@@ -53,9 +65,34 @@ impl KvShard {
     /// Flat dense arena (the pre-paging layout; the bench ablation and
     /// the PJRT-compiled attention programs still use it).
     pub fn new(b: usize, kh_local: usize, cap: usize, hsz: usize) -> KvShard {
-        KvShard {
-            k: HostTensor::zeros(&[b, kh_local, cap, hsz]),
-            v: HostTensor::zeros(&[b, kh_local, cap, hsz]),
+        KvShard::with_dtype(b, kh_local, cap, hsz, KvDtype::F32, cap)
+            .expect("f32 flat shard is infallible")
+    }
+
+    /// Flat arena in an explicit KV dtype. `scale_block` is the int8
+    /// scale-block width in tokens and must divide `cap`; pass
+    /// `page_toks` of the paged twin for flat/paged bit-identity.
+    pub fn with_dtype(b: usize, kh_local: usize, cap: usize, hsz: usize,
+                      dtype: KvDtype, scale_block: usize)
+                      -> Result<KvShard> {
+        let (k, v, qk, qv, sb) = if dtype == KvDtype::F32 {
+            (HostTensor::zeros(&[b, kh_local, cap, hsz]),
+             HostTensor::zeros(&[b, kh_local, cap, hsz]), None, None, 0)
+        } else {
+            ensure!(scale_block > 0 && cap % scale_block == 0,
+                    "scale block {scale_block} does not divide shard \
+                     capacity {cap}");
+            let elems = b * kh_local * cap * hsz;
+            let group = scale_block * hsz;
+            (HostTensor::zeros(&[0]), HostTensor::zeros(&[0]),
+             Some(KvQuant::new(dtype, elems, group)?),
+             Some(KvQuant::new(dtype, elems, group)?), scale_block)
+        };
+        Ok(KvShard {
+            k, v, qk, qv, dtype,
+            kh: kh_local,
+            hsz,
+            sb,
             lens: vec![0; b],
             lens_t: HostTensor::from_i32(vec![0; b], &[b]).unwrap(),
             row_len_t: HostTensor::from_i32(vec![0], &[1]).unwrap(),
@@ -64,7 +101,7 @@ impl KvShard {
             tables: Vec::new(),
             alloc: None,
             layer: 0,
-        }
+        })
     }
 
     /// Paged pool with the same aggregate capacity as the flat arena
@@ -73,10 +110,36 @@ impl KvShard {
     /// never how many tokens the shard holds.
     pub fn new_paged(b: usize, kh_local: usize, cap: usize, hsz: usize,
                      page_toks: usize, layer: usize) -> KvShard {
+        KvShard::new_paged_dtype(b, kh_local, cap, hsz, page_toks, layer,
+                                 KvDtype::F32)
+    }
+
+    /// Paged pool in an explicit KV dtype. One int8 scale group covers
+    /// exactly one (page, head) slab, so the scale-block width is
+    /// `page_toks` by construction.
+    pub fn new_paged_dtype(b: usize, kh_local: usize, cap: usize,
+                           hsz: usize, page_toks: usize, layer: usize,
+                           dtype: KvDtype) -> KvShard {
         let pages = b * cap.div_ceil(page_toks);
+        let (k, v, qk, qv, sb) = if dtype == KvDtype::F32 {
+            (HostTensor::zeros(&[pages, kh_local, page_toks, hsz]),
+             HostTensor::zeros(&[pages, kh_local, page_toks, hsz]),
+             None, None, 0)
+        } else {
+            let elems = pages * kh_local * page_toks * hsz;
+            let group = page_toks * hsz;
+            (HostTensor::zeros(&[0]), HostTensor::zeros(&[0]),
+             Some(KvQuant::new(dtype, elems, group)
+                  .expect("page group divides pool elems")),
+             Some(KvQuant::new(dtype, elems, group)
+                  .expect("page group divides pool elems")),
+             page_toks)
+        };
         KvShard {
-            k: HostTensor::zeros(&[pages, kh_local, page_toks, hsz]),
-            v: HostTensor::zeros(&[pages, kh_local, page_toks, hsz]),
+            k, v, qk, qv, dtype,
+            kh: kh_local,
+            hsz,
+            sb,
             lens: vec![0; b],
             lens_t: HostTensor::from_i32(vec![0; b], &[b]).unwrap(),
             row_len_t: HostTensor::from_i32(vec![0], &[1]).unwrap(),
@@ -100,10 +163,30 @@ impl KvShard {
         &self.tables
     }
 
+    pub fn dtype(&self) -> KvDtype {
+        self.dtype
+    }
+
+    /// Dequantize-on-read view of the K storage for the `_kv` kernels.
+    pub fn k_ref(&self) -> Result<KvRef<'_>> {
+        Ok(match &self.qk {
+            Some(q) => q.as_ref(),
+            None => KvRef::F32(self.k.f32s()?),
+        })
+    }
+
+    /// Dequantize-on-read view of the V storage.
+    pub fn v_ref(&self) -> Result<KvRef<'_>> {
+        Ok(match &self.qv {
+            Some(q) => q.as_ref(),
+            None => KvRef::F32(self.v.f32s()?),
+        })
+    }
+
     /// Flat offset of `(slot, head, logical position)` in the k/v
     /// storage, resolved through the page table in paged mode.
     fn data_index(&self, b_idx: usize, h: usize, pos: usize) -> usize {
-        let (kh, hsz) = (self.k.shape[1], self.k.shape[3]);
+        let (kh, hsz) = (self.kh, self.hsz);
         if self.page_toks == 0 {
             ((b_idx * kh + h) * self.cap + pos) * hsz
         } else {
@@ -116,7 +199,7 @@ impl KvShard {
     /// `[B, kh_local, hsz]` tensor) for batch row `b_idx`.
     pub fn append(&mut self, b_idx: usize, k_new: &HostTensor,
                   v_new: &HostTensor) -> Result<()> {
-        let (kh, hsz) = (self.k.shape[1], self.k.shape[3]);
+        let (kh, hsz) = (self.kh, self.hsz);
         let s = b_idx * kh * hsz;
         self.append_token(b_idx, &k_new.f32s()?[s..s + kh * hsz],
                           &v_new.f32s()?[s..s + kh * hsz])
@@ -128,7 +211,7 @@ impl KvShard {
     /// round-robin-owned tokens one by one, in logical order.
     pub fn append_token(&mut self, b_idx: usize, k_row: &[f32],
                         v_row: &[f32]) -> Result<()> {
-        let (kh, hsz) = (self.k.shape[1], self.k.shape[3]);
+        let (kh, hsz) = (self.kh, self.hsz);
         let pos = self.lens[b_idx] as usize;
         if pos >= self.cap {
             // Typed for the serve layer's taxonomy; the message keeps
@@ -166,11 +249,26 @@ impl KvShard {
             (page * kh * self.page_toks + pos % self.page_toks,
              self.page_toks)
         };
-        for (cache, src) in [(&mut self.k, k_row), (&mut self.v, v_row)] {
-            let dst = cache.f32s_mut()?;
-            for h in 0..kh {
-                let d = (base + h * stride) * hsz;
-                dst[d..d + hsz].copy_from_slice(&src[h * hsz..(h + 1) * hsz]);
+        if self.dtype == KvDtype::F32 {
+            for (cache, src) in [(&mut self.k, k_row), (&mut self.v, v_row)] {
+                let dst = cache.f32s_mut()?;
+                for h in 0..kh {
+                    let d = (base + h * stride) * hsz;
+                    dst[d..d + hsz]
+                        .copy_from_slice(&src[h * hsz..(h + 1) * hsz]);
+                }
+            }
+        } else {
+            // Quantize on append, one (token, head) run at a time — the
+            // int8 per-group scale evolution is then a pure function of
+            // the append sequence (flat/paged bit-identity).
+            for (q, src) in [(self.qk.as_mut(), k_row),
+                             (self.qv.as_mut(), v_row)] {
+                let q = q.expect("quant shard");
+                for h in 0..kh {
+                    let d = (base + h * stride) * hsz;
+                    q.quantize(d, &src[h * hsz..(h + 1) * hsz]);
+                }
             }
         }
         self.lens[b_idx] += 1;
@@ -178,9 +276,27 @@ impl KvShard {
     }
 
     /// Evict one batch row (request close/reopen). Paged mode returns
-    /// the row's pages to the free list.
+    /// the row's pages to the free list; quantized storage zeroes the
+    /// row's elements and scales so recycled pages start from the
+    /// empty-scale state a fresh shard would have.
     pub fn reset_row(&mut self, row: usize) {
         self.lens[row] = 0;
+        if self.dtype != KvDtype::F32 {
+            let (kh, hsz) = (self.kh, self.hsz);
+            if self.page_toks == 0 {
+                let d = row * kh * self.cap * hsz;
+                let n = kh * self.cap * hsz;
+                self.qk.as_mut().expect("quant shard").reset_range(d, n);
+                self.qv.as_mut().expect("quant shard").reset_range(d, n);
+            } else {
+                for &p in &self.tables[row] {
+                    let d = p as usize * kh * self.page_toks * hsz;
+                    let n = kh * self.page_toks * hsz;
+                    self.qk.as_mut().expect("quant shard").reset_range(d, n);
+                    self.qv.as_mut().expect("quant shard").reset_range(d, n);
+                }
+            }
+        }
         if let Some(alloc) = &mut self.alloc {
             for p in self.tables[row].drain(..) {
                 alloc.free(p);
@@ -191,18 +307,52 @@ impl KvShard {
     /// Serialize one row's live K/V (+ its local length) into `out` —
     /// the rank-side half of session offload. Logical order, so the
     /// blob is independent of which physical pages held the row.
+    ///
+    /// Dtype-tagged format, per layer: `u32 LE len`, `u8 dtype tag`,
+    /// then (int8 only) `u16 LE scale-block tokens`, then the K and V
+    /// sections. f32/f16 sections are per `(head, pos, d)` element
+    /// payloads (4/2 bytes LE); int8 sections carry, per head, the
+    /// `ceil(len/sb)` block scales as f32 LE followed by the raw i8
+    /// elements — so a restored row is bit-identical to the evicted
+    /// quantized state without replaying quantization.
     pub fn serialize_row(&self, row: usize, out: &mut Vec<u8>)
                          -> Result<()> {
-        let (kh, hsz) = (self.k.shape[1], self.k.shape[3]);
+        let (kh, hsz) = (self.kh, self.hsz);
         let len = self.lens[row] as usize;
         out.extend_from_slice(&(len as u32).to_le_bytes());
-        for cache in [&self.k, &self.v] {
-            let data = cache.f32s()?;
-            for h in 0..kh {
-                for pos in 0..len {
-                    let d = self.data_index(row, h, pos);
-                    for &x in &data[d..d + hsz] {
-                        out.extend_from_slice(&x.to_le_bytes());
+        out.push(self.dtype.tag());
+        if self.dtype == KvDtype::Int8 {
+            out.extend_from_slice(&(self.sb as u16).to_le_bytes());
+        }
+        if self.dtype == KvDtype::F32 {
+            for cache in [&self.k, &self.v] {
+                let data = cache.f32s()?;
+                for h in 0..kh {
+                    for pos in 0..len {
+                        let d = self.data_index(row, h, pos);
+                        for &x in &data[d..d + hsz] {
+                            out.extend_from_slice(&x.to_le_bytes());
+                        }
+                    }
+                }
+            }
+        } else {
+            let nb = self.dtype.bytes_per_elem();
+            for q in [self.qk.as_ref().expect("quant shard"),
+                      self.qv.as_ref().expect("quant shard")] {
+                for h in 0..kh {
+                    if self.dtype == KvDtype::Int8 {
+                        for blk in 0..len.div_ceil(self.sb) {
+                            let d = self.data_index(row, h, blk * self.sb);
+                            out.extend_from_slice(
+                                &q.scale_at(d).to_le_bytes());
+                        }
+                    }
+                    for pos in 0..len {
+                        let d = self.data_index(row, h, pos);
+                        for e in d..d + hsz {
+                            out.extend_from_slice(&q.raw(e)[..nb]);
+                        }
                     }
                 }
             }
@@ -211,8 +361,9 @@ impl KvShard {
     }
 
     /// Deserialize a [`Self::serialize_row`] blob back into `row`
-    /// (which must be reset), allocating pages as needed. Returns the
-    /// offset just past the consumed bytes.
+    /// (which must be reset), allocating pages as needed. The blob's
+    /// dtype tag (and int8 scale-block width) must match this shard's.
+    /// Returns the offset just past the consumed bytes.
     pub fn deserialize_row(&mut self, row: usize, blob: &[u8], off: usize)
                            -> Result<usize> {
         fn take4(blob: &[u8], off: &mut usize, layer: usize)
@@ -224,10 +375,32 @@ impl KvShard {
             *off += 4;
             Ok(b)
         }
-        let (kh, hsz) = (self.k.shape[1], self.k.shape[3]);
+        let (kh, hsz) = (self.kh, self.hsz);
         let layer = self.layer;
         let mut off = off;
         let len = u32::from_le_bytes(take4(blob, &mut off, layer)?) as usize;
+        let tag = *blob.get(off).with_context(|| format!(
+            "session blob truncated at {off} (layer {layer})"))?;
+        off += 1;
+        let blob_dtype = KvDtype::from_tag(tag)?;
+        if blob_dtype != self.dtype {
+            bail!("session blob dtype {} does not match shard dtype {} \
+                   (slot {row}, layer {layer})", blob_dtype.name(),
+                  self.dtype.name());
+        }
+        if self.dtype == KvDtype::Int8 {
+            let sb_bytes: [u8; 2] = blob.get(off..off + 2)
+                .with_context(|| format!(
+                    "session blob truncated at {off} (layer {layer})"))?
+                .try_into().unwrap();
+            off += 2;
+            let blob_sb = u16::from_le_bytes(sb_bytes) as usize;
+            if blob_sb != self.sb {
+                bail!("session blob scale block {blob_sb} does not match \
+                       shard scale block {} (slot {row}, layer {layer})",
+                      self.sb);
+            }
+        }
         if len > self.cap {
             bail!("restored length {len} exceeds shard capacity {} \
                    (slot {row}, layer {layer})", self.cap);
@@ -246,22 +419,62 @@ impl KvShard {
                 self.tables[row].push(page);
             }
         }
-        for pass in 0..2 {
-            for h in 0..kh {
-                for pos in 0..len {
-                    let d = self.data_index(row, h, pos);
-                    let src = blob.get(off..off + 4 * hsz)
-                        .with_context(|| format!(
-                            "session blob truncated at {off} (layer \
-                             {layer})"))?;
-                    let cache = if pass == 0 { &mut self.k }
-                                else { &mut self.v };
-                    let dst = &mut cache.f32s_mut()?[d..d + hsz];
-                    for (i, x) in dst.iter_mut().enumerate() {
-                        *x = f32::from_le_bytes(
-                            src[4 * i..4 * i + 4].try_into().unwrap());
+        if self.dtype == KvDtype::F32 {
+            for pass in 0..2 {
+                for h in 0..kh {
+                    for pos in 0..len {
+                        let d = self.data_index(row, h, pos);
+                        let src = blob.get(off..off + 4 * hsz)
+                            .with_context(|| format!(
+                                "session blob truncated at {off} (layer \
+                                 {layer})"))?;
+                        let cache = if pass == 0 { &mut self.k }
+                                    else { &mut self.v };
+                        let dst = &mut cache.f32s_mut()?[d..d + hsz];
+                        for (i, x) in dst.iter_mut().enumerate() {
+                            *x = f32::from_le_bytes(
+                                src[4 * i..4 * i + 4].try_into().unwrap());
+                        }
+                        off += 4 * hsz;
                     }
-                    off += 4 * hsz;
+                }
+            }
+        } else {
+            let nb = self.dtype.bytes_per_elem();
+            let (dtype, cap, pt, sbl) =
+                (self.dtype, self.cap, self.page_toks, self.sb);
+            let tables = &self.tables;
+            let idx = |h: usize, pos: usize| -> usize {
+                if pt == 0 {
+                    ((row * kh + h) * cap + pos) * hsz
+                } else {
+                    let page = tables[row][pos / pt] as usize;
+                    ((page * kh + h) * pt + pos % pt) * hsz
+                }
+            };
+            for pass in 0..2 {
+                let q = if pass == 0 { self.qk.as_mut() }
+                        else { self.qv.as_mut() };
+                let q = q.expect("quant shard");
+                for h in 0..kh {
+                    if dtype == KvDtype::Int8 {
+                        for blk in 0..len.div_ceil(sbl) {
+                            let src = take4(blob, &mut off, layer)?;
+                            q.set_scale_at(idx(h, blk * sbl),
+                                           f32::from_le_bytes(src));
+                        }
+                    }
+                    for pos in 0..len {
+                        let d = idx(h, pos);
+                        for i in 0..hsz {
+                            let src = blob.get(off..off + nb)
+                                .with_context(|| format!(
+                                    "session blob truncated at {off} \
+                                     (layer {layer})"))?;
+                            q.set_raw(d + i, src);
+                            off += nb;
+                        }
+                    }
                 }
             }
         }
@@ -465,10 +678,24 @@ impl RankState {
                    flash-decode kernel bypasses compiled programs); got \
                    backend '{}'", rt.backend_name());
         }
+        let dtype = lo.kv_dtype;
+        if dtype != KvDtype::F32 {
+            // The compiled attention programs are f32-only, and the
+            // dequantize-on-read kernels walk page tables: quantized KV
+            // requires both the paged cache and the native backend.
+            ensure!(init.page_toks != 0,
+                    "kv_dtype={} requires the paged KV cache (flat dense \
+                     arenas are f32-only)", dtype.name());
+            ensure!(rt.backend_name() == "native",
+                    "kv_dtype={} requires the native backend (compiled \
+                     attention programs are f32-only); got backend '{}'",
+                    dtype.name(), rt.backend_name());
+        }
         let kv = (0..cfg.layers)
             .map(|layer| if init.page_toks != 0 {
-                KvShard::new_paged(cfg.batch, kh_local, cap, cfg.head_size,
-                                   init.page_toks, layer)
+                KvShard::new_paged_dtype(cfg.batch, kh_local, cap,
+                                         cfg.head_size, init.page_toks,
+                                         layer, dtype)
             } else {
                 KvShard::new(cfg.batch, kh_local, cap, cfg.head_size)
             })
@@ -766,8 +993,8 @@ impl RankState {
         let mut o = HostTensor::zeros(&[b, qhl, hsz]);
         let mut lse = HostTensor::zeros(&[b, qhl]);
         let shard = &self.kv[layer];
-        native::flash_decode_paged(
-            q.f32s()?, shard.k.f32s()?, shard.v.f32s()?,
+        native::flash_decode_paged_kv(
+            q.f32s()?, shard.k_ref()?, shard.v_ref()?,
             &shard.tables[r0..r0 + b], &shard.lens[r0..r0 + b],
             b, khl, g, hsz, shard.page_toks, block_s,
             o.f32s_mut()?, lse.f32s_mut()?, &mut self.scratch, workers);
@@ -843,12 +1070,14 @@ impl RankState {
         let mut lse = HostTensor::zeros(&[t, qhl]);
         let shard = &self.kv[layer];
         if shard.is_paged() {
-            native::flash_prefill_paged(
-                q.f32s()?, shard.k.f32s()?, shard.v.f32s()?,
+            native::flash_prefill_paged_kv(
+                q.f32s()?, shard.k_ref()?, shard.v_ref()?,
                 &shard.tables[row], &valid, t, khl, g, hsz,
                 shard.page_toks, block_s, o.f32s_mut()?, lse.f32s_mut()?,
                 &mut self.scratch, workers);
         } else {
+            ensure!(shard.dtype() == KvDtype::F32,
+                    "flat prefill is f32-only (quantized KV is paged)");
             let span = khl * shard.cap * hsz;
             native::flash_prefill_flat(
                 q.f32s()?, &shard.k.f32s()?[row * span..(row + 1) * span],
@@ -1142,6 +1371,119 @@ mod tests {
         assert!(dst.deserialize_row(0, &blob, 0).is_err());
         // Truncated blob is an error, not a panic.
         assert!(dst.deserialize_row(1, &blob[..blob.len() - 2], 0).is_err());
+    }
+
+    #[test]
+    fn quant_append_flat_matches_paged() {
+        // Same appends into a flat and a paged int8 shard with equal
+        // scale-block widths: every (slot, head, pos) element must hold
+        // the same raw byte under the same scale — the storage-layout
+        // independence that makes paged attention bit-identical to flat
+        // within the dtype. Growing magnitudes force scale rescales.
+        let (b, kh, cap, hsz, pt) = (2, 2, 8, 4, 4);
+        let mut flat =
+            KvShard::with_dtype(b, kh, cap, hsz, KvDtype::Int8, pt).unwrap();
+        let mut paged =
+            KvShard::new_paged_dtype(b, kh, cap, hsz, pt, 1, KvDtype::Int8);
+        let mut rng = crate::util::Rng::new(17);
+        for step in 0..cap * b {
+            let row = step % b;
+            let vals: Vec<f32> = (0..b * kh * hsz)
+                .map(|_| rng.f32_signed() * (1.0 + step as f32))
+                .collect();
+            let t = HostTensor::from_f32(vals, &[b, kh, hsz]).unwrap();
+            flat.append(row, &t, &t).unwrap();
+            paged.append(row, &t, &t).unwrap();
+        }
+        assert_eq!(flat.lens, paged.lens);
+        let (fq, pq) = (flat.qk.as_ref().unwrap(),
+                        paged.qk.as_ref().unwrap());
+        for row in 0..b {
+            for h in 0..kh {
+                for pos in 0..flat.lens[row] as usize {
+                    let fd = flat.data_index(row, h, pos);
+                    let pd = paged.data_index(row, h, pos);
+                    assert_eq!(fq.scale_at(fd), pq.scale_at(pd),
+                               "scale row {row} head {h} pos {pos}");
+                    for i in 0..hsz {
+                        assert_eq!(fq.raw(fd + i), pq.raw(pd + i),
+                                   "row {row} head {h} pos {pos} dim {i}");
+                    }
+                }
+            }
+        }
+    }
+
+    fn quant_roundtrip_case(dtype: KvDtype) {
+        let (b, kh, cap, hsz, pt) = (2, 2, 8, 3, 4);
+        let len = 6usize;
+        let mut src = KvShard::new_paged_dtype(b, kh, cap, hsz, pt, 0,
+                                               dtype);
+        let mut rng = crate::util::Rng::new(19);
+        for s in 0..len {
+            let kv: Vec<f32> = (0..b * kh * hsz)
+                .map(|_| rng.f32_signed() * (1.0 + s as f32))
+                .collect();
+            let kt = HostTensor::from_f32(kv, &[b, kh, hsz]).unwrap();
+            let vv: Vec<f32> =
+                (0..b * kh * hsz).map(|_| rng.f32_signed()).collect();
+            let vt = HostTensor::from_f32(vv, &[b, kh, hsz]).unwrap();
+            src.append(1, &kt, &vt).unwrap();
+        }
+        let mut blob = Vec::new();
+        src.serialize_row(1, &mut blob).unwrap();
+        // Quantized blobs shrink below the f32 format's size.
+        let f32_size = 4 + 1 + 2 * kh * len * hsz * 4;
+        assert!(blob.len() < f32_size,
+                "{dtype:?} blob {} not smaller than f32's {f32_size}",
+                blob.len());
+
+        // Cross-slot restore is bit-identical to the evicted quantized
+        // state: same raw bytes, same scales.
+        let mut dst = KvShard::new_paged_dtype(b, kh, cap, hsz, pt, 0,
+                                               dtype);
+        let off = dst.deserialize_row(0, &blob, 0).unwrap();
+        assert_eq!(off, blob.len());
+        assert_eq!(dst.lens[0], len as i32);
+        for (sq, dq) in [(src.qk.as_ref().unwrap(),
+                          dst.qk.as_ref().unwrap()),
+                         (src.qv.as_ref().unwrap(),
+                          dst.qv.as_ref().unwrap())] {
+            for h in 0..kh {
+                for pos in 0..len {
+                    let sd = src.data_index(1, h, pos);
+                    let dd = dst.data_index(0, h, pos);
+                    if dtype == KvDtype::Int8 {
+                        assert_eq!(sq.scale_at(sd), dq.scale_at(dd),
+                                   "scale head {h} pos {pos}");
+                    }
+                    for i in 0..hsz {
+                        assert_eq!(sq.raw(sd + i), dq.raw(dd + i),
+                                   "head {h} pos {pos} dim {i}");
+                    }
+                }
+            }
+        }
+        // A blob only restores into a shard of its own dtype.
+        let other = if dtype == KvDtype::F16 { KvDtype::Int8 }
+                    else { KvDtype::F16 };
+        let mut wrong = KvShard::new_paged_dtype(b, kh, cap, hsz, pt, 0,
+                                                 other);
+        let err = format!("{:#}",
+                          wrong.deserialize_row(0, &blob, 0).unwrap_err());
+        assert!(err.contains("dtype"), "unexpected error: {err}");
+        let mut wrong_f32 = KvShard::new_paged(b, kh, cap, hsz, pt, 0);
+        assert!(wrong_f32.deserialize_row(0, &blob, 0).is_err());
+    }
+
+    #[test]
+    fn quant_serialize_restore_f16() {
+        quant_roundtrip_case(KvDtype::F16);
+    }
+
+    #[test]
+    fn quant_serialize_restore_int8() {
+        quant_roundtrip_case(KvDtype::Int8);
     }
 
     #[test]

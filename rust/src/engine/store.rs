@@ -96,15 +96,18 @@ impl SessionStore {
 
     /// Stash rank `rank`'s shard of session `session`. One blob per
     /// (session, rank); re-putting an un-taken blob is a logic error.
+    ///
+    /// Check order matters: duplicate (caller logic error) before
+    /// budget (capacity error) before injection — an armed write fault
+    /// models a failure of an otherwise-valid write, so it must not
+    /// mask a real error, and a put that was doomed anyway must not
+    /// burn the injection counter the chaos test armed for a later
+    /// write.
     pub fn put(&self, session: u64, rank: usize, blob: Vec<u8>)
                -> Result<()> {
         let mut i = self.lock();
-        if i.fail_puts > 0 {
-            i.fail_puts -= 1;
-            i.put_faults += 1;
-            return Err(anyhow::Error::new(ClusterError::StoreFault)
-                .context(format!("session store write fault (injected): \
-                                  session {session}, rank {rank}")));
+        if i.blobs.contains_key(&(session, rank)) {
+            anyhow::bail!("session {session} rank {rank} already offloaded");
         }
         if i.budget != 0 && i.bytes + blob.len() > i.budget {
             let (needed, budget) = (i.bytes + blob.len(), i.budget);
@@ -115,8 +118,12 @@ impl SessionStore {
                      (session {session}, rank {rank})",
                     i.bytes, blob.len(), i.budget)));
         }
-        if i.blobs.contains_key(&(session, rank)) {
-            anyhow::bail!("session {session} rank {rank} already offloaded");
+        if i.fail_puts > 0 {
+            i.fail_puts -= 1;
+            i.put_faults += 1;
+            return Err(anyhow::Error::new(ClusterError::StoreFault)
+                .context(format!("session store write fault (injected): \
+                                  session {session}, rank {rank}")));
         }
         i.bytes += blob.len();
         i.bytes_in += blob.len();
@@ -240,6 +247,45 @@ mod tests {
         assert_eq!(s.take(9, 0).unwrap(), vec![1, 2, 3]);
         assert!(!s.contains(9));
         assert!(s.peek(9, 0).is_err());
+    }
+
+    #[test]
+    fn duplicate_put_reported_before_armed_injection() {
+        // Regression: `put` used to consult the injection counter
+        // first, so a duplicate put (a caller logic error) burned the
+        // fault a chaos test had armed for a later, valid write — and
+        // was misreported as a StoreFault.
+        let s = SessionStore::new();
+        s.put(5, 0, vec![1, 2]).unwrap();
+        s.fail_next_puts(1);
+        let err = s.put(5, 0, vec![3]).unwrap_err();
+        assert!(err.to_string().contains("already offloaded"),
+                "duplicate must be reported as a logic error, got: {err:#}");
+        assert_eq!(s.stats().put_faults, 0,
+                   "a doomed put must not consume the injection");
+        // The armed fault still fires on the next otherwise-valid put.
+        assert!(s.put(6, 0, vec![4]).is_err());
+        assert_eq!(s.stats().put_faults, 1);
+    }
+
+    #[test]
+    fn budget_overflow_reported_before_armed_injection() {
+        // Same regression for the capacity check: over-budget beats
+        // injection, so StoreFull is never masked as StoreFault and the
+        // counter survives for a write that would have succeeded.
+        let s = SessionStore::with_budget(4);
+        s.put(1, 0, vec![0; 3]).unwrap();
+        s.fail_next_puts(1);
+        let err = s.put(2, 0, vec![0; 2]).unwrap_err();
+        assert!(matches!(ClusterError::find(&err),
+                         Some(ClusterError::StoreFull { needed: 5,
+                                                        budget: 4 })));
+        assert_eq!(s.stats().put_faults, 0);
+        // Within budget, the armed fault now fires.
+        let err = s.put(3, 0, vec![0; 1]).unwrap_err();
+        assert!(matches!(ClusterError::find(&err),
+                         Some(ClusterError::StoreFault)));
+        assert_eq!(s.stats().put_faults, 1);
     }
 
     #[test]

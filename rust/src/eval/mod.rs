@@ -625,9 +625,11 @@ impl EvalOutcome {
         // per-run and per-plan evictions/restores, restore_p99_ms,
         // plan host_kv_budget). v3: chunked prefill (scenario
         // prefill_chunk, per-run ttft_by_context, per-model
-        // ttft_vs_context series). Older docs still parse (fields
-        // default).
-        m.insert("version".into(), Json::Num(3.0));
+        // ttft_vs_context series). v4: quantized KV tier — plan
+        // layouts may carry `kv_dtype` ("f16"/"int8"; omitted = f32),
+        // and host-tier byte sizing follows the dtype's bytes/token
+        // (docs/QUANTKV.md). Older docs still parse (fields default).
+        m.insert("version".into(), Json::Num(4.0));
         m.insert("kind".into(), Json::Str("helix-eval".into()));
         m.insert("rank_by".into(), Json::Str(self.rank_by.clone()));
         m.insert("models".into(),
@@ -798,8 +800,8 @@ mod tests {
             .get("frontiers").unwrap().clone();
         assert_eq!(fr.get("predicted").unwrap().as_arr().unwrap().len(), 1);
         assert_eq!(fr.get("measured").unwrap().as_arr().unwrap().len(), 1);
-        // Schema v3: the doc version and the derived TTFT axis.
-        assert_eq!(j.get("version").unwrap().as_f64().unwrap(), 3.0);
+        // Schema v4 doc version; the v3 derived TTFT axis persists.
+        assert_eq!(j.get("version").unwrap().as_f64().unwrap(), 4.0);
         let tv = j.get("models").unwrap().as_arr().unwrap()[0]
             .get("ttft_vs_context").unwrap().clone();
         let series = tv.as_arr().unwrap();

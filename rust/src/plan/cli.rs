@@ -9,13 +9,15 @@
 //!
 //! Options: `--model M` (registry name), `--ttl MS` (TTL budget),
 //! `--batch B` (pin the microbatch), `--gpus N`, `--max-batch B`,
-//! `--seq-len S`, `--top K` (plans to emit, default 10), `--out FILE`,
-//! and the `--sweep` flag (include the Helix + baseline Pareto
-//! frontiers for `scripts/plot_pareto.py`).
+//! `--seq-len S`, `--kv-dtype f32|f16|int8` (KV storage dtype; f16 and
+//! int8 multiply the reported KV token budget by 2x / 4x — see
+//! docs/QUANTKV.md), `--top K` (plans to emit, default 10),
+//! `--out FILE`, and the `--sweep` flag (include the Helix + baseline
+//! Pareto frontiers for `scripts/plot_pareto.py`).
 
 use anyhow::{Context, Result};
 
-use crate::config::Hardware;
+use crate::config::{Hardware, KvDtype};
 use crate::util::cli::Args;
 use crate::util::table::Table;
 
@@ -44,6 +46,10 @@ pub fn planner_from_args(args: &Args, default_model: &str)
     }
     if let Some(v) = args.opt("seq-len") {
         planner = planner.seq_len(v.parse().context("parsing --seq-len")?);
+    }
+    if let Some(v) = args.opt("kv-dtype") {
+        planner = planner.kv_dtype(
+            KvDtype::parse(v).context("parsing --kv-dtype")?);
     }
     Ok((planner, ttl))
 }

@@ -30,7 +30,8 @@ use std::collections::BTreeMap;
 
 use anyhow::{bail, Context, Result};
 
-use crate::config::{registry, Hardware, Layout, ModelHandle, ModelSpec};
+use crate::config::{registry, Hardware, KvDtype, Layout, ModelHandle,
+                    ModelSpec};
 use crate::sim::decode::DecodePoint;
 use crate::sim::sweep::{self, SweepBounds};
 use crate::sim::{memory, Frontier, Strategy};
@@ -350,6 +351,11 @@ fn point_to_json(p: &DecodePoint) -> Json {
 /// model: the per-GPU HBM envelope net of stored weights, divided by
 /// the per-token KV cost — the same arithmetic as
 /// [`memory::fits_capacity`], solved for tokens.
+///
+/// The memory model prices KV at the baseline (f32) element width; a
+/// quantized KV tier ([`Layout::kv_dtype`]) shrinks stored bytes/token
+/// by exactly `bytes_per_elem / 4`, so the token envelope grows by the
+/// inverse factor under the same byte budget: f16 holds 2x, int8 4x.
 pub fn sim_kv_budget_tokens(m: &ModelSpec, hw: &Hardware, lo: &Layout)
                             -> usize {
     let weights = memory::weights_stored_bytes_per_gpu(m, hw, lo);
@@ -360,7 +366,13 @@ pub fn sim_kv_budget_tokens(m: &ModelSpec, hw: &Hardware, lo: &Layout)
     if per_token <= 0.0 {
         return 0;
     }
-    (avail / per_token) as usize
+    (avail / per_token) as usize * kv_dtype_gain(lo)
+}
+
+/// Token-capacity multiplier of a layout's KV dtype relative to the
+/// f32 baseline (exact: 4 / bytes_per_elem = 1, 2 or 4).
+pub fn kv_dtype_gain(lo: &Layout) -> usize {
+    4 / lo.kv_dtype.bytes_per_elem()
 }
 
 /// TTL-budget layout planner over the multi-threaded sweep.
@@ -378,6 +390,11 @@ pub struct Planner {
     /// Host-tier KV offload allowance stamped onto every emitted plan
     /// (logical tokens; 0 = plans disable offload).
     host_kv_budget: usize,
+    /// KV storage dtype stamped onto every emitted plan's layout
+    /// (`helix plan --kv-dtype f16|int8`). A storage knob, not a grid
+    /// axis: the sweep searches f32 layouts and the dtype rescales the
+    /// capacity envelope afterwards.
+    kv_dtype: KvDtype,
 }
 
 impl Planner {
@@ -403,7 +420,8 @@ impl Planner {
         let mut strategies = vec![Strategy::Helix { hopb: true }];
         strategies.extend(sweep::baseline_strategies(&handle.spec));
         Planner { handle, hw, bounds, ttl_budget_ms: None, batch: None,
-                  restrict, strategies, host_kv_budget: 0 }
+                  restrict, strategies, host_kv_budget: 0,
+                  kv_dtype: KvDtype::F32 }
     }
 
     /// Plan for a bare simulator spec (no engine restriction).
@@ -433,6 +451,14 @@ impl Planner {
     /// idle-session offload; 0 (the default) disables offload.
     pub fn host_kv_budget(mut self, tokens: usize) -> Planner {
         self.host_kv_budget = tokens;
+        self
+    }
+
+    /// KV storage dtype for every emitted plan (default f32). f16 and
+    /// int8 multiply the planned token capacity by 2x / 4x under the
+    /// same byte budget (see [`sim_kv_budget_tokens`]).
+    pub fn kv_dtype(mut self, d: KvDtype) -> Planner {
+        self.kv_dtype = d;
         self
     }
 
@@ -568,10 +594,14 @@ impl Planner {
     }
 
     fn to_plan(&self, p: &DecodePoint) -> Plan {
+        // Sweep points are f32 layouts; the planner's dtype knob is
+        // stamped on here (it is a storage knob, so the stamped layout
+        // still boots against the f32-keyed artifacts).
+        let lo = Layout { kv_dtype: self.kv_dtype, ..p.layout };
         Plan {
             model: self.handle.name.clone(),
             strategy: p.strategy.name().to_string(),
-            layout: p.layout,
+            layout: lo,
             batch: p.batch,
             gpus: p.gpus,
             seq_len: self.bounds.seq_len,
@@ -580,14 +610,21 @@ impl Planner {
                 interactivity: p.interactivity,
                 tokens_per_gpu_s: p.throughput_per_gpu,
             },
-            kv_budget: self.kv_budget_for(&p.layout),
-            host_kv_budget: self.host_kv_budget,
+            kv_budget: self.kv_budget_for(&lo),
+            // The host knob is denominated in f32-token-equivalents of
+            // host bytes: quantized blobs are `kv_dtype_gain` x smaller
+            // per token, so the same host envelope parks that many more
+            // offloaded tokens.
+            host_kv_budget: self.host_kv_budget * kv_dtype_gain(&lo),
             measured: None,
         }
     }
 
     fn kv_budget_for(&self, lo: &Layout) -> usize {
         match &self.handle.engine {
+            // Engine models: the physical pool is denominated in
+            // *tokens* (the compiled seq_cap), so the KV dtype changes
+            // its byte footprint but not its token count.
             Some(cfg) => cfg.batch
                 * cfg.seq_cap.saturating_sub(cfg.kv_block * lo.kvp),
             None => sim_kv_budget_tokens(&self.handle.spec, &self.hw, lo),
@@ -647,6 +684,39 @@ mod tests {
                                       budget as f64 * 0.99));
         assert!(!memory::fits_capacity(&m, &hw(), &lo, 1,
                                        budget as f64 * 1.01));
+    }
+
+    #[test]
+    fn quantized_kv_dtype_scales_token_capacity() {
+        use crate::config::KvDtype;
+        let m = ModelSpec::llama_405b();
+        let base = Layout::helix(8, 8, 64, 1);
+        let t32 = sim_kv_budget_tokens(&m, &hw(), &base);
+        assert!(t32 > 0);
+        let t16 = sim_kv_budget_tokens(
+            &m, &hw(), &Layout { kv_dtype: KvDtype::F16, ..base });
+        let t8 = sim_kv_budget_tokens(
+            &m, &hw(), &Layout { kv_dtype: KvDtype::Int8, ..base });
+        // The paper-facing claim: the same HBM byte budget holds at
+        // least 2x (f16) / 4x (int8) the KV tokens — exactly, since
+        // the gain is an integer factor on the f32 envelope.
+        assert_eq!(t16, 2 * t32);
+        assert_eq!(t8, 4 * t32);
+        // End-to-end through the planner knob: the int8 plan carries
+        // the dtype on its layout and 4x the device + host envelopes
+        // of the equivalent f32 plan.
+        let planner = Planner::from_spec(ModelSpec::llama_405b(), hw())
+            .max_batch(64)
+            .host_kv_budget(1000);
+        let p32 = planner.clone().plan().unwrap().remove(0);
+        let p8 = planner.kv_dtype(KvDtype::Int8).plan().unwrap().remove(0);
+        assert_eq!(p32.layout.kv_dtype, KvDtype::F32);
+        assert_eq!(p8.layout.kv_dtype, KvDtype::Int8);
+        assert_eq!(p8.layout.grid(), p32.layout.grid(),
+                   "the dtype must not change the chosen grid");
+        assert_eq!(p8.kv_budget, 4 * p32.kv_budget);
+        assert_eq!(p32.host_kv_budget, 1000);
+        assert_eq!(p8.host_kv_budget, 4000);
     }
 
     #[test]

@@ -31,7 +31,7 @@ use anyhow::{bail, ensure, Context, Result};
 
 use super::artifacts::{Manifest, ProgramSpec};
 use super::client::{check_inputs, Backend, DeviceTensor};
-use super::tensor::{DType, HostTensor};
+use super::tensor::{DType, HostTensor, KvRef};
 
 /// Finite stand-in for -inf (mirrors `flash_decode.NEG_INF`): keeps the
 /// online-softmax recurrence NaN-free when a whole shard is masked.
@@ -109,13 +109,17 @@ struct KernelScratch {
     attn: Vec<AttnScratch>,
 }
 
-/// Per-worker flash-decode state: scores tile + running (m, l, acc).
+/// Per-worker flash-decode state: scores tile + running (m, l, acc),
+/// plus one dequantized K/V tile each for the quantized-KV paths
+/// (empty until a non-f32 kernel first runs).
 #[derive(Default, Clone)]
 pub struct AttnScratch {
     s: Vec<f32>,
     m: Vec<f32>,
     l: Vec<f32>,
     acc: Vec<f32>,
+    kt: Vec<f32>,
+    vt: Vec<f32>,
 }
 
 /// The native backend: manifest + resolved-program cache.
@@ -547,6 +551,78 @@ impl AttnScratch {
         resize(&mut self.l, g);
         resize(&mut self.acc, g * hsz);
     }
+
+    fn ensure_kv(&mut self, hsz: usize, block_s: usize) {
+        resize(&mut self.kt, block_s * hsz);
+        resize(&mut self.vt, block_s * hsz);
+    }
+
+    fn reset_state(&mut self) {
+        self.m.fill(NEG_INF);
+        self.l.fill(0.0);
+        self.acc.fill(0.0);
+    }
+
+    /// One tile of the online-softmax recurrence — the exact loop body
+    /// of [`flash_task`], reading K/V from the `kt`/`vt` dequant
+    /// buffers (accumulation stays f32, same summation order).
+    fn kv_tile_step(&mut self, q: &[f32], bs: usize, g: usize, hsz: usize,
+                    block_s: usize, scale: f32) {
+        for gq in 0..g {
+            let qrow = &q[gq * hsz..(gq + 1) * hsz];
+            for j in 0..bs {
+                self.s[gq * block_s + j] =
+                    dot(qrow, &self.kt[j * hsz..(j + 1) * hsz]) * scale;
+            }
+        }
+        for gq in 0..g {
+            let srow = &mut self.s[gq * block_s..gq * block_s + bs];
+            let mut m_new = self.m[gq];
+            for &sv in srow.iter() {
+                m_new = m_new.max(sv);
+            }
+            let alpha = (self.m[gq] - m_new).exp();
+            let mut psum = 0.0;
+            for sv in srow.iter_mut() {
+                *sv = (*sv - m_new).exp();
+                psum += *sv;
+            }
+            self.l[gq] = self.l[gq] * alpha + psum;
+            self.m[gq] = m_new;
+            let acc = &mut self.acc[gq * hsz..(gq + 1) * hsz];
+            if alpha != 1.0 {
+                for a in acc.iter_mut() {
+                    *a *= alpha;
+                }
+            }
+            for j in 0..bs {
+                let p = self.s[gq * block_s + j];
+                if p == 0.0 {
+                    continue;
+                }
+                let vvec = &self.vt[j * hsz..(j + 1) * hsz];
+                for (a, &vv) in acc.iter_mut().zip(vvec) {
+                    *a += p * vv;
+                }
+            }
+        }
+    }
+
+    /// Final normalize + LSE, identical to the [`flash_task`] epilogue.
+    fn kv_write_out(&self, g: usize, hsz: usize, o: &mut [f32],
+                    lse: &mut [f32]) {
+        for gq in 0..g {
+            let l = self.l[gq];
+            let safe = l.max(1e-30);
+            for (ov, &av) in o[gq * hsz..(gq + 1) * hsz]
+                .iter_mut()
+                .zip(&self.acc[gq * hsz..(gq + 1) * hsz])
+            {
+                *ov = av / safe;
+            }
+            lse[gq] = if l > 0.0 { self.m[gq] + safe.ln() } else { NEG_INF };
+        }
+    }
 }
 
 /// One (batch row, KV head) flash-decode task: online softmax over
@@ -951,6 +1027,207 @@ pub fn flash_prefill_paged(q: &[f32], k_pool: &[f32], v_pool: &[f32],
             });
         }
     });
+}
+
+// ---------------------------------------------------------------------------
+// quantized-KV kernel entry points (dequantize-on-read inside the tiles)
+// ---------------------------------------------------------------------------
+
+/// Contiguous task fan-out shared by the `_kv` kernels: the exact
+/// scoped-thread split of [`flash_decode_blocked`] (serial when
+/// `workers <= 1`, disjoint output chunks otherwise).
+fn fan_out_kv<F>(tasks: usize, g: usize, hsz: usize, o: &mut [f32],
+                 lse: &mut [f32], scratch: &mut [AttnScratch],
+                 workers: usize, task: F)
+where
+    F: Fn(usize, &mut AttnScratch, &mut [f32], &mut [f32]) + Copy + Send,
+{
+    let nw = workers.min(tasks).min(scratch.len()).max(1);
+    if nw <= 1 {
+        let ws = &mut scratch[0];
+        for (t, (o_t, lse_t)) in
+            o.chunks_mut(g * hsz).zip(lse.chunks_mut(g)).enumerate()
+        {
+            task(t, ws, o_t, lse_t);
+        }
+        return;
+    }
+    let per = tasks.div_ceil(nw);
+    std::thread::scope(|scope| {
+        let mut o_rest = o;
+        let mut lse_rest = lse;
+        for (w, ws) in scratch.iter_mut().enumerate().take(nw) {
+            let start = w * per;
+            if start >= tasks {
+                break;
+            }
+            let n = per.min(tasks - start);
+            let (o_chunk, o_r) = o_rest.split_at_mut(n * g * hsz);
+            let (lse_chunk, lse_r) = lse_rest.split_at_mut(n * g);
+            o_rest = o_r;
+            lse_rest = lse_r;
+            scope.spawn(move || {
+                for t in 0..n {
+                    task(start + t,
+                         ws,
+                         &mut o_chunk[t * g * hsz..(t + 1) * g * hsz],
+                         &mut lse_chunk[t * g..(t + 1) * g]);
+                }
+            });
+        }
+    });
+}
+
+/// [`flash_task`] over a quantized flat shard: each `block_s` tile is
+/// dequantized into the worker's `kt`/`vt` buffers, then run through
+/// the identical recurrence. `base` is the element offset of this
+/// (row, head)'s `[Scap, Hsz]` run inside the whole arena (int8 scale
+/// lookup is by absolute element index).
+#[allow(clippy::too_many_arguments)]
+fn flash_task_kv(q: &[f32], k: KvRef, v: KvRef, base: usize, len: usize,
+                 g: usize, hsz: usize, scap: usize, block_s: usize,
+                 scale: f32, ws: &mut AttnScratch, o: &mut [f32],
+                 lse: &mut [f32]) {
+    ws.ensure(g, hsz, block_s);
+    ws.ensure_kv(hsz, block_s);
+    ws.reset_state();
+    let len = len.min(scap);
+    let mut start = 0;
+    while start < len {
+        let bs = block_s.min(len - start);
+        let eb = base + start * hsz;
+        k.dequant_into(eb, &mut ws.kt[..bs * hsz]);
+        v.dequant_into(eb, &mut ws.vt[..bs * hsz]);
+        ws.kv_tile_step(q, bs, g, hsz, block_s, scale);
+        start += bs;
+    }
+    ws.kv_write_out(g, hsz, o, lse);
+}
+
+/// [`paged_task`] over a quantized page pool: page-table walk identical
+/// to the f32 kernel, tiles dequantized on read. With the engine's
+/// tile-aligned page size one int8 scale group covers exactly one
+/// (page, head) slab, so no tile straddles a group boundary.
+#[allow(clippy::too_many_arguments)]
+fn paged_task_kv(q: &[f32], k_pool: KvRef, v_pool: KvRef, table: &[u32],
+                 len: usize, kh: usize, hi: usize, g: usize, hsz: usize,
+                 page_toks: usize, block_s: usize, scale: f32,
+                 ws: &mut AttnScratch, o: &mut [f32], lse: &mut [f32]) {
+    ws.ensure(g, hsz, block_s);
+    ws.ensure_kv(hsz, block_s);
+    ws.reset_state();
+    let len = len.min(table.len() * page_toks);
+    let mut start = 0;
+    while start < len {
+        let page = table[start / page_toks] as usize;
+        let off = start % page_toks;
+        let bs = block_s.min(page_toks - off).min(len - start);
+        let base = ((page * kh + hi) * page_toks + off) * hsz;
+        k_pool.dequant_into(base, &mut ws.kt[..bs * hsz]);
+        v_pool.dequant_into(base, &mut ws.vt[..bs * hsz]);
+        ws.kv_tile_step(q, bs, g, hsz, block_s, scale);
+        start += bs;
+    }
+    ws.kv_write_out(g, hsz, o, lse);
+}
+
+/// Dtype-aware twin of [`flash_decode_blocked`]: f32 refs delegate to
+/// the original kernel unchanged (bit-identical by construction);
+/// f16/int8 dequantize each tile on read, with accumulation, recurrence
+/// and summation order identical to the f32 path.
+#[allow(clippy::too_many_arguments)]
+pub fn flash_decode_blocked_kv(q: &[f32], k: KvRef, v: KvRef, lens: &[i32],
+                               b: usize, kh: usize, g: usize, hsz: usize,
+                               scap: usize, block_s: usize, o: &mut [f32],
+                               lse: &mut [f32], scratch: &mut [AttnScratch],
+                               workers: usize) {
+    if let (KvRef::F32(kf), KvRef::F32(vf)) = (k, v) {
+        return flash_decode_blocked(q, kf, vf, lens, b, kh, g, hsz, scap,
+                                    block_s, o, lse, scratch, workers);
+    }
+    let scale = 1.0 / (hsz as f32).sqrt();
+    let task = |t: usize, ws: &mut AttnScratch, o_t: &mut [f32],
+                lse_t: &mut [f32]| {
+        let (bi, hi) = (t / kh, t % kh);
+        let len = lens[bi].max(0) as usize;
+        flash_task_kv(&q[(bi * kh + hi) * g * hsz..][..g * hsz], k, v,
+                      (bi * kh + hi) * scap * hsz, len, g, hsz, scap,
+                      block_s, scale, ws, o_t, lse_t);
+    };
+    fan_out_kv(b * kh, g, hsz, o, lse, scratch, workers, task);
+}
+
+/// Dtype-aware twin of [`flash_decode_paged`].
+#[allow(clippy::too_many_arguments)]
+pub fn flash_decode_paged_kv(q: &[f32], k_pool: KvRef, v_pool: KvRef,
+                             tables: &[Vec<u32>], lens: &[i32], b: usize,
+                             kh: usize, g: usize, hsz: usize,
+                             page_toks: usize, block_s: usize,
+                             o: &mut [f32], lse: &mut [f32],
+                             scratch: &mut [AttnScratch], workers: usize) {
+    if let (KvRef::F32(kf), KvRef::F32(vf)) = (k_pool, v_pool) {
+        return flash_decode_paged(q, kf, vf, tables, lens, b, kh, g, hsz,
+                                  page_toks, block_s, o, lse, scratch,
+                                  workers);
+    }
+    let scale = 1.0 / (hsz as f32).sqrt();
+    let task = |t: usize, ws: &mut AttnScratch, o_t: &mut [f32],
+                lse_t: &mut [f32]| {
+        let (bi, hi) = (t / kh, t % kh);
+        let len = lens[bi].max(0) as usize;
+        paged_task_kv(&q[(bi * kh + hi) * g * hsz..][..g * hsz], k_pool,
+                      v_pool, &tables[bi], len, kh, hi, g, hsz, page_toks,
+                      block_s, scale, ws, o_t, lse_t);
+    };
+    fan_out_kv(b * kh, g, hsz, o, lse, scratch, workers, task);
+}
+
+/// Dtype-aware twin of [`flash_prefill_flat`].
+#[allow(clippy::too_many_arguments)]
+pub fn flash_prefill_flat_kv(q: &[f32], k: KvRef, v: KvRef, valid: &[i32],
+                             t: usize, kh: usize, g: usize, hsz: usize,
+                             scap: usize, block_s: usize, o: &mut [f32],
+                             lse: &mut [f32], scratch: &mut [AttnScratch],
+                             workers: usize) {
+    if let (KvRef::F32(kf), KvRef::F32(vf)) = (k, v) {
+        return flash_prefill_flat(q, kf, vf, valid, t, kh, g, hsz, scap,
+                                  block_s, o, lse, scratch, workers);
+    }
+    let scale = 1.0 / (hsz as f32).sqrt();
+    let task = |tk: usize, ws: &mut AttnScratch, o_t: &mut [f32],
+                lse_t: &mut [f32]| {
+        let (ti, hi) = (tk / kh, tk % kh);
+        let len = valid[ti].max(0) as usize;
+        flash_task_kv(&q[(ti * kh + hi) * g * hsz..][..g * hsz], k, v,
+                      hi * scap * hsz, len, g, hsz, scap, block_s, scale,
+                      ws, o_t, lse_t);
+    };
+    fan_out_kv(t * kh, g, hsz, o, lse, scratch, workers, task);
+}
+
+/// Dtype-aware twin of [`flash_prefill_paged`].
+#[allow(clippy::too_many_arguments)]
+pub fn flash_prefill_paged_kv(q: &[f32], k_pool: KvRef, v_pool: KvRef,
+                              table: &[u32], valid: &[i32], t: usize,
+                              kh: usize, g: usize, hsz: usize,
+                              page_toks: usize, block_s: usize,
+                              o: &mut [f32], lse: &mut [f32],
+                              scratch: &mut [AttnScratch], workers: usize) {
+    if let (KvRef::F32(kf), KvRef::F32(vf)) = (k_pool, v_pool) {
+        return flash_prefill_paged(q, kf, vf, table, valid, t, kh, g, hsz,
+                                   page_toks, block_s, o, lse, scratch,
+                                   workers);
+    }
+    let scale = 1.0 / (hsz as f32).sqrt();
+    let task = |tk: usize, ws: &mut AttnScratch, o_t: &mut [f32],
+                lse_t: &mut [f32]| {
+        let (ti, hi) = (tk / kh, tk % kh);
+        let len = valid[ti].max(0) as usize;
+        paged_task_kv(&q[(ti * kh + hi) * g * hsz..][..g * hsz], k_pool,
+                      v_pool, table, len, kh, hi, g, hsz, page_toks,
+                      block_s, scale, ws, o_t, lse_t);
+    };
+    fan_out_kv(t * kh, g, hsz, o, lse, scratch, workers, task);
 }
 
 /// KVP combine (flash-decoding rescale-and-sum), mirroring
@@ -1447,5 +1724,204 @@ mod tests {
                             &mut scratch, 2);
         assert_eq!(o, o_flat, "paged prefill o diverged from flat");
         assert_eq!(lse, lse_flat, "paged prefill lse diverged from flat");
+    }
+
+    use super::super::tensor::{KvDtype, KvQuant};
+
+    /// Quantize a dense f32 arena group-by-group (one scale block per
+    /// call — the order the engine's append path would produce when a
+    /// slab fills before the next begins).
+    fn quantize_arena(dtype: KvDtype, arena: &[f32], group: usize)
+                      -> KvQuant {
+        let mut q = KvQuant::new(dtype, arena.len(), group).unwrap();
+        for gi in 0..arena.len() / group {
+            q.quantize(gi * group, &arena[gi * group..(gi + 1) * group]);
+        }
+        q
+    }
+
+    #[test]
+    fn quant_kv_f32_refs_delegate_bit_identical() {
+        let (b, kh, g, hsz, scap, block_s) = (2, 2, 2, 8, 32, 8);
+        let mut rng = crate::util::Rng::new(41);
+        let mut fill = |n: usize| -> Vec<f32> {
+            (0..n).map(|_| rng.f32_signed()).collect()
+        };
+        let q = fill(b * kh * g * hsz);
+        let k = fill(b * kh * scap * hsz);
+        let v = fill(b * kh * scap * hsz);
+        let lens = [13i32, 32];
+        let mut o_ref = vec![0.0f32; b * kh * g * hsz];
+        let mut lse_ref = vec![0.0f32; b * kh * g];
+        let mut scratch = vec![AttnScratch::default(); 2];
+        flash_decode_blocked(&q, &k, &v, &lens, b, kh, g, hsz, scap,
+                             block_s, &mut o_ref, &mut lse_ref,
+                             &mut scratch, 2);
+        let mut o = vec![0.0f32; b * kh * g * hsz];
+        let mut lse = vec![0.0f32; b * kh * g];
+        flash_decode_blocked_kv(&q, KvRef::F32(&k), KvRef::F32(&v), &lens,
+                                b, kh, g, hsz, scap, block_s, &mut o,
+                                &mut lse, &mut scratch, 2);
+        assert_eq!(o, o_ref);
+        assert_eq!(lse, lse_ref);
+    }
+
+    /// Decode through one quantized dtype: the flat `_kv` kernel lands
+    /// within the dtype's tolerance of the f32 kernel, and the paged
+    /// `_kv` kernel (same quantized payload scattered into a shuffled
+    /// page pool, scales carried over) is bit-identical to the flat one.
+    fn quant_decode_case(dtype: KvDtype, tol: f32) {
+        let (b, kh, g, hsz, scap, block_s) = (3, 2, 2, 8, 32, 8);
+        let page_toks = 16;
+        let group = page_toks * hsz;
+        let mut rng = crate::util::Rng::new(43);
+        let mut fill = |n: usize| -> Vec<f32> {
+            (0..n).map(|_| rng.f32_signed()).collect()
+        };
+        let q = fill(b * kh * g * hsz);
+        let k = fill(b * kh * scap * hsz);
+        let v = fill(b * kh * scap * hsz);
+        let lens = [0i32, 13, 32];
+        let mut o_ref = vec![0.0f32; b * kh * g * hsz];
+        let mut lse_ref = vec![0.0f32; b * kh * g];
+        let mut scratch = vec![AttnScratch::default(); 2];
+        flash_decode_blocked(&q, &k, &v, &lens, b, kh, g, hsz, scap,
+                             block_s, &mut o_ref, &mut lse_ref,
+                             &mut scratch, 2);
+
+        let kq = quantize_arena(dtype, &k, group);
+        let vq = quantize_arena(dtype, &v, group);
+        let mut o_flat = vec![0.0f32; b * kh * g * hsz];
+        let mut lse_flat = vec![0.0f32; b * kh * g];
+        flash_decode_blocked_kv(&q, kq.as_ref(), vq.as_ref(), &lens, b, kh,
+                                g, hsz, scap, block_s, &mut o_flat,
+                                &mut lse_flat, &mut scratch, 2);
+        for (a, e) in o_flat.iter().zip(&o_ref) {
+            assert!((a - e).abs() < tol, "{dtype:?} o {a} vs {e}");
+        }
+        for (a, e) in lse_flat.iter().zip(&lse_ref) {
+            if *e <= NEG_INF / 2.0 {
+                assert_eq!(a, e, "{dtype:?} empty-row lse not NEG_INF");
+            } else {
+                assert!((a - e).abs() < tol, "{dtype:?} lse {a} vs {e}");
+            }
+        }
+
+        // Scatter the SAME quantized payload (raw elements + scales)
+        // into an out-of-order page pool — restore semantics.
+        let pages_per_row = scap / page_toks;
+        let total_pages = b * pages_per_row;
+        let order: Vec<usize> = (0..total_pages).rev().collect();
+        let pool_elems = total_pages * kh * page_toks * hsz;
+        let mut k_pool = KvQuant::new(dtype, pool_elems, group).unwrap();
+        let mut v_pool = KvQuant::new(dtype, pool_elems, group).unwrap();
+        let mut tables: Vec<Vec<u32>> = vec![Vec::new(); b];
+        for bi in 0..b {
+            for lp in 0..pages_per_row {
+                let p = order[bi * pages_per_row + lp];
+                tables[bi].push(p as u32);
+                for hi in 0..kh {
+                    let src = ((bi * kh + hi) * scap + lp * page_toks) * hsz;
+                    let dst = ((p * kh + hi) * page_toks) * hsz;
+                    for i in 0..page_toks * hsz {
+                        k_pool.set_raw(dst + i, &kq.raw(src + i));
+                        v_pool.set_raw(dst + i, &vq.raw(src + i));
+                    }
+                    if dtype == KvDtype::Int8 {
+                        k_pool.set_scale_at(dst, kq.scale_at(src));
+                        v_pool.set_scale_at(dst, vq.scale_at(src));
+                    }
+                }
+            }
+        }
+        let mut o = vec![0.0f32; b * kh * g * hsz];
+        let mut lse = vec![0.0f32; b * kh * g];
+        flash_decode_paged_kv(&q, k_pool.as_ref(), v_pool.as_ref(),
+                              &tables, &lens, b, kh, g, hsz, page_toks,
+                              block_s, &mut o, &mut lse, &mut scratch, 2);
+        assert_eq!(o, o_flat, "{dtype:?} paged o diverged from flat");
+        assert_eq!(lse, lse_flat, "{dtype:?} paged lse diverged from flat");
+    }
+
+    #[test]
+    fn quant_flash_decode_f16_tier() {
+        quant_decode_case(KvDtype::F16, 1e-2);
+    }
+
+    #[test]
+    fn quant_flash_decode_int8_tier() {
+        quant_decode_case(KvDtype::Int8, 0.1);
+    }
+
+    /// Prefill twin of [`quant_decode_case`]: one shared shard, ragged
+    /// per-query lens, flat-vs-f32 within tolerance and paged==flat.
+    fn quant_prefill_case(dtype: KvDtype, tol: f32) {
+        let (t, kh, g, hsz, scap, block_s) = (4, 2, 2, 8, 32, 8);
+        let page_toks = 16;
+        let group = page_toks * hsz;
+        let mut rng = crate::util::Rng::new(47);
+        let mut fill = |n: usize| -> Vec<f32> {
+            (0..n).map(|_| rng.f32_signed()).collect()
+        };
+        let q = fill(t * kh * g * hsz);
+        let k = fill(kh * scap * hsz);
+        let v = fill(kh * scap * hsz);
+        let valid = [1i32, 13, 16, 32];
+        let mut o_ref = vec![0.0f32; t * kh * g * hsz];
+        let mut lse_ref = vec![0.0f32; t * kh * g];
+        let mut scratch = vec![AttnScratch::default(); 2];
+        flash_prefill_flat(&q, &k, &v, &valid, t, kh, g, hsz, scap,
+                           block_s, &mut o_ref, &mut lse_ref, &mut scratch,
+                           2);
+        let kq = quantize_arena(dtype, &k, group);
+        let vq = quantize_arena(dtype, &v, group);
+        let mut o_flat = vec![0.0f32; t * kh * g * hsz];
+        let mut lse_flat = vec![0.0f32; t * kh * g];
+        flash_prefill_flat_kv(&q, kq.as_ref(), vq.as_ref(), &valid, t, kh,
+                              g, hsz, scap, block_s, &mut o_flat,
+                              &mut lse_flat, &mut scratch, 2);
+        for (a, e) in o_flat.iter().zip(&o_ref) {
+            assert!((a - e).abs() < tol, "{dtype:?} prefill o {a} vs {e}");
+        }
+        let pages = scap / page_toks;
+        let order: Vec<usize> = (0..pages).rev().collect();
+        let pool_elems = pages * kh * page_toks * hsz;
+        let mut k_pool = KvQuant::new(dtype, pool_elems, group).unwrap();
+        let mut v_pool = KvQuant::new(dtype, pool_elems, group).unwrap();
+        let mut table: Vec<u32> = Vec::new();
+        for lp in 0..pages {
+            let p = order[lp];
+            table.push(p as u32);
+            for hi in 0..kh {
+                let src = (hi * scap + lp * page_toks) * hsz;
+                let dst = ((p * kh + hi) * page_toks) * hsz;
+                for i in 0..page_toks * hsz {
+                    k_pool.set_raw(dst + i, &kq.raw(src + i));
+                    v_pool.set_raw(dst + i, &vq.raw(src + i));
+                }
+                if dtype == KvDtype::Int8 {
+                    k_pool.set_scale_at(dst, kq.scale_at(src));
+                    v_pool.set_scale_at(dst, vq.scale_at(src));
+                }
+            }
+        }
+        let mut o = vec![0.0f32; t * kh * g * hsz];
+        let mut lse = vec![0.0f32; t * kh * g];
+        flash_prefill_paged_kv(&q, k_pool.as_ref(), v_pool.as_ref(),
+                               &table, &valid, t, kh, g, hsz, page_toks,
+                               block_s, &mut o, &mut lse, &mut scratch, 2);
+        assert_eq!(o, o_flat, "{dtype:?} paged prefill diverged from flat");
+        assert_eq!(lse, lse_flat,
+                   "{dtype:?} paged prefill lse diverged from flat");
+    }
+
+    #[test]
+    fn quant_flash_prefill_f16_tier() {
+        quant_prefill_case(KvDtype::F16, 1e-2);
+    }
+
+    #[test]
+    fn quant_flash_prefill_int8_tier() {
+        quant_prefill_case(KvDtype::Int8, 0.1);
     }
 }

@@ -25,7 +25,21 @@ impl DType {
             _ => bail!("unsupported dtype {s:?}"),
         }
     }
+
+    /// Element width in bytes.
+    pub fn size_bytes(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+        }
+    }
 }
+
+/// The dtype every activation tensor in the engine carries (hidden
+/// states, attention partials, LSE). Communication-volume models must
+/// derive element widths from this — not from a literal `4`, and not
+/// from [`KvDtype`]: quantized KV is dequantized inside the attention
+/// kernels and never crosses a modeled link.
+pub const ACT_DTYPE: DType = DType::F32;
 
 /// Shared, reference-counted storage. Cloning bumps a refcount; writers
 /// detach via `Arc::make_mut` (copy-on-write).
@@ -314,6 +328,330 @@ impl HostTensor {
     }
 }
 
+// ------------------------------------------------------------------------
+// Quantized KV tier: dtype axis + byte-backed element storage
+// ------------------------------------------------------------------------
+
+/// Element width of the KV cache (`config::Layout::kv_dtype`). `F32` is
+/// the legacy bit-exact path; `F16`/`Int8` trade precision for bytes —
+/// the paper's DRAM-read bound scales linearly with KV bytes per token,
+/// so halving/quartering the element is a direct tokens/s multiplier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum KvDtype {
+    #[default]
+    F32,
+    F16,
+    Int8,
+}
+
+impl KvDtype {
+    pub fn bytes_per_elem(self) -> usize {
+        match self {
+            KvDtype::F32 => 4,
+            KvDtype::F16 => 2,
+            KvDtype::Int8 => 1,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KvDtype::F32 => "f32",
+            KvDtype::F16 => "f16",
+            KvDtype::Int8 => "int8",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<KvDtype> {
+        match s {
+            "f32" => Ok(KvDtype::F32),
+            "f16" => Ok(KvDtype::F16),
+            "int8" | "i8" => Ok(KvDtype::Int8),
+            _ => bail!("unsupported kv dtype {s:?} (want f32|f16|int8)"),
+        }
+    }
+
+    /// One-byte tag for dtype-tagged Evict/Restore/checkpoint blobs.
+    pub fn tag(self) -> u8 {
+        match self {
+            KvDtype::F32 => 0,
+            KvDtype::F16 => 1,
+            KvDtype::Int8 => 2,
+        }
+    }
+
+    pub fn from_tag(t: u8) -> Result<KvDtype> {
+        match t {
+            0 => Ok(KvDtype::F32),
+            1 => Ok(KvDtype::F16),
+            2 => Ok(KvDtype::Int8),
+            _ => bail!("unknown kv dtype tag {t}"),
+        }
+    }
+}
+
+/// f32 -> IEEE binary16 bit pattern, round-to-nearest-even (no `half`
+/// dependency; subnormals and inf/NaN handled).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // Inf / NaN (keep NaN payload non-zero).
+        return sign | 0x7c00 | if man != 0 { 0x200 } else { 0 };
+    }
+    let exp = exp - 127;
+    if exp > 15 {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if exp >= -14 {
+        // Normal range: 10-bit mantissa, round half to even.
+        let mut m = man >> 13;
+        let rem = man & 0x1fff;
+        if rem > 0x1000 || (rem == 0x1000 && (m & 1) == 1) {
+            m += 1;
+        }
+        let mut e = (exp + 15) as u32;
+        if m == 0x400 {
+            m = 0;
+            e += 1;
+            if e >= 31 {
+                return sign | 0x7c00;
+            }
+        }
+        sign | ((e as u16) << 10) | m as u16
+    } else if exp >= -24 {
+        // Subnormal: value = m * 2^-24 with m up to 10 bits.
+        let full = man | 0x0080_0000;
+        let shift = (-exp - 1) as u32; // 14..=23
+        let mut v = full >> shift;
+        let rem = full & ((1u32 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        if rem > half || (rem == half && (v & 1) == 1) {
+            v += 1; // may carry into exponent 1: still correct bits
+        }
+        sign | v as u16
+    } else {
+        sign // underflow to signed zero
+    }
+}
+
+/// IEEE binary16 bit pattern -> f32 (exact: every f16 value is
+/// representable in f32).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x3ff) as u32;
+    let bits = if exp == 0 {
+        if man == 0 {
+            sign
+        } else {
+            // Subnormal: renormalize into f32's larger exponent range.
+            let mut e: i32 = 113; // 127 - 15 + 1
+            let mut m = man;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | ((e as u32) << 23) | ((m & 0x3ff) << 13)
+        }
+    } else if exp == 0x1f {
+        sign | 0x7f80_0000 | (man << 13)
+    } else {
+        sign | ((exp + 112) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Borrowed dequantize-on-read view of a KV element buffer, handed to
+/// the flash kernels. Element indices address the same dense row-major
+/// layout the f32 arenas use; for `Int8`, every contiguous run of
+/// `group` elements (one scale block of one head) shares one scale.
+#[derive(Clone, Copy)]
+pub enum KvRef<'a> {
+    F32(&'a [f32]),
+    F16(&'a [u16]),
+    Int8 { data: &'a [i8], scales: &'a [f32], group: usize },
+}
+
+impl KvRef<'_> {
+    pub fn dtype(&self) -> KvDtype {
+        match self {
+            KvRef::F32(_) => KvDtype::F32,
+            KvRef::F16(_) => KvDtype::F16,
+            KvRef::Int8 { .. } => KvDtype::Int8,
+        }
+    }
+
+    /// Dequantize elements `[start, start + dst.len())` into `dst`.
+    /// The range must not straddle an int8 scale group boundary unless
+    /// it is group-aligned per element (the kernels tile within one
+    /// head's contiguous run, which never straddles).
+    pub fn dequant_into(&self, start: usize, dst: &mut [f32]) {
+        match self {
+            KvRef::F32(d) => dst.copy_from_slice(&d[start..start + dst.len()]),
+            KvRef::F16(d) => {
+                for (o, &h) in dst.iter_mut().zip(&d[start..]) {
+                    *o = f16_bits_to_f32(h);
+                }
+            }
+            KvRef::Int8 { data, scales, group } => {
+                for (i, o) in dst.iter_mut().enumerate() {
+                    let e = start + i;
+                    *o = data[e] as f32 * scales[e / group];
+                }
+            }
+        }
+    }
+}
+
+/// Byte-backed KV element store for the quantized tier: a dense buffer
+/// of `KvDtype` elements in the same row-major layout as the legacy f32
+/// arenas, plus — for int8 — one symmetric scale per contiguous
+/// `group`-element run (one scale block of one head: scale_block_tokens
+/// × head_size elements, which for the paged pool is exactly one page
+/// of one head).
+#[derive(Debug, Clone)]
+pub struct KvQuant {
+    dtype: KvDtype,
+    f16: Vec<u16>,
+    i8: Vec<i8>,
+    scales: Vec<f32>,
+    group: usize,
+}
+
+impl KvQuant {
+    /// `elems` total elements; `group` elements per int8 scale (must
+    /// divide `elems`). For `F16`, `group` is kept only for symmetry.
+    pub fn new(dtype: KvDtype, elems: usize, group: usize) -> Result<KvQuant> {
+        ensure!(dtype != KvDtype::F32,
+                "KvQuant is the non-f32 tier; use the f32 arena directly");
+        ensure!(group > 0 && elems % group == 0,
+                "scale group {group} does not divide {elems} elements");
+        let (f16, i8, scales) = match dtype {
+            KvDtype::F16 => (vec![0u16; elems], Vec::new(), Vec::new()),
+            KvDtype::Int8 => {
+                (Vec::new(), vec![0i8; elems], vec![0.0; elems / group])
+            }
+            KvDtype::F32 => unreachable!(),
+        };
+        Ok(KvQuant { dtype, f16, i8, scales, group })
+    }
+
+    pub fn dtype(&self) -> KvDtype {
+        self.dtype
+    }
+
+    /// Elements per int8 scale group.
+    pub fn group(&self) -> usize {
+        self.group
+    }
+
+    pub fn as_ref(&self) -> KvRef<'_> {
+        match self.dtype {
+            KvDtype::F16 => KvRef::F16(&self.f16),
+            KvDtype::Int8 => KvRef::Int8 { data: &self.i8,
+                                           scales: &self.scales,
+                                           group: self.group },
+            KvDtype::F32 => unreachable!(),
+        }
+    }
+
+    /// Quantize one contiguous run (one token of one head) at element
+    /// offset `d`. Int8 keeps a per-group symmetric scale that only
+    /// ever grows: when a new token exceeds the group's representable
+    /// range, previously stored values are rescaled in place — the
+    /// evolution is a pure function of the append sequence, so flat and
+    /// paged stores with equal scale-block sizes stay bit-identical.
+    pub fn quantize(&mut self, d: usize, src: &[f32]) {
+        match self.dtype {
+            KvDtype::F16 => {
+                for (o, &x) in self.f16[d..d + src.len()].iter_mut().zip(src) {
+                    *o = f32_to_f16_bits(x);
+                }
+            }
+            KvDtype::Int8 => {
+                let gi = d / self.group;
+                let amax = src.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+                if amax > self.scales[gi] * 127.0 {
+                    let ns = amax / 127.0;
+                    let os = self.scales[gi];
+                    if os > 0.0 {
+                        let g0 = gi * self.group;
+                        let ratio = os / ns;
+                        for q in &mut self.i8[g0..g0 + self.group] {
+                            *q = (*q as f32 * ratio).round()
+                                .clamp(-127.0, 127.0) as i8;
+                        }
+                    }
+                    self.scales[gi] = ns;
+                }
+                let s = self.scales[gi];
+                let inv = if s > 0.0 { 1.0 / s } else { 0.0 };
+                for (o, &x) in self.i8[d..d + src.len()].iter_mut().zip(src) {
+                    *o = (x * inv).round().clamp(-127.0, 127.0) as i8;
+                }
+            }
+            KvDtype::F32 => unreachable!(),
+        }
+    }
+
+    /// Dequantize one element (serialization + tests; kernels use
+    /// [`KvRef::dequant_into`] on whole tiles).
+    pub fn get(&self, e: usize) -> f32 {
+        match self.dtype {
+            KvDtype::F16 => f16_bits_to_f32(self.f16[e]),
+            KvDtype::Int8 => self.i8[e] as f32 * self.scales[e / self.group],
+            KvDtype::F32 => unreachable!(),
+        }
+    }
+
+    /// Raw quantized payload of one element, LE bytes (blob format).
+    pub fn raw(&self, e: usize) -> [u8; 2] {
+        match self.dtype {
+            KvDtype::F16 => self.f16[e].to_le_bytes(),
+            KvDtype::Int8 => [self.i8[e] as u8, 0],
+            KvDtype::F32 => unreachable!(),
+        }
+    }
+
+    /// Write one element from its raw LE payload (blob restore).
+    pub fn set_raw(&mut self, e: usize, raw: &[u8]) {
+        match self.dtype {
+            KvDtype::F16 => self.f16[e] = u16::from_le_bytes([raw[0], raw[1]]),
+            KvDtype::Int8 => self.i8[e] = raw[0] as i8,
+            KvDtype::F32 => unreachable!(),
+        }
+    }
+
+    pub fn scale_at(&self, e: usize) -> f32 {
+        self.scales[e / self.group]
+    }
+
+    /// Pin a group's scale directly (blob restore: scales travel in the
+    /// blob so restored int8 state is bit-identical to the evicted one).
+    pub fn set_scale_at(&mut self, e: usize, s: f32) {
+        let gi = e / self.group;
+        self.scales[gi] = s;
+    }
+
+    /// Zero the elements (and, for int8, the scales) of the groups
+    /// covering `[d, d + n)`. Used by slot reset so a recycled row
+    /// starts from the empty-scale state a fresh store would have.
+    pub fn reset_range(&mut self, d: usize, n: usize) {
+        match self.dtype {
+            KvDtype::F16 => self.f16[d..d + n].fill(0),
+            KvDtype::Int8 => {
+                self.i8[d..d + n].fill(0);
+                let g0 = d / self.group;
+                let g1 = (d + n).div_ceil(self.group);
+                self.scales[g0..g1].fill(0.0);
+            }
+            KvDtype::F32 => unreachable!(),
+        }
+    }
+}
+
 /// The copy-on-write core shared by both dtypes: detach shared or
 /// sub-view storage into compact private storage covering exactly
 /// `offset..offset + n` (in place when this handle is the only owner),
@@ -504,6 +842,78 @@ mod tests {
         t.i32s_mut().unwrap().copy_from_slice(&[7, 8, 9]);
         assert_eq!(t.i32s().unwrap(), &[7, 8, 9]);
         assert_eq!(c.i32s().unwrap(), &[1, 2, 3]);
+    }
+
+    #[test]
+    fn f16_bits_roundtrip_exact_values() {
+        // Values exactly representable in binary16 round-trip bit-exact.
+        for &x in &[0.0f32, -0.0, 1.0, -1.0, 0.5, 1.5, 65504.0, -65504.0,
+                    2.0f32.powi(-14), 2.0f32.powi(-24), 0.099975586] {
+            let h = f32_to_f16_bits(x);
+            assert_eq!(f16_bits_to_f32(h), x, "x={x}");
+        }
+        // Inf and NaN survive.
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(f32::INFINITY)),
+                   f32::INFINITY);
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+        // Overflow saturates to inf, underflow to zero.
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1e6)), f32::INFINITY);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1e-9)), 0.0);
+    }
+
+    #[test]
+    fn f16_relative_error_within_half_ulp() {
+        // Deterministic pseudo-random normal-range values: |x| in
+        // [2^-10, 2^3], relative error bounded by 2^-11 (half an ulp).
+        let mut v = 0.123f32;
+        for i in 0..1000 {
+            v = (v * 9301.0 + 49297.0) % 233280.0;
+            let sign = if i % 2 == 0 { 1.0 } else { -1.0 };
+            let x = sign * (0.01 + v / 233280.0 * 8.0);
+            let y = f16_bits_to_f32(f32_to_f16_bits(x));
+            let rel = (y - x).abs() / x.abs().max(1e-6);
+            assert!(rel <= 1.0 / 2048.0 + 1e-7, "i={i} x={x} y={y}");
+        }
+    }
+
+    #[test]
+    fn kv_quant_int8_scale_grows_and_rescales() {
+        // One group of 4 elements; append a small token then a big one.
+        let mut q = KvQuant::new(KvDtype::Int8, 4, 4).unwrap();
+        q.quantize(0, &[1.0, -1.0]);
+        assert!((q.get(0) - 1.0).abs() < 1e-5,
+                "amax/127 scale keeps amax near-exact: {}", q.get(0));
+        q.quantize(2, &[127.0, 0.0]);
+        // Scale grew to 1.0; the earlier values rescaled in place.
+        assert_eq!(q.scale_at(0), 1.0);
+        assert_eq!(q.get(2), 127.0);
+        assert_eq!(q.get(0), 1.0);
+        // A quiet token later reuses the grown scale (no shrink).
+        q.quantize(2, &[0.5, 0.0]);
+        assert_eq!(q.scale_at(0), 1.0);
+        assert!((q.get(2) - 0.5).abs() <= 0.5);
+    }
+
+    #[test]
+    fn kv_quant_reset_clears_scales() {
+        let mut q = KvQuant::new(KvDtype::Int8, 8, 4).unwrap();
+        q.quantize(0, &[4.0; 4]);
+        q.quantize(4, &[2.0; 4]);
+        q.reset_range(0, 4);
+        assert_eq!(q.scale_at(0), 0.0);
+        assert_eq!(q.get(0), 0.0);
+        assert_eq!(q.get(4), 2.0, "second group untouched");
+    }
+
+    #[test]
+    fn kv_ref_dequant_matches_get() {
+        let mut q = KvQuant::new(KvDtype::F16, 4, 4).unwrap();
+        q.quantize(0, &[0.1, -2.5, 3.0, 0.0]);
+        let mut out = [0.0f32; 4];
+        q.as_ref().dequant_into(0, &mut out);
+        for (i, &o) in out.iter().enumerate() {
+            assert_eq!(o, q.get(i));
+        }
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! sums per-layer phase times with HOP-B overlap applied per the
 //! strategy's overlap policy, plus PP stage-boundary transfers.
 
-use crate::config::{Hardware, Layout, ModelSpec};
+use crate::config::{Hardware, KvDtype, Layout, ModelSpec};
 
 use super::{comm, hopb, memory, phases};
 
@@ -217,7 +217,8 @@ mod tests {
             .map(|p| 64usize * (1 << p))
             .filter(|&b| {
                 evaluate(&m, &h, Strategy::DpEp,
-                         &Layout { kvp: 64, tpa: 1, tpf: 1, ep: 64, pp: 1, page: 0 },
+                         &Layout { kvp: 64, tpa: 1, tpf: 1, ep: 64, pp: 1, page: 0,
+                                   kv_dtype: KvDtype::F32 },
                          b, 1.0e6)
                     .is_some()
             })

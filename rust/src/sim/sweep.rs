@@ -9,7 +9,7 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-use crate::config::{Ffn, Hardware, Layout, ModelSpec};
+use crate::config::{Ffn, Hardware, KvDtype, Layout, ModelSpec};
 
 use super::decode::{evaluate, DecodePoint, Strategy};
 
@@ -75,7 +75,8 @@ pub fn layouts(m: &ModelSpec, strategy: Strategy, bounds: &SweepBounds)
                         continue;
                     }
                     for (tpf, ep) in ffn_grids(m, n) {
-                        let lo = Layout { kvp, tpa, tpf, ep, pp: 1, page: 0 };
+                        let lo = Layout { kvp, tpa, tpf, ep, pp: 1, page: 0,
+                                          kv_dtype: KvDtype::F32 };
                         if lo.validate(m, false).is_ok() {
                             out.push(lo);
                         }
@@ -104,7 +105,8 @@ pub fn layouts(m: &ModelSpec, strategy: Strategy, bounds: &SweepBounds)
                     if kvp < 2 {
                         continue;
                     }
-                    let lo = Layout { kvp, tpa: tp, tpf: tp, ep: 1, pp: 1, page: 0 };
+                    let lo = Layout { kvp, tpa: tp, tpf: tp, ep: 1, pp: 1,
+                                      page: 0, kv_dtype: KvDtype::F32 };
                     // Medha runs the FFN on the TP group only; encode
                     // tpf = tp but keep n() = kvp*tp for GPU accounting.
                     if q % lo.n() == 0 && lo.tpa <= k {
@@ -119,7 +121,8 @@ pub fn layouts(m: &ModelSpec, strategy: Strategy, bounds: &SweepBounds)
             }
             for dp in pow2s(gmax) {
                 for (tpf, ep) in ffn_grids(m, dp) {
-                    out.push(Layout { kvp: dp, tpa: 1, tpf, ep, pp: 1, page: 0 });
+                    out.push(Layout { kvp: dp, tpa: 1, tpf, ep, pp: 1, page: 0,
+                                      kv_dtype: KvDtype::F32 });
                 }
             }
         }

@@ -11,7 +11,7 @@
 
 mod common;
 
-use helix::config::Layout;
+use helix::config::{KvDtype, Layout};
 use helix::engine::{ClusterConfig, CommModel};
 
 use crate::common::cluster_or_skip;
@@ -48,8 +48,13 @@ fn tokens_invariant_to_threads_comm_and_schedule() {
     // real enough that every collective actually charges and waits.
     let link = CommModel { latency_s: 0.0, bw_bytes_per_s: 2.0e7,
                            scale: 1.0 };
-    let cases = [("tiny_gqa", Layout::helix(2, 2, 4, 1)),
-                 ("tiny_moe", Layout::helix(2, 2, 2, 2))];
+    // kv_dtype is pinned to f32 explicitly: the bit-exactness contract
+    // is a property of the f32 KV tier. Quantized tiers (f16/int8) are
+    // deterministic too, but validate against per-dtype tolerance
+    // suites instead (tests/native_kernels.rs, tests/session_offload.rs).
+    let f32_kv = |lo: Layout| Layout { kv_dtype: KvDtype::F32, ..lo };
+    let cases = [("tiny_gqa", f32_kv(Layout::helix(2, 2, 4, 1))),
+                 ("tiny_moe", f32_kv(Layout::helix(2, 2, 2, 2)))];
     for (model, layout) in cases {
         let mut reference: Option<Vec<Vec<i32>>> = None;
         for threads in ["1", "4"] {

@@ -1,6 +1,6 @@
 //! Property tests over layouts and sharding math (paper Fig 2 semantics).
 
-use helix::config::{Layout, ModelSpec};
+use helix::config::{KvDtype, Layout, ModelSpec};
 use helix::util::prop::forall;
 use helix::util::Rng;
 
@@ -24,6 +24,7 @@ fn valid_helix_layouts_never_duplicate_kv() {
             ep: 1,
             pp: 1,
             page: 0,
+            kv_dtype: KvDtype::F32,
         };
         let lo = Layout { tpf: lo.n(), ..lo };
         if lo.validate(&m, false).is_ok() {
@@ -40,7 +41,8 @@ fn duplication_factor_matches_definition() {
     forall("dup = max(1, tpa/K)", 200, |rng| {
         let m = random_model(rng);
         let tpa = pow2(rng, 7);
-        let lo = Layout { kvp: 1, tpa, tpf: tpa, ep: 1, pp: 1, page: 0 };
+        let lo = Layout { kvp: 1, tpa, tpf: tpa, ep: 1, pp: 1, page: 0,
+                          kv_dtype: KvDtype::F32 };
         let k = m.attention.kv_heads() as f64;
         let want = (tpa as f64 / k).max(1.0);
         assert_eq!(lo.kv_duplication(&m), want);
@@ -56,7 +58,8 @@ fn gpu_accounting_is_consistent() {
         if kvp % ep != 0 {
             return;
         }
-        let lo = Layout { kvp, tpa: 1, tpf: kvp / ep, ep, pp: 1, page: 0 };
+        let lo = Layout { kvp, tpa: 1, tpf: kvp / ep, ep, pp: 1, page: 0,
+                          kv_dtype: KvDtype::F32 };
         if lo.validate(&m, false).is_ok() {
             assert_eq!(lo.gpus(), lo.n());
             assert_eq!(lo.tpf * lo.ep, lo.kvp * lo.tpa);
@@ -70,7 +73,8 @@ fn validate_rejects_mismatched_ffn_grid() {
         let m = ModelSpec::llama_405b();
         let kvp = pow2(rng, 3);
         let tpa = pow2(rng, 3);
-        let lo = Layout { kvp, tpa, tpf: kvp * tpa * 2, ep: 1, pp: 1, page: 0 };
+        let lo = Layout { kvp, tpa, tpf: kvp * tpa * 2, ep: 1, pp: 1, page: 0,
+                          kv_dtype: KvDtype::F32 };
         assert!(lo.validate(&m, true).is_err());
     });
 }

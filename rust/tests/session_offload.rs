@@ -13,18 +13,22 @@ mod common;
 
 use std::time::{Duration, Instant};
 
-use helix::config::Layout;
+use helix::config::{KvDtype, Layout};
 use helix::engine::{ClusterConfig, ClusterError};
+use helix::runtime::BackendKind;
 
 use crate::common::cluster_or_skip;
 
 const PRE: usize = 6; // decode steps before the evict/restore trip
 const POST: usize = 6; // decode steps after it
 
-fn verify_cluster(model: &str, layout: Layout)
-                  -> Option<helix::engine::HelixCluster> {
+/// `verify` keeps the unsharded oracle checking every step; it must be
+/// off for quantized layouts (the mirror is f32-only — the cluster
+/// refuses the combination).
+fn boot_cluster(model: &str, layout: Layout, verify: bool)
+                -> Option<helix::engine::HelixCluster> {
     let mut cc = ClusterConfig::new(model, layout);
-    cc.verify = true; // keep the unsharded oracle checking every step
+    cc.verify = verify;
     let mut cluster = cluster_or_skip(cc)?;
     for s in 0..cluster.batch() {
         cluster.open_slot(s).unwrap();
@@ -43,8 +47,9 @@ fn step(cluster: &mut helix::engine::HelixCluster, tokens: &[i32])
 
 /// Uninterrupted run: PRE + POST steps, sessions never leave their
 /// slots. The stream is indexed [step][session].
-fn reference(model: &str, layout: Layout) -> Option<Vec<Vec<i32>>> {
-    let mut cluster = verify_cluster(model, layout)?;
+fn reference(model: &str, layout: Layout, verify: bool)
+             -> Option<Vec<Vec<i32>>> {
+    let mut cluster = boot_cluster(model, layout, verify)?;
     let mut tokens: Vec<i32> =
         (0..cluster.batch() as i32).map(|i| i + 5).collect();
     let mut stream = Vec::with_capacity(PRE + POST);
@@ -62,8 +67,9 @@ fn reference(model: &str, layout: Layout) -> Option<Vec<Vec<i32>>> {
 /// back in slot 2 and vice versa), then decode POST more steps. The
 /// returned stream is re-indexed by session so it must equal the
 /// reference bit for bit.
-fn churned(model: &str, layout: Layout) -> Option<Vec<Vec<i32>>> {
-    let mut cluster = verify_cluster(model, layout)?;
+fn churned(model: &str, layout: Layout, verify: bool)
+           -> Option<Vec<Vec<i32>>> {
+    let mut cluster = boot_cluster(model, layout, verify)?;
     let n = cluster.n();
     let mut tokens: Vec<i32> =
         (0..cluster.batch() as i32).map(|i| i + 5).collect();
@@ -169,19 +175,44 @@ fn offload_restore_is_bit_identical_across_kvp_and_threads() {
                    Layout::helix(4, 1, 4, 1)];
     for layout in layouts {
         std::env::set_var("HELIX_NATIVE_THREADS", "1");
-        let Some(want) = reference("tiny_gqa", layout) else {
+        let Some(want) = reference("tiny_gqa", layout, true) else {
             std::env::remove_var("HELIX_NATIVE_THREADS");
             return; // pjrt-without-artifacts environment
         };
         for threads in ["1", "4"] {
             std::env::set_var("HELIX_NATIVE_THREADS", threads);
-            let Some(got) = churned("tiny_gqa", layout) else {
+            let Some(got) = churned("tiny_gqa", layout, true) else {
                 std::env::remove_var("HELIX_NATIVE_THREADS");
                 return;
             };
             assert_eq!(want, got,
                        "offload round-trip changed tokens: layout {} \
                         threads {threads}", layout.key());
+        }
+    }
+
+    // Quantized KV tiers (native-only; the verify mirror is f32-only,
+    // so these runs compare quantized-vs-quantized). The dtype-tagged
+    // blobs carry raw codes + scales, so a restore — even into swapped
+    // slots — reproduces the quantized in-device state bit for bit and
+    // the churned stream must equal the uninterrupted one exactly
+    // *within* each dtype. No cross-dtype comparison: quantization is
+    // allowed to change tokens relative to f32.
+    if BackendKind::native_available() {
+        for kv_dtype in [KvDtype::F16, KvDtype::Int8] {
+            let layout = Layout { kv_dtype, ..Layout::helix(2, 2, 4, 1) };
+            std::env::set_var("HELIX_NATIVE_THREADS", "1");
+            let want = reference("tiny_gqa", layout, false)
+                .expect("native backend never skips");
+            for threads in ["1", "4"] {
+                std::env::set_var("HELIX_NATIVE_THREADS", threads);
+                let got = churned("tiny_gqa", layout, false)
+                    .expect("native backend never skips");
+                assert_eq!(want, got,
+                           "quantized offload round-trip changed tokens: \
+                            kv_dtype {} threads {threads}",
+                           kv_dtype.name());
+            }
         }
     }
     std::env::remove_var("HELIX_NATIVE_THREADS");

@@ -1,7 +1,7 @@
 //! Property tests over the analytic simulator: Pareto invariants, HOP-B
 //! bounds, memory-model monotonicity, sweep validity.
 
-use helix::config::{Hardware, Layout, ModelSpec};
+use helix::config::{Hardware, KvDtype, Layout, ModelSpec};
 use helix::sim::decode::{evaluate, Strategy};
 use helix::sim::sweep::{self, SweepBounds};
 use helix::sim::{hopb, memory, Frontier};
@@ -109,7 +109,8 @@ fn evaluate_rejects_what_capacity_rejects() {
         let m = ModelSpec::deepseek_r1();
         let h = hw();
         let kvp = *rng.choose(&[1usize, 4, 16, 64]);
-        let lo = Layout { kvp, tpa: 1, tpf: kvp, ep: 1, pp: 1, page: 0 };
+        let lo = Layout { kvp, tpa: 1, tpf: kvp, ep: 1, pp: 1, page: 0,
+                          kv_dtype: KvDtype::F32 };
         let b = *rng.choose(&[1usize, 16, 256, 1024]);
         let p = evaluate(&m, &h, Strategy::Helix { hopb: true }, &lo, b,
                          1.0e6);
@@ -133,8 +134,10 @@ fn helix_ttl_never_worse_than_medha_same_pool() {
         let tp = *rng.choose(&[2usize, 4, 8]);
         let kvp = *rng.choose(&[2usize, 4, 8]);
         let b = *rng.choose(&[1usize, 4, 8]);
-        let lo_medha = Layout { kvp, tpa: tp, tpf: tp, ep: 1, pp: 1, page: 0 };
-        let lo_helix = Layout { kvp, tpa: tp, tpf: kvp * tp, ep: 1, pp: 1, page: 0 };
+        let lo_medha = Layout { kvp, tpa: tp, tpf: tp, ep: 1, pp: 1, page: 0,
+                                kv_dtype: KvDtype::F32 };
+        let lo_helix = Layout { kvp, tpa: tp, tpf: kvp * tp, ep: 1, pp: 1,
+                                page: 0, kv_dtype: KvDtype::F32 };
         let me = evaluate(&m, &h, Strategy::MedhaKvp, &lo_medha, b, 1.0e6);
         let he = evaluate(&m, &h, Strategy::Helix { hopb: true }, &lo_helix,
                           b, 1.0e6);

@@ -36,6 +36,12 @@ the same run, so machine speed cancels out. The restore bandwidth
 (``kv/page/restore_gb_s_per_rank``) is printed for information only —
 host-tier copy speed is machine-dependent.
 
+The KV storage dtype ablation (``kv/dtype/*``) checks within-run that
+bytes/token shrinks monotonically across f32 -> f16 -> int8, and gates
+the f32 row's long-context attention time against the baseline (10%
+drift, like tokens/s). The f16/int8 rows are printed for information
+only while the quantized tier settles (docs/QUANTKV.md).
+
 The chunked-prefill section (``prefill/*``) is gated within-run: the
 ingestion rate (``prefill/<model>/chunk_tokens_per_s``) must be
 positive, and the TTFT trajectory (``prefill/<model>/ttft_ctx<N>_ms``)
@@ -138,6 +144,52 @@ def paged_failures(cur):
     return []
 
 
+# The f32 row of the KV-dtype ablation may not get slower than its
+# committed baseline by more than this fraction (same 10% grace the
+# tokens/s gate uses; the quantized rows are report-only while the
+# tier settles — see docs/QUANTKV.md).
+KV_DTYPE_F32_DRIFT = 0.10
+
+
+def kv_dtype_failures(cur, base):
+    """Engine-report KV storage dtype gate; no-op for reports without
+    the ablation (eval reports, older baselines)."""
+    metrics = cur.get("metrics", {})
+    rows = []
+    for dtype in ("f32", "f16", "int8"):
+        bpt = metrics.get(f"kv/dtype/{dtype}/bytes_per_token")
+        ns = metrics.get(f"kv/dtype/{dtype}/attn_ns_longctx")
+        if isinstance(bpt, (int, float)) and isinstance(ns, (int, float)):
+            rows.append((dtype, bpt, ns))
+    if not rows:
+        return []
+    for dtype, bpt, ns in rows:
+        extra = "" if dtype == "f32" else " (informational)"
+        print(f"kv dtype {dtype}: {bpt:.1f} bytes/token, attn "
+              f"{ns:.0f} ns/step at long context{extra}")
+    failures = []
+    # Within-run: the footprint must actually shrink with the dtype.
+    by = {d: bpt for d, bpt, _ in rows}
+    order = [by[d] for d in ("f32", "f16", "int8") if d in by]
+    if order != sorted(order, reverse=True):
+        failures.append(
+            "kv/dtype bytes_per_token not decreasing across "
+            f"f32 -> f16 -> int8: {by}")
+    # Cross-run: the f32 tier (the default path every PR exercises) may
+    # not quietly get slower at long context.
+    cur_ns = metrics.get("kv/dtype/f32/attn_ns_longctx")
+    base_ns = (base or {}).get("metrics", {}).get(
+        "kv/dtype/f32/attn_ns_longctx")
+    if (isinstance(cur_ns, (int, float)) and
+            isinstance(base_ns, (int, float)) and
+            cur_ns > base_ns * (1 + KV_DTYPE_F32_DRIFT)):
+        failures.append(
+            f"kv/dtype/f32/attn_ns_longctx regressed: {base_ns:.0f} ns "
+            f"(baseline) -> {cur_ns:.0f} ns (now), tolerance "
+            f"+{KV_DTYPE_F32_DRIFT:.0%}")
+    return failures
+
+
 def prefill_failures(cur):
     """Engine-report chunked-prefill gate; no-op for reports without
     the section (eval reports, older baselines)."""
@@ -199,7 +251,7 @@ def main(argv=None) -> int:
         # The within-report overlap, paged-KV and prefill contracts
         # hold even on a first run.
         within = (overlap_failures(cur, None) + paged_failures(cur)
-                  + prefill_failures(cur))
+                  + kv_dtype_failures(cur, None) + prefill_failures(cur))
         if within:
             print("FAIL: " + "; ".join(within))
             return 1
@@ -231,7 +283,7 @@ def main(argv=None) -> int:
               f"{args.threshold:.0%}")
         return 1
     within = (overlap_failures(cur, base) + paged_failures(cur)
-              + prefill_failures(cur))
+              + kv_dtype_failures(cur, base) + prefill_failures(cur))
     if within:
         print("FAIL: " + "; ".join(within))
         return 1

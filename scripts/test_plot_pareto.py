@@ -314,6 +314,64 @@ class PagedGateTest(unittest.TestCase):
             check_bench_regression.paged_failures(report), [])
 
 
+class KvDtypeGateTest(unittest.TestCase):
+    """The engine report's KV storage dtype ablation contract."""
+
+    def engine_report(self, f32_ns=5000.0, f16_bpt=512.0):
+        return {"metrics": {"engine/tiny/tokens_per_s": 100.0,
+                            "kv/dtype/f32/bytes_per_token": 1024.0,
+                            "kv/dtype/f32/attn_ns_longctx": f32_ns,
+                            "kv/dtype/f16/bytes_per_token": f16_bpt,
+                            "kv/dtype/f16/attn_ns_longctx": 9000.0,
+                            "kv/dtype/int8/bytes_per_token": 260.0,
+                            "kv/dtype/int8/attn_ns_longctx": 8000.0,
+                            "status": "ok"}}
+
+    def write(self, doc):
+        f = tempfile.NamedTemporaryFile("w", suffix=".json", delete=False)
+        json.dump(doc, f)
+        f.close()
+        self.addCleanup(os.unlink, f.name)
+        return f.name
+
+    def test_healthy_ablation_passes(self):
+        report = self.engine_report()
+        self.assertEqual(
+            check_bench_regression.kv_dtype_failures(report, report), [])
+        path = self.write(report)
+        self.assertEqual(check_bench_regression.main([path, path]), 0)
+
+    def test_f32_regression_fails_vs_baseline(self):
+        base = self.engine_report()
+        drift = 1 + check_bench_regression.KV_DTYPE_F32_DRIFT
+        cur = self.engine_report(f32_ns=5000.0 * drift * 1.1)
+        self.assertTrue(
+            check_bench_regression.kv_dtype_failures(cur, base))
+        self.assertEqual(check_bench_regression.main(
+            [self.write(cur), self.write(base)]), 1)
+
+    def test_quantized_rows_are_report_only(self):
+        # An arbitrarily slow int8 row never fails the gate.
+        base = self.engine_report()
+        cur = self.engine_report()
+        cur["metrics"]["kv/dtype/int8/attn_ns_longctx"] = 9.9e9
+        self.assertEqual(
+            check_bench_regression.kv_dtype_failures(cur, base), [])
+
+    def test_nonmonotone_footprint_fails(self):
+        broken = self.engine_report(f16_bpt=2048.0)
+        self.assertTrue(
+            check_bench_regression.kv_dtype_failures(broken, None))
+        cur = self.write(broken)
+        self.assertEqual(
+            check_bench_regression.main([cur, cur + ".missing"]), 1)
+
+    def test_reports_without_ablation_are_not_gated(self):
+        report = {"metrics": {"decode/tokens_per_s": 1.0, "status": "ok"}}
+        self.assertEqual(
+            check_bench_regression.kv_dtype_failures(report, None), [])
+
+
 class PrefillGateTest(unittest.TestCase):
     """The engine report's chunked-prefill ingestion contract."""
 
